@@ -1,0 +1,27 @@
+//! Bench: regenerate Fig 10 (batching strategies, regular prefill-decode
+//! pipelines, code + conversation traces).
+
+use hermes::experiments::fig10;
+use hermes::util::bench::banner;
+
+fn main() {
+    banner("Fig 10 — batching strategies on regular pipelines (a: code, b: conv)");
+    let fast = std::env::var("HERMES_FULL").is_err();
+    let panels = fig10::run(fast).expect("fig10");
+    assert_eq!(panels.len(), 2);
+    for p in &panels {
+        // paper shape: disaggregated wins throughput/energy
+        if let (_, _, Some(energy_winner)) = &p.winners {
+            assert!(
+                energy_winner.starts_with("disagg"),
+                "{}: throughput/energy winner should be disaggregated, got {energy_winner}",
+                p.panel
+            );
+        }
+        // every strategy produced at least one SLO-satisfying point
+        for r in &p.results {
+            assert!(!r.points.is_empty(), "{}: no sweep points", r.label);
+        }
+    }
+    println!("\nFig 10 shape assertions hold (disaggregated wins throughput/energy)");
+}

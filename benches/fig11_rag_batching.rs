@@ -1,0 +1,34 @@
+//! Bench: regenerate Fig 11 (batching strategies with a RAG stage:
+//! +3K retrieval tokens, retrieval SLO ladder).
+
+use hermes::experiments::{fig10, fig11};
+use hermes::util::bench::banner;
+
+fn main() {
+    banner("Fig 11 — batching strategies with RAG pipelines");
+    let fast = std::env::var("HERMES_FULL").is_err();
+    let rag = fig11::run(fast).expect("fig11");
+    assert_eq!(rag.len(), 2);
+
+    // paper shape: the RAG stage lowers the sustainable injection rate
+    // relative to the regular pipeline (longer prefills)
+    let plain = fig10::run(fast).expect("fig10");
+    for (r, p) in rag.iter().zip(&plain) {
+        let best_rate = |panels: &[hermes::experiments::common::StrategyResult]| {
+            panels
+                .iter()
+                .filter_map(|s| s.best().map(|pt| pt.rate))
+                .fold(0.0f64, f64::max)
+        };
+        let rag_rate = best_rate(&r.results);
+        let plain_rate = best_rate(&p.results);
+        if rag_rate > 0.0 && plain_rate > 0.0 {
+            assert!(
+                rag_rate <= plain_rate + 1e-9,
+                "{}: RAG pipeline should not sustain more than regular ({rag_rate} vs {plain_rate})",
+                r.panel
+            );
+        }
+    }
+    println!("\nFig 11 shape assertions hold (RAG lowers sustainable rate)");
+}

@@ -1,0 +1,23 @@
+//! Bench: regenerate Fig 12 (batching strategies with KV-cache
+//! retrieval: 3K cached context tokens, no recompute).
+
+use hermes::experiments::fig12;
+use hermes::util::bench::banner;
+
+fn main() {
+    banner("Fig 12 — batching strategies with KV-retrieval pipelines");
+    let fast = std::env::var("HERMES_FULL").is_err();
+    let panels = fig12::run(fast).expect("fig12");
+    assert_eq!(panels.len(), 2);
+    for p in &panels {
+        for r in &p.results {
+            for pt in &r.points {
+                assert!(pt.metrics.n_serviced > 0, "{}: no serviced requests", r.label);
+                // cached context attends over ≥3K extra tokens → TPOT must
+                // still be bounded (retrieval does not extend generation)
+                assert!(pt.metrics.tpot.p50 < 0.2, "{}: runaway TPOT", r.label);
+            }
+        }
+    }
+    println!("\nFig 12 shape assertions hold");
+}

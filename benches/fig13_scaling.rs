@@ -1,0 +1,33 @@
+//! Bench: regenerate Fig 13 (goodput vs generation SLA while scaling
+//! serving clients; 99%-compliance criterion).
+
+use hermes::experiments::fig13;
+use hermes::util::bench::banner;
+
+fn main() {
+    banner("Fig 13 — goodput vs generation SLA, scaling clients");
+    let fast = std::env::var("HERMES_FULL").is_err();
+    let rows = fig13::run(fast).expect("fig13");
+    assert!(!rows.is_empty());
+    // per (strategy, clients): tightening the SLA can only reduce the
+    // sustainable rate
+    for r in &rows {
+        let same: Vec<&fig13::Fig13Row> = rows
+            .iter()
+            .filter(|x| x.strategy == r.strategy && x.clients == r.clients)
+            .collect();
+        for w in same.windows(2) {
+            assert!(
+                w[1].sla_mult <= w[0].sla_mult,
+                "rows must be ordered tightening"
+            );
+            assert!(
+                w[1].max_rate <= w[0].max_rate + 1e-9,
+                "{} n={}: tighter SLA cannot raise sustainable rate",
+                r.strategy,
+                r.clients
+            );
+        }
+    }
+    println!("\nFig 13 monotonicity assertions hold");
+}

@@ -1,0 +1,25 @@
+//! Bench: regenerate Fig 5 (validation vs splitwise-sim-like baseline).
+//! Full scale with HERMES_FULL=1; CI scale otherwise.
+
+use hermes::experiments::fig5;
+use hermes::util::bench::{banner, time_fn};
+
+fn main() {
+    banner("Fig 5 — HERMES vs splitwise-sim-like baseline (80-GPU disaggregated)");
+    let fast = std::env::var("HERMES_FULL").is_err();
+    let rows = fig5::run(fast).expect("fig5");
+    assert!(!rows.is_empty());
+    // shape check: the two simulators agree within the paper's 6% band
+    for r in &rows {
+        assert!(
+            r.gap_pct < 6.0,
+            "{} rps {}: gap {:.2}% exceeds the paper's 6% band",
+            r.model,
+            r.rps,
+            r.gap_pct
+        );
+    }
+    time_fn("fig5 single validation run", 0, 3, || {
+        fig5::run(true).unwrap();
+    });
+}

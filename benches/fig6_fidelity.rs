@@ -1,0 +1,16 @@
+//! Bench: regenerate Fig 6 (end-to-end fidelity of the fitted predictor
+//! vs the fine-grained oracle over the chunked-batching sweep grid).
+
+use hermes::experiments::fig6;
+use hermes::util::bench::banner;
+use hermes::util::stats;
+
+fn main() {
+    banner("Fig 6 — ML-predictor end-to-end fidelity (Llama3-70B, HGX-H100)");
+    let fast = std::env::var("HERMES_FULL").is_err();
+    let rows = fig6::run(fast).expect("fig6");
+    let errs: Vec<f64> = rows.iter().map(|r| r.err_pct).collect();
+    let avg = stats::mean(&errs);
+    // paper: <2% average end-to-end error
+    assert!(avg < 2.0, "average fidelity error {avg:.2}% exceeds 2%");
+}

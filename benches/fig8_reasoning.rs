@@ -1,0 +1,30 @@
+//! Bench: regenerate Fig 8 (goodput under multi-path reasoning,
+//! Llama3-70B on 8×TP8 clients; panels a=conv/8 branches, b=code/4).
+
+use hermes::experiments::fig8;
+use hermes::util::bench::banner;
+
+fn main() {
+    banner("Fig 8 — batching strategies under multi-path reasoning");
+    let fast = std::env::var("HERMES_FULL").is_err();
+    let panels = fig8::run(fast).expect("fig8");
+    assert_eq!(panels.len(), 2);
+    for p in &panels {
+        // every strategy produced sweep points and served requests
+        for r in &p.results {
+            assert!(!r.points.is_empty());
+            assert!(r.points.iter().all(|pt| pt.metrics.n_serviced > 0));
+        }
+        // reasoning inflates memory: goodput must degrade as rate rises
+        for r in &p.results {
+            let first = r.points.first().unwrap().metrics.goodput_frac;
+            let last = r.points.last().unwrap().metrics.goodput_frac;
+            assert!(
+                last <= first + 0.35,
+                "{} {}: goodput should not improve at saturation ({first} -> {last})",
+                p.panel,
+                r.label
+            );
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! Bench: regenerate Fig 9 (RAG embedding/retrieval placement study).
+//! Asserts the paper's three headline shapes.
+
+use hermes::experiments::fig9;
+use hermes::util::bench::banner;
+
+fn main() {
+    banner("Fig 9 — RAG pipeline bottlenecks across embedding placements");
+    let rows = fig9::run(false).expect("fig9");
+    assert_eq!(rows.len(), 6);
+
+    let get = |model: &str, hw: &str| {
+        rows.iter()
+            .find(|r| r.embed_model == model && r.hw == hw)
+            .unwrap()
+    };
+
+    // 1) big embedder on the small CPU is the bottleneck: embedding
+    //    dominates its own TTFT
+    let spr = get("mistral-7b", "small-cpu(spr)");
+    assert!(spr.embed_s > 0.4 * spr.ttft_s, "embed must dominate TTFT");
+
+    // 2) offloading the embedder to an A100 collapses embed time >10×
+    let a100 = get("mistral-7b", "a100+large-cpu");
+    assert!(spr.embed_s / a100.embed_s > 10.0);
+
+    // 3) context transfer is <1% of runtime even on PCIe4 ×4
+    for r in &rows {
+        assert!(r.transfer_pct < 1.0, "{}/{}: transfer {}%", r.embed_model, r.hw, r.transfer_pct);
+    }
+
+    // 4) E5-Base never bottlenecks on embedding
+    for hw in ["large-cpu(grace)", "small-cpu(spr)", "a100+large-cpu"] {
+        let r = get("e5-base", hw);
+        assert!(r.embed_s < 0.1 * r.ttft_s);
+    }
+    println!("\nall Fig 9 shape assertions hold");
+}

@@ -1,0 +1,124 @@
+//! Microbenchmarks of the simulator hot path (§III-E.1's "20–50×
+//! simulation speedup" claim, plus the L3 perf-pass metrics tracked in
+//! EXPERIMENTS.md §Perf):
+//!   * event-queue throughput
+//!   * perf-model backends: roofline vs native poly vs PJRT vs memoized
+//!   * end-to-end simulated-seconds-per-wall-second
+
+use hermes::config::slo::SloLadder;
+use hermes::coordinator::{Event, EventQueue};
+use hermes::hardware::models::LLAMA3_70B;
+use hermes::hardware::npu::H100;
+use hermes::hardware::roofline::LlmCluster;
+use hermes::perfmodel::memo::Memoized;
+use hermes::perfmodel::pjrt::PjrtPerfModel;
+use hermes::perfmodel::poly::PolyPerfModel;
+use hermes::perfmodel::{PerfModel, RooflinePerfModel, StepFeatures};
+use hermes::runtime::ArtifactBundle;
+use hermes::scheduler::BatchingKind;
+use hermes::sim::builder::{PerfBackend, PoolSpec, ServingSpec};
+use hermes::sim::{driver, SimTime};
+use hermes::util::bench::{banner, black_box, time_fn};
+use hermes::workload::trace::{TraceKind, WorkloadSpec};
+
+const KEY: &str = "llama3-70b@h100/tp8";
+
+fn bench_event_queue() {
+    banner("event queue");
+    time_fn("push+pop 100k events", 1, 10, || {
+        let mut q = EventQueue::new();
+        for i in 0..100_000u64 {
+            q.push(
+                SimTime::from_nanos(i * 977 % 1_000_000),
+                Event::EngineStep { client: (i % 64) as usize },
+            );
+        }
+        while let Some(e) = q.pop() {
+            black_box(e);
+        }
+    });
+}
+
+fn decode_grid(n: usize) -> Vec<StepFeatures> {
+    (0..n)
+        .map(|i| StepFeatures::decode(1 + i % 64, ((1 + i % 64) * (512 + i % 2048)) as f64))
+        .collect()
+}
+
+fn bench_perf_models() {
+    banner("perf-model backends (1024 candidate step plans)");
+    let feats = decode_grid(1024);
+    let cluster = LlmCluster::new(LLAMA3_70B, H100, 8);
+
+    let mut roofline = RooflinePerfModel::new(cluster);
+    let t_roof = time_fn("roofline (analytical)", 2, 20, || {
+        black_box(roofline.predict_batch(&feats));
+    });
+
+    let dir = ArtifactBundle::default_dir();
+    let bundle = ArtifactBundle::open(&dir).expect("run `make artifacts`");
+    let mut poly = PolyPerfModel::from_coefficients(&bundle.coefficients, KEY).unwrap();
+    let t_poly = time_fn("native poly (fitted)", 2, 20, || {
+        black_box(poly.predict_batch(&feats));
+    });
+
+    let mut pjrt = PjrtPerfModel::load(&dir, KEY).unwrap();
+    let t_pjrt = time_fn("pjrt (AOT pallas/XLA)", 2, 20, || {
+        black_box(pjrt.predict_batch(&feats));
+    });
+
+    let mut memo = Memoized::new(PjrtPerfModel::load(&dir, KEY).unwrap());
+    memo.predict_batch(&feats); // warm the cache
+    let t_memo = time_fn("pjrt+memo (warm)", 2, 20, || {
+        black_box(memo.predict_batch(&feats));
+    });
+
+    println!(
+        "\nspeedup of fitted-poly over analytical: {:.1}x (paper: 20-50x for ML vs analytical sim)",
+        t_roof.mean / t_poly.mean
+    );
+    println!(
+        "pjrt overhead vs native poly: {:.1}x; memoized recovers to {:.1}x of poly",
+        t_pjrt.mean / t_poly.mean,
+        t_memo.mean / t_poly.mean
+    );
+    println!("memo hit rate: {:.1}%", memo.hit_rate() * 100.0);
+}
+
+fn bench_end_to_end() {
+    banner("end-to-end simulation rate");
+    let slo = SloLadder::standard();
+    for (name, perf) in [
+        ("roofline", PerfBackend::Roofline),
+        ("poly", PerfBackend::Poly),
+        ("pjrt-memo", PerfBackend::PjrtMemo),
+    ] {
+        let spec = ServingSpec::new(
+            "llama3-70b",
+            H100,
+            8,
+            PoolSpec::Combined { kind: BatchingKind::Continuous, n: 4 },
+        )
+        .with_perf(perf);
+        let workload =
+            WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 200, 8.0).with_seed(1);
+        let mut sim_seconds = 0.0;
+        let s = time_fn(&format!("serve 200 conv requests [{name}]"), 1, 5, || {
+            let m = driver::run(&spec, &workload, &slo).unwrap();
+            sim_seconds = m.makespan;
+            black_box(m);
+        });
+        println!(
+            "    -> simulates {:.0}x faster than real time ({:.1} sim-s / {:.3} wall-s)",
+            sim_seconds / s.mean,
+            sim_seconds,
+            s.mean
+        );
+    }
+}
+
+fn main() {
+    bench_event_queue();
+    bench_perf_models();
+    bench_end_to_end();
+}

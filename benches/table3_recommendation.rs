@@ -1,0 +1,29 @@
+//! Bench: regenerate Table III (batching-strategy recommendation matrix
+//! across traces × request types × system sizes × objectives).
+
+use hermes::experiments::table3;
+use hermes::util::bench::banner;
+
+fn main() {
+    banner("Table III — batching strategy recommendations");
+    let fast = std::env::var("HERMES_FULL").is_err();
+    let rows = table3::run(fast).expect("table3");
+    assert!(rows.len() >= 10, "expected a full matrix, got {}", rows.len());
+
+    // paper headline: disaggregated dominates the throughput/energy
+    // column in the (large) majority of cases
+    let with_energy: Vec<_> = rows.iter().filter(|r| r.throughput_energy != "-").collect();
+    let disagg_wins = with_energy
+        .iter()
+        .filter(|r| r.throughput_energy.starts_with("disagg"))
+        .count();
+    assert!(
+        disagg_wins * 2 > with_energy.len(),
+        "disaggregated should win throughput/energy in most cases ({disagg_wins}/{})",
+        with_energy.len()
+    );
+    println!(
+        "\ndisaggregated wins throughput/energy in {disagg_wins}/{} cases (paper: most cases)",
+        with_energy.len()
+    );
+}

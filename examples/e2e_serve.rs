@@ -1,0 +1,70 @@
+//! End-to-end driver proving the three layers compose:
+//!
+//!   L1 Pallas predictor kernel ──(jax.jit → HLO text, `make artifacts`)──►
+//!   L2 JAX graph per TP variant ──(PJRT CPU client)──►
+//!   L3 rust coordinator pricing every engine step through the compiled
+//!      executable on the request path (memoized), running a realistic
+//!      disaggregated deployment on a synthetic Azure-style workload.
+//!
+//!     make artifacts && cargo run --release --example e2e_serve
+//!
+//! Reports latency/throughput (recorded in EXPERIMENTS.md §E2E).
+
+use hermes::config::slo::SloLadder;
+use hermes::hardware::npu::H100;
+use hermes::metrics::RunMetrics;
+use hermes::runtime::{ArtifactBundle, Runtime};
+use hermes::sim::builder::{NetSpec, PerfBackend, PoolSpec, ServingSpec};
+use hermes::workload::trace::{Pipeline, TraceKind, WorkloadSpec};
+
+fn main() -> anyhow::Result<()> {
+    // prove the PJRT runtime is live and the artifacts load
+    let rt = Runtime::cpu()?;
+    let bundle = ArtifactBundle::open(&ArtifactBundle::default_dir())?;
+    println!("PJRT platform: {}", rt.platform());
+    println!("AOT predictor variants: {:?}", bundle.variant_keys());
+
+    // a rack: 12 prefill + 8 decode clients of H100 TP2 + post-processing
+    let spec = ServingSpec::new(
+        "llama3-70b",
+        H100,
+        2,
+        PoolSpec::Disaggregated { prefill: 12, decode: 8, local: false },
+    )
+    .with_perf(PerfBackend::PjrtMemo) // the AOT artifact on the hot path
+    .with_net(NetSpec::Hierarchy { per_platform: 4, per_rack: 20 });
+
+    let n_requests = 800;
+    let workload = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, n_requests, 40.0)
+        .with_pipeline(Pipeline::Regular)
+        .with_seed(2026);
+
+    println!("\nserving {n_requests} conversational requests on 20 disaggregated clients…");
+    let mut coord = spec.build()?;
+    coord.inject(workload.generate(0));
+    let t0 = std::time::Instant::now();
+    coord.run();
+    let wall = t0.elapsed().as_secs_f64();
+
+    let slo = SloLadder::standard();
+    let m = RunMetrics::collect(&coord, &slo);
+    assert_eq!(m.n_serviced, n_requests, "every request must complete");
+
+    println!("─ results ────────────────────────────────────────────");
+    println!("simulated horizon      {:>10.2} s", m.makespan);
+    println!("wall-clock             {:>10.2} s  ({:.0} events/s, {:.0}x realtime)",
+             wall, m.events as f64 / wall, m.makespan / wall);
+    println!("TTFT   p50/p90/p99     {:>6.0} / {:.0} / {:.0} ms",
+             m.ttft.p50 * 1e3, m.ttft.p90 * 1e3, m.ttft.p99 * 1e3);
+    println!("TPOT   p50/p90/p99     {:>6.1} / {:.1} / {:.1} ms",
+             m.tpot.p50 * 1e3, m.tpot.p90 * 1e3, m.tpot.p99 * 1e3);
+    println!("E2E    p50/p99         {:>6.2} / {:.2} s", m.e2e.p50, m.e2e.p99);
+    println!("throughput             {:>10.0} tok/s", m.throughput_tok_s);
+    println!("goodput (per-req SLO)  {:>10.1} %", m.goodput_frac * 100.0);
+    println!("energy                 {:>10.1} kJ   ({:.2} tok/J)",
+             m.energy_joules / 1e3, m.tok_per_joule);
+    println!("KV transfers           {:>10}   ({:.1} GB over the fabric)",
+             m.transfers, m.transfer_bytes / 1e9);
+    println!("all-six SLO            {:>10}", if m.slo_satisfied(&slo) { "SATISFIED" } else { "violated" });
+    Ok(())
+}

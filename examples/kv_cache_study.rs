@@ -1,0 +1,72 @@
+//! Remote KV-cache storage study (the Fig 15 scenario at laptop scale):
+//! chat requests whose past 4K/24K-token context is fetched from one of
+//! the Fig 14 storage tiers — or recomputed.
+//!
+//!     cargo run --release --example kv_cache_study
+
+use hermes::config::slo::SloLadder;
+use hermes::hardware::npu::H100;
+use hermes::memory::storage::{KvScenario, StorageConfig};
+use hermes::metrics::RunMetrics;
+use hermes::scheduler::BatchingKind;
+use hermes::sim::builder::{KvRetrievalSpec, NetSpec, PerfBackend, PoolSpec, ServingSpec};
+use hermes::util::stats;
+use hermes::workload::request::KvParams;
+use hermes::workload::trace::{Pipeline, TraceKind, WorkloadSpec};
+
+fn main() -> anyhow::Result<()> {
+    let slo = SloLadder::retrieval();
+    for cache_tokens in [4096usize, 24576] {
+        println!("\n=== past-context size: {}K tokens (private scenario) ===", cache_tokens / 1024);
+        println!("{:<14} {:>9} {:>9} {:>9} {:>11}", "storage", "e2e_p50", "e2e_p90", "e2e_p99", "recomputes");
+        for cfg in StorageConfig::all() {
+            // tier replica counts, scaled down from Fig 14: dedicated = one
+            // store per client; platform = one per 4; rack = one for all 8
+            let stores = match cfg {
+                StorageConfig::DedicatedPerClient => 8,
+                StorageConfig::PlatformShared => 2,
+                _ => 1,
+            };
+            let spec = ServingSpec::new(
+                "llama3-70b",
+                H100,
+                2,
+                PoolSpec::Combined { kind: BatchingKind::Continuous, n: 8 },
+            )
+            .with_perf(PerfBackend::Poly)
+            .with_net(NetSpec::Hierarchy { per_platform: 4, per_rack: 20 })
+            .with_kv_retrieval(KvRetrievalSpec {
+                count: stores,
+                storage: cfg,
+                scenario: KvScenario::Private,
+                max_batch: 0,
+                ports: 4,
+            });
+            let workload = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 300, 8.0)
+                .with_pipeline(Pipeline::KvRetrieval(KvParams { cached_tokens: cache_tokens }))
+                .with_seed(14);
+            let mut coord = spec.build()?;
+            coord.inject(workload.generate(0));
+            coord.run();
+            let m = RunMetrics::collect(&coord, &slo);
+            println!(
+                "{:<14} {:>8.2}s {:>8.2}s {:>8.2}s {:>11}",
+                cfg.name(),
+                m.e2e.p50,
+                m.e2e.p90,
+                m.e2e.p99,
+                m.recomputes
+            );
+            if cfg == StorageConfig::PlatformShared {
+                // show a CDF slice for the plotting-minded
+                let cdf = stats::cdf(&m.e2e_samples, 5);
+                let pts: Vec<String> =
+                    cdf.iter().map(|(x, q)| format!("{:.0}%≤{:.2}s", q * 100.0, x)).collect();
+                println!("               cdf: {}", pts.join("  "));
+            }
+        }
+    }
+    println!("\nshape: recompute competitive at 4K, prohibitive at 24K; the");
+    println!("platform tier balances speed and capacity for private KV (paper Fig 15).");
+    Ok(())
+}

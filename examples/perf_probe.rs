@@ -1,0 +1,78 @@
+//! Perf-pass probe: record the feature stream from a fast (poly) run,
+//! then replay it against the memoized PJRT backend to count calls.
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+use hermes::perfmodel::memo::Memoized;
+use hermes::perfmodel::pjrt::PjrtPerfModel;
+use hermes::perfmodel::poly::PolyPerfModel;
+use hermes::perfmodel::{PerfModel, StepFeatures, StepPrediction};
+use hermes::runtime::ArtifactBundle;
+
+struct Recorder {
+    inner: PolyPerfModel,
+    log: Rc<RefCell<Vec<Vec<StepFeatures>>>>,
+}
+impl PerfModel for Recorder {
+    fn name(&self) -> &str { "recorder" }
+    fn predict_batch(&mut self, feats: &[StepFeatures]) -> Vec<StepPrediction> {
+        self.log.borrow_mut().push(feats.to_vec());
+        self.inner.predict_batch(feats)
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    use hermes::client::{Client, LlmClient};
+    use hermes::coordinator::{Coordinator, RoutePolicy, Router};
+    use hermes::hardware::models::LLAMA3_70B;
+    use hermes::hardware::npu::H100;
+    use hermes::hardware::roofline::LlmCluster;
+    use hermes::network::Network;
+    use hermes::scheduler::{BatchingKind, LlmSched, Packing, SchedConfig};
+    use hermes::workload::trace::{TraceKind, WorkloadSpec};
+
+    let dir = ArtifactBundle::default_dir();
+    let key = "llama3-70b@h100/tp8";
+    let bundle = ArtifactBundle::open(&dir)?;
+    let log = Rc::new(RefCell::new(Vec::new()));
+
+    let mut clients: Vec<Box<dyn Client>> = Vec::new();
+    for i in 0..4 {
+        let cluster = LlmCluster::new(LLAMA3_70B, H100, 8);
+        clients.push(Box::new(LlmClient::new(
+            i,
+            cluster,
+            LlmSched::new(BatchingKind::Continuous, Packing::Fcfs, SchedConfig::default()),
+            Box::new(Recorder {
+                inner: PolyPerfModel::from_coefficients(&bundle.coefficients, key)?,
+                log: log.clone(),
+            }),
+        )));
+    }
+    let mut coord = Coordinator::new(
+        clients,
+        Router::new(RoutePolicy::LoadBased(hermes::coordinator::LoadMetric::TokensLeft)),
+        Network::single_platform(4),
+    );
+    coord.inject(WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 200, 8.0).with_seed(1).generate(0));
+    coord.run();
+
+    let stream = log.borrow();
+    let batches = stream.len();
+    let rows: usize = stream.iter().map(|b| b.len()).sum();
+    println!("perf-model invocations: {batches} (total rows {rows})");
+
+    let mut memo = Memoized::new(PjrtPerfModel::load(&dir, key)?);
+    let t0 = Instant::now();
+    for b in stream.iter() {
+        memo.inner_calls_probe(b);
+    }
+    let el = t0.elapsed();
+    println!(
+        "replay vs memoized PJRT: {:?}  hits {}  misses {}  hit-rate {:.1}%  pjrt-calls {}",
+        el, memo.hits, memo.misses, memo.hit_rate() * 100.0, memo.inner.calls
+    );
+    println!("avg {:.1} us/invocation", el.as_secs_f64() / batches as f64 * 1e6);
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! Measures raw PJRT per-call cost at the artifact's row count.
+use hermes::perfmodel::pjrt::PjrtPerfModel;
+use hermes::perfmodel::{PerfModel, StepFeatures};
+use hermes::runtime::ArtifactBundle;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let mut m = PjrtPerfModel::load(&ArtifactBundle::default_dir(), "llama3-70b@h100/tp8")?;
+    for _ in 0..50 { m.predict(StepFeatures::decode(1, 100.0)); }
+    let n = 2000;
+    let t0 = Instant::now();
+    for i in 0..n {
+        m.predict(StepFeatures::decode(1 + i % 32, (1000 + i * 7) as f64));
+    }
+    let el = t0.elapsed().as_secs_f64();
+    println!("single-plan PJRT predict: {:.1} us/call ({} calls, rows {})", el / n as f64 * 1e6, m.calls, m.rows());
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! Quickstart: simulate a 4-client continuous-batching deployment of
+//! Llama-3-70B on H100 (TP2) serving a conversational trace, and print
+//! the paper's metric set.
+//!
+//!     cargo run --release --example quickstart
+
+use hermes::config::slo::SloLadder;
+use hermes::hardware::npu::H100;
+use hermes::metrics::RunMetrics;
+use hermes::scheduler::BatchingKind;
+use hermes::sim::builder::{PerfBackend, PoolSpec, ServingSpec};
+use hermes::workload::trace::{TraceKind, WorkloadSpec};
+
+fn main() -> anyhow::Result<()> {
+    // 1. describe the serving system
+    let spec = ServingSpec::new(
+        "llama3-70b",
+        H100,
+        2, // tensor parallelism per client
+        PoolSpec::Combined { kind: BatchingKind::Continuous, n: 4 },
+    )
+    .with_perf(PerfBackend::Poly); // fitted predictor from `make artifacts`
+
+    // 2. describe the workload: 400 chat requests at 2 req/s/client
+    let workload = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 400, 8.0).with_seed(7);
+
+    // 3. build, inject, run
+    let mut coord = spec.build()?;
+    coord.inject(workload.generate(0));
+    let t0 = std::time::Instant::now();
+    coord.run();
+    let wall = t0.elapsed();
+
+    // 4. collect the paper's metrics
+    let slo = SloLadder::standard();
+    let m = RunMetrics::collect(&coord, &slo);
+    println!("simulated {:.1}s of serving in {:?} ({} events)", m.makespan, wall, m.events);
+    println!("TTFT  p50 {:.0}ms  p90 {:.0}ms  p99 {:.0}ms", m.ttft.p50 * 1e3, m.ttft.p90 * 1e3, m.ttft.p99 * 1e3);
+    println!("TPOT  p50 {:.1}ms  p99 {:.1}ms", m.tpot.p50 * 1e3, m.tpot.p99 * 1e3);
+    println!("throughput {:.0} tok/s   energy {:.1} kJ   {:.2} tok/J",
+             m.throughput_tok_s, m.energy_joules / 1e3, m.tok_per_joule);
+    println!("all-six SLO: {}", if m.slo_satisfied(&slo) { "SATISFIED" } else { "violated" });
+    Ok(())
+}

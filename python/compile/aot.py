@@ -1,0 +1,87 @@
+"""AOT entry point: fit every configured variant, lower to HLO text, and
+emit the artifact bundle the rust simulator loads.
+
+    artifacts/
+      runtime_<model>_<npu>_tp<k>.hlo.txt   # one PJRT executable per variant
+      coefficients.json                     # same coefficients for the
+                                            #   native rust PolyPerfModel
+      manifest.json                         # variant -> file map + shapes
+
+Run via ``make artifacts`` (idempotent: the Makefile only re-runs this
+when the python sources change). Python never runs at simulation time.
+"""
+
+import argparse
+import json
+import os
+import time
+
+from . import fit as fitmod
+from . import model as modelmod
+from .kernels import predictor
+from .kernels.ref import N_RAW
+
+# (model, npu, tp) variants fitted by default: the Fig 6/10–13 serving
+# configs (Llama-3-70B on H100 at TP2/4/8) plus the Fig 5 validation
+# models at TP8. Everything else falls back to the rust roofline model.
+DEFAULT_VARIANTS = [
+    ("llama3-70b", "h100", 2),
+    ("llama3-70b", "h100", 4),
+    ("llama3-70b", "h100", 8),
+    ("llama2-70b", "h100", 8),
+    ("bloom-176b", "h100", 8),
+]
+
+
+def variant_stem(model: str, npu: str, tp: int) -> str:
+    return f"runtime_{model}_{npu}_tp{tp}"
+
+
+def build(out_dir: str, variants=None, rows: int = modelmod.MAX_ROWS,
+          block_r: int = predictor.BLOCK_R, n_points: int = fitmod.N_POINTS):
+    os.makedirs(out_dir, exist_ok=True)
+    variants = variants or DEFAULT_VARIANTS
+    manifest = {"rows": rows, "n_raw": N_RAW, "block_r": block_r, "variants": {}}
+    coeffs = {}
+    for model_name, npu_name, tp in variants:
+        t0 = time.time()
+        res = fitmod.fit(model_name, npu_name, tp, n_points=n_points)
+        hlo = modelmod.lower_to_hlo_text(res, rows=rows, block_r=block_r)
+        stem = variant_stem(model_name, npu_name, tp)
+        path = os.path.join(out_dir, stem + ".hlo.txt")
+        with open(path, "w") as f:
+            f.write(hlo)
+        key = f"{model_name}@{npu_name}/tp{tp}"
+        manifest["variants"][key] = {
+            "file": stem + ".hlo.txt",
+            "model": model_name,
+            "npu": npu_name,
+            "tp": tp,
+        }
+        coeffs[key] = res.to_json_dict()
+        print(
+            f"[aot] {key}: mse_pf={res.mse_pf:.3e} mse_dec={res.mse_dec:.3e} "
+            f"hlo={len(hlo) / 1024:.0f}KiB "
+            f"({time.time() - t0:.1f}s)"
+        )
+    with open(os.path.join(out_dir, "coefficients.json"), "w") as f:
+        json.dump(coeffs, f, indent=2, sort_keys=True)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote {len(coeffs)} variants to {out_dir}/")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--rows", type=int, default=modelmod.MAX_ROWS)
+    ap.add_argument("--block-r", type=int, default=predictor.BLOCK_R)
+    ap.add_argument("--n-points", type=int, default=fitmod.N_POINTS,
+                    help="synthetic trace size (58K mirrors the paper)")
+    args = ap.parse_args()
+    build(args.out_dir, rows=args.rows, block_r=args.block_r,
+          n_points=args.n_points)
+
+
+if __name__ == "__main__":
+    main()

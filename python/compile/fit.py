@@ -1,0 +1,162 @@
+"""Synthetic hardware-trace generation + polynomial regression fit.
+
+Paper §III-E.1: "we used real hardware data collecting over 58K datapoints
+on a DGX-H100 box running vLLM with LLaMA2-70B. We vary input size, batch
+size, chunk size (for chunked batching), and tensor parallelism
+(TP2/TP4/TP8). We observe that decode batches constitute ~96% of the
+dataset. We use polynomial regression [...] decode runtime with MSE =
+4.09e-07. Prefill runtime is modeled using past token count, prefill token
+count, batch size, and token², with MSE = 6.49e-05."
+
+We have no DGX-H100, so the trace is *synthesized* from the GenZ-like
+roofline in hwspec.py (the same analytical model the rust simulator uses
+for un-fitted configurations) with multiplicative log-normal measurement
+noise. The fit itself — feature forms, scaled lstsq, MSE accounting — is
+the paper's methodology verbatim.
+"""
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import hwspec
+from .kernels.ref import N_FEATURES, SCALES
+
+# Dataset composition (paper: decode batches ≈ 96% of the 58K points).
+N_POINTS = 58_000
+DECODE_FRAC = 0.96
+NOISE_SIGMA = 0.01  # 1% multiplicative measurement noise
+
+
+@dataclass
+class FitResult:
+    model: str
+    npu: str
+    tp: int
+    w_pf: np.ndarray
+    w_dec: np.ndarray
+    # Mixed-step cross terms (analytic, per variant), used by the
+    # roofline-aware combination rule (see kernels/ref.py):
+    #   c_dec_b  — compute seconds a decode sequence adds to a
+    #              compute-bound (prefill-led) step
+    #   c_dec_kv — compute seconds per decode KV token (attention flops)
+    #   m_pf_tok — memory seconds a prefill token (incl. past) adds to a
+    #              memory-bound (decode-led) step
+    c_dec_b: float
+    c_dec_kv: float
+    m_pf_tok: float
+    mse_pf: float
+    mse_dec: float
+    n_pf: int
+    n_dec: int
+    extras: dict = field(default_factory=dict)
+
+    def to_json_dict(self) -> dict:
+        return {
+            "model": self.model,
+            "npu": self.npu,
+            "tp": self.tp,
+            "scales": list(SCALES),
+            "w_pf": [float(v) for v in self.w_pf],
+            "w_dec": [float(v) for v in self.w_dec],
+            "c_dec_b": float(self.c_dec_b),
+            "c_dec_kv": float(self.c_dec_kv),
+            "m_pf_tok": float(self.m_pf_tok),
+            "mse_pf": float(self.mse_pf),
+            "mse_dec": float(self.mse_dec),
+            "n_pf": self.n_pf,
+            "n_dec": self.n_dec,
+        }
+
+
+def _prefill_features_np(x: np.ndarray) -> np.ndarray:
+    s = x / np.asarray(SCALES, dtype=np.float64)
+    new, past, items = s[:, 0], s[:, 1], s[:, 2]
+    ones = np.ones_like(new)
+    return np.stack([ones, past, new, items, new * new, new * past], axis=1)
+
+
+def _decode_features_np(x: np.ndarray) -> np.ndarray:
+    s = x / np.asarray(SCALES, dtype=np.float64)
+    b, kv = s[:, 3], s[:, 4]
+    ones = np.ones_like(b)
+    return np.stack([ones, b, kv, b * kv, b * b, kv * kv], axis=1)
+
+
+def synth_trace(model: hwspec.ModelSpec, npu: hwspec.NpuSpec, tp: int,
+                n_points: int = N_POINTS, seed: int = 0):
+    """Sample (features, runtime) pairs over the vLLM-style sweep grid.
+
+    Returns (x_pf, t_pf, x_dec, t_dec): raw 5-feature rows and noisy
+    step times for the pure-prefill and pure-decode subsets.
+    """
+    rng = np.random.default_rng(seed)
+    n_dec = int(n_points * DECODE_FRAC)
+    n_pf = n_points - n_dec
+
+    # --- decode points: batch size × context length grid ------------------
+    b = rng.integers(1, 257, size=n_dec).astype(np.float64)
+    ctx = np.exp(rng.uniform(np.log(64.0), np.log(8192.0), size=n_dec))
+    kv = b * ctx
+    x_dec = np.zeros((n_dec, 5))
+    x_dec[:, 3] = b
+    x_dec[:, 4] = kv
+    t_dec = np.array(
+        [hwspec.step_time(model, npu, tp, 0.0, 0.0, 0, int(bi), kvi)
+         for bi, kvi in zip(b, kv)]
+    )
+    t_dec *= np.exp(rng.normal(0.0, NOISE_SIGMA, size=n_dec))
+
+    # --- prefill points: input size × chunk size × batch grid -------------
+    new = np.exp(rng.uniform(np.log(64.0), np.log(8192.0), size=n_pf))
+    # chunked batching → some points carry past context
+    past = np.where(rng.random(n_pf) < 0.5,
+                    np.exp(rng.uniform(np.log(64.0), np.log(16384.0), size=n_pf)),
+                    0.0)
+    items = rng.integers(1, 9, size=n_pf).astype(np.float64)
+    x_pf = np.zeros((n_pf, 5))
+    x_pf[:, 0] = new
+    x_pf[:, 1] = past
+    x_pf[:, 2] = items
+    t_pf = np.array(
+        [hwspec.step_time(model, npu, tp, ni, pi, int(ii), 0, 0.0)
+         for ni, pi, ii in zip(new, past, items)]
+    )
+    t_pf *= np.exp(rng.normal(0.0, NOISE_SIGMA, size=n_pf))
+
+    return x_pf, t_pf, x_dec, t_dec
+
+
+def fit(model_name: str, npu_name: str, tp: int,
+        n_points: int = N_POINTS, seed: int = 0) -> FitResult:
+    model = hwspec.MODELS[model_name]
+    npu = hwspec.NPUS[npu_name]
+    x_pf, t_pf, x_dec, t_dec = synth_trace(model, npu, tp, n_points, seed)
+
+    phi_pf = _prefill_features_np(x_pf)
+    phi_dec = _decode_features_np(x_dec)
+    # Relative-error weighting: minimize ||(φw − t)/t||² so microsecond-
+    # and second-scale steps carry equal weight — a latency predictor is
+    # judged on relative error. (Plain MSE is still reported below, in
+    # the units the paper uses.)
+    w_pf, *_ = np.linalg.lstsq(phi_pf / t_pf[:, None], np.ones_like(t_pf), rcond=None)
+    w_dec, *_ = np.linalg.lstsq(phi_dec / t_dec[:, None], np.ones_like(t_dec), rcond=None)
+    assert w_pf.shape == (N_FEATURES,) and w_dec.shape == (N_FEATURES,)
+
+    mse_pf = float(np.mean((phi_pf @ w_pf - t_pf) ** 2))
+    mse_dec = float(np.mean((phi_dec @ w_dec - t_dec) ** 2))
+
+    # analytic mixed-step cross terms (per raw unit, this variant)
+    c_peak = hwspec.EFF_COMPUTE * npu.peak_flops * tp
+    m_bw = hwspec.EFF_MEM * npu.mem_bw * tp
+    c_dec_b = model.flops_per_token / c_peak
+    c_dec_kv = 4.0 * model.layers * (model.heads * model.d_head) / c_peak
+    m_pf_tok = model.kv_bytes_per_token / m_bw
+
+    return FitResult(
+        model=model_name, npu=npu_name, tp=tp,
+        w_pf=w_pf.astype(np.float32), w_dec=w_dec.astype(np.float32),
+        c_dec_b=c_dec_b, c_dec_kv=c_dec_kv, m_pf_tok=m_pf_tok,
+        mse_pf=mse_pf, mse_dec=mse_dec,
+        n_pf=len(t_pf), n_dec=len(t_dec),
+    )

@@ -1,0 +1,127 @@
+"""Hardware + model spec sheets and the GenZ-like roofline, mirrored from
+``rust/src/hardware/`` (models.rs / npu.rs / roofline.rs).
+
+This module is the *data generator* for the ML-assisted runtime predictor:
+the paper collects 58K datapoints from a DGX-H100 running vLLM; we have no
+DGX, so we synthesize the trace from the same analytical roofline the rust
+simulator uses as its ground-truth hardware model (DESIGN.md §3,
+substitution table). Keep the constants in lock-step with the rust side —
+`rust/tests/pjrt_parity.rs` and the Fig 6 fidelity bench both fail loudly
+if they drift.
+"""
+
+from dataclasses import dataclass
+
+EFF_COMPUTE = 0.55
+EFF_MEM = 0.75
+STEP_OVERHEAD = 350e-6
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    params: float
+    layers: int
+    hidden: int
+    heads: int
+    kv_heads: int
+    d_head: int
+    # served decoder LLMs: fp8 weights (1 B/param); KV cache stays fp16
+    bytes_per_param: float = 1.0
+
+    @property
+    def kv_bytes_per_token(self) -> float:
+        return 2.0 * self.layers * self.kv_heads * self.d_head * 2.0
+
+    @property
+    def weight_bytes(self) -> float:
+        return self.params * self.bytes_per_param
+
+    @property
+    def flops_per_token(self) -> float:
+        return 2.0 * self.params
+
+    def attn_flops(self, ctx: float) -> float:
+        return 4.0 * self.layers * (self.heads * self.d_head) * ctx
+
+
+@dataclass(frozen=True)
+class NpuSpec:
+    name: str
+    peak_flops: float
+    mem_bw: float
+    mem_capacity: float
+    tdp_w: float
+    idle_w: float
+    link_bw: float
+    link_lat: float
+    pcie_bw: float
+
+
+LLAMA2_70B = ModelSpec("llama2-70b", 70e9, 80, 8192, 64, 8, 128)
+LLAMA3_70B = ModelSpec("llama3-70b", 70.6e9, 80, 8192, 64, 8, 128)
+LLAMA3_8B = ModelSpec("llama3.1-8b", 8.03e9, 32, 4096, 32, 8, 128)
+BLOOM_176B = ModelSpec("bloom-176b", 176e9, 70, 14336, 112, 112, 128)
+MISTRAL_7B = ModelSpec("mistral-7b", 7.24e9, 32, 4096, 32, 8, 128)
+E5_BASE = ModelSpec("e5-base", 0.11e9, 12, 768, 12, 12, 64, bytes_per_param=2.0)
+
+H100 = NpuSpec("h100", 989e12, 3.35e12, 80e9, 700.0, 90.0, 900e9, 2.0e-6, 64e9)
+A100 = NpuSpec("a100", 312e12, 2.04e12, 80e9, 400.0, 60.0, 600e9, 2.5e-6, 32e9)
+
+MODELS = {m.name: m for m in [LLAMA2_70B, LLAMA3_70B, LLAMA3_8B, BLOOM_176B, MISTRAL_7B, E5_BASE]}
+NPUS = {n.name: n for n in [H100, A100]}
+
+
+def tp_comm_time(model: ModelSpec, npu: NpuSpec, tp: int, tokens: float) -> float:
+    """Ring allreduce, twice per layer (mirrors LlmCluster::tp_comm_time)."""
+    if tp <= 1 or tokens <= 0.0:
+        return 0.0
+    msg = tokens * model.hidden * 2.0
+    per_ar = 2.0 * (tp - 1) / tp * msg / npu.link_bw + 2.0 * (tp - 1) * npu.link_lat
+    return 2.0 * model.layers * per_ar
+
+
+def step_time(
+    model: ModelSpec,
+    npu: NpuSpec,
+    tp: int,
+    pf_new: float,
+    pf_past: float,
+    pf_items: int,
+    dec_batch: int,
+    dec_kv: float,
+) -> float:
+    """Latency of one engine step (mirrors LlmCluster::mixed_time).
+
+    Prefill work is summarized by aggregate (new, past) spread evenly over
+    `pf_items` items — the same aggregation the predictor features use.
+    """
+    if pf_new <= 0 and dec_batch <= 0:
+        return 0.0
+    flops = 0.0
+    byts = 0.0
+    comm_tokens = 0.0
+    if pf_new > 0:
+        n_items = max(pf_items, 1)
+        new_i = pf_new / n_items
+        past_i = pf_past / n_items
+        flops += model.flops_per_token * pf_new
+        flops += n_items * new_i * model.attn_flops(past_i + new_i / 2.0)
+        byts += model.kv_bytes_per_token * (pf_past + pf_new)
+        comm_tokens += pf_new
+    if dec_batch > 0:
+        b = float(dec_batch)
+        flops += model.flops_per_token * b
+        flops += b * model.attn_flops(dec_kv / max(b, 1.0))
+        byts += model.kv_bytes_per_token * (dec_kv + b)
+        comm_tokens += b
+    byts += model.weight_bytes
+    t_compute = flops / (EFF_COMPUTE * npu.peak_flops * tp)
+    t_memory = byts / (EFF_MEM * npu.mem_bw * tp)
+    return max(t_compute, t_memory) + tp_comm_time(model, npu, tp, comm_tokens) + STEP_OVERHEAD
+
+
+def weights_read_time(model: ModelSpec, npu: NpuSpec, tp: int) -> float:
+    """Time to stream the weight shard once — the double-counted term when
+    summing separately-predicted prefill + decode components of one step."""
+    return model.weight_bytes / (EFF_MEM * npu.mem_bw * tp)

@@ -1,0 +1,91 @@
+"""L1 — Pallas kernel for the ML-assisted runtime predictor.
+
+This is the compute hot-spot on the rust simulator's request path: every
+engine step the scheduler prices a batch of candidate step plans (padded
+to ``MAX_ROWS``), and this kernel expands each row's polynomial features
+and evaluates both regression heads plus the combined mixed-step time.
+
+Tiling: the candidate batch is tiled over rows with ``BlockSpec
+((BLOCK_R, N_RAW), ...)`` — the HBM→VMEM schedule. Per block the kernel
+touches BLOCK_R·(5 raw + 2·6 features + 3 outputs)·4 B ≈ 6 KiB ≪ 16 MiB
+VMEM, so the kernel is trivially latency-bound; see DESIGN.md
+§Hardware-Adaptation for why the heads stay on the f32 VPU path rather
+than the bf16 MXU.
+
+``interpret=True`` always: real-TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute; interpret mode lowers to plain HLO so
+the AOT artifact runs anywhere (including the rust PJRT CPU client).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .ref import N_FEATURES, N_RAW, SCALES
+
+# Rows processed per grid step. 16 divides every MAX_ROWS we emit and
+# keeps the interpret-mode overhead per call small; the block-size
+# ablation lives in aot.py --block-sweep (EXPERIMENTS.md §Perf).
+BLOCK_R = 16
+
+
+def _kernel(x_ref, w_pf_ref, w_dec_ref, o_ref, *, mix):
+    c_dec_b, c_dec_kv, m_pf_tok = mix
+    x = x_ref[...].astype(jnp.float32)  # (BLOCK_R, N_RAW)
+    # Per-column scaling with python-float scalars (pallas kernels may not
+    # capture array constants, so no jnp.asarray(SCALES) here).
+    new = x[:, 0] * (1.0 / SCALES[0])
+    past = x[:, 1] * (1.0 / SCALES[1])
+    items = x[:, 2] * (1.0 / SCALES[2])
+    b = x[:, 3] * (1.0 / SCALES[3])
+    kv = x[:, 4] * (1.0 / SCALES[4])
+    ones = jnp.ones_like(new)
+
+    # Polynomial feature expansion, in-register (matches ref.py).
+    phi_pf = jnp.stack([ones, past, new, items, new * new, new * past], axis=1)
+    phi_dec = jnp.stack([ones, b, kv, b * kv, b * b, kv * kv], axis=1)
+
+    t_pf = phi_pf @ w_pf_ref[...]
+    t_dec = phi_dec @ w_dec_ref[...]
+
+    has_pf = x[:, 0] > 0
+    has_dec = x[:, 3] > 0
+    t_pf = jnp.where(has_pf, jnp.maximum(t_pf, 0.0), 0.0)
+    t_dec = jnp.where(has_dec, jnp.maximum(t_dec, 0.0), 0.0)
+    both = jnp.logical_and(has_pf, has_dec)
+    # roofline-aware mixed-step combination (see ref.py docstring)
+    compute_path = t_pf + c_dec_b * x[:, 3] + c_dec_kv * x[:, 4]
+    memory_path = t_dec + m_pf_tok * (x[:, 0] + x[:, 1])
+    combined = jnp.where(
+        both,
+        jnp.maximum(jnp.maximum(compute_path, memory_path), jnp.maximum(t_pf, t_dec)),
+        t_pf + t_dec,
+    )
+    o_ref[...] = jnp.stack([t_pf, t_dec, combined], axis=1)
+
+
+def predict(x, w_pf, w_dec, mix, block_r: int = BLOCK_R):
+    """Pallas twin of ref.predict. x: (R, 5) with R % block_r == 0."""
+    rows = x.shape[0]
+    if rows % block_r != 0:
+        raise ValueError(f"rows ({rows}) must be a multiple of block_r ({block_r})")
+    kern = functools.partial(_kernel, mix=tuple(float(v) for v in mix))
+    return pl.pallas_call(
+        kern,
+        grid=(rows // block_r,),
+        in_specs=[
+            pl.BlockSpec((block_r, N_RAW), lambda i: (i, 0)),
+            pl.BlockSpec((N_FEATURES,), lambda i: (0,)),
+            pl.BlockSpec((N_FEATURES,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_r, 3), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, 3), jnp.float32),
+        interpret=True,
+    )(
+        x,
+        jnp.asarray(w_pf, dtype=jnp.float32),
+        jnp.asarray(w_dec, dtype=jnp.float32),
+    )

@@ -1,0 +1,78 @@
+"""Pure-jnp oracle for the runtime-predictor kernel.
+
+The contract both implementations honor (and hypothesis sweeps):
+
+  predict(x, w_pf, w_dec, mix) -> (R, 3) float32
+
+  x      : (R, 5) raw step features
+           [pf_new_tokens, pf_past_tokens, pf_items, dec_batch, dec_kv_tokens]
+  w_pf   : (F,) prefill-head coefficients (scaled feature space)
+  w_dec  : (F,) decode-head coefficients
+  mix    : (c_dec_b, c_dec_kv, m_pf_tok) — analytic cross terms for
+           mixed steps (seconds per raw unit; see fit.FitResult)
+
+  out[:, 0] = t_prefill   (0 where pf_new == 0)
+  out[:, 1] = t_decode    (0 where dec_batch == 0)
+  out[:, 2] = t_step      (combined; see below)
+
+Combination rule (roofline-aware): a mixed step is either compute-bound
+— the prefill-led path, which the riding decode batch only lengthens by
+its GEMM/attention FLOPs — or memory-bound — the decode-led path, which
+the prefill chunk only lengthens by its KV traffic:
+
+  t_step = max( t_pf + c_dec_b·B + c_dec_kv·KV,    # compute-bound path
+                t_dec + m_pf_tok·(new + past),      # memory-bound path
+                t_pf, t_dec )
+
+when both heads are active; the sum of heads otherwise.
+"""
+
+import jax.numpy as jnp
+
+# Feature scales — raw features are divided by these before polynomial
+# expansion so the lstsq fit stays well-conditioned. MUST match fit.py,
+# the Pallas kernel, and rust perfmodel/poly.rs.
+SCALES = (4096.0, 4096.0, 8.0, 64.0, 262144.0)
+
+N_RAW = 5
+N_FEATURES = 6
+
+
+def prefill_features(x):
+    """(R, 5) raw -> (R, 6) prefill polynomial features.
+
+    Paper §III-E.1: "Prefill runtime is modeled using past token count,
+    prefill token count, batch size, and token²."
+    """
+    s = x / jnp.array(SCALES, dtype=x.dtype)
+    new, past, items = s[:, 0], s[:, 1], s[:, 2]
+    ones = jnp.ones_like(new)
+    return jnp.stack([ones, past, new, items, new * new, new * past], axis=1)
+
+
+def decode_features(x):
+    """(R, 5) raw -> (R, 6) decode polynomial features (batch, kv tokens)."""
+    s = x / jnp.array(SCALES, dtype=x.dtype)
+    b, kv = s[:, 3], s[:, 4]
+    ones = jnp.ones_like(b)
+    return jnp.stack([ones, b, kv, b * kv, b * b, kv * kv], axis=1)
+
+
+def predict(x, w_pf, w_dec, mix):
+    c_dec_b, c_dec_kv, m_pf_tok = (float(v) for v in mix)
+    x = x.astype(jnp.float32)
+    t_pf = prefill_features(x) @ w_pf.astype(jnp.float32)
+    t_dec = decode_features(x) @ w_dec.astype(jnp.float32)
+    has_pf = x[:, 0] > 0
+    has_dec = x[:, 3] > 0
+    t_pf = jnp.where(has_pf, jnp.maximum(t_pf, 0.0), 0.0)
+    t_dec = jnp.where(has_dec, jnp.maximum(t_dec, 0.0), 0.0)
+    both = jnp.logical_and(has_pf, has_dec)
+    compute_path = t_pf + jnp.float32(c_dec_b) * x[:, 3] + jnp.float32(c_dec_kv) * x[:, 4]
+    memory_path = t_dec + jnp.float32(m_pf_tok) * (x[:, 0] + x[:, 1])
+    combined = jnp.where(
+        both,
+        jnp.maximum(jnp.maximum(compute_path, memory_path), jnp.maximum(t_pf, t_dec)),
+        t_pf + t_dec,
+    )
+    return jnp.stack([t_pf, t_dec, combined], axis=1)

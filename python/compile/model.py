@@ -1,0 +1,52 @@
+"""L2 — the JAX compute graph the rust coordinator executes via PJRT.
+
+For each (model, npu, tp) variant this builds ``predict_step_times``:
+a jitted function over a fixed-shape candidate batch (MAX_ROWS × 5 raw
+step features) that calls the L1 Pallas predictor kernel with that
+variant's regression coefficients baked in as constants. One HLO module
+per variant — "one compiled executable per model variant".
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fit import FitResult
+from .kernels import predictor
+from .kernels.ref import N_RAW
+
+# Fixed candidate-batch size of the AOT artifact. The rust scheduler pads
+# its candidate step plans up to this many rows per PJRT call. 16 is the
+# measured sweet spot between per-call PJRT overhead (dominates small
+# rows) and padding waste (dominates large rows) — EXPERIMENTS.md §Perf.
+MAX_ROWS = 16
+
+
+def build_predict_fn(res: FitResult, rows: int = MAX_ROWS, block_r: int = predictor.BLOCK_R):
+    """Returns f(x: f32[rows, N_RAW]) -> f32[rows, 3] with coefficients
+    baked as HLO constants (no weight inputs at runtime)."""
+    w_pf = np.asarray(res.w_pf, dtype=np.float32)
+    w_dec = np.asarray(res.w_dec, dtype=np.float32)
+    mix = (res.c_dec_b, res.c_dec_kv, res.m_pf_tok)
+
+    def predict_step_times(x):
+        x = x.astype(jnp.float32)
+        return (predictor.predict(x, w_pf, w_dec, mix, block_r=block_r),)
+
+    return predict_step_times, jax.ShapeDtypeStruct((rows, N_RAW), jnp.float32)
+
+
+def lower_to_hlo_text(res: FitResult, rows: int = MAX_ROWS,
+                      block_r: int = predictor.BLOCK_R) -> str:
+    """AOT-lower a variant to HLO *text* (the interchange format — the
+    image's xla_extension 0.5.1 rejects jax≥0.5 serialized protos with
+    64-bit instruction ids; the text parser reassigns ids)."""
+    from jax._src.lib import xla_client as xc
+
+    fn, spec = build_predict_fn(res, rows, block_r)
+    lowered = jax.jit(fn).lower(spec)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

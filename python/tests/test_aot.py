@@ -1,0 +1,59 @@
+"""AOT path smoke tests: lowering produces loadable HLO text and the
+jitted L2 graph agrees with the oracle end-to-end."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, fit as fitmod, model as modelmod
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def res():
+    return fitmod.fit("llama3-70b", "h100", 8, n_points=2_000, seed=2)
+
+
+def test_build_predict_fn_matches_ref(res):
+    fn, spec = modelmod.build_predict_fn(res, rows=64)
+    rng = np.random.default_rng(0)
+    x = np.zeros((64, 5), dtype=np.float32)
+    x[:, 3] = rng.integers(1, 64, 64)
+    x[:, 4] = x[:, 3] * 1000.0
+    (got,) = jax.jit(fn)(jnp.asarray(x))
+    want = ref.predict(jnp.asarray(x), jnp.asarray(res.w_pf),
+                       jnp.asarray(res.w_dec),
+                       (res.c_dec_b, res.c_dec_kv, res.m_pf_tok))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-7)
+
+
+def test_lower_to_hlo_text_structure(res):
+    hlo = modelmod.lower_to_hlo_text(res, rows=32, block_r=16)
+    assert "HloModule" in hlo
+    assert "f32[32,5]" in hlo       # input shape
+    assert "f32[32,3]" in hlo       # output shape
+    assert len(hlo) > 1_000
+
+
+def test_build_bundle(tmp_path, res):
+    out = str(tmp_path / "artifacts")
+    aot.build(out, variants=[("llama3-70b", "h100", 8)], rows=32, n_points=2_000)
+    manifest = json.load(open(os.path.join(out, "manifest.json")))
+    coeffs = json.load(open(os.path.join(out, "coefficients.json")))
+    key = "llama3-70b@h100/tp8"
+    assert key in manifest["variants"]
+    assert manifest["rows"] == 32
+    assert os.path.exists(os.path.join(out, manifest["variants"][key]["file"]))
+    c = coeffs[key]
+    assert len(c["w_pf"]) == ref.N_FEATURES
+    assert len(c["w_dec"]) == ref.N_FEATURES
+    assert c["scales"] == list(ref.SCALES)
+    assert c["mse_dec"] < 5e-6
+
+
+def test_variant_stem_format():
+    assert aot.variant_stem("llama3-70b", "h100", 4) == "runtime_llama3-70b_h100_tp4"

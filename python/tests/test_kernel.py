@@ -1,0 +1,87 @@
+"""Pallas predictor kernel vs pure-jnp oracle — the core L1 correctness
+signal. Hypothesis sweeps shapes, block sizes, dtypes and feature ranges.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import predictor, ref
+
+
+def _rand_inputs(rng, rows):
+    """Raw feature rows spanning the real dynamic range, incl. zero heads."""
+    x = np.zeros((rows, ref.N_RAW), dtype=np.float32)
+    has_pf = rng.random(rows) < 0.6
+    has_dec = rng.random(rows) < 0.8
+    x[:, 0] = np.where(has_pf, rng.uniform(1.0, 8192.0, rows), 0.0)
+    x[:, 1] = np.where(has_pf, rng.uniform(0.0, 16384.0, rows), 0.0)
+    x[:, 2] = np.where(has_pf, rng.integers(1, 9, rows), 0.0)
+    x[:, 3] = np.where(has_dec, rng.integers(1, 257, rows), 0.0)
+    x[:, 4] = x[:, 3] * rng.uniform(64.0, 8192.0, rows)
+    return x
+
+
+def _rand_weights(rng):
+    w_pf = rng.normal(0.0, 0.05, ref.N_FEATURES).astype(np.float32)
+    w_dec = rng.normal(0.0, 0.05, ref.N_FEATURES).astype(np.float32)
+    mix = (abs(rng.normal(1e-4, 5e-5)), abs(rng.normal(1e-8, 5e-9)),
+           abs(rng.normal(1e-6, 5e-7)))
+    return w_pf, w_dec, mix
+
+
+@pytest.mark.parametrize("rows", [16, 32, 64, 128])
+def test_kernel_matches_ref(rows):
+    rng = np.random.default_rng(rows)
+    x = _rand_inputs(rng, rows)
+    w_pf, w_dec, mix = _rand_weights(rng)
+    got = predictor.predict(jnp.asarray(x), w_pf, w_dec, mix)
+    want = ref.predict(jnp.asarray(x), jnp.asarray(w_pf), jnp.asarray(w_dec), mix)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-7)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    blocks=st.integers(1, 6),
+    block_r=st.sampled_from([8, 16, 32]),
+)
+def test_kernel_matches_ref_hypothesis(seed, blocks, block_r):
+    rng = np.random.default_rng(seed)
+    rows = blocks * block_r
+    x = _rand_inputs(rng, rows)
+    w_pf, w_dec, mix = _rand_weights(rng)
+    got = predictor.predict(jnp.asarray(x), w_pf, w_dec, mix, block_r=block_r)
+    want = ref.predict(jnp.asarray(x), jnp.asarray(w_pf), jnp.asarray(w_dec), mix)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-7)
+
+
+def test_kernel_rejects_ragged_rows():
+    with pytest.raises(ValueError):
+        predictor.predict(jnp.zeros((17, ref.N_RAW)), np.zeros(6), np.zeros(6), (0.0, 0.0, 0.0))
+
+
+def test_zero_rows_zero_output():
+    x = np.zeros((16, ref.N_RAW), dtype=np.float32)
+    rng = np.random.default_rng(0)
+    w_pf, w_dec, mix = _rand_weights(rng)
+    out = np.asarray(predictor.predict(jnp.asarray(x), w_pf, w_dec, mix))
+    # no prefill and no decode work -> all heads exactly 0 (padding rows)
+    np.testing.assert_array_equal(out, np.zeros((16, 3), dtype=np.float32))
+
+
+def test_combined_never_below_max_head():
+    rng = np.random.default_rng(7)
+    x = _rand_inputs(rng, 64)
+    w_pf, w_dec, mix = _rand_weights(rng)
+    out = np.asarray(predictor.predict(jnp.asarray(x), w_pf, w_dec, mix))
+    assert (out[:, 2] >= np.maximum(out[:, 0], out[:, 1]) - 1e-7).all()
+
+
+def test_int_input_dtype_promoted():
+    rng = np.random.default_rng(3)
+    x = _rand_inputs(rng, 16).astype(np.int32).astype(np.float64)
+    w_pf, w_dec, mix = _rand_weights(rng)
+    got = predictor.predict(jnp.asarray(x), w_pf, w_dec, mix)
+    assert np.asarray(got).dtype == np.float32

@@ -1,0 +1,236 @@
+//! KV-cache retrieval client (paper §III-C.3): fetches a request's past
+//! context KV from the multi-level memory hierarchy (prefix caching /
+//! past-memory retrieval). Misses fall back to recompute — the cached
+//! tokens join the prompt and get prefilled downstream.
+
+use crate::client::{Client, ClientLoad, ClientStats, StepOutcome};
+use crate::memory::hierarchy::Retrieval;
+use crate::memory::storage::KvStore;
+use crate::scheduler::simple::Batched;
+use crate::scheduler::RequestPool;
+use crate::sim::SimTime;
+use crate::util::rng::Pcg;
+use crate::workload::request::{ReqId, Stage};
+
+pub struct KvRetrievalClient {
+    id: usize,
+    pub store: KvStore,
+    /// KV bytes per token of the *served model* (what's being fetched)
+    pub kv_bytes_per_token: f64,
+    sched: Batched,
+    group: usize,
+    rng: Pcg,
+    current: Option<(Vec<(ReqId, bool)>, SimTime)>, // (req, hit), finish
+    stats: ClientStats,
+    pub hits: u64,
+    pub recomputes: u64,
+}
+
+impl KvRetrievalClient {
+    pub fn new(
+        id: usize,
+        store: KvStore,
+        kv_bytes_per_token: f64,
+        max_batch: usize,
+        seed: u64,
+    ) -> KvRetrievalClient {
+        KvRetrievalClient {
+            id,
+            store,
+            kv_bytes_per_token,
+            sched: Batched::new(max_batch),
+            group: 0,
+            rng: Pcg::new(seed ^ 0x4b56),
+            current: None,
+            stats: ClientStats::default(),
+            hits: 0,
+            recomputes: 0,
+        }
+    }
+
+    pub fn with_group(mut self, group: usize) -> KvRetrievalClient {
+        self.group = group;
+        self
+    }
+}
+
+impl Client for KvRetrievalClient {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn kind_name(&self) -> &'static str {
+        "kv-retrieval"
+    }
+
+    fn group(&self) -> usize {
+        self.group
+    }
+
+    fn can_serve(&self, stage: &Stage, _model: &str) -> bool {
+        matches!(stage, Stage::KvRetrieval(_))
+    }
+
+    fn accept(&mut self, _now: SimTime, id: ReqId, pool: &mut RequestPool) {
+        pool.get_mut(&id).expect("accept").client = Some(self.id);
+        self.sched.enqueue(id);
+    }
+
+    fn maybe_start_step(&mut self, now: SimTime, pool: &mut RequestPool) -> Option<SimTime> {
+        if self.current.is_some() || self.sched.queue_len() == 0 {
+            return None;
+        }
+        let batch = self.sched.take_batch();
+        let mut results = Vec::with_capacity(batch.len());
+        let mut finish = now;
+        for id in batch {
+            let cached = match pool[&id].stage() {
+                Stage::KvRetrieval(p) => p.cached_tokens,
+                _ => 0,
+            };
+            let bytes = cached as f64 * self.kv_bytes_per_token;
+            match self.store.retrieve(now, bytes, &mut self.rng) {
+                Retrieval::Hit { latency, .. } => {
+                    self.hits += 1;
+                    finish = finish.max(now + SimTime::from_secs(latency));
+                    results.push((id, true));
+                }
+                Retrieval::Recompute => {
+                    // lookup miss costs only the hierarchy walk; the
+                    // recompute itself happens at the prefill client
+                    self.recomputes += 1;
+                    results.push((id, false));
+                }
+            }
+        }
+        let dur = (finish - now).as_secs().max(1e-6);
+        self.stats.steps += 1;
+        self.stats.busy_seconds += dur;
+        self.current = Some((results, finish.max(now + SimTime::from_nanos(1000))));
+        Some(self.current.as_ref().unwrap().1)
+    }
+
+    fn finish_step(&mut self, _now: SimTime, pool: &mut RequestPool) -> StepOutcome {
+        let (results, _) = self.current.take().expect("finish without step");
+        let mut out = StepOutcome::default();
+        for (id, hit) in results {
+            let r = pool.get_mut(&id).expect("kv req");
+            if let Stage::KvRetrieval(p) = r.stage() {
+                r.apply_kv_retrieval(p.cached_tokens, hit);
+            }
+            if !hit {
+                out.recomputed.push(id);
+            }
+            out.stage_done.push(id);
+            self.stats.requests_served += 1;
+        }
+        out
+    }
+
+    fn load(&self, pool: &RequestPool) -> ClientLoad {
+        let mut l = ClientLoad {
+            queued_requests: self.sched.queue_len(),
+            ..Default::default()
+        };
+        for (_, r) in pool.iter().filter(|(_, r)| r.client == Some(self.id)) {
+            l.tokens_left += r.work_left_tokens();
+        }
+        l
+    }
+
+    fn stats(&self) -> ClientStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::storage::{KvScenario, StorageConfig};
+    use crate::workload::request::{KvParams, Request};
+
+    fn kv_req(id: u64, cached: usize) -> Request {
+        Request::new(
+            id,
+            "llama3-70b",
+            SimTime::ZERO,
+            vec![
+                Stage::KvRetrieval(KvParams { cached_tokens: cached }),
+                Stage::Prefill,
+                Stage::Decode,
+            ],
+            500,
+            64,
+        )
+    }
+
+    fn client(cfg: StorageConfig) -> KvRetrievalClient {
+        KvRetrievalClient::new(
+            7,
+            KvStore::new(cfg, KvScenario::Private),
+            327_680.0, // llama-70b KV bytes/token
+            0,
+            42,
+        )
+    }
+
+    #[test]
+    fn hits_credit_past_tokens() {
+        let mut c = client(StorageConfig::PlatformShared); // 95% hit
+        let mut pool = RequestPool::new();
+        for id in 1..=20u64 {
+            pool.insert(id, kv_req(id, 3000));
+            c.accept(SimTime::ZERO, id, &mut pool);
+        }
+        let fin = c.maybe_start_step(SimTime::ZERO, &mut pool).unwrap();
+        let out = c.finish_step(fin, &mut pool);
+        assert_eq!(out.stage_done.len(), 20);
+        assert!(c.hits >= 15, "hits={}", c.hits);
+        let hit_req = out
+            .stage_done
+            .iter()
+            .find(|id| !out.recomputed.contains(id))
+            .unwrap();
+        assert_eq!(pool[hit_req].past_tokens, 3000);
+        assert_eq!(pool[hit_req].prompt_tokens, 500);
+    }
+
+    #[test]
+    fn recompute_store_pushes_context_into_prompt() {
+        let mut c = client(StorageConfig::Recompute);
+        let mut pool = RequestPool::new();
+        pool.insert(1, kv_req(1, 3000));
+        c.accept(SimTime::ZERO, 1, &mut pool);
+        let fin = c.maybe_start_step(SimTime::ZERO, &mut pool).unwrap();
+        let out = c.finish_step(fin, &mut pool);
+        assert_eq!(out.recomputed, vec![1]);
+        assert_eq!(pool[&1].past_tokens, 0);
+        assert_eq!(pool[&1].prompt_tokens, 3500);
+    }
+
+    #[test]
+    fn retrieval_time_scales_with_cache_size() {
+        // 24K-token retrieval takes much longer than 4K on the rack tier
+        let run = |tokens: usize| {
+            let mut c = client(StorageConfig::RackShared);
+            let mut pool = RequestPool::new();
+            pool.insert(1, kv_req(1, tokens));
+            c.accept(SimTime::ZERO, 1, &mut pool);
+            let mut fin = SimTime::ZERO;
+            // retry until a hit (98% hit rate)
+            for _ in 0..10 {
+                fin = c.maybe_start_step(SimTime::ZERO, &mut pool).unwrap();
+                let out = c.finish_step(fin, &mut pool);
+                if out.recomputed.is_empty() {
+                    break;
+                }
+                pool.get_mut(&1).unwrap().client = None;
+                c.accept(SimTime::ZERO, 1, &mut pool);
+            }
+            fin.as_secs()
+        };
+        let t4k = run(4096);
+        let t24k = run(24576);
+        assert!(t24k > 4.0 * t4k, "t4k={t4k} t24k={t24k}");
+    }
+}

@@ -1,0 +1,393 @@
+//! LLM inference client (paper §III-C.4): an `LlmSched` batching policy
+//! in front of a hardware cluster, with step latency priced by the
+//! `PerfModel` (AOT Pallas predictor / native poly / roofline).
+//!
+//! A *combined* client serves both prefill and decode (continuous /
+//! chunked / static / mixed batching). Disaggregated serving instantiates
+//! prefill-role and decode-role clients; the coordinator moves the KV
+//! cache between them.
+
+use crate::client::{Client, ClientLoad, ClientStats, StepOutcome};
+use crate::hardware::power;
+use crate::hardware::roofline::LlmCluster;
+use crate::memory::hierarchy::KvManager;
+use crate::perfmodel::PerfModel;
+use crate::scheduler::{LlmSched, RequestPool, StepPlan};
+use crate::sim::SimTime;
+use crate::workload::request::{ReqId, Stage};
+
+pub struct LlmClient {
+    id: usize,
+    pub cluster: LlmCluster,
+    pub sched: LlmSched,
+    pub kv: KvManager,
+    pub perf: Box<dyn PerfModel>,
+    group: usize,
+    /// the in-flight step, if any
+    current: Option<(StepPlan, SimTime, f64)>, // (plan, start, duration)
+    stats: ClientStats,
+    /// queue-length / memory samples for scheduler-level metrics
+    pub queue_samples: Vec<(SimTime, usize, f64)>,
+    sample_queue: bool,
+}
+
+impl LlmClient {
+    pub fn new(
+        id: usize,
+        cluster: LlmCluster,
+        sched: LlmSched,
+        perf: Box<dyn PerfModel>,
+    ) -> LlmClient {
+        let kv = KvManager::new(cluster.kv_capacity_tokens());
+        LlmClient {
+            id,
+            cluster,
+            sched,
+            kv,
+            perf,
+            group: 0,
+            current: None,
+            stats: ClientStats::default(),
+            queue_samples: Vec::new(),
+            sample_queue: false,
+        }
+    }
+
+    pub fn with_group(mut self, group: usize) -> LlmClient {
+        self.group = group;
+        self
+    }
+
+    /// Record scheduler-level metrics every step (off by default: hot path).
+    pub fn with_queue_sampling(mut self) -> LlmClient {
+        self.sample_queue = true;
+        self
+    }
+
+    pub fn is_busy(&self) -> bool {
+        self.current.is_some()
+    }
+
+    fn role(&self) -> crate::scheduler::BatchingKind {
+        self.sched.kind
+    }
+}
+
+impl Client for LlmClient {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn kind_name(&self) -> &'static str {
+        match self.role() {
+            crate::scheduler::BatchingKind::PrefillOnly => "llm-prefill",
+            crate::scheduler::BatchingKind::DecodeOnly => "llm-decode",
+            _ => "llm",
+        }
+    }
+
+    fn group(&self) -> usize {
+        self.group
+    }
+
+    fn can_serve(&self, stage: &Stage, model: &str) -> bool {
+        if model != self.cluster.model.name {
+            return false;
+        }
+        match (stage, self.role()) {
+            (Stage::Prefill, crate::scheduler::BatchingKind::DecodeOnly) => false,
+            (Stage::Decode, crate::scheduler::BatchingKind::PrefillOnly) => false,
+            (Stage::Prefill | Stage::Decode, _) => true,
+            _ => false,
+        }
+    }
+
+    fn accept(&mut self, _now: SimTime, id: ReqId, pool: &mut RequestPool) {
+        let r = pool.get_mut(&id).expect("accept: unknown request");
+        r.client = Some(self.id);
+        self.sched.enqueue(id);
+    }
+
+    fn maybe_start_step(&mut self, now: SimTime, pool: &mut RequestPool) -> Option<SimTime> {
+        if self.current.is_some() {
+            return None;
+        }
+        let plan = self.sched.plan(pool, &mut self.kv)?;
+        if plan.is_empty() {
+            return None;
+        }
+        let feats = plan.features(pool);
+        // Decode-only steps evolve predictably (same batch, KV grows by
+        // one token per sequence per step), so price the next LOOKAHEAD
+        // steps in one predict_batch call: behind the memoized PJRT
+        // backend this turns ~16 executable invocations into one
+        // (EXPERIMENTS.md §Perf).
+        const LOOKAHEAD: usize = 16;
+        let pred = if feats.pf_new == 0.0 && feats.dec_batch > 0.0 {
+            let mut traj = [feats; LOOKAHEAD];
+            for (i, t) in traj.iter_mut().enumerate() {
+                t.dec_kv += i as f64 * feats.dec_batch;
+            }
+            self.perf.predict_batch(&traj)[0]
+        } else {
+            self.perf.predict(feats)
+        };
+        let dur = pred.t_step.max(1e-6);
+        if self.sample_queue {
+            self.queue_samples
+                .push((now, self.sched.queue_len(), self.kv.used_tokens));
+        }
+        // energy: utilization from the analytical cluster model
+        let util = if feats.pf_new > 0.0 {
+            // prefill work present → compute-bound step
+            crate::hardware::roofline::EFF_COMPUTE
+        } else {
+            // decode-only → memory-bound, low compute utilization
+            0.08
+        };
+        self.stats.steps += 1;
+        self.stats.busy_seconds += dur;
+        self.stats.energy_joules +=
+            power::step_energy(&self.cluster.npu, self.cluster.tp, util, dur);
+        self.current = Some((plan, now, dur));
+        Some(now + SimTime::from_secs(dur))
+    }
+
+    fn finish_step(&mut self, now: SimTime, pool: &mut RequestPool) -> StepOutcome {
+        let (plan, _start, _dur) = self.current.take().expect("finish_step without step");
+        let mut out = StepOutcome::default();
+
+        for (id, n) in &plan.prefill {
+            let r = pool.get_mut(id).expect("prefill req");
+            r.prefilled += n;
+            self.stats.prefill_tokens += *n as u64;
+            if r.prefill_complete() {
+                // the step completing a prompt emits the first token
+                if r.first_token_time.is_none() {
+                    r.first_token_time = Some(now);
+                    r.last_token_time = Some(now);
+                    r.decoded = 1;
+                    self.stats.decode_tokens += r.decode_seqs() as u64;
+                }
+                match self.role() {
+                    crate::scheduler::BatchingKind::PrefillOnly => {
+                        // hand off to a decode client
+                        out.stage_done.push(*id);
+                    }
+                    _ => {
+                        // combined client: Prefill stage → Decode stage in
+                        // place (no coordinator round-trip)
+                        if r.stage() == Stage::Prefill && !r.is_last_stage() {
+                            r.advance_stage();
+                        }
+                        if r.decode_complete() {
+                            out.stage_done.push(*id); // 1-token outputs
+                        }
+                    }
+                }
+            }
+        }
+
+        for id in &plan.decode {
+            let r = pool.get_mut(id).expect("decode req");
+            r.decoded += 1;
+            self.stats.decode_tokens += r.decode_seqs() as u64;
+            if r.first_token_time.is_none() {
+                r.first_token_time = Some(now);
+            }
+            r.last_token_time = Some(now);
+            if r.decode_complete() {
+                out.stage_done.push(*id);
+            }
+        }
+
+        // release finished requests from scheduler + KV
+        for id in &out.stage_done {
+            if let Some(reserved) = self.sched.remove(*id) {
+                self.kv.release(reserved);
+            }
+            self.stats.requests_served += 1;
+        }
+        out
+    }
+
+    fn load(&self, pool: &RequestPool) -> ClientLoad {
+        let mut l = ClientLoad {
+            queued_requests: self.sched.queue_len() + self.sched.running_len(),
+            kv_tokens: self.kv.used_tokens,
+            ..Default::default()
+        };
+        for (_, r) in pool.iter().filter(|(_, r)| r.client == Some(self.id)) {
+            l.input_tokens += r.prompt_tokens as f64;
+            l.output_tokens += (r.output_tokens * r.branches) as f64;
+            l.tokens_left += r.work_left_tokens();
+        }
+        l
+    }
+
+    fn stats(&self) -> ClientStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::models::LLAMA3_70B;
+    use crate::hardware::npu::H100;
+    use crate::perfmodel::RooflinePerfModel;
+    use crate::scheduler::{BatchingKind, Packing, SchedConfig};
+    use crate::workload::request::Request;
+
+    fn client(kind: BatchingKind) -> LlmClient {
+        let cluster = LlmCluster::new(LLAMA3_70B, H100, 8);
+        LlmClient::new(
+            0,
+            cluster.clone(),
+            LlmSched::new(kind, Packing::Fcfs, SchedConfig::default()),
+            Box::new(RooflinePerfModel::new(cluster)),
+        )
+    }
+
+    fn req(id: u64, prompt: usize, out: usize) -> Request {
+        Request::new(
+            id,
+            "llama3-70b",
+            SimTime::ZERO,
+            vec![Stage::Prefill, Stage::Decode],
+            prompt,
+            out,
+        )
+    }
+
+    /// drive the client alone until idle; returns (finish_time, outcomes)
+    fn drain(c: &mut LlmClient, pool: &mut RequestPool) -> (SimTime, Vec<ReqId>) {
+        let mut now = SimTime::ZERO;
+        let mut done = Vec::new();
+        for _ in 0..100_000 {
+            match c.maybe_start_step(now, pool) {
+                Some(fin) => {
+                    now = fin;
+                    done.extend(c.finish_step(now, pool).stage_done);
+                }
+                None => break,
+            }
+        }
+        (now, done)
+    }
+
+    #[test]
+    fn continuous_runs_request_to_completion() {
+        let mut c = client(BatchingKind::Continuous);
+        let mut pool = RequestPool::new();
+        pool.insert(1, req(1, 1000, 50));
+        c.accept(SimTime::ZERO, 1, &mut pool);
+        let (fin, done) = drain(&mut c, &mut pool);
+        assert_eq!(done, vec![1]);
+        let r = &pool[&1];
+        assert!(r.prefill_complete() && r.decode_complete());
+        assert!(r.first_token_time.unwrap() < r.last_token_time.unwrap());
+        // prefill ~50ms + 49 decode steps ~8ms each → hundreds of ms
+        assert!(fin.as_secs() > 0.1 && fin.as_secs() < 2.0, "fin={fin}");
+        // prefill emitted the first token: decode steps = out - 1
+        assert_eq!(c.stats().steps as usize, 1 + 49);
+        assert!(c.stats().energy_joules > 0.0);
+    }
+
+    #[test]
+    fn ttft_faster_than_static_for_late_arrival() {
+        // static batching makes request 2 wait for request 1's decode
+        let run = |kind| {
+            let mut c = client(kind);
+            let mut pool = RequestPool::new();
+            pool.insert(1, req(1, 2000, 100));
+            pool.insert(2, req(2, 500, 10));
+            c.accept(SimTime::ZERO, 1, &mut pool);
+            // drive one step, then inject request 2
+            let fin = c.maybe_start_step(SimTime::ZERO, &mut pool).unwrap();
+            c.finish_step(fin, &mut pool);
+            c.accept(fin, 2, &mut pool);
+            let mut pool2 = pool;
+            let (_, done) = drain(&mut c, &mut pool2);
+            assert!(done.contains(&2));
+            pool2[&2].ttft().unwrap()
+        };
+        let t_cont = run(BatchingKind::Continuous);
+        let t_static = run(BatchingKind::Static);
+        assert!(
+            t_cont < t_static,
+            "continuous ttft {t_cont} must beat static {t_static}"
+        );
+    }
+
+    #[test]
+    fn prefill_only_hands_off_after_prefill() {
+        let mut c = client(BatchingKind::PrefillOnly);
+        let mut pool = RequestPool::new();
+        pool.insert(1, req(1, 1000, 50));
+        c.accept(SimTime::ZERO, 1, &mut pool);
+        let (_, done) = drain(&mut c, &mut pool);
+        assert_eq!(done, vec![1]);
+        let r = &pool[&1];
+        assert!(r.prefill_complete());
+        assert_eq!(r.decoded, 1, "prefill emits the first token");
+        assert_eq!(r.stage(), Stage::Prefill, "stage advance is the coordinator's job");
+        // KV released on handoff
+        assert_eq!(c.kv.used_tokens, 0.0);
+    }
+
+    #[test]
+    fn decode_only_serves_transferred_request() {
+        let mut c = client(BatchingKind::DecodeOnly);
+        let mut pool = RequestPool::new();
+        let mut r = req(1, 1000, 50);
+        r.prefilled = 1000;
+        r.decoded = 1;
+        r.advance_stage(); // Prefill -> Decode
+        pool.insert(1, r);
+        c.accept(SimTime::ZERO, 1, &mut pool);
+        let (_, done) = drain(&mut c, &mut pool);
+        assert_eq!(done, vec![1]);
+        assert!(pool[&1].decode_complete());
+        assert_eq!(c.stats().steps, 49);
+    }
+
+    #[test]
+    fn can_serve_respects_role_and_model() {
+        let c = client(BatchingKind::PrefillOnly);
+        assert!(c.can_serve(&Stage::Prefill, "llama3-70b"));
+        assert!(!c.can_serve(&Stage::Decode, "llama3-70b"));
+        assert!(!c.can_serve(&Stage::Prefill, "mistral-7b"));
+        assert!(!c.can_serve(&Stage::Rag(Default::default()), "llama3-70b"));
+        let d = client(BatchingKind::DecodeOnly);
+        assert!(!d.can_serve(&Stage::Prefill, "llama3-70b"));
+        assert!(d.can_serve(&Stage::Decode, "llama3-70b"));
+    }
+
+    #[test]
+    fn load_reflects_owned_requests() {
+        let mut c = client(BatchingKind::Continuous);
+        let mut pool = RequestPool::new();
+        pool.insert(1, req(1, 1000, 50));
+        pool.insert(2, req(2, 2000, 10)); // not accepted
+        c.accept(SimTime::ZERO, 1, &mut pool);
+        let l = c.load(&pool);
+        assert_eq!(l.queued_requests, 1);
+        assert_eq!(l.input_tokens, 1000.0);
+        assert_eq!(l.tokens_left, 1050.0);
+    }
+
+    #[test]
+    fn multibranch_decode_counts_sequences() {
+        let mut c = client(BatchingKind::Continuous);
+        let mut pool = RequestPool::new();
+        let mut r = req(1, 100, 10);
+        r.branches = 8;
+        pool.insert(1, r);
+        c.accept(SimTime::ZERO, 1, &mut pool);
+        let (_, done) = drain(&mut c, &mut pool);
+        assert_eq!(done, vec![1]);
+        // 8 branches × 10 tokens
+        assert_eq!(c.stats().decode_tokens, 80);
+    }
+}

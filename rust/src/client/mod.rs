@@ -1,0 +1,84 @@
+//! Clients (paper §III-C): Scheduler + Hardware-Cluster pairs operating
+//! at engine-step granularity. Four kinds: LLM inference (combined or
+//! disaggregated prefill/decode role), RAG, KV-cache retrieval, and
+//! pre/post-processing.
+
+pub mod kv;
+pub mod llm;
+pub mod prepost;
+pub mod rag;
+
+use crate::scheduler::RequestPool;
+use crate::sim::SimTime;
+use crate::workload::request::{ReqId, Stage};
+
+pub use kv::KvRetrievalClient;
+pub use llm::LlmClient;
+pub use prepost::PrePostClient;
+pub use rag::RagClient;
+
+/// Load snapshot used by the router's load-balancing policies
+/// (§III-B.1: input length / output length / KV size / tokens left).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ClientLoad {
+    pub queued_requests: usize,
+    pub input_tokens: f64,
+    pub output_tokens: f64,
+    pub kv_tokens: f64,
+    pub tokens_left: f64,
+}
+
+/// What happened to requests when a step finished.
+#[derive(Debug, Clone, Default)]
+pub struct StepOutcome {
+    /// requests whose *current stage* completed on this client — the
+    /// coordinator advances + routes them
+    pub stage_done: Vec<ReqId>,
+    /// requests whose KV-retrieval missed (cache recompute) — metrics
+    pub recomputed: Vec<ReqId>,
+}
+
+/// A serving client. Single-threaded simulation: the coordinator drives
+/// `accept → maybe_start_step → (EngineStep event) → finish_step`.
+pub trait Client {
+    fn id(&self) -> usize;
+
+    fn kind_name(&self) -> &'static str;
+
+    /// Can this client execute `stage` for `model`?
+    fn can_serve(&self, stage: &Stage, model: &str) -> bool;
+
+    /// Physical placement group (local-disaggregation locality).
+    fn group(&self) -> usize {
+        0
+    }
+
+    /// Take ownership of a routed request (enqueue into the scheduler).
+    fn accept(&mut self, now: SimTime, id: ReqId, pool: &mut RequestPool);
+
+    /// If idle and work is available, start a step and return its
+    /// completion time (the coordinator schedules the EngineStep event).
+    fn maybe_start_step(&mut self, now: SimTime, pool: &mut RequestPool) -> Option<SimTime>;
+
+    /// The in-flight step completed: apply its effects.
+    fn finish_step(&mut self, now: SimTime, pool: &mut RequestPool) -> StepOutcome;
+
+    /// Router-visible load.
+    fn load(&self, pool: &RequestPool) -> ClientLoad;
+
+    /// Busy-time and energy accounting (joules, busy-seconds, steps).
+    fn stats(&self) -> ClientStats;
+}
+
+/// Operational statistics every client tracks (§III-F.2 client-level
+/// metrics).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ClientStats {
+    pub steps: u64,
+    pub busy_seconds: f64,
+    pub energy_joules: f64,
+    pub requests_served: u64,
+    /// prefill/decode token counters (LLM clients)
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+}

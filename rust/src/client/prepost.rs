@@ -1,0 +1,181 @@
+//! Pre/post-processing client (paper §III-C.1 / §III-E.4): tokenization
+//! and padding on the way in; detokenization plus guard-model filtering
+//! (a ~2B-parameter forward pass) on the way out. Uses the `Sequential`
+//! base scheduler — "tasks without reuse possibility".
+
+use crate::client::{Client, ClientLoad, ClientStats, StepOutcome};
+use crate::hardware::roofline::LlmCluster;
+use crate::scheduler::simple::Sequential;
+use crate::scheduler::RequestPool;
+use crate::sim::SimTime;
+use crate::workload::request::{ReqId, Stage};
+
+/// Per-token tokenize/detokenize cost ("runtime proportional to number
+/// of generated tokens").
+const TOKENIZE_S_PER_TOKEN: f64 = 2e-7;
+
+pub struct PrePostClient {
+    id: usize,
+    /// guard model (~2B) running toxicity/bias filtering on outputs
+    pub guard: Option<LlmCluster>,
+    sched: Sequential,
+    group: usize,
+    current: Option<Vec<ReqId>>,
+    stats: ClientStats,
+}
+
+impl PrePostClient {
+    pub fn new(id: usize, cores: usize, guard: Option<LlmCluster>) -> PrePostClient {
+        PrePostClient {
+            id,
+            guard,
+            sched: Sequential::new(cores),
+            group: 0,
+            current: None,
+            stats: ClientStats::default(),
+        }
+    }
+
+    fn task_time(&self, pool: &RequestPool, id: ReqId) -> f64 {
+        let r = &pool[&id];
+        match r.stage() {
+            Stage::Preprocess => r.prompt_tokens as f64 * TOKENIZE_S_PER_TOKEN + 50e-6,
+            Stage::Postprocess => {
+                let generated = (r.decoded * r.branches) as f64;
+                let detok = generated * TOKENIZE_S_PER_TOKEN;
+                // guard model scores the generated text (prefill pass)
+                let filter = self
+                    .guard
+                    .as_ref()
+                    .map(|g| g.embed_time(generated.max(1.0)))
+                    .unwrap_or(0.0);
+                detok + filter + 50e-6
+            }
+            _ => 1e-6,
+        }
+    }
+}
+
+impl Client for PrePostClient {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn kind_name(&self) -> &'static str {
+        "prepost"
+    }
+
+    fn group(&self) -> usize {
+        self.group
+    }
+
+    fn can_serve(&self, stage: &Stage, _model: &str) -> bool {
+        matches!(stage, Stage::Preprocess | Stage::Postprocess)
+    }
+
+    fn accept(&mut self, _now: SimTime, id: ReqId, pool: &mut RequestPool) {
+        pool.get_mut(&id).expect("accept").client = Some(self.id);
+        self.sched.enqueue(id);
+    }
+
+    fn maybe_start_step(&mut self, now: SimTime, pool: &mut RequestPool) -> Option<SimTime> {
+        if self.current.is_some() || self.sched.queue_len() == 0 {
+            return None;
+        }
+        let wave = self.sched.take_wave();
+        // cores run in parallel: the wave finishes at the slowest task
+        let dur = wave
+            .iter()
+            .map(|id| self.task_time(pool, *id))
+            .fold(0.0f64, f64::max)
+            .max(1e-6);
+        self.stats.steps += 1;
+        self.stats.busy_seconds += dur;
+        if let Some(g) = &self.guard {
+            self.stats.energy_joules +=
+                crate::hardware::power::step_energy(&g.npu, g.tp, 0.3, dur);
+        }
+        self.current = Some(wave);
+        Some(now + SimTime::from_secs(dur))
+    }
+
+    fn finish_step(&mut self, _now: SimTime, _pool: &mut RequestPool) -> StepOutcome {
+        let wave = self.current.take().expect("finish without step");
+        self.stats.requests_served += wave.len() as u64;
+        StepOutcome {
+            stage_done: wave,
+            recomputed: Vec::new(),
+        }
+    }
+
+    fn load(&self, _pool: &RequestPool) -> ClientLoad {
+        ClientLoad {
+            queued_requests: self.sched.queue_len(),
+            ..Default::default()
+        }
+    }
+
+    fn stats(&self) -> ClientStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::models::GUARD_2B;
+    use crate::hardware::npu::A100;
+    use crate::workload::request::Request;
+
+    fn guarded_req(id: u64) -> Request {
+        let mut r = Request::new(
+            id,
+            "llama3-70b",
+            SimTime::ZERO,
+            vec![Stage::Preprocess, Stage::Prefill, Stage::Decode, Stage::Postprocess],
+            1000,
+            200,
+        );
+        r.decoded = 200;
+        r
+    }
+
+    #[test]
+    fn preprocess_fast_postprocess_guarded() {
+        let mut c = PrePostClient::new(
+            9,
+            4,
+            Some(LlmCluster::new(GUARD_2B, A100, 1)),
+        );
+        let mut pool = RequestPool::new();
+        pool.insert(1, guarded_req(1));
+        c.accept(SimTime::ZERO, 1, &mut pool);
+        let fin_pre = c.maybe_start_step(SimTime::ZERO, &mut pool).unwrap();
+        assert!(fin_pre.as_secs() < 2e-3, "preprocess is sub-ms: {fin_pre}");
+        c.finish_step(fin_pre, &mut pool);
+
+        // move to postprocess stage
+        let r = pool.get_mut(&1).unwrap();
+        r.stage_idx = 3;
+        r.client = None;
+        c.accept(fin_pre, 1, &mut pool);
+        let fin_post = c.maybe_start_step(fin_pre, &mut pool).unwrap();
+        // guard-2B forward over 200 tokens dominates
+        assert!((fin_post - fin_pre).as_secs() > 1e-3);
+        let out = c.finish_step(fin_post, &mut pool);
+        assert_eq!(out.stage_done, vec![1]);
+    }
+
+    #[test]
+    fn waves_respect_core_count() {
+        let mut c = PrePostClient::new(9, 2, None);
+        let mut pool = RequestPool::new();
+        for id in 1..=5u64 {
+            pool.insert(id, guarded_req(id));
+            c.accept(SimTime::ZERO, id, &mut pool);
+        }
+        let fin = c.maybe_start_step(SimTime::ZERO, &mut pool).unwrap();
+        let out = c.finish_step(fin, &mut pool);
+        assert_eq!(out.stage_done.len(), 2, "2 cores → wave of 2");
+    }
+}

@@ -1,0 +1,186 @@
+//! RAG client (paper §III-C.2): batched embedding + IVF-PQ retrieval +
+//! re-ranking ahead of LLM inference. Uses the `Batched` base scheduler
+//! ("to maximize the efficiency").
+
+use crate::client::{Client, ClientLoad, ClientStats, StepOutcome};
+use crate::rag::{RagEngine, RagTiming};
+use crate::scheduler::simple::Batched;
+use crate::scheduler::RequestPool;
+use crate::sim::SimTime;
+use crate::workload::request::{RagParams, ReqId, Stage};
+
+pub struct RagClient {
+    id: usize,
+    pub engine: RagEngine,
+    sched: Batched,
+    group: usize,
+    current: Option<Vec<ReqId>>,
+    stats: ClientStats,
+    /// accumulated per-stage timing for Fig 9's breakdown
+    pub timing_total: RagTiming,
+}
+
+impl RagClient {
+    pub fn new(id: usize, engine: RagEngine, max_batch: usize) -> RagClient {
+        RagClient {
+            id,
+            engine,
+            sched: Batched::new(max_batch),
+            group: 0,
+            current: None,
+            stats: ClientStats::default(),
+            timing_total: RagTiming::default(),
+        }
+    }
+
+    pub fn with_group(mut self, group: usize) -> RagClient {
+        self.group = group;
+        self
+    }
+}
+
+impl Client for RagClient {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn kind_name(&self) -> &'static str {
+        "rag"
+    }
+
+    fn group(&self) -> usize {
+        self.group
+    }
+
+    fn can_serve(&self, stage: &Stage, _model: &str) -> bool {
+        matches!(stage, Stage::Rag(_))
+    }
+
+    fn accept(&mut self, _now: SimTime, id: ReqId, pool: &mut RequestPool) {
+        pool.get_mut(&id).expect("accept").client = Some(self.id);
+        self.sched.enqueue(id);
+    }
+
+    fn maybe_start_step(&mut self, now: SimTime, pool: &mut RequestPool) -> Option<SimTime> {
+        if self.current.is_some() || self.sched.queue_len() == 0 {
+            return None;
+        }
+        let batch = self.sched.take_batch();
+        // all requests in one experiment share RagParams; take the first's
+        let params = match pool[&batch[0]].stage() {
+            Stage::Rag(p) => p,
+            _ => RagParams::default(),
+        };
+        let timing = self.engine.batch_timing(batch.len(), &params);
+        self.timing_total.embed_s += timing.embed_s;
+        self.timing_total.retrieve_s += timing.retrieve_s;
+        self.timing_total.rerank_s += timing.rerank_s;
+        let dur = timing.total().max(1e-6);
+        self.stats.steps += 1;
+        self.stats.busy_seconds += dur;
+        // embedding device energy: compute-bound encoder pass
+        self.stats.energy_joules += crate::hardware::power::step_energy(
+            &self.engine.embedder.npu,
+            self.engine.embedder.tp,
+            0.5,
+            timing.embed_s,
+        ) + crate::hardware::power::step_energy(
+            &self.engine.index.device,
+            1,
+            0.2,
+            timing.retrieve_s + timing.rerank_s,
+        );
+        self.current = Some(batch);
+        Some(now + SimTime::from_secs(dur))
+    }
+
+    fn finish_step(&mut self, _now: SimTime, _pool: &mut RequestPool) -> StepOutcome {
+        let batch = self.current.take().expect("finish without step");
+        self.stats.requests_served += batch.len() as u64;
+        StepOutcome {
+            stage_done: batch,
+            recomputed: Vec::new(),
+        }
+    }
+
+    fn load(&self, pool: &RequestPool) -> ClientLoad {
+        let mut l = ClientLoad {
+            queued_requests: self.sched.queue_len(),
+            ..Default::default()
+        };
+        for (_, r) in pool.iter().filter(|(_, r)| r.client == Some(self.id)) {
+            l.input_tokens += r.prompt_tokens as f64;
+            l.tokens_left += r.work_left_tokens();
+        }
+        l
+    }
+
+    fn stats(&self) -> ClientStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::models::E5_BASE;
+    use crate::hardware::npu::GRACE_CPU;
+    use crate::hardware::roofline::LlmCluster;
+    use crate::rag::ivfpq::IvfPq;
+    use crate::workload::request::Request;
+
+    fn client() -> RagClient {
+        RagClient::new(
+            3,
+            RagEngine::new(
+                LlmCluster::new(E5_BASE, GRACE_CPU, 1),
+                IvfPq::new(GRACE_CPU, Default::default()),
+            ),
+            0,
+        )
+    }
+
+    fn rag_req(id: u64) -> Request {
+        Request::new(
+            id,
+            "llama3-70b",
+            SimTime::ZERO,
+            vec![Stage::Rag(RagParams::default()), Stage::Prefill, Stage::Decode],
+            256,
+            64,
+        )
+    }
+
+    #[test]
+    fn batch_completes_together_and_returns_all() {
+        let mut c = client();
+        let mut pool = RequestPool::new();
+        for id in 1..=5u64 {
+            pool.insert(id, rag_req(id));
+            c.accept(SimTime::ZERO, id, &mut pool);
+        }
+        let fin = c.maybe_start_step(SimTime::ZERO, &mut pool).unwrap();
+        assert!(fin > SimTime::ZERO);
+        // busy until the step completes
+        assert!(c.maybe_start_step(SimTime::ZERO, &mut pool).is_none());
+        let out = c.finish_step(fin, &mut pool);
+        assert_eq!(out.stage_done.len(), 5);
+        assert_eq!(c.stats().requests_served, 5);
+        assert!(c.timing_total.retrieve_s > 0.0);
+    }
+
+    #[test]
+    fn serves_only_rag_stage() {
+        let c = client();
+        assert!(c.can_serve(&Stage::Rag(RagParams::default()), "any-model"));
+        assert!(!c.can_serve(&Stage::Prefill, "llama3-70b"));
+        assert!(!c.can_serve(&Stage::Postprocess, "llama3-70b"));
+    }
+
+    #[test]
+    fn idle_when_empty() {
+        let mut c = client();
+        let mut pool = RequestPool::new();
+        assert!(c.maybe_start_step(SimTime::ZERO, &mut pool).is_none());
+    }
+}

@@ -1,0 +1,377 @@
+//! Configuration system: JSON documents → typed simulation specs.
+//!
+//! Example (see `examples/configs/` for more):
+//! ```json
+//! {
+//!   "model": "llama3-70b", "npu": "h100", "tp": 2,
+//!   "pool": { "batching": "disaggregated", "prefill": 20, "decode": 12 },
+//!   "scheduler": { "max_batch_seqs": 256, "max_batch_tokens": 8192,
+//!                  "packing": "fcfs" },
+//!   "router": "load:tokens-left",
+//!   "perf_model": "pjrt-memo",
+//!   "network": { "per_platform": 4, "per_rack": 16 },
+//!   "workload": { "trace": "azure-conv", "n": 2000, "rate": 2.0,
+//!                 "arrival": "poisson", "pipeline": "regular" },
+//!   "slo": "standard",
+//!   "seed": 0
+//! }
+//! ```
+
+pub mod slo;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{LoadMetric, RoutePolicy};
+use crate::hardware::models;
+use crate::memory::storage::{KvScenario, StorageConfig};
+use crate::scheduler::{BatchingKind, Packing, SchedConfig};
+use crate::sim::builder::{
+    npu_by_name, KvRetrievalSpec, NetSpec, PerfBackend, PoolSpec, PrePostSpec, RagSpec,
+    ServingSpec,
+};
+use crate::util::json::Json;
+use crate::util::rng::Arrival;
+use crate::workload::request::{KvParams, RagParams};
+use crate::workload::trace::{Pipeline, Reasoning, TraceKind, WorkloadSpec};
+use slo::SloLadder;
+
+/// A fully parsed simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub serving: ServingSpec,
+    pub workload: WorkloadSpec,
+    pub slo: SloLadder,
+}
+
+impl SimConfig {
+    pub fn from_file(path: &str) -> Result<SimConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let doc = Json::parse(&text).with_context(|| format!("parsing config {path}"))?;
+        SimConfig::from_json(&doc)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<SimConfig> {
+        let model_name = doc.str_or("model", "llama3-70b").to_string();
+        let model_spec =
+            models::model(&model_name).with_context(|| format!("unknown model {model_name}"))?;
+        let model: &'static str = model_spec.name;
+        let npu = npu_by_name(doc.str_or("npu", "h100"))?;
+        let tp = doc.usize_or("tp", 8);
+
+        let pool = parse_pool(doc.get("pool"))?;
+        let mut serving = ServingSpec::new(model, npu, tp, pool);
+
+        if let Some(s) = doc.get("scheduler") {
+            serving.sched = SchedConfig {
+                max_batch_seqs: s.usize_or("max_batch_seqs", 256),
+                max_batch_tokens: s.usize_or("max_batch_tokens", 8192),
+            };
+            serving.packing = match s.str_or("packing", "fcfs") {
+                "fcfs" => Packing::Fcfs,
+                "least-work-left" | "lwl" => Packing::LeastWorkLeft,
+                other => bail!("unknown packing '{other}'"),
+            };
+        }
+
+        serving.route = parse_router(doc.str_or("router", "load:tokens-left"))?;
+        serving.perf = match doc.str_or("perf_model", "poly") {
+            "roofline" => PerfBackend::Roofline,
+            "poly" => PerfBackend::Poly,
+            "pjrt" => PerfBackend::Pjrt,
+            "pjrt-memo" => PerfBackend::PjrtMemo,
+            other => bail!("unknown perf_model '{other}'"),
+        };
+
+        if let Some(n) = doc.get("network") {
+            serving.net = NetSpec::Hierarchy {
+                per_platform: n.usize_or("per_platform", 4),
+                per_rack: n.usize_or("per_rack", 16),
+            };
+        }
+
+        if let Some(r) = doc.get("rag_clients") {
+            serving.rag = Some(RagSpec {
+                count: r.usize_or("count", 1),
+                embed_model: models::model(r.str_or("embed_model", "e5-base"))
+                    .context("unknown embed model")?,
+                embed_npu: npu_by_name(r.str_or("embed_npu", "grace-cpu"))?,
+                retrieval_npu: npu_by_name(r.str_or("retrieval_npu", "grace-cpu"))?,
+                ivf: Default::default(),
+                max_batch: r.usize_or("max_batch", 0),
+            });
+        }
+
+        if let Some(k) = doc.get("kv_clients") {
+            serving.kv_retrieval = Some(KvRetrievalSpec {
+                count: k.usize_or("count", 1),
+                storage: parse_storage(k.str_or("storage", "platform"))?,
+                scenario: match k.str_or("scenario", "private") {
+                    "private" => KvScenario::Private,
+                    "shared" => KvScenario::Shared,
+                    other => bail!("unknown scenario '{other}'"),
+                },
+                max_batch: k.usize_or("max_batch", 0),
+                ports: k.usize_or("ports", 1),
+            });
+        }
+
+        if let Some(p) = doc.get("prepost_clients") {
+            serving.prepost = Some(PrePostSpec {
+                count: p.usize_or("count", 1),
+                cores: p.usize_or("cores", 16),
+                guard_npu: p
+                    .get("guard_npu")
+                    .and_then(Json::as_str)
+                    .map(npu_by_name)
+                    .transpose()?,
+            });
+        }
+
+        serving.seed = doc.f64_or("seed", 0.0) as u64;
+
+        let workload = parse_workload(
+            model,
+            doc.get("workload").context("config needs 'workload'")?,
+            serving.seed,
+        )?;
+
+        let slo = match doc.str_or("slo", "auto") {
+            "standard" => SloLadder::standard(),
+            "retrieval" => SloLadder::retrieval(),
+            // auto: retrieval baseline when the pipeline has RAG/KV stages
+            "auto" => match workload.pipeline {
+                Pipeline::Rag(_) | Pipeline::KvRetrieval(_) => SloLadder::retrieval(),
+                _ => SloLadder::standard(),
+            },
+            other => bail!("unknown slo '{other}'"),
+        };
+
+        Ok(SimConfig {
+            serving,
+            workload,
+            slo,
+        })
+    }
+}
+
+fn parse_pool(j: Option<&Json>) -> Result<PoolSpec> {
+    let j = j.context("config needs 'pool'")?;
+    let batching = j.str_or("batching", "continuous");
+    Ok(match batching {
+        "static" => PoolSpec::Combined {
+            kind: BatchingKind::Static,
+            n: j.usize_or("n", 1),
+        },
+        "continuous" => PoolSpec::Combined {
+            kind: BatchingKind::Continuous,
+            n: j.usize_or("n", 1),
+        },
+        "chunked" => PoolSpec::Combined {
+            kind: BatchingKind::Chunked {
+                chunk: j.usize_or("chunk", 512),
+            },
+            n: j.usize_or("n", 1),
+        },
+        "mixed" => PoolSpec::Combined {
+            kind: BatchingKind::Mixed,
+            n: j.usize_or("n", 1),
+        },
+        "disaggregated" | "disaggregated-global" => PoolSpec::Disaggregated {
+            prefill: j.usize_or("prefill", 1),
+            decode: j.usize_or("decode", 1),
+            local: false,
+        },
+        "disaggregated-local" => PoolSpec::Disaggregated {
+            prefill: j.usize_or("prefill", 1),
+            decode: j.usize_or("decode", 1),
+            local: true,
+        },
+        other => bail!("unknown batching '{other}'"),
+    })
+}
+
+fn parse_router(s: &str) -> Result<RoutePolicy> {
+    let metric = |m: &str| -> Result<LoadMetric> {
+        Ok(match m {
+            "input-len" => LoadMetric::InputLen,
+            "output-len" => LoadMetric::OutputLen,
+            "kv-size" => LoadMetric::KvSize,
+            "tokens-left" => LoadMetric::TokensLeft,
+            other => bail!("unknown load metric '{other}'"),
+        })
+    };
+    Ok(match s {
+        "round-robin" | "rr" => RoutePolicy::RoundRobin,
+        s if s.starts_with("load:") => RoutePolicy::LoadBased(metric(&s[5..])?),
+        s if s.starts_with("heavy-light:") => RoutePolicy::HeavyLight {
+            metric: metric(&s[12..])?,
+            threshold_tokens: 2048,
+            heavy_frac: 0.5,
+        },
+        other => bail!("unknown router '{other}'"),
+    })
+}
+
+fn parse_storage(s: &str) -> Result<StorageConfig> {
+    Ok(match s {
+        "dedicated" | "a" => StorageConfig::DedicatedPerClient,
+        "platform" | "b" => StorageConfig::PlatformShared,
+        "rack" | "c" => StorageConfig::RackShared,
+        "rack-dcn" | "c-dcn" => StorageConfig::RackSharedWithDcn,
+        "recompute" => StorageConfig::Recompute,
+        other => bail!("unknown storage '{other}'"),
+    })
+}
+
+fn parse_workload(model: &'static str, j: &Json, seed: u64) -> Result<WorkloadSpec> {
+    let trace = match j.str_or("trace", "azure-conv") {
+        "azure-conv" => TraceKind::AzureConv,
+        "azure-code" => TraceKind::AzureCode,
+        "synthetic" => TraceKind::Synthetic {
+            in_mean: j.f64_or("in_mean", 1024.0),
+            in_std: j.f64_or("in_std", 256.0),
+            out_mean: j.f64_or("out_mean", 256.0),
+            out_std: j.f64_or("out_std", 64.0),
+        },
+        other => bail!("unknown trace '{other}'"),
+    };
+    let n = j.usize_or("n", 500);
+    let rate = j.f64_or("rate", 2.0);
+    let arrival = match j.str_or("arrival", "poisson") {
+        "poisson" => Arrival::Poisson { rate },
+        "uniform" => Arrival::Uniform { rate },
+        "normal" => Arrival::Normal {
+            rate,
+            cv: j.f64_or("arrival_cv", 0.3),
+        },
+        "bursty" => Arrival::Bursty {
+            rate,
+            burst_mult: j.f64_or("burst_mult", 4.0),
+            calm_s: j.f64_or("calm_s", 20.0),
+            burst_s: j.f64_or("burst_s", 5.0),
+        },
+        other => bail!("unknown arrival '{other}'"),
+    };
+    let pipeline = match j.str_or("pipeline", "regular") {
+        "regular" => Pipeline::Regular,
+        "guarded" => Pipeline::Guarded,
+        "rag" => Pipeline::Rag(RagParams {
+            query_tokens: j.usize_or("query_tokens", 128),
+            docs: j.usize_or("docs", 20),
+            doc_tokens: j.usize_or("doc_tokens", 512),
+            ..Default::default()
+        }),
+        "kv-retrieval" => Pipeline::KvRetrieval(KvParams {
+            cached_tokens: j.usize_or("cached_tokens", 3000),
+        }),
+        other => bail!("unknown pipeline '{other}'"),
+    };
+    let reasoning = match j.str_or("reasoning", "none") {
+        "none" => Reasoning::None,
+        "single-path" => Reasoning::SinglePath {
+            scale: j.f64_or("reasoning_scale", 16.0),
+        },
+        "multi-path" => Reasoning::MultiPath {
+            scale: j.f64_or("reasoning_scale", 8.0),
+            branches: j.usize_or("branches", 8),
+        },
+        other => bail!("unknown reasoning '{other}'"),
+    };
+    Ok(WorkloadSpec {
+        model,
+        trace,
+        pipeline,
+        reasoning,
+        arrival,
+        n_requests: n,
+        seed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FULL: &str = r#"{
+        "model": "llama3-70b", "npu": "h100", "tp": 2,
+        "pool": { "batching": "disaggregated", "prefill": 3, "decode": 2 },
+        "scheduler": { "max_batch_seqs": 128, "max_batch_tokens": 4096,
+                       "packing": "least-work-left" },
+        "router": "heavy-light:input-len",
+        "perf_model": "roofline",
+        "network": { "per_platform": 2, "per_rack": 5 },
+        "kv_clients": { "count": 1, "storage": "rack", "scenario": "shared" },
+        "workload": { "trace": "azure-code", "n": 100, "rate": 1.5,
+                      "arrival": "bursty", "pipeline": "kv-retrieval",
+                      "cached_tokens": 4096,
+                      "reasoning": "multi-path", "branches": 4 },
+        "seed": 7
+    }"#;
+
+    #[test]
+    fn full_config_parses() {
+        let cfg = SimConfig::from_json(&Json::parse(FULL).unwrap()).unwrap();
+        assert_eq!(cfg.serving.model, "llama3-70b");
+        assert_eq!(cfg.serving.tp, 2);
+        assert_eq!(
+            cfg.serving.pool,
+            PoolSpec::Disaggregated { prefill: 3, decode: 2, local: false }
+        );
+        assert_eq!(cfg.serving.sched.max_batch_seqs, 128);
+        assert_eq!(cfg.serving.packing, Packing::LeastWorkLeft);
+        assert!(matches!(cfg.serving.route, RoutePolicy::HeavyLight { .. }));
+        assert!(cfg.serving.kv_retrieval.is_some());
+        assert_eq!(cfg.workload.n_requests, 100);
+        assert!(matches!(cfg.workload.reasoning, Reasoning::MultiPath { branches: 4, .. }));
+        // auto SLO: retrieval pipeline → 1000ms TTFT base
+        assert_eq!(cfg.slo.ttft_base, 1.0);
+        assert_eq!(cfg.serving.seed, 7);
+    }
+
+    #[test]
+    fn minimal_config_defaults() {
+        let cfg = SimConfig::from_json(
+            &Json::parse(r#"{"pool": {"batching": "chunked", "n": 4, "chunk": 256},
+                             "workload": {"n": 10}}"#)
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.serving.pool,
+            PoolSpec::Combined { kind: BatchingKind::Chunked { chunk: 256 }, n: 4 }
+        );
+        assert_eq!(cfg.slo.ttft_base, 0.25);
+    }
+
+    #[test]
+    fn bad_values_error_clearly() {
+        for (field, bad) in [
+            ("batching", r#"{"pool": {"batching": "quantum"}, "workload": {}}"#),
+            ("router", r#"{"pool": {"batching": "mixed"}, "router": "psychic", "workload": {}}"#),
+            ("model", r#"{"model": "gpt-9", "pool": {"batching": "mixed"}, "workload": {}}"#),
+        ] {
+            assert!(
+                SimConfig::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "{field} should fail"
+            );
+        }
+    }
+
+    #[test]
+    fn built_config_runs() {
+        let cfg = SimConfig::from_json(
+            &Json::parse(
+                r#"{"tp": 8, "pool": {"batching": "continuous", "n": 1},
+                    "perf_model": "roofline",
+                    "workload": {"trace": "azure-conv", "n": 8, "rate": 2.0}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let mut coord = cfg.serving.build().unwrap();
+        coord.inject(cfg.workload.generate(0));
+        coord.run();
+        assert!(coord.all_serviced());
+    }
+}

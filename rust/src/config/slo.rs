@@ -1,0 +1,148 @@
+//! Service-level objectives (paper §V-A, Table II).
+//!
+//! Baselines: TTFT 250 ms (1000 ms for RAG / memory-retrieval pipelines),
+//! TPOT 25 ms. Acceptable slowdowns: TTFT 2×/3×/6× and TPOT
+//! 1.25×/1.5×/5× at P50/P90/P99. "All six SLOs must be satisfied."
+
+use crate::util::stats::Summary;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloLadder {
+    /// baseline TTFT, seconds
+    pub ttft_base: f64,
+    /// baseline TPOT, seconds
+    pub tpot_base: f64,
+    pub ttft_mult: [f64; 3],
+    pub tpot_mult: [f64; 3],
+}
+
+impl SloLadder {
+    /// Table II for regular prefill-decode pipelines.
+    pub fn standard() -> SloLadder {
+        SloLadder {
+            ttft_base: 0.250,
+            tpot_base: 0.025,
+            ttft_mult: [2.0, 3.0, 6.0],
+            tpot_mult: [1.25, 1.5, 5.0],
+        }
+    }
+
+    /// Table II for RAG / memory-retrieval pipelines (1000 ms TTFT base).
+    pub fn retrieval() -> SloLadder {
+        SloLadder {
+            ttft_base: 1.000,
+            ..SloLadder::standard()
+        }
+    }
+
+    pub fn ttft_limits(&self) -> [f64; 3] {
+        [
+            self.ttft_base * self.ttft_mult[0],
+            self.ttft_base * self.ttft_mult[1],
+            self.ttft_base * self.ttft_mult[2],
+        ]
+    }
+
+    pub fn tpot_limits(&self) -> [f64; 3] {
+        [
+            self.tpot_base * self.tpot_mult[0],
+            self.tpot_base * self.tpot_mult[1],
+            self.tpot_base * self.tpot_mult[2],
+        ]
+    }
+
+    /// All-six check over run distributions.
+    pub fn satisfied(&self, ttft: &Summary, tpot: &Summary) -> bool {
+        let tl = self.ttft_limits();
+        let pl = self.tpot_limits();
+        ttft.p50 <= tl[0]
+            && ttft.p90 <= tl[1]
+            && ttft.p99 <= tl[2]
+            && tpot.p50 <= pl[0]
+            && tpot.p90 <= pl[1]
+            && tpot.p99 <= pl[2]
+    }
+
+    /// Which of the six constraints fail (reporting).
+    pub fn violations(&self, ttft: &Summary, tpot: &Summary) -> Vec<&'static str> {
+        let tl = self.ttft_limits();
+        let pl = self.tpot_limits();
+        let mut v = Vec::new();
+        if ttft.p50 > tl[0] {
+            v.push("ttft-p50");
+        }
+        if ttft.p90 > tl[1] {
+            v.push("ttft-p90");
+        }
+        if ttft.p99 > tl[2] {
+            v.push("ttft-p99");
+        }
+        if tpot.p50 > pl[0] {
+            v.push("tpot-p50");
+        }
+        if tpot.p90 > pl[1] {
+            v.push("tpot-p90");
+        }
+        if tpot.p99 > pl[2] {
+            v.push("tpot-p99");
+        }
+        v
+    }
+
+    /// Per-request check (goodput counting, Figs 8 & 13).
+    pub fn request_ok(&self, ttft: f64, tpot: f64) -> bool {
+        ttft <= self.ttft_limits()[0] && tpot <= self.tpot_limits()[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sum(p50: f64, p90: f64, p99: f64) -> Summary {
+        Summary {
+            n: 100,
+            mean: p50,
+            p50,
+            p90,
+            p99,
+            min: 0.0,
+            max: p99,
+        }
+    }
+
+    #[test]
+    fn table2_limits() {
+        let s = SloLadder::standard();
+        for (got, want) in s.ttft_limits().iter().zip([0.5, 0.75, 1.5]) {
+            assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+        }
+        for (got, want) in s.tpot_limits().iter().zip([0.03125, 0.0375, 0.125]) {
+            assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+        }
+        let r = SloLadder::retrieval();
+        for (got, want) in r.ttft_limits().iter().zip([2.0, 3.0, 6.0]) {
+            assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn all_six_must_hold() {
+        let s = SloLadder::standard();
+        let good_ttft = sum(0.3, 0.5, 1.0);
+        let good_tpot = sum(0.02, 0.03, 0.05);
+        assert!(s.satisfied(&good_ttft, &good_tpot));
+        // one violation (ttft p99) is enough to fail
+        let bad_ttft = sum(0.3, 0.5, 2.0);
+        assert!(!s.satisfied(&bad_ttft, &good_tpot));
+        assert_eq!(s.violations(&bad_ttft, &good_tpot), vec!["ttft-p99"]);
+    }
+
+    #[test]
+    fn per_request_check() {
+        let s = SloLadder::standard();
+        assert!(s.request_ok(0.4, 0.03));
+        assert!(!s.request_ok(0.6, 0.03));
+        assert!(!s.request_ok(0.4, 0.04));
+    }
+}

@@ -1,0 +1,135 @@
+//! The global event queue (paper §III-B): a deterministic min-heap over
+//! (time, sequence). The paper's two primary event types plus transfer
+//! completion from the global communication simulator.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::sim::SimTime;
+use crate::workload::request::ReqId;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// a request enters the system (dst None → route it) or arrives at a
+    /// client after routing/transfer
+    RequestPush { req: ReqId, dst: Option<usize> },
+    /// a client's in-flight engine step completed
+    EngineStep { client: usize },
+}
+
+/// Deterministic priority queue: ties broken by insertion sequence.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<(SimTime, u64, EventSlot)>>,
+    seq: u64,
+    pub pushed: u64,
+}
+
+/// Event wrapped for total ordering inside the heap key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct EventSlot {
+    tag: u8,
+    a: u64,
+    b: u64,
+}
+
+fn encode(e: Event) -> EventSlot {
+    match e {
+        Event::RequestPush { req, dst } => EventSlot {
+            tag: 0,
+            a: req,
+            b: dst.map(|d| d as u64 + 1).unwrap_or(0),
+        },
+        Event::EngineStep { client } => EventSlot {
+            tag: 1,
+            a: client as u64,
+            b: 0,
+        },
+    }
+}
+
+fn decode(s: EventSlot) -> Event {
+    match s.tag {
+        0 => Event::RequestPush {
+            req: s.a,
+            dst: if s.b == 0 { None } else { Some(s.b as usize - 1) },
+        },
+        1 => Event::EngineStep {
+            client: s.a as usize,
+        },
+        _ => unreachable!(),
+    }
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    pub fn push(&mut self, t: SimTime, e: Event) {
+        self.heap.push(Reverse((t, self.seq, encode(e))));
+        self.seq += 1;
+        self.pushed += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<(SimTime, Event)> {
+        self.heap.pop().map(|Reverse((t, _, s))| (t, decode(s)))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(SimTime::from_secs(2.0), Event::EngineStep { client: 2 });
+        q.push(SimTime::from_secs(1.0), Event::RequestPush { req: 7, dst: None });
+        q.push(SimTime::from_secs(3.0), Event::EngineStep { client: 3 });
+        let (t1, e1) = q.pop().unwrap();
+        assert_eq!(t1, SimTime::from_secs(1.0));
+        assert_eq!(e1, Event::RequestPush { req: 7, dst: None });
+        assert_eq!(q.pop().unwrap().0, SimTime::from_secs(2.0));
+        assert_eq!(q.pop().unwrap().0, SimTime::from_secs(3.0));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        let t = SimTime::from_secs(1.0);
+        q.push(t, Event::EngineStep { client: 10 });
+        q.push(t, Event::EngineStep { client: 20 });
+        q.push(t, Event::EngineStep { client: 30 });
+        let order: Vec<Event> = (0..3).map(|_| q.pop().unwrap().1).collect();
+        assert_eq!(
+            order,
+            vec![
+                Event::EngineStep { client: 10 },
+                Event::EngineStep { client: 20 },
+                Event::EngineStep { client: 30 }
+            ]
+        );
+    }
+
+    #[test]
+    fn request_push_dst_roundtrip() {
+        let mut q = EventQueue::new();
+        q.push(SimTime::ZERO, Event::RequestPush { req: 5, dst: Some(0) });
+        q.push(SimTime::ZERO, Event::RequestPush { req: 6, dst: None });
+        assert_eq!(
+            q.pop().unwrap().1,
+            Event::RequestPush { req: 5, dst: Some(0) }
+        );
+        assert_eq!(q.pop().unwrap().1, Event::RequestPush { req: 6, dst: None });
+    }
+}

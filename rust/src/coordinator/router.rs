@@ -1,0 +1,215 @@
+//! Routing and load balancing (paper §III-B.1): Round-Robin, Load-based
+//! and Heavy-Light-split policies, each parameterizable by a load metric
+//! (input length / output length / KV size / tokens left) — the paper's
+//! "up to nine distinct routing strategies". The router can also exploit
+//! placement information to prefer low-transfer-cost destinations
+//! (disaggregated local mode).
+
+use crate::client::ClientLoad;
+use crate::workload::request::Request;
+
+/// Which request/client attribute quantifies "load".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadMetric {
+    InputLen,
+    OutputLen,
+    KvSize,
+    TokensLeft,
+}
+
+impl LoadMetric {
+    pub fn of(&self, l: &ClientLoad) -> f64 {
+        match self {
+            LoadMetric::InputLen => l.input_tokens,
+            LoadMetric::OutputLen => l.output_tokens,
+            LoadMetric::KvSize => l.kv_tokens,
+            LoadMetric::TokensLeft => l.tokens_left,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    /// least-loaded by metric
+    LoadBased(LoadMetric),
+    /// requests above `threshold_tokens` of prompt go to the heavy
+    /// sub-pool (first `heavy_frac` of candidates), the rest to the
+    /// light sub-pool; least-loaded within each (Intelligent-Router-like)
+    HeavyLight {
+        metric: LoadMetric,
+        threshold_tokens: usize,
+        heavy_frac: f64,
+    },
+}
+
+/// A routing decision input: candidate client ids with their loads and
+/// (optionally) the estimated transfer cost of moving this request there.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub client: usize,
+    pub load: ClientLoad,
+    /// seconds to move the request's state to this client (0 if local)
+    pub transfer_cost: f64,
+}
+
+pub struct Router {
+    pub policy: RoutePolicy,
+    /// weight of transfer cost against load when ranking candidates
+    /// (disaggregated KV locality, §III-B.1 last paragraph)
+    pub transfer_weight: f64,
+    rr_next: usize,
+    pub decisions: u64,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy) -> Router {
+        Router {
+            policy,
+            transfer_weight: 0.0,
+            rr_next: 0,
+            decisions: 0,
+        }
+    }
+
+    pub fn with_transfer_weight(mut self, w: f64) -> Router {
+        self.transfer_weight = w;
+        self
+    }
+
+    /// Pick a client for `req` among `cands` (must be non-empty).
+    pub fn pick(&mut self, req: &Request, cands: &[Candidate]) -> usize {
+        assert!(!cands.is_empty(), "router: no capable client");
+        self.decisions += 1;
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                let c = cands[self.rr_next % cands.len()].client;
+                self.rr_next += 1;
+                c
+            }
+            RoutePolicy::LoadBased(metric) => self.least_loaded(cands, metric),
+            RoutePolicy::HeavyLight {
+                metric,
+                threshold_tokens,
+                heavy_frac,
+            } => {
+                let split = ((cands.len() as f64 * heavy_frac).round() as usize)
+                    .clamp(1, cands.len().saturating_sub(1).max(1));
+                let heavy = req.prompt_tokens >= threshold_tokens;
+                let pool = if heavy {
+                    &cands[..split]
+                } else {
+                    &cands[split.min(cands.len() - 1)..]
+                };
+                self.least_loaded(pool, metric)
+            }
+        }
+    }
+
+    fn least_loaded(&self, cands: &[Candidate], metric: LoadMetric) -> usize {
+        cands
+            .iter()
+            .min_by(|a, b| {
+                let ka = metric.of(&a.load) + self.transfer_weight * a.transfer_cost;
+                let kb = metric.of(&b.load) + self.transfer_weight * b.transfer_cost;
+                ka.partial_cmp(&kb)
+                    .unwrap()
+                    .then_with(|| a.client.cmp(&b.client))
+            })
+            .unwrap()
+            .client
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimTime;
+    use crate::workload::request::{Request, Stage};
+
+    fn req(prompt: usize) -> Request {
+        Request::new(
+            1,
+            "llama3-70b",
+            SimTime::ZERO,
+            vec![Stage::Prefill, Stage::Decode],
+            prompt,
+            10,
+        )
+    }
+
+    fn cand(client: usize, tokens_left: f64) -> Candidate {
+        Candidate {
+            client,
+            load: ClientLoad {
+                tokens_left,
+                input_tokens: tokens_left,
+                ..Default::default()
+            },
+            transfer_cost: 0.0,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RoutePolicy::RoundRobin);
+        let cands = vec![cand(0, 0.0), cand(1, 0.0), cand(2, 0.0)];
+        let picks: Vec<usize> = (0..6).map(|_| r.pick(&req(100), &cands)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn load_based_picks_min() {
+        let mut r = Router::new(RoutePolicy::LoadBased(LoadMetric::TokensLeft));
+        let cands = vec![cand(0, 500.0), cand(1, 100.0), cand(2, 900.0)];
+        assert_eq!(r.pick(&req(100), &cands), 1);
+    }
+
+    #[test]
+    fn heavy_light_splits_by_prompt_size() {
+        let mut r = Router::new(RoutePolicy::HeavyLight {
+            metric: LoadMetric::TokensLeft,
+            threshold_tokens: 1000,
+            heavy_frac: 0.5,
+        });
+        let cands = vec![cand(0, 9e9), cand(1, 9e9), cand(2, 0.0), cand(3, 0.0)];
+        // heavy request → first half even though it is more loaded
+        assert_eq!(r.pick(&req(4000), &cands), 0);
+        // light request → second half
+        assert_eq!(r.pick(&req(100), &cands), 2);
+    }
+
+    #[test]
+    fn transfer_weight_biases_toward_local() {
+        let mut r =
+            Router::new(RoutePolicy::LoadBased(LoadMetric::KvSize)).with_transfer_weight(1e6);
+        let cands = vec![
+            Candidate {
+                client: 0,
+                load: ClientLoad { kv_tokens: 1000.0, ..Default::default() },
+                transfer_cost: 0.0,
+            },
+            Candidate {
+                client: 1,
+                load: ClientLoad { kv_tokens: 0.0, ..Default::default() },
+                transfer_cost: 0.5, // remote: 0.5s of KV movement
+            },
+        ];
+        assert_eq!(r.pick(&req(100), &cands), 0, "locality should win");
+        r.transfer_weight = 0.0;
+        assert_eq!(r.pick(&req(100), &cands), 1, "pure load ignores locality");
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        let mut r = Router::new(RoutePolicy::LoadBased(LoadMetric::InputLen));
+        let cands = vec![cand(3, 5.0), cand(1, 5.0), cand(2, 5.0)];
+        assert_eq!(r.pick(&req(100), &cands), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "no capable client")]
+    fn empty_candidates_panics() {
+        Router::new(RoutePolicy::RoundRobin).pick(&req(1), &[]);
+    }
+}

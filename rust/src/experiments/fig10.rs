@@ -1,0 +1,71 @@
+//! Fig 10 — batching strategies across LLM pipelines (§V-A.1), regular
+//! prefill-decode requests: (a) coding trace (long inputs, short
+//! outputs), (b) conversation trace.
+//!
+//! Paper setup: Llama-3.1-70B on 32 clients of H100 TP2; strategies =
+//! continuous (vLLM), chunked (Sarathi), mixed, global disaggregated
+//! 20P/12D and 12P/20D; rising per-client rate; report normalized
+//! throughput + throughput/energy among SLO-passing points.
+//!
+//! Expected shape: code → chunked/disagg highest throughput, disagg
+//! (20P/12D) best throughput/energy; conv → disagg best across the board.
+
+use anyhow::Result;
+
+use crate::config::slo::SloLadder;
+use crate::experiments::common::{self, Scale};
+use crate::workload::trace::{Pipeline, Reasoning, TraceKind};
+
+pub struct Fig10Result {
+    pub panel: &'static str,
+    pub results: Vec<common::StrategyResult>,
+    pub winners: (Option<String>, Option<String>, Option<String>),
+}
+
+pub fn panels() -> [(&'static str, TraceKind); 2] {
+    [
+        ("a: Code trace", TraceKind::AzureCode),
+        ("b: Conversation trace", TraceKind::AzureConv),
+    ]
+}
+
+pub fn run_pipeline(
+    fast: bool,
+    pipeline: Pipeline,
+    caption: &str,
+    slo: &SloLadder,
+) -> Result<Vec<Fig10Result>> {
+    let scale = Scale::pick(
+        fast,
+        Scale { clients: 32, requests_per_client: 40, rates: &[0.5, 1.0, 2.0, 4.0, 6.0] },
+        Scale { clients: 4, requests_per_client: 12, rates: &[0.5, 2.0] },
+    );
+    let mut out = Vec::new();
+    for (panel, trace) in panels() {
+        let results = common::compare_strategies(
+            "llama3-70b",
+            2,
+            scale.clients,
+            trace,
+            pipeline,
+            Reasoning::None,
+            scale.requests_per_client,
+            scale.rates,
+            slo,
+        )?;
+        common::print_normalized(&results, &format!("{caption} {panel} ({} clients of H100 TP2)", scale.clients));
+        let winners = common::winners(&results);
+        println!(
+            "winners: TTFT={}  throughput={}  throughput/energy={}",
+            winners.0.as_deref().unwrap_or("-"),
+            winners.1.as_deref().unwrap_or("-"),
+            winners.2.as_deref().unwrap_or("-")
+        );
+        out.push(Fig10Result { panel, results, winners });
+    }
+    Ok(out)
+}
+
+pub fn run(fast: bool) -> Result<Vec<Fig10Result>> {
+    run_pipeline(fast, Pipeline::Regular, "Fig 10", &SloLadder::standard())
+}

@@ -1,0 +1,103 @@
+//! Fig 15 — remote KV-cache storage architectures (§V-B).
+//!
+//! Paper setup: 128 clients of Llama-3.1-70B (H100 TP2) across 4 racks;
+//! AzureConv requests at 240 req/s Poisson; short (4K) and long (24K)
+//! KV retrieval; private vs shared scenarios; storage tiers A (dedicated
+//! LPDDR), B (platform-shared), C (rack-shared), C+DCN, and full
+//! recompute. Metric: CDF of end-to-end request latency.
+//!
+//! Expected shape: B best for private KV at T90; C best for shared
+//! corpora; recompute competitive at 4K, prohibitive at 24K; the DCN
+//! fallback's ~20 ms link latency shows in the tail.
+
+use anyhow::Result;
+
+use crate::config::slo::SloLadder;
+use crate::memory::storage::{KvScenario, StorageConfig};
+use crate::metrics::RunMetrics;
+use crate::sim::builder::{KvRetrievalSpec, NetSpec, PerfBackend, PoolSpec, ServingSpec};
+use crate::sim::driver;
+use crate::util::bench::Table;
+use crate::workload::request::KvParams;
+use crate::workload::trace::{Pipeline, TraceKind, WorkloadSpec};
+use crate::hardware::npu::H100;
+use crate::scheduler::BatchingKind;
+
+#[derive(Debug, Clone)]
+pub struct Fig15Row {
+    pub scenario: &'static str,
+    pub cache_tokens: usize,
+    pub config: &'static str,
+    pub metrics: RunMetrics,
+}
+
+pub fn run(fast: bool) -> Result<Vec<Fig15Row>> {
+    let (clients, total_rate, n_req) = if fast { (8, 16.0, 160) } else { (128, 240.0, 3000) };
+    let slo = SloLadder::retrieval();
+    let mut rows = Vec::new();
+    for (scenario, sc) in [("private", KvScenario::Private), ("shared", KvScenario::Shared)] {
+        for cache_tokens in [4096usize, 24576] {
+            for cfg in StorageConfig::all() {
+                // replica counts per tier (Fig 14): dedicated = one per
+                // client; platform-shared = one per 4 clients; rack-shared
+                // = one per 32 clients
+                let stores = match cfg {
+                    StorageConfig::DedicatedPerClient => clients,
+                    StorageConfig::PlatformShared => (clients / 4).max(1),
+                    StorageConfig::RackShared | StorageConfig::RackSharedWithDcn => {
+                        (clients / 32).max(1)
+                    }
+                    StorageConfig::Recompute => 1,
+                };
+                // every serving client holds one connection at the tier's
+                // per-client bandwidth; a store aggregates its share
+                let ports = (clients / stores).max(1);
+                let spec = ServingSpec::new(
+                    "llama3-70b",
+                    H100,
+                    2,
+                    PoolSpec::Combined { kind: BatchingKind::Continuous, n: clients },
+                )
+                .with_perf(PerfBackend::Poly)
+                .with_net(NetSpec::Hierarchy {
+                    per_platform: 4,
+                    per_rack: (clients / 4).max(1),
+                })
+                .with_kv_retrieval(KvRetrievalSpec {
+                    count: stores,
+                    storage: cfg,
+                    scenario: sc,
+                    max_batch: 0,
+                    ports,
+                });
+                let workload = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, n_req, total_rate)
+                    .with_pipeline(Pipeline::KvRetrieval(KvParams { cached_tokens: cache_tokens }))
+                    .with_seed(15);
+                let metrics = driver::run(&spec, &workload, &slo)?;
+                rows.push(Fig15Row {
+                    scenario,
+                    cache_tokens,
+                    config: cfg.name(),
+                    metrics,
+                });
+            }
+        }
+    }
+    let mut t = Table::new(&[
+        "scenario", "cache", "storage", "e2e_p50(s)", "e2e_p90(s)", "e2e_p99(s)", "recomputes",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.scenario.to_string(),
+            format!("{}K", r.cache_tokens / 1024),
+            r.config.to_string(),
+            format!("{:.2}", r.metrics.e2e.p50),
+            format!("{:.2}", r.metrics.e2e.p90),
+            format!("{:.2}", r.metrics.e2e.p99),
+            format!("{}", r.metrics.recomputes),
+        ]);
+    }
+    t.print();
+    println!("CDF samples available programmatically via Fig15Row.metrics.e2e_samples");
+    Ok(rows)
+}

@@ -1,0 +1,82 @@
+//! Fig 5 — end-to-end validation against splitwise-sim.
+//!
+//! Paper setup: 80-GPU system, 8 prefill + 2 decode clients at TP8,
+//! Llama-2-70B and Bloom-176B, Azure traces at RPS 20 and 40. The paper
+//! reports ≤6% runtime difference, attributed to the communication model
+//! (splitwise-sim uses a dummy single link with a lower-bound bandwidth;
+//! HERMES models the real hierarchy via astra-sim — here, our
+//! hierarchical network substitute vs the same engine with the dummy
+//! link, DESIGN.md §3).
+
+use anyhow::Result;
+
+use crate::config::slo::SloLadder;
+use crate::hardware::npu::H100;
+use crate::metrics::RunMetrics;
+use crate::network::link::LinkSpec;
+use crate::sim::builder::{NetSpec, PerfBackend, PoolSpec, ServingSpec};
+use crate::util::bench::Table;
+use crate::workload::trace::{TraceKind, WorkloadSpec};
+
+#[derive(Debug, Clone)]
+pub struct Fig5Row {
+    pub model: &'static str,
+    pub rps: f64,
+    pub hermes_runtime: f64,
+    pub baseline_runtime: f64,
+    pub gap_pct: f64,
+}
+
+pub fn run(fast: bool) -> Result<Vec<Fig5Row>> {
+    let (n_req, models): (usize, Vec<&'static str>) = if fast {
+        (120, vec!["llama2-70b"])
+    } else {
+        (600, vec!["llama2-70b", "bloom-176b"])
+    };
+    let mut rows = Vec::new();
+    for model in models {
+        for rps in [20.0, 40.0] {
+            let mk_spec = |net: NetSpec| {
+                ServingSpec::new(
+                    model,
+                    H100,
+                    8,
+                    PoolSpec::Disaggregated { prefill: 8, decode: 2, local: false },
+                )
+                .with_perf(PerfBackend::Poly)
+                .with_net(net)
+            };
+            let workload = WorkloadSpec::new(model, TraceKind::AzureConv, n_req, rps).with_seed(5);
+            let run_one = |spec: &ServingSpec| -> Result<RunMetrics> {
+                crate::sim::driver::run(spec, &workload, &SloLadder::standard())
+            };
+            // HERMES: hierarchical topology (10 clients, platforms of 2)
+            let hermes = run_one(&mk_spec(NetSpec::Hierarchy { per_platform: 2, per_rack: 10 }))?;
+            // splitwise-sim baseline: dummy link at its documented
+            // lower-bound bandwidth
+            let base = run_one(&mk_spec(NetSpec::Dummy(LinkSpec { bw: 200e9, lat: 1e-5 })))?;
+            let gap = (hermes.makespan - base.makespan).abs() / base.makespan * 100.0;
+            rows.push(Fig5Row {
+                model,
+                rps,
+                hermes_runtime: hermes.makespan,
+                baseline_runtime: base.makespan,
+                gap_pct: gap,
+            });
+        }
+    }
+    let mut t = Table::new(&["model", "RPS", "HERMES(s)", "splitwise-sim-like(s)", "gap %"]);
+    for r in &rows {
+        t.row(&[
+            r.model.to_string(),
+            format!("{:.0}", r.rps),
+            format!("{:.2}", r.hermes_runtime),
+            format!("{:.2}", r.baseline_runtime),
+            format!("{:.2}", r.gap_pct),
+        ]);
+    }
+    t.print();
+    let max_gap = rows.iter().map(|r| r.gap_pct).fold(0.0, f64::max);
+    println!("max gap: {max_gap:.2}% (paper reports <6%, attributed to the comm model)");
+    Ok(rows)
+}

@@ -1,0 +1,100 @@
+//! Fig 6 — fidelity of the ML-predicted runtime path vs the fine-grained
+//! hardware model.
+//!
+//! Paper setup: Llama-3.1-70B on HGX-H100×8 with vLLM chunked batching,
+//! varying context length, request count and chunk size across TP2/4/8,
+//! 200 output tokens; HERMES achieves <2% average end-to-end error. Our
+//! "measured" side is the roofline oracle the regression was fitted on
+//! (DESIGN.md §3): the figure quantifies how much fidelity the
+//! fitted-polynomial fast path loses end-to-end.
+
+use anyhow::Result;
+
+use crate::config::slo::SloLadder;
+use crate::hardware::npu::H100;
+use crate::scheduler::BatchingKind;
+use crate::sim::builder::{PerfBackend, PoolSpec, ServingSpec};
+use crate::util::bench::Table;
+use crate::util::stats;
+use crate::workload::trace::{TraceKind, WorkloadSpec};
+
+#[derive(Debug, Clone)]
+pub struct Fig6Row {
+    pub tp: usize,
+    pub ctx: f64,
+    pub n_req: usize,
+    pub chunk: usize,
+    pub predicted_s: f64,
+    pub oracle_s: f64,
+    pub err_pct: f64,
+}
+
+pub fn run(fast: bool) -> Result<Vec<Fig6Row>> {
+    let tps: &[usize] = if fast { &[8] } else { &[2, 4, 8] };
+    let ctxs: &[f64] = if fast { &[1024.0, 4096.0] } else { &[1024.0, 2048.0, 4096.0] };
+    let nreqs: &[usize] = if fast { &[16] } else { &[8, 16, 32] };
+    let chunks: &[usize] = if fast { &[512] } else { &[512, 1024, 2048] };
+
+    let mut rows = Vec::new();
+    for &tp in tps {
+        for &ctx in ctxs {
+            for &n in nreqs {
+                for &chunk in chunks {
+                    let workload = WorkloadSpec::new(
+                        "llama3-70b",
+                        TraceKind::Synthetic {
+                            in_mean: ctx,
+                            in_std: ctx * 0.1,
+                            out_mean: 200.0, // paper: 200 output tokens
+                            out_std: 1.0,
+                        },
+                        n,
+                        8.0,
+                    )
+                    .with_seed(6);
+                    let run_one = |perf: PerfBackend| {
+                        let spec = ServingSpec::new(
+                            "llama3-70b",
+                            H100,
+                            tp,
+                            PoolSpec::Combined { kind: BatchingKind::Chunked { chunk }, n: 1 },
+                        )
+                        .with_perf(perf);
+                        crate::sim::driver::run(&spec, &workload, &SloLadder::standard())
+                    };
+                    let pred = run_one(PerfBackend::Poly)?;
+                    let oracle = run_one(PerfBackend::Roofline)?;
+                    rows.push(Fig6Row {
+                        tp,
+                        ctx,
+                        n_req: n,
+                        chunk,
+                        predicted_s: pred.makespan,
+                        oracle_s: oracle.makespan,
+                        err_pct: (pred.makespan - oracle.makespan).abs() / oracle.makespan * 100.0,
+                    });
+                }
+            }
+        }
+    }
+    let mut t = Table::new(&["tp", "ctx", "reqs", "chunk", "predicted(s)", "oracle(s)", "err %"]);
+    for r in &rows {
+        t.row(&[
+            format!("{}", r.tp),
+            format!("{:.0}", r.ctx),
+            format!("{}", r.n_req),
+            format!("{}", r.chunk),
+            format!("{:.3}", r.predicted_s),
+            format!("{:.3}", r.oracle_s),
+            format!("{:.2}", r.err_pct),
+        ]);
+    }
+    t.print();
+    let errs: Vec<f64> = rows.iter().map(|r| r.err_pct).collect();
+    println!(
+        "avg error {:.2}%  max {:.2}%  (paper: <2% average)",
+        stats::mean(&errs),
+        errs.iter().fold(0.0f64, |a, &b| a.max(b))
+    );
+    Ok(rows)
+}

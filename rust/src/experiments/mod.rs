@@ -1,0 +1,81 @@
+//! Paper-experiment regenerators: one module per evaluation figure/table
+//! (DESIGN.md §6 maps each to its paper section). Each `run(fast)`
+//! prints the paper-style rows and returns structured results so the
+//! benches and tests can assert on shapes.
+
+pub mod ablations;
+pub mod common;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig15;
+pub mod fig5;
+pub mod fig6;
+pub mod fig8;
+pub mod fig9;
+pub mod table3;
+
+use anyhow::{bail, Result};
+
+use crate::util::bench::banner;
+
+/// CLI dispatch: `hermes experiment <name> [--fast]`.
+pub fn run_by_name(name: &str, fast: bool) -> Result<()> {
+    match name {
+        "fig5" => {
+            banner("Fig 5 — validation vs splitwise-sim-like baseline");
+            fig5::run(fast)?;
+        }
+        "fig6" => {
+            banner("Fig 6 — ML-predictor fidelity vs fine-grained oracle");
+            fig6::run(fast)?;
+        }
+        "fig8" => {
+            banner("Fig 8 — batching under multi-path reasoning");
+            fig8::run(fast)?;
+        }
+        "fig9" => {
+            banner("Fig 9 — RAG embedding/retrieval placement");
+            fig9::run(fast)?;
+        }
+        "fig10" => {
+            banner("Fig 10 — batching strategies, regular pipelines");
+            fig10::run(fast)?;
+        }
+        "fig11" => {
+            banner("Fig 11 — batching strategies, RAG pipelines");
+            fig11::run(fast)?;
+        }
+        "fig12" => {
+            banner("Fig 12 — batching strategies, KV-retrieval pipelines");
+            fig12::run(fast)?;
+        }
+        "fig13" => {
+            banner("Fig 13 — goodput vs generation SLA, scaling clients");
+            fig13::run(fast)?;
+        }
+        "fig15" => {
+            banner("Fig 15 — remote KV-cache storage architectures");
+            fig15::run(fast)?;
+        }
+        "table3" => {
+            banner("Table III — batching-strategy recommendations");
+            table3::run(fast)?;
+        }
+        "ablations" => {
+            banner("Ablations — routing / granularity / packing design choices");
+            ablations::run(fast)?;
+        }
+        "all" => {
+            for n in [
+                "fig5", "fig6", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig15",
+                "table3",
+            ] {
+                run_by_name(n, fast)?;
+            }
+        }
+        other => bail!("unknown experiment '{other}' (fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|ablations|all)"),
+    }
+    Ok(())
+}

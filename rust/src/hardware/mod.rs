@@ -1,0 +1,11 @@
+//! Hardware layer: model architectures, NPU spec sheets, the GenZ-like
+//! analytical roofline, and the power/energy model (paper §III-E).
+
+pub mod models;
+pub mod npu;
+pub mod power;
+pub mod roofline;
+
+pub use models::{model, ModelSpec};
+pub use npu::{npu, NpuSpec};
+pub use roofline::{LlmCluster, PrefillItem, StepWork};

@@ -1,0 +1,202 @@
+//! Model architecture registry.
+//!
+//! Every model the paper's experiments mention: the LLMs served
+//! (Llama-2-70B, Llama-3/3.1-70B, Llama-3.1-8B, Bloom-176B), the RAG
+//! embedding models (E5-Base, Mistral-7B) and the ~2B guard model used by
+//! post-processing clients (toxicity / bias filtering, §III-E.4).
+
+/// Transformer architecture parameters sufficient for roofline math and
+/// KV-cache accounting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    /// total parameter count
+    pub params: f64,
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    /// KV heads (GQA); == heads for MHA models like Bloom.
+    pub kv_heads: usize,
+    pub d_head: usize,
+    /// bytes per parameter. Served decoder LLMs use 1.0 (fp8 weights —
+    /// the standard H100 serving configuration, and the only one under
+    /// which the paper's H100-TP2 / 70B setup meets a 25 ms TPOT with
+    /// room for KV cache; see DESIGN.md §3). KV cache stays fp16.
+    pub bytes_per_param: f64,
+    /// decoder (true) vs encoder-only embedding model (false)
+    pub decoder: bool,
+}
+
+impl ModelSpec {
+    /// KV-cache bytes for ONE token: K and V, per layer, per KV head,
+    /// fp16. E.g. Llama-70B (GQA-8): 2·80·8·128·2 = 320 KiB/token.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.layers as f64 * self.kv_heads as f64 * self.d_head as f64 * 2.0
+    }
+
+    /// Weight bytes (per full model; divide by TP degree for a shard).
+    pub fn weight_bytes(&self) -> f64 {
+        self.params * self.bytes_per_param
+    }
+
+    /// Matmul FLOPs to process one token through the whole stack
+    /// (≈ 2 · params; attention score/context FLOPs are separate because
+    /// they scale with context length).
+    pub fn flops_per_token(&self) -> f64 {
+        2.0 * self.params
+    }
+
+    /// Attention score+context FLOPs for one new token attending over a
+    /// context of `ctx` tokens: QKᵀ and PV each cost
+    /// 2 · layers · hidden · ctx.
+    pub fn attn_flops(&self, ctx: f64) -> f64 {
+        4.0 * self.layers as f64 * (self.heads * self.d_head) as f64 * ctx
+    }
+}
+
+/// Registry lookup by name (case-insensitive, dashes/dots normalized).
+pub fn model(name: &str) -> Option<ModelSpec> {
+    let key = name.to_ascii_lowercase().replace(['.', '_'], "-");
+    let m = match key.as_str() {
+        "llama2-70b" | "llama-2-70b" => LLAMA2_70B,
+        "llama3-70b" | "llama-3-70b" | "llama3-1-70b" | "llama-3-1-70b" => LLAMA3_70B,
+        "llama3-1-8b" | "llama-3-1-8b" | "llama3-8b" => LLAMA3_8B,
+        "bloom-176b" => BLOOM_176B,
+        "mistral-7b" => MISTRAL_7B,
+        "e5-base" => E5_BASE,
+        "guard-2b" => GUARD_2B,
+        _ => return None,
+    };
+    Some(m)
+}
+
+pub const LLAMA2_70B: ModelSpec = ModelSpec {
+    name: "llama2-70b",
+    params: 70e9,
+    layers: 80,
+    hidden: 8192,
+    heads: 64,
+    kv_heads: 8,
+    d_head: 128,
+    bytes_per_param: 1.0,
+    decoder: true,
+};
+
+/// Llama-3-70B and Llama-3.1-70B share the 70B GQA-8 architecture.
+pub const LLAMA3_70B: ModelSpec = ModelSpec {
+    name: "llama3-70b",
+    params: 70.6e9,
+    layers: 80,
+    hidden: 8192,
+    heads: 64,
+    kv_heads: 8,
+    d_head: 128,
+    bytes_per_param: 1.0,
+    decoder: true,
+};
+
+pub const LLAMA3_8B: ModelSpec = ModelSpec {
+    name: "llama3.1-8b",
+    params: 8.03e9,
+    layers: 32,
+    hidden: 4096,
+    heads: 32,
+    kv_heads: 8,
+    d_head: 128,
+    bytes_per_param: 1.0,
+    decoder: true,
+};
+
+/// Bloom uses MHA (112 KV heads) → enormous per-token KV (~3.8 MiB).
+pub const BLOOM_176B: ModelSpec = ModelSpec {
+    name: "bloom-176b",
+    params: 176e9,
+    layers: 70,
+    hidden: 14336,
+    heads: 112,
+    kv_heads: 112,
+    d_head: 128,
+    bytes_per_param: 1.0,
+    decoder: true,
+};
+
+pub const MISTRAL_7B: ModelSpec = ModelSpec {
+    name: "mistral-7b",
+    params: 7.24e9,
+    layers: 32,
+    hidden: 4096,
+    heads: 32,
+    kv_heads: 8,
+    d_head: 128,
+    bytes_per_param: 1.0,
+    decoder: true,
+};
+
+/// E5-Base embedding encoder (~110M, BERT-base shape).
+pub const E5_BASE: ModelSpec = ModelSpec {
+    name: "e5-base",
+    params: 0.11e9,
+    layers: 12,
+    hidden: 768,
+    heads: 12,
+    kv_heads: 12,
+    d_head: 64,
+    bytes_per_param: 2.0,
+    decoder: false,
+};
+
+/// Small (~2B) LLM used to model toxicity/bias filters in post-processing
+/// clients (§III-E.4: "a forward pass on small LLM model (~2B)").
+pub const GUARD_2B: ModelSpec = ModelSpec {
+    name: "guard-2b",
+    params: 2e9,
+    layers: 24,
+    hidden: 2048,
+    heads: 16,
+    kv_heads: 16,
+    d_head: 128,
+    bytes_per_param: 2.0,
+    decoder: true,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_bytes_match_hand_calcs() {
+        // 70B GQA-8: 2 * 80 * 8 * 128 * 2B = 320 KiB per token
+        assert_eq!(LLAMA2_70B.kv_bytes_per_token(), 327_680.0);
+        // 8B GQA-8: 2 * 32 * 8 * 128 * 2B = 128 KiB
+        assert_eq!(LLAMA3_8B.kv_bytes_per_token(), 131_072.0);
+        // Bloom MHA: ~3.8 MiB per token — the Fig 5 memory-pressure model
+        assert_eq!(BLOOM_176B.kv_bytes_per_token(), 4_014_080.0);
+    }
+
+    #[test]
+    fn weight_bytes_fp8_serving() {
+        assert_eq!(LLAMA2_70B.weight_bytes(), 70e9);
+        // encoder/guard models keep fp16
+        assert_eq!(E5_BASE.bytes_per_param, 2.0);
+    }
+
+    #[test]
+    fn lookup_normalizes_names() {
+        assert_eq!(model("Llama3.1-70B").unwrap().name, "llama3-70b");
+        assert_eq!(model("llama_2_70b").unwrap().name, "llama2-70b");
+        assert_eq!(model("E5-Base").unwrap().name, "e5-base");
+        assert!(model("gpt-99t").is_none());
+    }
+
+    #[test]
+    fn attn_flops_scale_with_ctx() {
+        let m = &LLAMA3_8B;
+        assert_eq!(m.attn_flops(2000.0), 2.0 * m.attn_flops(1000.0));
+    }
+
+    #[test]
+    fn encoder_flag() {
+        assert!(!E5_BASE.decoder);
+        assert!(MISTRAL_7B.decoder);
+    }
+}

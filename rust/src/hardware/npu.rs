@@ -1,0 +1,140 @@
+//! NPU / CPU / memory-node hardware specifications.
+//!
+//! "We use the term NPU to refer to these hardware components" (§III).
+//! Numbers for the CPUs come straight from the paper's Fig 9 setup
+//! (Grace-inspired / Sapphire-Rapids-inspired); GPU numbers are the public
+//! spec sheets. Memory-node tiers (Fig 14 configs A/B/C) live in
+//! `memory::storage`.
+
+/// One hardware device (GPU, CPU socket, or accelerator).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NpuSpec {
+    pub name: &'static str,
+    /// peak dense matmul throughput, FLOP/s (bf16 for GPUs, fp32 for CPUs)
+    pub peak_flops: f64,
+    /// main-memory bandwidth, B/s (HBM / LPDDR / DDR)
+    pub mem_bw: f64,
+    /// device memory capacity, bytes
+    pub mem_capacity: f64,
+    /// board power at full load, W
+    pub tdp_w: f64,
+    /// idle power, W
+    pub idle_w: f64,
+    /// scale-up link bandwidth per device (NVLink etc.), B/s
+    pub link_bw: f64,
+    /// scale-up link latency, s
+    pub link_lat: f64,
+    /// host/PCIe bandwidth, B/s
+    pub pcie_bw: f64,
+}
+
+impl NpuSpec {
+    /// Memory left for KV cache after a TP-sharded copy of `weight_bytes`.
+    pub fn kv_budget(&self, weight_bytes: f64, tp: usize) -> f64 {
+        // ~10% reserved for activations/fragmentation (vLLM-like).
+        (self.mem_capacity * 0.9 - weight_bytes / tp as f64).max(0.0)
+    }
+}
+
+/// Nvidia H100 SXM5: 989 TF bf16 dense, 80 GB HBM3 @ 3.35 TB/s, NVLink4
+/// 900 GB/s, 700 W.
+pub const H100: NpuSpec = NpuSpec {
+    name: "h100",
+    peak_flops: 989e12,
+    mem_bw: 3.35e12,
+    mem_capacity: 80e9,
+    tdp_w: 700.0,
+    idle_w: 90.0,
+    link_bw: 900e9,
+    link_lat: 2.0e-6,
+    pcie_bw: 64e9,
+};
+
+/// Nvidia A100 SXM4: 312 TF bf16, 80 GB HBM2e @ 2.04 TB/s, 400 W.
+pub const A100: NpuSpec = NpuSpec {
+    name: "a100",
+    peak_flops: 312e12,
+    mem_bw: 2.04e12,
+    mem_capacity: 80e9,
+    tdp_w: 400.0,
+    idle_w: 60.0,
+    link_bw: 600e9,
+    link_lat: 2.5e-6,
+    pcie_bw: 32e9,
+};
+
+/// "Large CPU (Grace-inspired): 14.2 TFLOPs single-precision, LPDDR5X,
+/// 1 TB @ 768 GB/s" (paper Fig 9 setup).
+pub const GRACE_CPU: NpuSpec = NpuSpec {
+    name: "grace-cpu",
+    peak_flops: 14.2e12,
+    mem_bw: 768e9,
+    mem_capacity: 1e12,
+    tdp_w: 500.0,
+    idle_w: 150.0,
+    link_bw: 450e9, // NVLink-C2C
+    link_lat: 3.0e-6,
+    pcie_bw: 64e9,
+};
+
+/// "Small CPU (Sapphire-Rapids-inspired): 6.27 TFLOPs, DDR5 8-channel,
+/// 4 TB @ 307.2 GB/s" (paper Fig 9 setup).
+pub const SPR_CPU: NpuSpec = NpuSpec {
+    name: "spr-cpu",
+    peak_flops: 6.27e12,
+    mem_bw: 307.2e9,
+    mem_capacity: 4e12,
+    tdp_w: 350.0,
+    idle_w: 100.0,
+    link_bw: 0.0,
+    link_lat: 0.0,
+    pcie_bw: 32e9,
+};
+
+/// Registry lookup by name.
+pub fn npu(name: &str) -> Option<NpuSpec> {
+    let key = name.to_ascii_lowercase();
+    Some(match key.as_str() {
+        "h100" => H100,
+        "a100" => A100,
+        "grace-cpu" | "grace" | "large-cpu" => GRACE_CPU,
+        "spr-cpu" | "spr" | "small-cpu" | "sapphire-rapids" => SPR_CPU,
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::models::LLAMA3_70B;
+
+    #[test]
+    fn kv_budget_accounts_for_tp_sharding() {
+        // 70B fp8 = 70.6 GB weights; TP2 → 35.3 GB/GPU → ~36.7 GB KV left
+        let b2 = H100.kv_budget(LLAMA3_70B.weight_bytes(), 2);
+        assert!(b2 > 30e9 && b2 < 40e9, "b2={b2}");
+        // TP8 → 8.8 GB/GPU → ~63 GB KV budget
+        let b8 = H100.kv_budget(LLAMA3_70B.weight_bytes(), 8);
+        assert!(b8 > 55e9 && b8 < 70e9, "b8={b8}");
+        // TP1: 70.6 GB weights on one 80 GB H100 → ~1.4 GB KV, very tight
+        let b1 = H100.kv_budget(LLAMA3_70B.weight_bytes(), 1);
+        assert!(b1 > 0.0 && b1 < 3e9, "b1={b1}");
+    }
+
+    #[test]
+    fn registry_lookup() {
+        assert_eq!(npu("H100").unwrap().name, "h100");
+        assert_eq!(npu("large-cpu").unwrap().name, "grace-cpu");
+        assert_eq!(npu("small-cpu").unwrap().name, "spr-cpu");
+        assert!(npu("tpu-v9").is_none());
+    }
+
+    #[test]
+    fn paper_cpu_numbers() {
+        assert_eq!(GRACE_CPU.peak_flops, 14.2e12);
+        assert_eq!(GRACE_CPU.mem_bw, 768e9);
+        assert_eq!(GRACE_CPU.mem_capacity, 1e12);
+        assert_eq!(SPR_CPU.peak_flops, 6.27e12);
+        assert_eq!(SPR_CPU.mem_bw, 307.2e9);
+    }
+}

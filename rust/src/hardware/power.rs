@@ -1,0 +1,76 @@
+//! Power and energy accounting (paper: "Power consumption is estimated
+//! using power numbers generated from GenZ").
+//!
+//! Linear utilization model: P(util) = P_idle + util · (P_tdp − P_idle)
+//! per NPU. Decode-only clients are memory-bound (low compute util), so
+//! they burn markedly less power than prefill clients — exactly the
+//! mechanism behind the paper's "disaggregated wins throughput/energy"
+//! observation (Fig 10).
+
+use super::npu::NpuSpec;
+
+/// Instantaneous power (W) of one NPU at a given compute utilization.
+pub fn npu_power(npu: &NpuSpec, util: f64) -> f64 {
+    npu.idle_w + util.clamp(0.0, 1.0) * (npu.tdp_w - npu.idle_w)
+}
+
+/// Energy (J) for a step of `duration` seconds on `n_npus` devices at
+/// compute utilization `util`.
+pub fn step_energy(npu: &NpuSpec, n_npus: usize, util: f64, duration: f64) -> f64 {
+    npu_power(npu, util) * n_npus as f64 * duration
+}
+
+/// Accumulates energy over a simulation run for one client.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyMeter {
+    pub busy_joules: f64,
+    pub busy_seconds: f64,
+    /// wall-clock span covered (for idle accounting)
+    pub span_seconds: f64,
+}
+
+impl EnergyMeter {
+    pub fn record_step(&mut self, npu: &NpuSpec, n_npus: usize, util: f64, duration: f64) {
+        self.busy_joules += step_energy(npu, n_npus, util, duration);
+        self.busy_seconds += duration;
+    }
+
+    /// Total energy including idle draw for the uncovered span.
+    pub fn total_joules(&self, npu: &NpuSpec, n_npus: usize) -> f64 {
+        let idle = (self.span_seconds - self.busy_seconds).max(0.0);
+        self.busy_joules + npu.idle_w * n_npus as f64 * idle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::npu::H100;
+
+    #[test]
+    fn power_interpolates_idle_to_tdp() {
+        assert_eq!(npu_power(&H100, 0.0), H100.idle_w);
+        assert_eq!(npu_power(&H100, 1.0), H100.tdp_w);
+        let half = npu_power(&H100, 0.5);
+        assert!(half > H100.idle_w && half < H100.tdp_w);
+        // clamped
+        assert_eq!(npu_power(&H100, 7.0), H100.tdp_w);
+    }
+
+    #[test]
+    fn decode_client_cheaper_than_prefill_client() {
+        // memory-bound decode util ~0.05 vs prefill util ~0.55
+        let e_dec = step_energy(&H100, 2, 0.05, 1.0);
+        let e_pre = step_energy(&H100, 2, 0.55, 1.0);
+        assert!(e_dec < 0.5 * e_pre, "dec={e_dec} pre={e_pre}");
+    }
+
+    #[test]
+    fn meter_adds_idle_energy() {
+        let mut m = EnergyMeter::default();
+        m.record_step(&H100, 1, 1.0, 1.0);
+        m.span_seconds = 3.0;
+        let total = m.total_joules(&H100, 1);
+        assert!((total - (H100.tdp_w + 2.0 * H100.idle_w)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,22 @@
+//! HERMES — Heterogeneous Multi-stage LLM inference Execution Simulator.
+//!
+//! Rust + JAX + Pallas reproduction of "Understanding and Optimizing
+//! Multi-Stage AI Inference Pipelines" (Bambhaniya et al., 2025).
+//!
+//! See DESIGN.md for the module map and the per-experiment index.
+
+pub mod util;
+pub mod hardware;
+pub mod perfmodel;
+pub mod runtime;
+pub mod sim;
+pub mod workload;
+pub mod memory;
+pub mod network;
+pub mod rag;
+pub mod scheduler;
+pub mod client;
+pub mod coordinator;
+pub mod config;
+pub mod metrics;
+pub mod experiments;

@@ -1,0 +1,205 @@
+//! HERMES command-line interface.
+//!
+//!   hermes simulate --config cfg.json [--out metrics.json]
+//!                   [--trace trace.json] [--quiet]
+//!   hermes sweep    --config cfg.json --rates 1,2,4,8 [--out sweep.json]
+//!   hermes experiment <fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3>
+//!                   [--fast]
+//!   hermes artifacts                      # list AOT predictor variants
+//!
+//! Every run is deterministic given the config's seed.
+
+use anyhow::{bail, Context, Result};
+
+use hermes::config::SimConfig;
+use hermes::experiments;
+use hermes::metrics::{trace_export, RunMetrics};
+use hermes::runtime::ArtifactBundle;
+use hermes::sim::driver;
+use hermes::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    match args.subcommand.as_deref() {
+        Some("simulate") => simulate(&args),
+        Some("sweep") => sweep(&args),
+        Some("experiment") => experiment(&args),
+        Some("artifacts") => artifacts(&args),
+        Some(other) => {
+            bail!("unknown subcommand '{other}' (try: simulate, sweep, experiment, artifacts)")
+        }
+        None => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!("HERMES — heterogeneous multi-stage LLM inference execution simulator");
+    println!();
+    println!("usage:");
+    println!("  hermes simulate --config cfg.json [--out m.json] [--trace t.json]");
+    println!("  hermes sweep --config cfg.json --rates 1,2,4 [--out sweep.json]");
+    println!("  hermes experiment <fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|ablations|all> [--fast]");
+    println!("  hermes artifacts");
+}
+
+fn simulate(args: &Args) -> Result<()> {
+    let cfg_path = args.opt_str("config").context("--config required")?;
+    let out = args.opt_str("out");
+    let trace_out = args.opt_str("trace");
+    let quiet = args.bool_or("quiet", false);
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    let cfg = SimConfig::from_file(&cfg_path)?;
+    let mut coord = cfg.serving.build()?;
+    coord.inject(cfg.workload.generate(0));
+    let t0 = std::time::Instant::now();
+    coord.run();
+    let wall = t0.elapsed().as_secs_f64();
+    let m = RunMetrics::collect(&coord, &cfg.slo);
+
+    if !quiet {
+        println!(
+            "simulated {:.2}s of serving in {:.3}s wall ({:.0} events/s)",
+            m.makespan,
+            wall,
+            m.events as f64 / wall.max(1e-9)
+        );
+        print_metrics(&m);
+        println!(
+            "SLO(all-six): {}",
+            if m.slo_satisfied(&cfg.slo) {
+                "SATISFIED"
+            } else {
+                "violated"
+            }
+        );
+    }
+    if let Some(path) = out {
+        std::fs::write(&path, m.to_json().to_pretty())?;
+        if !quiet {
+            println!("metrics -> {path}");
+        }
+    }
+    if let Some(path) = trace_out {
+        std::fs::write(&path, trace_export::chrome_trace(&coord).to_string())?;
+        if !quiet {
+            println!("chrome trace -> {path} (open in chrome://tracing)");
+        }
+    }
+    Ok(())
+}
+
+fn print_metrics(m: &RunMetrics) {
+    println!(
+        "  serviced {}/{} (failed {})  makespan {:.2}s",
+        m.n_serviced, m.n_requests, m.n_failed, m.makespan
+    );
+    println!(
+        "  TTFT  mean {:.1}ms  p50 {:.1}ms  p90 {:.1}ms  p99 {:.1}ms",
+        m.ttft.mean * 1e3,
+        m.ttft.p50 * 1e3,
+        m.ttft.p90 * 1e3,
+        m.ttft.p99 * 1e3
+    );
+    println!(
+        "  TPOT  mean {:.2}ms  p50 {:.2}ms  p90 {:.2}ms  p99 {:.2}ms",
+        m.tpot.mean * 1e3,
+        m.tpot.p50 * 1e3,
+        m.tpot.p90 * 1e3,
+        m.tpot.p99 * 1e3
+    );
+    println!(
+        "  E2E   mean {:.2}s  p50 {:.2}s  p99 {:.2}s",
+        m.e2e.mean, m.e2e.p50, m.e2e.p99
+    );
+    println!(
+        "  throughput {:.0} tok/s   goodput {:.0}%   energy {:.1} kJ   {:.2} tok/J",
+        m.throughput_tok_s,
+        m.goodput_frac * 100.0,
+        m.energy_joules / 1e3,
+        m.tok_per_joule
+    );
+}
+
+fn sweep(args: &Args) -> Result<()> {
+    let cfg_path = args.opt_str("config").context("--config required")?;
+    let rates: Vec<f64> = args
+        .str_or("rates", "0.5,1,2,4")
+        .split(',')
+        .map(|s| s.trim().parse::<f64>().context("bad rate"))
+        .collect::<Result<_>>()?;
+    let out = args.opt_str("out");
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    let cfg = SimConfig::from_file(&cfg_path)?;
+    let points = driver::sweep_rates(&cfg.serving, &cfg.workload, &cfg.slo, &rates)?;
+    println!("rate_per_client  throughput_tok_s  ttft_p99_ms  tpot_p99_ms  slo");
+    let mut doc_rows = Vec::new();
+    for p in &points {
+        println!(
+            "{:>15.2}  {:>16.0}  {:>11.1}  {:>11.2}  {}",
+            p.rate,
+            p.metrics.throughput_tok_s,
+            p.metrics.ttft.p99 * 1e3,
+            p.metrics.tpot.p99 * 1e3,
+            if p.slo_ok { "ok" } else { "VIOLATED" }
+        );
+        let mut row = p.metrics.to_json();
+        row.set("rate", p.rate).set("slo_ok", p.slo_ok);
+        doc_rows.push(row);
+    }
+    if let Some(best) = driver::best_under_slo(&points) {
+        println!(
+            "best under SLO: rate {:.2} -> {:.0} tok/s",
+            best.rate, best.metrics.throughput_tok_s
+        );
+    } else {
+        println!("no swept rate satisfies all six SLOs");
+    }
+    if let Some(path) = out {
+        std::fs::write(&path, hermes::util::json::Json::Arr(doc_rows).to_pretty())?;
+        println!("sweep -> {path}");
+    }
+    Ok(())
+}
+
+fn experiment(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .cloned()
+        .context("experiment name required (fig5..fig15, table3)")?;
+    let fast = args.bool_or("fast", false);
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    experiments::run_by_name(&which, fast)
+}
+
+fn artifacts(args: &Args) -> Result<()> {
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    let dir = ArtifactBundle::default_dir();
+    let bundle = ArtifactBundle::open(&dir)?;
+    println!("artifact bundle at {} :", dir.display());
+    for key in bundle.variant_keys() {
+        let c = &bundle.coefficients;
+        let mse_dec = c
+            .at(&[&key, "mse_dec"])
+            .and_then(|j| j.as_f64())
+            .unwrap_or(0.0);
+        let mse_pf = c
+            .at(&[&key, "mse_pf"])
+            .and_then(|j| j.as_f64())
+            .unwrap_or(0.0);
+        println!("  {key:<28} mse_dec={mse_dec:.2e}  mse_pf={mse_pf:.2e}");
+    }
+    Ok(())
+}

@@ -1,0 +1,9 @@
+//! Memory modeling: the multi-level KV-cache hierarchy with Eq. 1
+//! expected-latency semantics, per-client KV occupancy management, and
+//! the Fig 14 remote-storage design points.
+
+pub mod hierarchy;
+pub mod storage;
+
+pub use hierarchy::{CacheLevel, Hierarchy, KvManager, Retrieval};
+pub use storage::{KvScenario, KvStore, StorageConfig};

@@ -1,0 +1,196 @@
+//! Output metrics collection (paper §III-F.2): per-request, scheduler,
+//! client and global metrics; latency breakdowns (mean/T50/T90/T99);
+//! goodput vs the Table II SLO ladder; energy and throughput/energy.
+
+pub mod trace_export;
+
+use crate::config::slo::SloLadder;
+use crate::coordinator::Coordinator;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Aggregated results of one simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub n_requests: usize,
+    pub n_serviced: usize,
+    pub n_failed: usize,
+    /// makespan: last completion, seconds
+    pub makespan: f64,
+    pub ttft: Summary,
+    pub tpot: Summary,
+    pub e2e: Summary,
+    /// generated tokens per second over the makespan (incl. branches)
+    pub throughput_tok_s: f64,
+    /// fraction of serviced requests meeting the per-request SLO
+    pub goodput_frac: f64,
+    /// requests/s that completed within SLO
+    pub goodput_req_s: f64,
+    pub energy_joules: f64,
+    /// tokens per joule — the paper's throughput/energy axis
+    pub tok_per_joule: f64,
+    pub events: u64,
+    pub transfers: u64,
+    pub transfer_bytes: f64,
+    /// total exposed inter-client transfer time
+    pub transfer_seconds: f64,
+    pub recomputes: u64,
+    /// raw per-request samples for CDFs (Fig 15)
+    pub e2e_samples: Vec<f64>,
+    pub ttft_samples: Vec<f64>,
+    pub tpot_samples: Vec<f64>,
+}
+
+impl RunMetrics {
+    /// Collect from a drained coordinator.
+    pub fn collect(coord: &Coordinator, slo: &SloLadder) -> RunMetrics {
+        let mut ttft = Vec::new();
+        let mut tpot = Vec::new();
+        let mut e2e = Vec::new();
+        let mut tokens = 0f64;
+        let mut slo_ok = 0usize;
+        for id in &coord.serviced {
+            let r = &coord.pool[id];
+            let (t1, tp, te) = (
+                r.ttft().unwrap_or(f64::INFINITY),
+                r.tpot().unwrap_or(0.0),
+                r.e2e_latency().unwrap_or(f64::INFINITY),
+            );
+            ttft.push(t1);
+            tpot.push(tp);
+            e2e.push(te);
+            tokens += (r.decoded * r.branches) as f64;
+            if slo.request_ok(t1, tp) {
+                slo_ok += 1;
+            }
+        }
+        let makespan = coord.clock.as_secs();
+        let energy: f64 = coord.clients.iter().map(|c| c.stats().energy_joules).sum();
+        let n = coord.serviced.len();
+        RunMetrics {
+            n_requests: coord.pool.len(),
+            n_serviced: n,
+            n_failed: coord.failed.len(),
+            makespan,
+            ttft: Summary::of(&ttft),
+            tpot: Summary::of(&tpot),
+            e2e: Summary::of(&e2e),
+            throughput_tok_s: if makespan > 0.0 { tokens / makespan } else { 0.0 },
+            goodput_frac: if n > 0 { slo_ok as f64 / n as f64 } else { 0.0 },
+            goodput_req_s: if makespan > 0.0 {
+                slo_ok as f64 / makespan
+            } else {
+                0.0
+            },
+            energy_joules: energy,
+            tok_per_joule: if energy > 0.0 { tokens / energy } else { 0.0 },
+            events: coord.stats.events,
+            transfers: coord.stats.transfers,
+            transfer_bytes: coord.stats.transfer_bytes,
+            transfer_seconds: coord.stats.transfer_seconds,
+            recomputes: coord.stats.recomputes,
+            e2e_samples: e2e,
+            ttft_samples: ttft,
+            tpot_samples: tpot,
+        }
+    }
+
+    /// Does this run meet all six Table II SLOs?
+    pub fn slo_satisfied(&self, slo: &SloLadder) -> bool {
+        slo.satisfied(&self.ttft, &self.tpot)
+    }
+
+    /// JSON document for `hermes simulate --out`.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        let sum = |s: &Summary| {
+            let mut o = Json::obj();
+            o.set("mean", s.mean)
+                .set("p50", s.p50)
+                .set("p90", s.p90)
+                .set("p99", s.p99)
+                .set("max", s.max);
+            o
+        };
+        j.set("n_requests", self.n_requests)
+            .set("n_serviced", self.n_serviced)
+            .set("n_failed", self.n_failed)
+            .set("makespan_s", self.makespan)
+            .set("ttft", sum(&self.ttft))
+            .set("tpot", sum(&self.tpot))
+            .set("e2e", sum(&self.e2e))
+            .set("throughput_tok_s", self.throughput_tok_s)
+            .set("goodput_frac", self.goodput_frac)
+            .set("goodput_req_s", self.goodput_req_s)
+            .set("energy_joules", self.energy_joules)
+            .set("tok_per_joule", self.tok_per_joule)
+            .set("events", self.events)
+            .set("transfers", self.transfers)
+            .set("transfer_bytes", self.transfer_bytes)
+            .set("recomputes", self.recomputes);
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::{Client, LlmClient};
+    use crate::coordinator::{RoutePolicy, Router};
+    use crate::hardware::models::LLAMA3_70B;
+    use crate::hardware::npu::H100;
+    use crate::hardware::roofline::LlmCluster;
+    use crate::network::Network;
+    use crate::perfmodel::RooflinePerfModel;
+    use crate::scheduler::{BatchingKind, LlmSched, Packing, SchedConfig};
+    use crate::workload::trace::{TraceKind, WorkloadSpec};
+
+    fn run_small() -> Coordinator {
+        let cluster = LlmCluster::new(LLAMA3_70B, H100, 8);
+        let clients: Vec<Box<dyn Client>> = vec![Box::new(LlmClient::new(
+            0,
+            cluster.clone(),
+            LlmSched::new(BatchingKind::Continuous, Packing::Fcfs, SchedConfig::default()),
+            Box::new(RooflinePerfModel::new(cluster)),
+        ))];
+        let mut coord = Coordinator::new(
+            clients,
+            Router::new(RoutePolicy::RoundRobin),
+            Network::single_platform(1),
+        );
+        coord.inject(
+            WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 15, 2.0)
+                .with_seed(3)
+                .generate(0),
+        );
+        coord.run();
+        coord
+    }
+
+    #[test]
+    fn collect_produces_consistent_metrics() {
+        let coord = run_small();
+        let m = RunMetrics::collect(&coord, &SloLadder::standard());
+        assert_eq!(m.n_serviced, 15);
+        assert_eq!(m.n_failed, 0);
+        assert!(m.makespan > 0.0);
+        assert!(m.throughput_tok_s > 0.0);
+        assert!(m.ttft.p50 > 0.0);
+        assert!(m.tpot.p50 > 0.0);
+        assert!(m.e2e.p99 >= m.e2e.p50);
+        assert!(m.energy_joules > 0.0);
+        assert!(m.tok_per_joule > 0.0);
+        assert!((0.0..=1.0).contains(&m.goodput_frac));
+        assert_eq!(m.e2e_samples.len(), 15);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let coord = run_small();
+        let m = RunMetrics::collect(&coord, &SloLadder::standard());
+        let j = m.to_json();
+        let parsed = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(parsed.usize_or("n_serviced", 0), 15);
+        assert!(parsed.at(&["ttft", "p99"]).unwrap().as_f64().unwrap() > 0.0);
+    }
+}

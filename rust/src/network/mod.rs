@@ -1,0 +1,14 @@
+//! Global communication modeling (paper §III-B.2).
+//!
+//! The paper delegates multi-level interconnect simulation to astra-sim;
+//! this module is the in-repo substitute: a hierarchical α+β model
+//! (NVLink intra-platform, InfiniBand/PCIe intra-rack, Ethernet DCN
+//! inter-rack) with per-link busy-until contention, plus the "dummy
+//! single link" model splitwise-sim uses — both are needed to reproduce
+//! the Fig 5 validation gap.
+
+pub mod link;
+pub mod topology;
+
+pub use link::{Link, LinkSpec};
+pub use topology::{Granularity, Location, Network, NetworkKind};

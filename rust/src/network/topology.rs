@@ -1,0 +1,245 @@
+//! Hierarchical cluster topology and inter-client transfer estimation.
+//!
+//! Clients live at (rack, platform) coordinates. A transfer's path picks
+//! the tightest shared level: same platform → NVLink fabric; same rack →
+//! rack switch (shared, contended per rack); cross-rack → DCN spine
+//! (shared, contended globally). `NetworkKind::DummyLink` reproduces
+//! splitwise-sim's single lower-bound-bandwidth link for the Fig 5
+//! comparison.
+
+use std::collections::HashMap;
+
+use super::link::{Link, LinkSpec};
+use crate::sim::SimTime;
+
+/// Physical placement of a client.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Location {
+    pub rack: usize,
+    pub platform: usize,
+}
+
+/// KV transfer granularity (paper §III-B.2 / Splitwise §4).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Granularity {
+    /// whole KV cache moves after the stage completes
+    Full,
+    /// per-layer streaming overlapped with compute: only the final
+    /// layer's chunk is exposed on the critical path
+    Layerwise { layers: usize },
+}
+
+/// Which communication model to use.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NetworkKind {
+    /// hierarchical NVLink / rack / DCN model (astra-sim substitute)
+    Hierarchical,
+    /// splitwise-sim-style single link with one bandwidth number
+    DummyLink(LinkSpec),
+}
+
+/// Default level specs (HGX-class numbers; Calculon-derived as in §V-A).
+pub const NVLINK: LinkSpec = LinkSpec { bw: 450e9, lat: 2e-6 };
+pub const RACK_SWITCH: LinkSpec = LinkSpec { bw: 50e9, lat: 10e-6 };
+/// paper §V-B: "inter-rack connectivity 128 GB/s Ethernet links" with
+/// ~20 ms link latency for DCN fallback paths
+pub const DCN: LinkSpec = LinkSpec { bw: 128e9, lat: 20e-3 };
+
+pub struct Network {
+    pub kind: NetworkKind,
+    pub locations: Vec<Location>,
+    pub nvlink: LinkSpec,
+    rack_links: HashMap<usize, Link>,
+    dcn_link: Link,
+    dummy_link: Link,
+    /// bytes moved per level (metrics)
+    pub bytes_intra_platform: f64,
+}
+
+impl Network {
+    pub fn new(kind: NetworkKind, locations: Vec<Location>) -> Network {
+        let racks: Vec<usize> = {
+            let mut r: Vec<usize> = locations.iter().map(|l| l.rack).collect();
+            r.sort();
+            r.dedup();
+            r
+        };
+        Network {
+            kind,
+            locations,
+            nvlink: NVLINK,
+            rack_links: racks
+                .into_iter()
+                .map(|r| (r, Link::new(RACK_SWITCH)))
+                .collect(),
+            dcn_link: Link::new(DCN),
+            dummy_link: Link::new(match kind {
+                NetworkKind::DummyLink(spec) => spec,
+                _ => LinkSpec { bw: 50e9, lat: 1e-5 },
+            }),
+            bytes_intra_platform: 0.0,
+        }
+    }
+
+    /// All clients in one rack/platform — convenience constructor.
+    pub fn single_platform(n_clients: usize) -> Network {
+        Network::new(
+            NetworkKind::Hierarchical,
+            (0..n_clients)
+                .map(|_| Location { rack: 0, platform: 0 })
+                .collect(),
+            )
+    }
+
+    /// Spread `n_clients` over racks of `per_rack`, platforms of
+    /// `per_platform` clients.
+    pub fn hierarchy(n_clients: usize, per_platform: usize, per_rack: usize) -> Network {
+        let locs = (0..n_clients)
+            .map(|i| Location {
+                rack: i / per_rack,
+                platform: i / per_platform,
+            })
+            .collect();
+        Network::new(NetworkKind::Hierarchical, locs)
+    }
+
+    fn effective_bytes(bytes: f64, gran: Granularity) -> f64 {
+        match gran {
+            Granularity::Full => bytes,
+            // layerwise streaming exposes only the last layer's chunk
+            Granularity::Layerwise { layers } => bytes / layers.max(1) as f64,
+        }
+    }
+
+    /// Simulate a transfer; returns the time the data is available at
+    /// the destination.
+    pub fn transfer(
+        &mut self,
+        now: SimTime,
+        src: usize,
+        dst: usize,
+        bytes: f64,
+        gran: Granularity,
+    ) -> SimTime {
+        if src == dst || bytes <= 0.0 {
+            return now;
+        }
+        let eff = Self::effective_bytes(bytes, gran);
+        if let NetworkKind::DummyLink(_) = self.kind {
+            return self.dummy_link.transfer(now, eff);
+        }
+        let (a, b) = (self.locations[src], self.locations[dst]);
+        if a.platform == b.platform && a.rack == b.rack {
+            // NVLink fabric is point-to-point per platform — modeled
+            // uncontended (full bisection within the box).
+            self.bytes_intra_platform += eff;
+            now + SimTime::from_secs(self.nvlink.duration(eff))
+        } else if a.rack == b.rack {
+            self.rack_links
+                .get_mut(&a.rack)
+                .expect("rack link")
+                .transfer(now, eff)
+        } else {
+            // cross-rack: source rack uplink -> DCN spine; model the
+            // spine as the bottleneck (racks' uplinks folded into it)
+            self.dcn_link.transfer(now, eff)
+        }
+    }
+
+    /// Pure estimate without mutating contention state (router lookahead).
+    pub fn estimate(&self, src: usize, dst: usize, bytes: f64, gran: Granularity) -> f64 {
+        if src == dst || bytes <= 0.0 {
+            return 0.0;
+        }
+        let eff = Self::effective_bytes(bytes, gran);
+        if let NetworkKind::DummyLink(spec) = self.kind {
+            return spec.duration(eff);
+        }
+        let (a, b) = (self.locations[src], self.locations[dst]);
+        if a.platform == b.platform && a.rack == b.rack {
+            self.nvlink.duration(eff)
+        } else if a.rack == b.rack {
+            RACK_SWITCH.duration(eff)
+        } else {
+            DCN.duration(eff)
+        }
+    }
+
+    pub fn bytes_on_dcn(&self) -> f64 {
+        self.dcn_link.bytes_total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_rack_net() -> Network {
+        // 8 clients: platforms of 2, racks of 4
+        Network::hierarchy(8, 2, 4)
+    }
+
+    #[test]
+    fn level_selection() {
+        let mut n = two_rack_net();
+        let gb = 1e9;
+        let t_plat = n.transfer(SimTime::ZERO, 0, 1, gb, Granularity::Full);
+        let t_rack = n.transfer(SimTime::ZERO, 0, 2, gb, Granularity::Full);
+        let t_dcn = n.transfer(SimTime::ZERO, 0, 7, gb, Granularity::Full);
+        assert!(t_plat < t_rack, "nvlink {t_plat} < rack {t_rack}");
+        assert!(t_rack < t_dcn, "rack {t_rack} < dcn {t_dcn}");
+        // DCN latency (~20ms) dominates its alpha term
+        assert!(t_dcn.as_secs() > 0.02);
+    }
+
+    #[test]
+    fn layerwise_hides_most_of_the_transfer() {
+        let n = two_rack_net();
+        let full = n.estimate(0, 2, 80e9, Granularity::Full);
+        let lw = n.estimate(0, 2, 80e9, Granularity::Layerwise { layers: 80 });
+        assert!(lw < full / 20.0, "full={full} layerwise={lw}");
+    }
+
+    #[test]
+    fn rack_links_contend_independently() {
+        let mut n = two_rack_net();
+        let gb = 10e9;
+        // two transfers on rack 0's switch queue up...
+        let a = n.transfer(SimTime::ZERO, 0, 2, gb, Granularity::Full);
+        let b = n.transfer(SimTime::ZERO, 1, 3, gb, Granularity::Full);
+        assert!(b > a);
+        // ...but rack 1's switch is idle
+        let c = n.transfer(SimTime::ZERO, 4, 6, gb, Granularity::Full);
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn dummy_link_serializes_everything() {
+        let spec = LinkSpec { bw: 1e9, lat: 0.0 };
+        let mut n = Network::new(
+            NetworkKind::DummyLink(spec),
+            (0..4).map(|i| Location { rack: i, platform: i }).collect(),
+        );
+        let a = n.transfer(SimTime::ZERO, 0, 1, 1e9, Granularity::Full);
+        let b = n.transfer(SimTime::ZERO, 2, 3, 1e9, Granularity::Full);
+        assert!((a.as_secs() - 1.0).abs() < 1e-9);
+        assert!((b.as_secs() - 2.0).abs() < 1e-9, "dummy link must serialize");
+    }
+
+    #[test]
+    fn self_transfer_free() {
+        let mut n = two_rack_net();
+        assert_eq!(
+            n.transfer(SimTime::from_secs(3.0), 2, 2, 1e12, Granularity::Full),
+            SimTime::from_secs(3.0)
+        );
+    }
+
+    #[test]
+    fn estimate_matches_uncontended_transfer() {
+        let mut n = two_rack_net();
+        let est = n.estimate(0, 2, 5e9, Granularity::Full);
+        let fin = n.transfer(SimTime::ZERO, 0, 2, 5e9, Granularity::Full);
+        assert!((est - fin.as_secs()).abs() < 1e-9);
+    }
+}

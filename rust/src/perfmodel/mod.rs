@@ -1,0 +1,215 @@
+//! ML-assisted LLM cluster runtime prediction (paper §III-E.1).
+//!
+//! Every engine step the scheduler prices candidate step plans through a
+//! `PerfModel`. Three interchangeable backends:
+//!
+//! * [`poly::PolyPerfModel`] — native evaluation of the regression
+//!   coefficients fitted by `python/compile/fit.py`
+//!   (`artifacts/coefficients.json`).
+//! * [`pjrt::PjrtPerfModel`] — executes the AOT-compiled Pallas/JAX
+//!   predictor (`artifacts/*.hlo.txt`) via the PJRT CPU client: the
+//!   three-layer hot path. Numerically identical to the native model
+//!   modulo f32 rounding (asserted by `rust/tests/pjrt_parity.rs`).
+//! * [`RooflinePerfModel`] — the GenZ-like analytical fallback for
+//!   configurations without a fitted artifact (the paper's
+//!   LLMCompass/GenZ role). 20–50× slower than the regression in the
+//!   paper's telling; our microbench reproduces the gap vs memoized poly.
+//!
+//! [`memo::Memoized`] wraps any backend with a quantized-feature cache
+//! (perf optimization; see EXPERIMENTS.md §Perf).
+
+pub mod memo;
+pub mod pjrt;
+pub mod poly;
+
+use crate::hardware::roofline::{LlmCluster, PrefillItem};
+
+/// Raw step-plan features — the L1 kernel contract (see kernels/ref.py).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct StepFeatures {
+    /// total new prefill tokens in the step
+    pub pf_new: f64,
+    /// total cached past tokens of the prefill items
+    pub pf_past: f64,
+    /// number of prefill items
+    pub pf_items: f64,
+    /// decode batch size (sequences)
+    pub dec_batch: f64,
+    /// total cached KV tokens across decode sequences
+    pub dec_kv: f64,
+}
+
+impl StepFeatures {
+    pub fn prefill(new: f64, past: f64, items: usize) -> StepFeatures {
+        StepFeatures {
+            pf_new: new,
+            pf_past: past,
+            pf_items: items as f64,
+            ..Default::default()
+        }
+    }
+
+    pub fn decode(batch: usize, kv: f64) -> StepFeatures {
+        StepFeatures {
+            dec_batch: batch as f64,
+            dec_kv: kv,
+            ..Default::default()
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pf_new <= 0.0 && self.dec_batch <= 0.0
+    }
+
+    pub fn to_raw_f32(&self) -> [f32; 5] {
+        [
+            self.pf_new as f32,
+            self.pf_past as f32,
+            self.pf_items as f32,
+            self.dec_batch as f32,
+            self.dec_kv as f32,
+        ]
+    }
+}
+
+/// Predicted step latencies (seconds).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct StepPrediction {
+    pub t_prefill: f64,
+    pub t_decode: f64,
+    /// combined mixed-step time — what the scheduler uses
+    pub t_step: f64,
+}
+
+/// A step-latency predictor for one (model, npu, tp) engine variant.
+///
+/// Deliberately NOT `Send`: the PJRT client wraps `Rc` internals. Parallel
+/// sweeps spawn one simulation per thread and construct models inside the
+/// worker thread.
+pub trait PerfModel {
+    fn name(&self) -> &str;
+
+    /// Price a batch of candidate step plans.
+    fn predict_batch(&mut self, feats: &[StepFeatures]) -> Vec<StepPrediction>;
+
+    fn predict(&mut self, f: StepFeatures) -> StepPrediction {
+        self.predict_batch(std::slice::from_ref(&f))[0]
+    }
+}
+
+/// Analytical roofline backend (fallback + data-generation ground truth).
+pub struct RooflinePerfModel {
+    pub cluster: LlmCluster,
+    name: String,
+}
+
+impl RooflinePerfModel {
+    pub fn new(cluster: LlmCluster) -> RooflinePerfModel {
+        let name = format!(
+            "roofline:{}@{}/tp{}",
+            cluster.model.name, cluster.npu.name, cluster.tp
+        );
+        RooflinePerfModel { cluster, name }
+    }
+
+    fn predict_one(&self, f: &StepFeatures) -> StepPrediction {
+        if f.is_empty() {
+            return StepPrediction::default();
+        }
+        // Aggregate prefill features → evenly-spread items, matching the
+        // python generator (hwspec.step_time).
+        let items: Vec<PrefillItem> = if f.pf_new > 0.0 {
+            let n = (f.pf_items.max(1.0)) as usize;
+            vec![
+                PrefillItem {
+                    past: f.pf_past / n as f64,
+                    new: f.pf_new / n as f64,
+                };
+                n
+            ]
+        } else {
+            Vec::new()
+        };
+        let t_prefill = if items.is_empty() {
+            0.0
+        } else {
+            self.cluster.prefill_time(&items)
+        };
+        let t_decode = if f.dec_batch > 0.0 {
+            self.cluster.decode_time(f.dec_batch as usize, f.dec_kv)
+        } else {
+            0.0
+        };
+        let t_step = self
+            .cluster
+            .mixed_time(&items, f.dec_batch as usize, f.dec_kv);
+        StepPrediction {
+            t_prefill,
+            t_decode,
+            t_step,
+        }
+    }
+}
+
+impl PerfModel for RooflinePerfModel {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn predict_batch(&mut self, feats: &[StepFeatures]) -> Vec<StepPrediction> {
+        feats.iter().map(|f| self.predict_one(f)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::models::LLAMA3_70B;
+    use crate::hardware::npu::H100;
+
+    fn roofline() -> RooflinePerfModel {
+        RooflinePerfModel::new(LlmCluster::new(LLAMA3_70B, H100, 8))
+    }
+
+    #[test]
+    fn empty_features_are_free() {
+        let mut m = roofline();
+        let p = m.predict(StepFeatures::default());
+        assert_eq!(p, StepPrediction::default());
+    }
+
+    #[test]
+    fn decode_only_fills_decode_head() {
+        let mut m = roofline();
+        let p = m.predict(StepFeatures::decode(16, 16_000.0));
+        assert_eq!(p.t_prefill, 0.0);
+        assert!(p.t_decode > 0.0);
+        assert!((p.t_step - p.t_decode).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixed_step_between_halves_and_sum() {
+        let mut m = roofline();
+        let p = m.predict(StepFeatures {
+            pf_new: 512.0,
+            pf_past: 0.0,
+            pf_items: 1.0,
+            dec_batch: 16.0,
+            dec_kv: 16_000.0,
+        });
+        assert!(p.t_step >= p.t_prefill.max(p.t_decode));
+        assert!(p.t_step < p.t_prefill + p.t_decode);
+    }
+
+    #[test]
+    fn batch_predict_matches_singles() {
+        let mut m = roofline();
+        let feats = [
+            StepFeatures::decode(4, 4096.0),
+            StepFeatures::prefill(1024.0, 0.0, 2),
+        ];
+        let batch = m.predict_batch(&feats);
+        assert_eq!(batch[0], m.predict(feats[0]));
+        assert_eq!(batch[1], m.predict(feats[1]));
+    }
+}

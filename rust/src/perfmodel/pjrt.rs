@@ -1,0 +1,82 @@
+//! PJRT-backed predictor: executes the AOT-compiled Pallas/JAX artifact on
+//! the simulator hot path — the full three-layer composition. Candidate
+//! step plans are packed into the executable's fixed `rows × 5` input
+//! (padding rows are all-zero → both heads predict exactly 0).
+
+use anyhow::Result;
+use std::path::Path;
+use std::rc::Rc;
+
+use super::{PerfModel, StepFeatures, StepPrediction};
+use crate::runtime::{ArtifactBundle, PredictorExe, Runtime};
+
+pub struct PjrtPerfModel {
+    /// shared across all clients of a build — PJRT client creation and
+    /// HLO compilation happen once per variant, not once per client
+    /// (EXPERIMENTS.md §Perf)
+    exe: Rc<PredictorExe>,
+    name: String,
+    /// reused input buffer (avoid per-call allocation on the hot path)
+    buf: Vec<f32>,
+    /// PJRT executions performed (perf accounting)
+    pub calls: u64,
+}
+
+impl PjrtPerfModel {
+    pub fn new(exe: Rc<PredictorExe>) -> PjrtPerfModel {
+        let name = format!("pjrt:{}", exe.variant);
+        let buf = vec![0.0; exe.rows * exe.n_raw];
+        PjrtPerfModel {
+            exe,
+            name,
+            buf,
+            calls: 0,
+        }
+    }
+
+    /// Convenience: open the bundle, spin up the CPU client and compile
+    /// the variant in one call.
+    pub fn load(artifacts_dir: &Path, key: &str) -> Result<PjrtPerfModel> {
+        let rt = Runtime::cpu()?;
+        let bundle = ArtifactBundle::open(artifacts_dir)?;
+        Ok(PjrtPerfModel::new(Rc::new(bundle.load_predictor(&rt, key)?)))
+    }
+
+    pub fn rows(&self) -> usize {
+        self.exe.rows
+    }
+}
+
+impl PerfModel for PjrtPerfModel {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn predict_batch(&mut self, feats: &[StepFeatures]) -> Vec<StepPrediction> {
+        let rows = self.exe.rows;
+        let n_raw = self.exe.n_raw;
+        let mut out = Vec::with_capacity(feats.len());
+        for chunk in feats.chunks(rows) {
+            self.buf.iter_mut().for_each(|v| *v = 0.0);
+            for (i, f) in chunk.iter().enumerate() {
+                self.buf[i * n_raw..(i + 1) * n_raw].copy_from_slice(&f.to_raw_f32());
+            }
+            let res = self
+                .exe
+                .run(&self.buf)
+                .expect("PJRT predictor execution failed");
+            self.calls += 1;
+            for i in 0..chunk.len() {
+                out.push(StepPrediction {
+                    t_prefill: res[i * 3] as f64,
+                    t_decode: res[i * 3 + 1] as f64,
+                    t_step: res[i * 3 + 2] as f64,
+                });
+            }
+        }
+        out
+    }
+}
+
+// End-to-end tests (require `make artifacts`) live in
+// rust/tests/pjrt_parity.rs.

@@ -1,0 +1,205 @@
+//! Native evaluation of the fitted polynomial predictor — bit-for-bit the
+//! same math as python/compile/kernels/ref.py, reading the coefficients
+//! that `make artifacts` wrote to `artifacts/coefficients.json`.
+
+use anyhow::{Context, Result};
+
+use super::{PerfModel, StepFeatures, StepPrediction};
+use crate::util::json::Json;
+
+pub const N_FEATURES: usize = 6;
+
+/// Fitted predictor for one (model, npu, tp) variant.
+#[derive(Debug, Clone)]
+pub struct PolyPerfModel {
+    pub w_pf: [f64; N_FEATURES],
+    pub w_dec: [f64; N_FEATURES],
+    /// mixed-step cross terms (see python/compile/fit.py FitResult)
+    pub c_dec_b: f64,
+    pub c_dec_kv: f64,
+    pub m_pf_tok: f64,
+    pub scales: [f64; 5],
+    name: String,
+}
+
+impl PolyPerfModel {
+    pub fn new(
+        w_pf: [f64; N_FEATURES],
+        w_dec: [f64; N_FEATURES],
+        mix: (f64, f64, f64),
+        scales: [f64; 5],
+        name: &str,
+    ) -> PolyPerfModel {
+        PolyPerfModel {
+            w_pf,
+            w_dec,
+            c_dec_b: mix.0,
+            c_dec_kv: mix.1,
+            m_pf_tok: mix.2,
+            scales,
+            name: format!("poly:{name}"),
+        }
+    }
+
+    /// Load one variant from the coefficients.json document.
+    pub fn from_coefficients(coeffs: &Json, key: &str) -> Result<PolyPerfModel> {
+        let c = coeffs
+            .get(key)
+            .with_context(|| format!("variant '{key}' not in coefficients.json"))?;
+        let vecf = |field: &str| -> Result<Vec<f64>> {
+            Ok(c.get(field)
+                .and_then(Json::as_arr)
+                .with_context(|| format!("missing '{field}'"))?
+                .iter()
+                .filter_map(Json::as_f64)
+                .collect())
+        };
+        let to6 = |v: Vec<f64>| -> Result<[f64; N_FEATURES]> {
+            v.try_into()
+                .map_err(|v: Vec<f64>| anyhow::anyhow!("expected 6 coefficients, got {}", v.len()))
+        };
+        let scales_v = vecf("scales")?;
+        let scales: [f64; 5] = scales_v
+            .try_into()
+            .map_err(|v: Vec<f64>| anyhow::anyhow!("expected 5 scales, got {}", v.len()))?;
+        Ok(PolyPerfModel::new(
+            to6(vecf("w_pf")?)?,
+            to6(vecf("w_dec")?)?,
+            (
+                c.f64_or("c_dec_b", 0.0),
+                c.f64_or("c_dec_kv", 0.0),
+                c.f64_or("m_pf_tok", 0.0),
+            ),
+            scales,
+            key,
+        ))
+    }
+
+    #[inline]
+    fn predict_one(&self, f: &StepFeatures) -> StepPrediction {
+        // f32 throughout to mirror the Pallas kernel exactly.
+        let s = &self.scales;
+        let new = (f.pf_new / s[0]) as f32;
+        let past = (f.pf_past / s[1]) as f32;
+        let items = (f.pf_items / s[2]) as f32;
+        let b = (f.dec_batch / s[3]) as f32;
+        let kv = (f.dec_kv / s[4]) as f32;
+
+        let phi_pf = [1.0f32, past, new, items, new * new, new * past];
+        let phi_dec = [1.0f32, b, kv, b * kv, b * b, kv * kv];
+        let dot = |phi: &[f32; N_FEATURES], w: &[f64; N_FEATURES]| -> f32 {
+            phi.iter()
+                .zip(w)
+                .map(|(p, w)| p * (*w as f32))
+                .sum::<f32>()
+        };
+        let mut t_pf = dot(&phi_pf, &self.w_pf).max(0.0);
+        let mut t_dec = dot(&phi_dec, &self.w_dec).max(0.0);
+        let has_pf = f.pf_new > 0.0;
+        let has_dec = f.dec_batch > 0.0;
+        if !has_pf {
+            t_pf = 0.0;
+        }
+        if !has_dec {
+            t_dec = 0.0;
+        }
+        let t_step = if has_pf && has_dec {
+            // roofline-aware combination (mirrors kernels/ref.py)
+            let compute_path = t_pf
+                + (self.c_dec_b as f32) * (f.dec_batch as f32)
+                + (self.c_dec_kv as f32) * (f.dec_kv as f32);
+            let memory_path =
+                t_dec + (self.m_pf_tok as f32) * ((f.pf_new + f.pf_past) as f32);
+            compute_path.max(memory_path).max(t_pf.max(t_dec))
+        } else {
+            t_pf + t_dec
+        };
+        StepPrediction {
+            t_prefill: t_pf as f64,
+            t_decode: t_dec as f64,
+            t_step: t_step as f64,
+        }
+    }
+}
+
+impl PerfModel for PolyPerfModel {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn predict_batch(&mut self, feats: &[StepFeatures]) -> Vec<StepPrediction> {
+        feats.iter().map(|f| self.predict_one(f)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> PolyPerfModel {
+        PolyPerfModel::new(
+            // t_pf = 0.01 + 0.05*new_scaled
+            [0.01, 0.0, 0.05, 0.0, 0.0, 0.0],
+            // t_dec = 0.002 + 0.01*kv_scaled
+            [0.002, 0.0, 0.01, 0.0, 0.0, 0.0],
+            // c_dec_b=1e-4/seq, c_dec_kv=0, m_pf_tok=1e-6/token
+            (1e-4, 0.0, 1e-6),
+            [4096.0, 4096.0, 8.0, 64.0, 262144.0],
+            "toy",
+        )
+    }
+
+    #[test]
+    fn heads_gate_on_work_present() {
+        let mut m = toy();
+        let p = m.predict(StepFeatures::decode(8, 262144.0));
+        assert_eq!(p.t_prefill, 0.0);
+        assert!((p.t_decode - 0.012).abs() < 1e-6);
+        assert!((p.t_step - p.t_decode).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mixed_takes_binding_roofline_path() {
+        let mut m = toy();
+        let p = m.predict(StepFeatures {
+            pf_new: 4096.0,
+            pf_past: 0.0,
+            pf_items: 1.0,
+            dec_batch: 8.0,
+            dec_kv: 262144.0,
+        });
+        let expect_pf = 0.01 + 0.05; // 60ms compute-led
+        let expect_dec = 0.012;
+        assert!((p.t_prefill - expect_pf).abs() < 1e-6);
+        assert!((p.t_decode - expect_dec).abs() < 1e-6);
+        // compute path: t_pf + 8*1e-4 = 60.8ms; memory path:
+        // t_dec + 4096*1e-6 = 16.1ms → compute-bound wins
+        assert!((p.t_step - (expect_pf + 8.0 * 1e-4)).abs() < 1e-5, "{p:?}");
+        // combined can never undercut its bigger half
+        assert!(p.t_step >= p.t_prefill.max(p.t_decode));
+    }
+
+    #[test]
+    fn negative_predictions_clamped() {
+        let mut m = toy();
+        m.w_dec = [-1.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let p = m.predict(StepFeatures::decode(1, 100.0));
+        assert_eq!(p.t_decode, 0.0);
+    }
+
+    #[test]
+    fn parses_coefficients_json() {
+        let doc = Json::parse(
+            r#"{"m@h/tp8": {"w_pf": [1,2,3,4,5,6], "w_dec": [6,5,4,3,2,1],
+                 "c_dec_b": 1e-4, "c_dec_kv": 1e-8, "m_pf_tok": 1e-6,
+                 "scales": [4096, 4096, 8, 64, 262144]}}"#,
+        )
+        .unwrap();
+        let m = PolyPerfModel::from_coefficients(&doc, "m@h/tp8").unwrap();
+        assert_eq!(m.w_pf[5], 6.0);
+        assert_eq!(m.w_dec[0], 6.0);
+        assert_eq!(m.c_dec_b, 1e-4);
+        assert_eq!(m.m_pf_tok, 1e-6);
+        assert!(PolyPerfModel::from_coefficients(&doc, "missing").is_err());
+    }
+}

@@ -1,0 +1,160 @@
+//! IVF-PQ retrieval cost model (paper §III-E.2: "we implement IVF-PQ
+//! modelling equations described in RAGO").
+//!
+//! Query cost decomposes into:
+//!   1. coarse scan — distance to all `centroids` (memory-bound read of
+//!      the fp32 centroid table; amortized across a batch);
+//!   2. PQ scan — `nprobe · points_per_probe` candidates × `pq_m` byte
+//!      codes each (LUT adds, memory-bound, per query);
+//!   3. re-rank — full-precision re-scoring of the top candidates.
+
+use crate::hardware::npu::NpuSpec;
+use crate::hardware::roofline::{EFF_COMPUTE, EFF_MEM};
+use crate::workload::request::RagParams;
+
+/// Index-level parameters (database-side; per-query knobs ride on
+/// `RagParams`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IvfPqConfig {
+    /// embedding dimensionality
+    pub dim: usize,
+    /// PQ sub-quantizers per vector (bytes per code)
+    pub pq_m: usize,
+    /// candidates re-scored at full precision before the final top-k
+    pub rerank_candidates: usize,
+    /// fixed software overhead per batch (index traversal bookkeeping)
+    pub overhead_s: f64,
+}
+
+impl Default for IvfPqConfig {
+    fn default() -> IvfPqConfig {
+        IvfPqConfig {
+            dim: 768,
+            pq_m: 64,
+            rerank_candidates: 1000,
+            overhead_s: 200e-6,
+        }
+    }
+}
+
+/// An IVF-PQ index resident on a retrieval device.
+#[derive(Debug, Clone)]
+pub struct IvfPq {
+    pub device: NpuSpec,
+    pub cfg: IvfPqConfig,
+}
+
+impl IvfPq {
+    pub fn new(device: NpuSpec, cfg: IvfPqConfig) -> IvfPq {
+        IvfPq { device, cfg }
+    }
+
+    fn roofline(&self, flops: f64, bytes: f64) -> f64 {
+        let t_c = flops / (EFF_COMPUTE * self.device.peak_flops);
+        let t_m = bytes / (EFF_MEM * self.device.mem_bw);
+        t_c.max(t_m)
+    }
+
+    /// Batched ANN search: coarse scan (table read shared by the batch)
+    /// + per-query PQ scans.
+    pub fn batch_search_time(&self, queries: usize, p: &RagParams) -> f64 {
+        if queries == 0 {
+            return 0.0;
+        }
+        let q = queries as f64;
+        let d = self.cfg.dim as f64;
+
+        // coarse scan: centroid table is streamed ONCE for the batch;
+        // each query computes distances to every centroid.
+        let coarse_bytes = p.centroids * d * 4.0;
+        let coarse_flops = q * p.centroids * 2.0 * d;
+        let t_coarse = self.roofline(coarse_flops, coarse_bytes);
+
+        // PQ scan: each query touches nprobe·ppp codes of pq_m bytes,
+        // one LUT add per byte.
+        let codes = (p.nprobe * p.points_per_probe) as f64 * self.cfg.pq_m as f64;
+        let t_pq = self.roofline(q * codes, q * codes);
+
+        t_coarse + t_pq + self.cfg.overhead_s
+    }
+
+    /// Full-precision re-ranking of the PQ scan's top candidates.
+    pub fn batch_rerank_time(&self, queries: usize, p: &RagParams) -> f64 {
+        if queries == 0 {
+            return 0.0;
+        }
+        let q = queries as f64;
+        let d = self.cfg.dim as f64;
+        let cands = self.cfg.rerank_candidates.max(p.docs) as f64;
+        let bytes = q * cands * d * 4.0;
+        let flops = q * cands * 2.0 * d;
+        self.roofline(flops, bytes)
+    }
+
+    /// Resident index footprint, bytes (for capacity checks): PQ codes for
+    /// `n_vectors` + the centroid table.
+    pub fn index_bytes(&self, n_vectors: f64, p: &RagParams) -> f64 {
+        n_vectors * self.cfg.pq_m as f64 + p.centroids * self.cfg.dim as f64 * 4.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::npu::{GRACE_CPU, SPR_CPU};
+
+    fn grace() -> IvfPq {
+        IvfPq::new(GRACE_CPU, IvfPqConfig::default())
+    }
+
+    #[test]
+    fn default_search_is_milliseconds_scale() {
+        // 4M centroids × 768 dim × 4B = 12.3 GB coarse table;
+        // @ 0.75·768 GB/s ≈ 21 ms — CPU ANN search at paper scale
+        let t = grace().batch_search_time(1, &RagParams::default());
+        assert!(t > 5e-3 && t < 100e-3, "t={t}");
+    }
+
+    #[test]
+    fn coarse_scan_amortizes_with_batch() {
+        let idx = grace();
+        let p = RagParams::default();
+        let t1 = idx.batch_search_time(1, &p);
+        let t16 = idx.batch_search_time(16, &p);
+        assert!(t16 < 10.0 * t1, "t1={t1} t16={t16}");
+    }
+
+    #[test]
+    fn slower_memory_slower_search() {
+        let p = RagParams::default();
+        let fast = grace().batch_search_time(1, &p);
+        let slow = IvfPq::new(SPR_CPU, IvfPqConfig::default()).batch_search_time(1, &p);
+        assert!(slow > 1.5 * fast, "fast={fast} slow={slow}");
+    }
+
+    #[test]
+    fn more_probes_cost_more() {
+        let idx = grace();
+        let base = RagParams::default();
+        let heavy = RagParams {
+            nprobe: 500,
+            ..base
+        };
+        assert!(idx.batch_search_time(4, &heavy) > idx.batch_search_time(4, &base));
+    }
+
+    #[test]
+    fn rerank_much_cheaper_than_search() {
+        let idx = grace();
+        let p = RagParams::default();
+        assert!(idx.batch_rerank_time(1, &p) < 0.2 * idx.batch_search_time(1, &p));
+    }
+
+    #[test]
+    fn index_footprint_billion_scale() {
+        let idx = grace();
+        let bytes = idx.index_bytes(1e9, &RagParams::default());
+        // 1B vectors × 64B codes + 12 GB centroids ≈ 76 GB
+        assert!(bytes > 60e9 && bytes < 100e9, "bytes={bytes}");
+    }
+}

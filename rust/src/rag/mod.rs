@@ -1,0 +1,113 @@
+//! Retrieval-Augmented Generation cluster modeling (paper §III-E.2):
+//! (i) query embedding — an encoder prefill on the embedding device;
+//! (ii) IVF-PQ retrieval — RAGO-style analytical cost on the retrieval
+//!      device (memory-bound database scans);
+//! (iii) re-ranking of the top candidates.
+
+pub mod ivfpq;
+
+use crate::hardware::roofline::LlmCluster;
+use crate::workload::request::RagParams;
+use ivfpq::IvfPq;
+
+/// A RAG engine: embedding model placed on one device, retrieval +
+/// re-rank on another (or the same — the Fig 9 co-location study).
+pub struct RagEngine {
+    /// encoder on the embedding device
+    pub embedder: LlmCluster,
+    /// IVF-PQ index on the retrieval device
+    pub index: IvfPq,
+}
+
+/// Per-batch stage timings (reported separately for Fig 9's breakdown).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct RagTiming {
+    pub embed_s: f64,
+    pub retrieve_s: f64,
+    pub rerank_s: f64,
+}
+
+impl RagTiming {
+    pub fn total(&self) -> f64 {
+        self.embed_s + self.retrieve_s + self.rerank_s
+    }
+}
+
+impl RagEngine {
+    pub fn new(embedder: LlmCluster, index: IvfPq) -> RagEngine {
+        RagEngine { embedder, index }
+    }
+
+    /// Price a batched RAG stage: `queries` concurrent requests with the
+    /// given parameters (batched scheduler — §III-D).
+    pub fn batch_timing(&self, queries: usize, p: &RagParams) -> RagTiming {
+        if queries == 0 {
+            return RagTiming::default();
+        }
+        // embedding: encoder forward over all query tokens in one batch
+        let embed_s = self
+            .embedder
+            .embed_time((queries * p.query_tokens) as f64);
+        let retrieve_s = self.index.batch_search_time(queries, p);
+        let rerank_s = self.index.batch_rerank_time(queries, p);
+        RagTiming {
+            embed_s,
+            retrieve_s,
+            rerank_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::models::{E5_BASE, MISTRAL_7B};
+    use crate::hardware::npu::{A100, GRACE_CPU, SPR_CPU};
+
+    fn engine(embed_model: crate::hardware::ModelSpec, dev: crate::hardware::NpuSpec) -> RagEngine {
+        RagEngine::new(
+            LlmCluster::new(embed_model, dev, 1),
+            IvfPq::new(GRACE_CPU, Default::default()),
+        )
+    }
+
+    #[test]
+    fn fig9_large_embedder_on_small_cpu_is_the_bottleneck() {
+        let p = RagParams::default();
+        let spr = engine(MISTRAL_7B, SPR_CPU).batch_timing(1, &p);
+        let a100 = engine(MISTRAL_7B, A100).batch_timing(1, &p);
+        // on the small CPU, embedding dominates the whole RAG stage
+        assert!(
+            spr.embed_s > spr.retrieve_s + spr.rerank_s,
+            "embed {} vs retrieval {}",
+            spr.embed_s,
+            spr.retrieve_s + spr.rerank_s
+        );
+        // offloading to A100 collapses the embed term dramatically
+        assert!(spr.embed_s / a100.embed_s > 10.0);
+    }
+
+    #[test]
+    fn small_embedder_cheap_everywhere() {
+        let p = RagParams::default();
+        let t = engine(E5_BASE, SPR_CPU).batch_timing(1, &p);
+        assert!(t.embed_s < 0.1, "E5-Base embed should be fast: {}", t.embed_s);
+    }
+
+    #[test]
+    fn batching_amortizes_retrieval() {
+        let p = RagParams::default();
+        let e = engine(E5_BASE, GRACE_CPU);
+        let t1 = e.batch_timing(1, &p).retrieve_s;
+        let t8 = e.batch_timing(8, &p).retrieve_s;
+        // 8 queries share the centroid-table scan → well under 8×
+        assert!(t8 < 6.0 * t1, "t1={t1} t8={t8}");
+        assert!(t8 > t1);
+    }
+
+    #[test]
+    fn zero_queries_free() {
+        let p = RagParams::default();
+        assert_eq!(engine(E5_BASE, SPR_CPU).batch_timing(0, &p).total(), 0.0);
+    }
+}

@@ -1,0 +1,159 @@
+//! PJRT runtime bridge: load AOT artifacts (`artifacts/*.hlo.txt`) and
+//! execute them on the XLA CPU client from the simulator hot path.
+//!
+//! Interchange format is HLO **text**, not serialized `HloModuleProto` —
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+//! reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Shared PJRT CPU client. Construct once; compile many executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+}
+
+/// A compiled runtime-predictor executable: f32[rows, n_raw] -> f32[rows, 3]
+/// (lowered with return_tuple=True, so the output is a 1-tuple).
+pub struct PredictorExe {
+    exe: xla::PjRtLoadedExecutable,
+    pub rows: usize,
+    pub n_raw: usize,
+    pub variant: String,
+}
+
+impl PredictorExe {
+    /// Execute on a row-major feature buffer of exactly `rows * n_raw` f32s.
+    pub fn run(&self, features: &[f32]) -> Result<Vec<f32>> {
+        if features.len() != self.rows * self.n_raw {
+            bail!(
+                "feature buffer is {} floats, executable wants {}x{}",
+                features.len(),
+                self.rows,
+                self.n_raw
+            );
+        }
+        let x = xla::Literal::vec1(features).reshape(&[self.rows as i64, self.n_raw as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// The artifact bundle produced by `make artifacts` (python/compile/aot.py).
+pub struct ArtifactBundle {
+    pub dir: PathBuf,
+    pub manifest: Json,
+    pub coefficients: Json,
+}
+
+impl ArtifactBundle {
+    /// Default location: `$HERMES_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("HERMES_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn open(dir: &Path) -> Result<ArtifactBundle> {
+        let read = |name: &str| -> Result<Json> {
+            let path = dir.join(name);
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+            Json::parse(&text).with_context(|| format!("parsing {}", path.display()))
+        };
+        Ok(ArtifactBundle {
+            dir: dir.to_path_buf(),
+            manifest: read("manifest.json")?,
+            coefficients: read("coefficients.json")?,
+        })
+    }
+
+    /// Variant keys look like "llama3-70b@h100/tp8".
+    pub fn variant_key(model: &str, npu: &str, tp: usize) -> String {
+        format!("{model}@{npu}/tp{tp}")
+    }
+
+    pub fn has_variant(&self, key: &str) -> bool {
+        self.manifest.at(&["variants", key]).is_some()
+    }
+
+    pub fn variant_keys(&self) -> Vec<String> {
+        match self.manifest.get("variants") {
+            Some(Json::Obj(m)) => m.keys().cloned().collect(),
+            _ => Vec::new(),
+        }
+    }
+
+    /// Compile the predictor executable for a variant.
+    pub fn load_predictor(&self, rt: &Runtime, key: &str) -> Result<PredictorExe> {
+        let v = self
+            .manifest
+            .at(&["variants", key])
+            .with_context(|| format!("variant '{key}' not in manifest"))?;
+        let file = v
+            .get("file")
+            .and_then(Json::as_str)
+            .context("manifest variant missing 'file'")?;
+        let rows = self.manifest.usize_or("rows", 64);
+        let n_raw = self.manifest.usize_or("n_raw", 5);
+        let exe = rt.load_hlo_text(&self.dir.join(file))?;
+        Ok(PredictorExe {
+            exe,
+            rows,
+            n_raw,
+            variant: key.to_string(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT-backed tests live in rust/tests/pjrt_parity.rs (they need
+    // `make artifacts` to have run). Here: pure bundle-parsing logic.
+
+    #[test]
+    fn variant_key_format() {
+        assert_eq!(
+            ArtifactBundle::variant_key("llama3-70b", "h100", 8),
+            "llama3-70b@h100/tp8"
+        );
+    }
+
+    #[test]
+    fn missing_bundle_is_a_clear_error() {
+        let err = match ArtifactBundle::open(Path::new("/nonexistent/dir")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

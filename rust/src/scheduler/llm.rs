@@ -1,0 +1,545 @@
+//! The LLM scheduler: five batching strategies behind one planner
+//! (paper §III-D.1), with KV admission control and token/sequence caps.
+//!
+//!   Static        — FasterTransformer-style: fill a batch, run it to
+//!                   completion, only then admit the next batch.
+//!   Continuous    — Orca/vLLM: admit every step; prefill-prioritized
+//!                   (a pending prefill preempts decoding).
+//!   Chunked       — Sarathi/DeepSpeed-FastGen: fixed per-step token
+//!                   budget; decodes ride along with prefill chunks.
+//!   Mixed         — Splitwise mixed pool: full prefills and decodes
+//!                   co-scheduled without a chunk budget.
+//!   PrefillOnly / — the two halves of disaggregated serving
+//!   DecodeOnly      (Splitwise/DistServe); the coordinator moves KV
+//!                   between them.
+
+use std::collections::{HashMap, VecDeque};
+
+use super::packing::Packing;
+use super::{RequestPool, StepPlan};
+use crate::memory::hierarchy::KvManager;
+use crate::workload::request::ReqId;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BatchingKind {
+    Static,
+    Continuous,
+    Chunked { chunk: usize },
+    Mixed,
+    PrefillOnly,
+    DecodeOnly,
+}
+
+impl BatchingKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatchingKind::Static => "static",
+            BatchingKind::Continuous => "continuous",
+            BatchingKind::Chunked { .. } => "chunked",
+            BatchingKind::Mixed => "mixed",
+            BatchingKind::PrefillOnly => "prefill-only",
+            BatchingKind::DecodeOnly => "decode-only",
+        }
+    }
+}
+
+/// User constraints (paper: "maximum number of batched tokens or batch
+/// size").
+#[derive(Debug, Clone, Copy)]
+pub struct SchedConfig {
+    /// maximum decode sequences co-batched in a step
+    pub max_batch_seqs: usize,
+    /// maximum new prefill tokens in a step
+    pub max_batch_tokens: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> SchedConfig {
+        SchedConfig {
+            max_batch_seqs: 256,
+            max_batch_tokens: 8192,
+        }
+    }
+}
+
+/// vLLM-like scheduler state for one LLM client.
+pub struct LlmSched {
+    pub kind: BatchingKind,
+    pub packing: Packing,
+    pub cfg: SchedConfig,
+    /// arrived but not yet admitted (no KV reservation)
+    waiting: VecDeque<ReqId>,
+    /// admitted: KV reserved, being prefilled/decoded
+    running: Vec<ReqId>,
+    /// KV tokens reserved per admitted request (released via `remove`)
+    reserved: HashMap<ReqId, f64>,
+    /// queue-length samples for scheduler metrics
+    pub admissions: u64,
+}
+
+impl LlmSched {
+    pub fn new(kind: BatchingKind, packing: Packing, cfg: SchedConfig) -> LlmSched {
+        LlmSched {
+            kind,
+            packing,
+            cfg,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            reserved: HashMap::new(),
+            admissions: 0,
+        }
+    }
+
+    pub fn enqueue(&mut self, id: ReqId) {
+        self.waiting.push_back(id);
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.waiting.is_empty() && self.running.is_empty()
+    }
+
+    /// Remove a completed / transferred-out request. Returns the KV
+    /// tokens that were reserved for it (the caller releases them from
+    /// the KvManager), or `None` if it was never admitted.
+    pub fn remove(&mut self, id: ReqId) -> Option<f64> {
+        if let Some(i) = self.running.iter().position(|r| *r == id) {
+            self.running.swap_remove(i);
+            self.reserved.remove(&id)
+        } else {
+            self.waiting.retain(|r| *r != id);
+            None
+        }
+    }
+
+    /// KV tokens to reserve at admission, by role: a prefill-only client
+    /// never holds decode KV; everyone else reserves the full peak.
+    fn admit_tokens(&self, pool: &RequestPool, id: ReqId) -> f64 {
+        let r = &pool[&id];
+        match self.kind {
+            BatchingKind::PrefillOnly => (r.past_tokens + r.prompt_tokens) as f64,
+            _ => r.kv_tokens_peak(),
+        }
+    }
+
+    /// Admit from `waiting` in packing order while KV + seq caps allow.
+    fn admit(&mut self, pool: &RequestPool, kv: &mut KvManager) {
+        if self.waiting.is_empty() {
+            return;
+        }
+        let mut cand: Vec<ReqId> = self.waiting.iter().copied().collect();
+        self.packing.order(&mut cand, pool);
+        for id in cand {
+            let seqs: usize = self
+                .running
+                .iter()
+                .map(|r| pool[r].decode_seqs())
+                .sum::<usize>();
+            if seqs + pool[&id].decode_seqs() > self.cfg.max_batch_seqs {
+                break;
+            }
+            let tokens = self.admit_tokens(pool, id);
+            if kv.admit(tokens) {
+                self.waiting.retain(|r| *r != id);
+                self.running.push(id);
+                self.reserved.insert(id, tokens);
+                self.admissions += 1;
+            } else {
+                // FCFS head-of-line blocking: stop at the first request
+                // that does not fit (vLLM semantics)
+                break;
+            }
+        }
+    }
+
+    /// Build the next step plan; `None` when there is nothing to run.
+    pub fn plan(&mut self, pool: &RequestPool, kv: &mut KvManager) -> Option<StepPlan> {
+        match self.kind {
+            BatchingKind::Static => self.plan_static(pool, kv),
+            BatchingKind::Continuous => self.plan_continuous(pool, kv),
+            BatchingKind::Chunked { chunk } => self.plan_chunked(pool, kv, chunk),
+            BatchingKind::Mixed => self.plan_mixed(pool, kv),
+            BatchingKind::PrefillOnly => self.plan_prefill_only(pool, kv),
+            BatchingKind::DecodeOnly => self.plan_decode_only(pool, kv),
+        }
+    }
+
+    fn prefillers(&self, pool: &RequestPool) -> Vec<ReqId> {
+        self.running
+            .iter()
+            .copied()
+            .filter(|id| !pool[id].prefill_complete())
+            .collect()
+    }
+
+    fn decoders(&self, pool: &RequestPool) -> Vec<ReqId> {
+        self.running
+            .iter()
+            .copied()
+            .filter(|id| pool[id].prefill_complete() && !pool[id].decode_complete())
+            .collect()
+    }
+
+    fn plan_static(&mut self, pool: &RequestPool, kv: &mut KvManager) -> Option<StepPlan> {
+        // admit only when the previous batch fully drained
+        if self.running.is_empty() {
+            self.admit(pool, kv);
+        }
+        if self.running.is_empty() {
+            return None;
+        }
+        let pf = self.prefillers(pool);
+        if !pf.is_empty() {
+            // whole prompts, one step (FasterTransformer has no chunking)
+            return Some(StepPlan {
+                prefill: pf
+                    .iter()
+                    .map(|id| (*id, pool[id].prefill_remaining()))
+                    .collect(),
+                decode: Vec::new(),
+            });
+        }
+        Some(StepPlan {
+            prefill: Vec::new(),
+            decode: self.decoders(pool),
+        })
+    }
+
+    fn plan_continuous(&mut self, pool: &RequestPool, kv: &mut KvManager) -> Option<StepPlan> {
+        self.admit(pool, kv);
+        if self.running.is_empty() {
+            return None;
+        }
+        // prefill-prioritized: pending prefills preempt decode
+        let mut pf = self.prefillers(pool);
+        if !pf.is_empty() {
+            self.packing.order(&mut pf, pool);
+            let mut budget = self.cfg.max_batch_tokens;
+            let mut prefill = Vec::new();
+            for id in pf {
+                if budget == 0 {
+                    break;
+                }
+                let take = pool[&id].prefill_remaining().min(budget);
+                // continuous batching does not split prompts: take all or
+                // wait (unless a single prompt alone exceeds the budget)
+                if take < pool[&id].prefill_remaining() && !prefill.is_empty() {
+                    break;
+                }
+                budget -= take;
+                prefill.push((id, take));
+            }
+            if !prefill.is_empty() {
+                return Some(StepPlan {
+                    prefill,
+                    decode: Vec::new(),
+                });
+            }
+        }
+        let dec = self.decoders(pool);
+        if dec.is_empty() {
+            return None;
+        }
+        Some(StepPlan {
+            prefill: Vec::new(),
+            decode: dec,
+        })
+    }
+
+    fn plan_chunked(
+        &mut self,
+        pool: &RequestPool,
+        kv: &mut KvManager,
+        chunk: usize,
+    ) -> Option<StepPlan> {
+        self.admit(pool, kv);
+        if self.running.is_empty() {
+            return None;
+        }
+        // decodes ride in every step (1 token per branch-sequence)...
+        let decode = self.decoders(pool);
+        let dec_tokens: usize = decode.iter().map(|id| pool[id].decode_seqs()).sum();
+        // ...and the remaining budget is filled with prefill chunks
+        let mut budget = chunk.saturating_sub(dec_tokens);
+        let mut pf = self.prefillers(pool);
+        self.packing.order(&mut pf, pool);
+        let mut prefill = Vec::new();
+        for id in pf {
+            if budget == 0 {
+                break;
+            }
+            let take = pool[&id].prefill_remaining().min(budget);
+            budget -= take;
+            prefill.push((id, take));
+        }
+        if prefill.is_empty() && decode.is_empty() {
+            return None;
+        }
+        Some(StepPlan { prefill, decode })
+    }
+
+    fn plan_mixed(&mut self, pool: &RequestPool, kv: &mut KvManager) -> Option<StepPlan> {
+        self.admit(pool, kv);
+        if self.running.is_empty() {
+            return None;
+        }
+        let mut pf = self.prefillers(pool);
+        self.packing.order(&mut pf, pool);
+        let mut budget = self.cfg.max_batch_tokens;
+        let mut prefill = Vec::new();
+        for id in pf {
+            let take = pool[&id].prefill_remaining().min(budget);
+            if take == 0 {
+                break;
+            }
+            budget -= take;
+            prefill.push((id, take));
+        }
+        let decode = self.decoders(pool);
+        if prefill.is_empty() && decode.is_empty() {
+            return None;
+        }
+        Some(StepPlan { prefill, decode })
+    }
+
+    fn plan_prefill_only(&mut self, pool: &RequestPool, kv: &mut KvManager) -> Option<StepPlan> {
+        self.admit(pool, kv);
+        let mut pf = self.prefillers(pool);
+        if pf.is_empty() {
+            return None;
+        }
+        self.packing.order(&mut pf, pool);
+        let mut budget = self.cfg.max_batch_tokens;
+        let mut prefill = Vec::new();
+        for id in pf {
+            if budget == 0 {
+                break;
+            }
+            let take = pool[&id].prefill_remaining().min(budget);
+            if take < pool[&id].prefill_remaining() && !prefill.is_empty() {
+                break; // no chunking across steps beyond the head request
+            }
+            budget -= take;
+            prefill.push((id, take));
+        }
+        Some(StepPlan {
+            prefill,
+            decode: Vec::new(),
+        })
+    }
+
+    fn plan_decode_only(&mut self, pool: &RequestPool, kv: &mut KvManager) -> Option<StepPlan> {
+        self.admit(pool, kv);
+        let dec = self.decoders(pool);
+        if dec.is_empty() {
+            return None;
+        }
+        Some(StepPlan {
+            prefill: Vec::new(),
+            decode: dec,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimTime;
+    use crate::workload::request::{Request, Stage};
+
+    fn mk(id: u64, prompt: usize, out: usize) -> Request {
+        Request::new(
+            id,
+            "llama3-70b",
+            SimTime::from_secs(id as f64 * 0.01),
+            vec![Stage::Prefill, Stage::Decode],
+            prompt,
+            out,
+        )
+    }
+
+    fn setup(kind: BatchingKind, reqs: Vec<Request>) -> (LlmSched, RequestPool, KvManager) {
+        let mut pool = RequestPool::new();
+        let mut s = LlmSched::new(kind, Packing::Fcfs, SchedConfig::default());
+        for r in reqs {
+            s.enqueue(r.id);
+            pool.insert(r.id, r);
+        }
+        (s, pool, KvManager::new(1e9))
+    }
+
+    /// apply a plan the way a client would: progress tokens
+    fn apply(plan: &StepPlan, pool: &mut RequestPool) {
+        for (id, n) in &plan.prefill {
+            pool.get_mut(id).unwrap().prefilled += n;
+        }
+        for id in &plan.decode {
+            pool.get_mut(id).unwrap().decoded += 1;
+        }
+    }
+
+    #[test]
+    fn continuous_prioritizes_prefill_then_batches_decode() {
+        let (mut s, mut pool, mut kv) =
+            setup(BatchingKind::Continuous, vec![mk(1, 100, 3), mk(2, 200, 3)]);
+        let p1 = s.plan(&pool, &mut kv).unwrap();
+        assert_eq!(p1.prefill.len(), 2);
+        assert_eq!(p1.prefill_tokens(), 300);
+        assert!(p1.decode.is_empty());
+        apply(&p1, &mut pool);
+        let p2 = s.plan(&pool, &mut kv).unwrap();
+        assert!(p2.prefill.is_empty());
+        assert_eq!(p2.decode.len(), 2);
+    }
+
+    #[test]
+    fn continuous_prefill_preempts_decode() {
+        let (mut s, mut pool, mut kv) = setup(BatchingKind::Continuous, vec![mk(1, 100, 5)]);
+        apply(&s.plan(&pool, &mut kv).unwrap(), &mut pool); // prefill 1
+        apply(&s.plan(&pool, &mut kv).unwrap(), &mut pool); // decode 1
+        // request 2 arrives — its prefill must preempt
+        pool.insert(2, mk(2, 50, 5));
+        s.enqueue(2);
+        let p = s.plan(&pool, &mut kv).unwrap();
+        assert_eq!(p.prefill, vec![(2, 50)]);
+        assert!(p.decode.is_empty());
+    }
+
+    #[test]
+    fn chunked_mixes_decode_and_prefill_within_budget() {
+        let (mut s, mut pool, mut kv) =
+            setup(BatchingKind::Chunked { chunk: 512 }, vec![mk(1, 100, 5), mk(2, 2000, 5)]);
+        // step 1: no decoders yet; chunk filled with prefill
+        let p1 = s.plan(&pool, &mut kv).unwrap();
+        assert_eq!(p1.prefill_tokens(), 512);
+        assert_eq!(p1.prefill, vec![(1, 100), (2, 412)]);
+        apply(&p1, &mut pool);
+        // step 2: req 1 decodes (1 token), req 2 continues prefill
+        let p2 = s.plan(&pool, &mut kv).unwrap();
+        assert_eq!(p2.decode, vec![1]);
+        assert_eq!(p2.prefill, vec![(2, 511)]);
+        apply(&p2, &mut pool);
+        assert_eq!(pool[&2].prefilled, 923);
+    }
+
+    #[test]
+    fn static_admits_only_when_drained() {
+        let (mut s, mut pool, mut kv) =
+            setup(BatchingKind::Static, vec![mk(1, 10, 2), mk(2, 10, 2)]);
+        apply(&s.plan(&pool, &mut kv).unwrap(), &mut pool); // prefill both
+        // late arrival must NOT join the in-flight batch
+        pool.insert(3, mk(3, 10, 2));
+        s.enqueue(3);
+        let p = s.plan(&pool, &mut kv).unwrap();
+        assert_eq!(p.decode.len(), 2);
+        assert!(p.prefill.is_empty());
+        apply(&p, &mut pool);
+        apply(&s.plan(&pool, &mut kv).unwrap(), &mut pool); // decode to done
+        // drain completed
+        for id in [1u64, 2] {
+            assert!(pool[&id].decode_complete());
+            let res = s.remove(id).expect("was admitted");
+            kv.release(res);
+        }
+        let p = s.plan(&pool, &mut kv).unwrap();
+        assert_eq!(p.prefill, vec![(3, 10)]);
+    }
+
+    #[test]
+    fn mixed_coschedules_full_prefill_with_decode() {
+        let (mut s, mut pool, mut kv) = setup(BatchingKind::Mixed, vec![mk(1, 100, 5)]);
+        apply(&s.plan(&pool, &mut kv).unwrap(), &mut pool);
+        pool.insert(2, mk(2, 300, 5));
+        s.enqueue(2);
+        let p = s.plan(&pool, &mut kv).unwrap();
+        assert_eq!(p.prefill, vec![(2, 300)]);
+        assert_eq!(p.decode, vec![1]);
+    }
+
+    #[test]
+    fn kv_admission_blocks_and_releases() {
+        let mut pool = RequestPool::new();
+        let mut s = LlmSched::new(
+            BatchingKind::Continuous,
+            Packing::Fcfs,
+            SchedConfig::default(),
+        );
+        // capacity for exactly one request's peak (100 prompt + 10 out)
+        let mut kv = KvManager::new(115.0);
+        for r in [mk(1, 100, 10), mk(2, 100, 10)] {
+            s.enqueue(r.id);
+            pool.insert(r.id, r);
+        }
+        let p = s.plan(&pool, &mut kv).unwrap();
+        assert_eq!(p.prefill.len(), 1, "second request must not fit");
+        assert_eq!(s.queue_len(), 1);
+        // completion releases memory → the waiter is admitted
+        kv.release(s.remove(1).unwrap());
+        let p2 = s.plan(&pool, &mut kv).unwrap();
+        assert_eq!(p2.prefill, vec![(2, 100)]);
+    }
+
+    #[test]
+    fn seq_cap_respected_with_branches() {
+        let mut r1 = mk(1, 10, 5);
+        r1.branches = 6;
+        let mut r2 = mk(2, 10, 5);
+        r2.branches = 6;
+        let (mut s, pool, mut kv) = setup(BatchingKind::Continuous, vec![r1, r2]);
+        s.cfg.max_batch_seqs = 8;
+        s.plan(&pool, &mut kv).unwrap();
+        // only one 6-branch request fits under the 8-seq cap
+        assert_eq!(s.running_len(), 1);
+    }
+
+    #[test]
+    fn prefill_only_role_ignores_decode() {
+        let (mut s, mut pool, mut kv) = setup(BatchingKind::PrefillOnly, vec![mk(1, 100, 5)]);
+        let p = s.plan(&pool, &mut kv).unwrap();
+        assert_eq!(p.prefill, vec![(1, 100)]);
+        apply(&p, &mut pool);
+        assert!(s.plan(&pool, &mut kv).is_none(), "prefill done -> idle");
+        // and its reservation was prefix-only
+        assert_eq!(kv.used_tokens, 100.0);
+    }
+
+    #[test]
+    fn decode_only_role_batches_arrivals() {
+        let mut r1 = mk(1, 100, 3);
+        r1.prefilled = 100; // arrives with prefill done (KV transferred in)
+        let mut r2 = mk(2, 50, 3);
+        r2.prefilled = 50;
+        let (mut s, pool, mut kv) = setup(BatchingKind::DecodeOnly, vec![r1, r2]);
+        let p = s.plan(&pool, &mut kv).unwrap();
+        assert!(p.prefill.is_empty());
+        assert_eq!(p.decode.len(), 2);
+    }
+
+    #[test]
+    fn plan_features_aggregate_correctly() {
+        let (mut s, mut pool, mut kv) =
+            setup(BatchingKind::Chunked { chunk: 256 }, vec![mk(1, 100, 5), mk(2, 400, 5)]);
+        apply(&s.plan(&pool, &mut kv).unwrap(), &mut pool); // (1,100),(2,156)
+        let p = s.plan(&pool, &mut kv).unwrap();
+        let f = p.features(&pool);
+        assert_eq!(f.dec_batch, 1.0);
+        assert!(f.pf_new > 0.0);
+        assert_eq!(f.pf_items, 1.0);
+        assert!((f.pf_past - 156.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn remove_unadmitted_request_from_waiting() {
+        let (mut s, pool, _kv) = setup(BatchingKind::Continuous, vec![mk(1, 10, 2)]);
+        let _ = pool;
+        assert!(s.remove(1).is_none(), "still waiting -> no KV to release");
+        assert_eq!(s.queue_len(), 0);
+    }
+}

@@ -1,0 +1,63 @@
+//! Client-side schedulers (paper §III-D).
+//!
+//! The LLM scheduler is modeled after vLLM's: it enforces a batching
+//! policy (static / continuous / chunked / mixed / disaggregated-role),
+//! a request packing policy (FCFS / Least-Work-Left), user constraints
+//! (max batched sequences, max batched tokens) and KV memory admission
+//! (no admission when the KV manager is full; eviction on completion).
+//!
+//! Non-LLM clients use the two base schedulers in [`simple`]: `Batched`
+//! (single-step tasks with reuse, e.g. RAG lookups) and `Sequential`
+//! (no-reuse tasks, e.g. padding/truncation).
+
+pub mod llm;
+pub mod packing;
+pub mod simple;
+
+use std::collections::HashMap;
+
+use crate::workload::request::{ReqId, Request};
+
+pub use llm::{BatchingKind, LlmSched, SchedConfig};
+pub use packing::Packing;
+
+/// The requests a client currently owns, keyed by id.
+pub type RequestPool = HashMap<ReqId, Request>;
+
+/// What one engine step executes.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StepPlan {
+    /// (request, prompt tokens prefilled this step)
+    pub prefill: Vec<(ReqId, usize)>,
+    /// requests generating one token per branch this step
+    pub decode: Vec<ReqId>,
+}
+
+impl StepPlan {
+    pub fn is_empty(&self) -> bool {
+        self.prefill.is_empty() && self.decode.is_empty()
+    }
+
+    /// Total new prefill tokens in the step.
+    pub fn prefill_tokens(&self) -> usize {
+        self.prefill.iter().map(|(_, n)| n).sum()
+    }
+
+    /// Step features for the perf model.
+    pub fn features(&self, pool: &RequestPool) -> crate::perfmodel::StepFeatures {
+        let mut f = crate::perfmodel::StepFeatures::default();
+        for (id, n) in &self.prefill {
+            let r = &pool[id];
+            f.pf_new += *n as f64;
+            // chunked prefill attends over past ctx + already-prefilled part
+            f.pf_past += (r.past_tokens + r.prefilled) as f64;
+            f.pf_items += 1.0;
+        }
+        for id in &self.decode {
+            let r = &pool[id];
+            f.dec_batch += r.decode_seqs() as f64;
+            f.dec_kv += r.kv_tokens() + r.decode_seqs() as f64; // +1/seq this step
+        }
+        f
+    }
+}

@@ -1,0 +1,96 @@
+//! Request packing policies (paper §III-D.1: "flexible request packing
+//! policies such as First-Come-First-Serve and Least Work Left").
+
+use super::RequestPool;
+use crate::workload::request::ReqId;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Packing {
+    /// arrival order
+    Fcfs,
+    /// fewest remaining tokens first (SJF-like; reduces mean latency,
+    /// can starve long requests)
+    LeastWorkLeft,
+}
+
+impl Packing {
+    /// Order a candidate id list in admission priority order.
+    pub fn order(&self, ids: &mut Vec<ReqId>, pool: &RequestPool) {
+        match self {
+            Packing::Fcfs => {
+                ids.sort_by_key(|id| (pool[id].arrival, *id));
+            }
+            Packing::LeastWorkLeft => {
+                ids.sort_by(|a, b| {
+                    let (wa, wb) = (pool[a].work_left_tokens(), pool[b].work_left_tokens());
+                    wa.partial_cmp(&wb)
+                        .unwrap()
+                        .then_with(|| pool[a].arrival.cmp(&pool[b].arrival))
+                        .then_with(|| a.cmp(b))
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimTime;
+    use crate::workload::request::{Request, Stage};
+
+    fn pool() -> RequestPool {
+        let mut p = RequestPool::new();
+        let mk = |id: u64, arr: f64, prompt: usize, out: usize| {
+            Request::new(
+                id,
+                "llama3-70b",
+                SimTime::from_secs(arr),
+                vec![Stage::Prefill, Stage::Decode],
+                prompt,
+                out,
+            )
+        };
+        p.insert(1, mk(1, 0.3, 100, 50)); // work 150
+        p.insert(2, mk(2, 0.1, 5000, 10)); // work 5010
+        p.insert(3, mk(3, 0.2, 50, 20)); // work 70
+        p
+    }
+
+    #[test]
+    fn fcfs_orders_by_arrival() {
+        let p = pool();
+        let mut ids = vec![1, 2, 3];
+        Packing::Fcfs.order(&mut ids, &p);
+        assert_eq!(ids, vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn least_work_left_orders_by_remaining_tokens() {
+        let p = pool();
+        let mut ids = vec![1, 2, 3];
+        Packing::LeastWorkLeft.order(&mut ids, &p);
+        assert_eq!(ids, vec![3, 1, 2]);
+    }
+
+    #[test]
+    fn lwl_ties_broken_by_arrival_then_id() {
+        let mut p = RequestPool::new();
+        for id in [5u64, 4] {
+            p.insert(
+                id,
+                Request::new(
+                    id,
+                    "llama3-70b",
+                    SimTime::from_secs(1.0),
+                    vec![Stage::Prefill, Stage::Decode],
+                    100,
+                    10,
+                ),
+            );
+        }
+        let mut ids = vec![5, 4];
+        Packing::LeastWorkLeft.order(&mut ids, &p);
+        assert_eq!(ids, vec![4, 5]);
+    }
+}

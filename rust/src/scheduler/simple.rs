@@ -1,0 +1,116 @@
+//! Base schedulers for non-LLM clients (paper §III-D):
+//!
+//! * `Batched` — "for single step tasks like word lookup. Batching all
+//!   requests in the engine parallelly will extract maximum reuse."
+//!   (RAG and KV-retrieval clients.)
+//! * `Sequential` — "for tasks without reuse possibility, e.g. padding
+//!   and truncation" — available cores drain the queue linearly.
+//!   (Pre/post-processing clients.)
+
+use std::collections::VecDeque;
+
+use crate::workload::request::ReqId;
+
+/// Take-all batching: a step services every queued request at once.
+#[derive(Debug, Default)]
+pub struct Batched {
+    queue: VecDeque<ReqId>,
+    /// optional cap per step (0 = unbounded)
+    pub max_batch: usize,
+}
+
+impl Batched {
+    pub fn new(max_batch: usize) -> Batched {
+        Batched {
+            queue: VecDeque::new(),
+            max_batch,
+        }
+    }
+
+    pub fn enqueue(&mut self, id: ReqId) {
+        self.queue.push_back(id);
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Drain the next step's batch.
+    pub fn take_batch(&mut self) -> Vec<ReqId> {
+        let n = if self.max_batch == 0 {
+            self.queue.len()
+        } else {
+            self.queue.len().min(self.max_batch)
+        };
+        self.queue.drain(..n).collect()
+    }
+}
+
+/// Core-parallel sequential service: `cores` requests at a time, each
+/// taking its own service time.
+#[derive(Debug)]
+pub struct Sequential {
+    queue: VecDeque<ReqId>,
+    pub cores: usize,
+}
+
+impl Sequential {
+    pub fn new(cores: usize) -> Sequential {
+        assert!(cores > 0);
+        Sequential {
+            queue: VecDeque::new(),
+            cores,
+        }
+    }
+
+    pub fn enqueue(&mut self, id: ReqId) {
+        self.queue.push_back(id);
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Next wave of up to `cores` requests.
+    pub fn take_wave(&mut self) -> Vec<ReqId> {
+        let n = self.queue.len().min(self.cores);
+        self.queue.drain(..n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batched_takes_everything() {
+        let mut b = Batched::new(0);
+        for i in 0..10 {
+            b.enqueue(i);
+        }
+        assert_eq!(b.take_batch().len(), 10);
+        assert_eq!(b.queue_len(), 0);
+    }
+
+    #[test]
+    fn batched_respects_cap() {
+        let mut b = Batched::new(4);
+        for i in 0..10 {
+            b.enqueue(i);
+        }
+        assert_eq!(b.take_batch(), vec![0, 1, 2, 3]);
+        assert_eq!(b.queue_len(), 6);
+    }
+
+    #[test]
+    fn sequential_waves_by_cores() {
+        let mut s = Sequential::new(3);
+        for i in 0..7 {
+            s.enqueue(i);
+        }
+        assert_eq!(s.take_wave(), vec![0, 1, 2]);
+        assert_eq!(s.take_wave(), vec![3, 4, 5]);
+        assert_eq!(s.take_wave(), vec![6]);
+        assert!(s.take_wave().is_empty());
+    }
+}

@@ -1,0 +1,428 @@
+//! Simulation assembly: turn a declarative `ServingSpec` into a wired
+//! `Coordinator`. Every experiment — benches, examples, CLI configs —
+//! goes through this builder, so serving topologies are described in one
+//! place.
+
+use anyhow::{bail, Context, Result};
+
+use crate::client::{Client, KvRetrievalClient, LlmClient, PrePostClient, RagClient};
+use crate::coordinator::{Coordinator, RoutePolicy, Router};
+use crate::hardware::roofline::LlmCluster;
+use crate::hardware::{model, npu, ModelSpec, NpuSpec};
+use crate::memory::storage::{KvScenario, KvStore, StorageConfig};
+use crate::network::link::LinkSpec;
+use crate::network::{Granularity, Location, Network, NetworkKind};
+use crate::perfmodel::memo::Memoized;
+use crate::perfmodel::pjrt::PjrtPerfModel;
+use crate::perfmodel::poly::PolyPerfModel;
+use crate::perfmodel::{PerfModel, RooflinePerfModel};
+use crate::rag::ivfpq::{IvfPq, IvfPqConfig};
+use crate::rag::RagEngine;
+use crate::runtime::{ArtifactBundle, Runtime};
+use crate::scheduler::{BatchingKind, LlmSched, Packing, SchedConfig};
+
+/// Which predictor backend prices LLM engine steps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PerfBackend {
+    /// analytical GenZ-like model (no artifacts needed)
+    Roofline,
+    /// native evaluation of the fitted coefficients (artifacts/coefficients.json)
+    Poly,
+    /// AOT Pallas/JAX executable via PJRT (artifacts/*.hlo.txt)
+    Pjrt,
+    /// PJRT behind the quantized memo cache (production default)
+    PjrtMemo,
+}
+
+/// LLM serving pool shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PoolSpec {
+    /// n identical combined clients running `kind` batching
+    Combined { kind: BatchingKind, n: usize },
+    /// disaggregated prefill/decode pools (Splitwise/DistServe)
+    Disaggregated {
+        prefill: usize,
+        decode: usize,
+        local: bool,
+    },
+}
+
+impl PoolSpec {
+    pub fn n_clients(&self) -> usize {
+        match *self {
+            PoolSpec::Combined { n, .. } => n,
+            PoolSpec::Disaggregated { prefill, decode, .. } => prefill + decode,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            PoolSpec::Combined { kind, .. } => kind.name().to_string(),
+            PoolSpec::Disaggregated { prefill, decode, local } => format!(
+                "disagg-{}{}P/{}D",
+                if local { "local-" } else { "" },
+                prefill,
+                decode
+            ),
+        }
+    }
+}
+
+/// Auxiliary RAG clients.
+#[derive(Debug, Clone)]
+pub struct RagSpec {
+    pub count: usize,
+    pub embed_model: ModelSpec,
+    pub embed_npu: NpuSpec,
+    pub retrieval_npu: NpuSpec,
+    pub ivf: IvfPqConfig,
+    pub max_batch: usize,
+}
+
+/// Auxiliary KV-retrieval clients.
+#[derive(Debug, Clone)]
+pub struct KvRetrievalSpec {
+    pub count: usize,
+    pub storage: StorageConfig,
+    pub scenario: KvScenario,
+    pub max_batch: usize,
+    /// client connections aggregated per store (per-connection tier
+    /// bandwidth × ports = aggregate; see memory::storage::KvStore)
+    pub ports: usize,
+}
+
+/// Auxiliary pre/post-processing clients.
+#[derive(Debug, Clone)]
+pub struct PrePostSpec {
+    pub count: usize,
+    pub cores: usize,
+    pub guard_npu: Option<NpuSpec>,
+}
+
+/// Network shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NetSpec {
+    SinglePlatform,
+    Hierarchy { per_platform: usize, per_rack: usize },
+    /// splitwise-sim-style single link (Fig 5 baseline)
+    Dummy(LinkSpec),
+}
+
+/// Declarative serving-system specification.
+#[derive(Debug, Clone)]
+pub struct ServingSpec {
+    pub model: &'static str,
+    pub npu: NpuSpec,
+    pub tp: usize,
+    pub pool: PoolSpec,
+    pub sched: SchedConfig,
+    pub packing: Packing,
+    pub perf: PerfBackend,
+    pub route: RoutePolicy,
+    pub rag: Option<RagSpec>,
+    pub kv_retrieval: Option<KvRetrievalSpec>,
+    pub prepost: Option<PrePostSpec>,
+    pub net: NetSpec,
+    pub granularity: Granularity,
+    pub seed: u64,
+}
+
+impl ServingSpec {
+    /// A sensible default: continuous batching on H100 TP-sharded clients.
+    pub fn new(model: &'static str, npu: NpuSpec, tp: usize, pool: PoolSpec) -> ServingSpec {
+        ServingSpec {
+            model,
+            npu,
+            tp,
+            pool,
+            sched: SchedConfig::default(),
+            packing: Packing::Fcfs,
+            perf: PerfBackend::Roofline,
+            route: RoutePolicy::LoadBased(crate::coordinator::LoadMetric::TokensLeft),
+            rag: None,
+            kv_retrieval: None,
+            prepost: None,
+            net: NetSpec::SinglePlatform,
+            granularity: Granularity::Layerwise { layers: 80 },
+            seed: 0,
+        }
+    }
+
+    pub fn with_perf(mut self, p: PerfBackend) -> ServingSpec {
+        self.perf = p;
+        self
+    }
+
+    pub fn with_route(mut self, r: RoutePolicy) -> ServingSpec {
+        self.route = r;
+        self
+    }
+
+    pub fn with_rag(mut self, r: RagSpec) -> ServingSpec {
+        self.rag = Some(r);
+        self
+    }
+
+    pub fn with_kv_retrieval(mut self, k: KvRetrievalSpec) -> ServingSpec {
+        self.kv_retrieval = Some(k);
+        self
+    }
+
+    pub fn with_prepost(mut self, p: PrePostSpec) -> ServingSpec {
+        self.prepost = Some(p);
+        self
+    }
+
+    pub fn with_net(mut self, n: NetSpec) -> ServingSpec {
+        self.net = n;
+        self
+    }
+
+    pub fn with_sched(mut self, s: SchedConfig) -> ServingSpec {
+        self.sched = s;
+        self
+    }
+
+    pub fn with_seed(mut self, s: u64) -> ServingSpec {
+        self.seed = s;
+        self
+    }
+
+    fn make_perf(
+        &self,
+        cluster: &LlmCluster,
+        shared_exe: &mut Option<std::rc::Rc<crate::runtime::PredictorExe>>,
+    ) -> Result<Box<dyn PerfModel>> {
+        let key = ArtifactBundle::variant_key(cluster.model.name, cluster.npu.name, cluster.tp);
+        Ok(match self.perf {
+            PerfBackend::Roofline => Box::new(RooflinePerfModel::new(cluster.clone())),
+            PerfBackend::Poly => {
+                let bundle = ArtifactBundle::open(&ArtifactBundle::default_dir())?;
+                match PolyPerfModel::from_coefficients(&bundle.coefficients, &key) {
+                    Ok(m) => Box::new(m),
+                    // un-fitted configuration: analytical fallback
+                    // (the paper's LLMCompass/GenZ role)
+                    Err(_) => Box::new(RooflinePerfModel::new(cluster.clone())),
+                }
+            }
+            PerfBackend::Pjrt | PerfBackend::PjrtMemo => {
+                let dir = ArtifactBundle::default_dir();
+                let bundle = ArtifactBundle::open(&dir)?;
+                if !bundle.has_variant(&key) {
+                    return Ok(Box::new(RooflinePerfModel::new(cluster.clone())));
+                }
+                // compile the variant once, share across the pool
+                if shared_exe.is_none() {
+                    let rt = Runtime::cpu()?;
+                    *shared_exe =
+                        Some(std::rc::Rc::new(bundle.load_predictor(&rt, &key)?));
+                }
+                let exe = shared_exe.as_ref().unwrap().clone();
+                if self.perf == PerfBackend::Pjrt {
+                    Box::new(PjrtPerfModel::new(exe))
+                } else {
+                    Box::new(Memoized::new(PjrtPerfModel::new(exe)))
+                }
+            }
+        })
+    }
+
+    /// Wire everything into a ready-to-inject coordinator.
+    pub fn build(&self) -> Result<Coordinator> {
+        let model_spec = model(self.model).with_context(|| format!("unknown model {}", self.model))?;
+        let cluster = LlmCluster::new(model_spec.clone(), self.npu.clone(), self.tp);
+
+        let mut clients: Vec<Box<dyn Client>> = Vec::new();
+        let mut shared_exe: Option<std::rc::Rc<crate::runtime::PredictorExe>> = None;
+        match self.pool {
+            PoolSpec::Combined { kind, n } => {
+                if n == 0 {
+                    bail!("empty client pool");
+                }
+                for i in 0..n {
+                    clients.push(Box::new(
+                        LlmClient::new(
+                            i,
+                            cluster.clone(),
+                            LlmSched::new(kind, self.packing, self.sched),
+                            self.make_perf(&cluster, &mut shared_exe)?,
+                        )
+                        .with_group(i),
+                    ));
+                }
+            }
+            PoolSpec::Disaggregated { prefill, decode, local } => {
+                if prefill == 0 || decode == 0 {
+                    bail!("disaggregated pools need both roles");
+                }
+                // local mode pairs P/D into groups round-robin
+                let groups = prefill.min(decode);
+                for i in 0..prefill {
+                    clients.push(Box::new(
+                        LlmClient::new(
+                            i,
+                            cluster.clone(),
+                            LlmSched::new(BatchingKind::PrefillOnly, self.packing, self.sched),
+                            self.make_perf(&cluster, &mut shared_exe)?,
+                        )
+                        .with_group(if local { i % groups } else { 0 }),
+                    ));
+                }
+                for j in 0..decode {
+                    let id = prefill + j;
+                    clients.push(Box::new(
+                        LlmClient::new(
+                            id,
+                            cluster.clone(),
+                            LlmSched::new(BatchingKind::DecodeOnly, self.packing, self.sched),
+                            self.make_perf(&cluster, &mut shared_exe)?,
+                        )
+                        .with_group(if local { j % groups } else { 0 }),
+                    ));
+                }
+            }
+        }
+
+        if let Some(r) = &self.rag {
+            for k in 0..r.count {
+                let id = clients.len();
+                clients.push(Box::new(RagClient::new(
+                    id,
+                    RagEngine::new(
+                        LlmCluster::new(r.embed_model.clone(), r.embed_npu.clone(), 1),
+                        IvfPq::new(r.retrieval_npu.clone(), r.ivf),
+                    ),
+                    r.max_batch,
+                ).with_group(k)));
+            }
+        }
+
+        if let Some(k) = &self.kv_retrieval {
+            for i in 0..k.count {
+                let id = clients.len();
+                clients.push(Box::new(
+                    KvRetrievalClient::new(
+                        id,
+                        KvStore::with_ports(k.storage, k.scenario, k.ports),
+                        model_spec.kv_bytes_per_token(),
+                        k.max_batch,
+                        self.seed.wrapping_add(i as u64),
+                    )
+                    .with_group(i),
+                ));
+            }
+        }
+
+        if let Some(p) = &self.prepost {
+            for _ in 0..p.count {
+                let id = clients.len();
+                let guard = p.guard_npu.as_ref().map(|n| {
+                    LlmCluster::new(crate::hardware::models::GUARD_2B, n.clone(), 1)
+                });
+                clients.push(Box::new(PrePostClient::new(id, p.cores, guard)));
+            }
+        }
+
+        let n = clients.len();
+        let network = match self.net {
+            NetSpec::SinglePlatform => Network::single_platform(n),
+            NetSpec::Hierarchy { per_platform, per_rack } => {
+                Network::hierarchy(n, per_platform, per_rack)
+            }
+            NetSpec::Dummy(spec) => Network::new(
+                NetworkKind::DummyLink(spec),
+                (0..n).map(|i| Location { rack: i, platform: i }).collect(),
+            ),
+        };
+
+        let mut coord = Coordinator::new(clients, Router::new(self.route), network);
+        coord.granularity = self.granularity;
+        if let PoolSpec::Disaggregated { local: true, .. } = self.pool {
+            coord.local_disagg = true;
+        }
+        Ok(coord)
+    }
+}
+
+/// Lookup helper mirroring `hardware::npu` for config files.
+pub fn npu_by_name(name: &str) -> Result<NpuSpec> {
+    npu(name).with_context(|| format!("unknown npu '{name}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::slo::SloLadder;
+    use crate::hardware::npu::H100;
+    use crate::metrics::RunMetrics;
+    use crate::workload::trace::{TraceKind, WorkloadSpec};
+
+    fn small_workload(n: usize) -> Vec<crate::workload::request::Request> {
+        WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, n, 3.0)
+            .with_seed(5)
+            .generate(0)
+    }
+
+    #[test]
+    fn builds_combined_pool_and_runs() {
+        let spec = ServingSpec::new(
+            "llama3-70b",
+            H100,
+            8,
+            PoolSpec::Combined { kind: BatchingKind::Continuous, n: 2 },
+        );
+        let mut coord = spec.build().unwrap();
+        coord.inject(small_workload(20));
+        coord.run();
+        let m = RunMetrics::collect(&coord, &SloLadder::standard());
+        assert_eq!(m.n_serviced, 20);
+    }
+
+    #[test]
+    fn builds_disaggregated_pool() {
+        let spec = ServingSpec::new(
+            "llama3-70b",
+            H100,
+            8,
+            PoolSpec::Disaggregated { prefill: 2, decode: 1, local: false },
+        );
+        let mut coord = spec.build().unwrap();
+        assert_eq!(coord.clients.len(), 3);
+        coord.inject(small_workload(12));
+        coord.run();
+        assert!(coord.all_serviced());
+        assert!(coord.stats.transfers >= 12);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(ServingSpec::new(
+            "no-such-model",
+            H100,
+            8,
+            PoolSpec::Combined { kind: BatchingKind::Continuous, n: 1 }
+        )
+        .build()
+        .is_err());
+        assert!(ServingSpec::new(
+            "llama3-70b",
+            H100,
+            8,
+            PoolSpec::Disaggregated { prefill: 0, decode: 2, local: false }
+        )
+        .build()
+        .is_err());
+    }
+
+    #[test]
+    fn pool_labels() {
+        assert_eq!(
+            PoolSpec::Combined { kind: BatchingKind::Chunked { chunk: 512 }, n: 4 }.label(),
+            "chunked"
+        );
+        assert_eq!(
+            PoolSpec::Disaggregated { prefill: 20, decode: 12, local: false }.label(),
+            "disagg-20P/12D"
+        );
+    }
+}

@@ -1,0 +1,114 @@
+//! Run driver: spec + workload → metrics, with optional rate sweeps
+//! (the "gradually increase the per-client request rate" methodology of
+//! §V-A) run in parallel worker threads.
+
+use anyhow::Result;
+
+use super::builder::ServingSpec;
+use crate::config::slo::SloLadder;
+use crate::metrics::RunMetrics;
+use crate::workload::trace::WorkloadSpec;
+
+/// Build, inject, run, collect.
+pub fn run(spec: &ServingSpec, workload: &WorkloadSpec, slo: &SloLadder) -> Result<RunMetrics> {
+    let mut coord = spec.build()?;
+    coord.inject(workload.generate(0));
+    coord.run();
+    Ok(RunMetrics::collect(&coord, slo))
+}
+
+/// One (rate → metrics) sample of a sweep.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub rate: f64,
+    pub metrics: RunMetrics,
+    pub slo_ok: bool,
+}
+
+/// Sweep per-client injection rates; each point is an independent
+/// simulation (own thread — specs/workloads are constructed inside the
+/// worker because PJRT handles are not Send).
+pub fn sweep_rates(
+    spec: &ServingSpec,
+    workload: &WorkloadSpec,
+    slo: &SloLadder,
+    rates: &[f64],
+) -> Result<Vec<SweepPoint>> {
+    let results: Vec<Result<SweepPoint>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = rates
+            .iter()
+            .map(|&rate| {
+                let spec = spec.clone();
+                let workload = workload.clone();
+                let slo = *slo;
+                scope.spawn(move || -> Result<SweepPoint> {
+                    let w = workload.with_arrival(crate::util::rng::Arrival::Poisson {
+                        rate: rate * spec.pool.n_clients() as f64,
+                    });
+                    let metrics = run(&spec, &w, &slo)?;
+                    let slo_ok = metrics.slo_satisfied(&slo);
+                    Ok(SweepPoint { rate, metrics, slo_ok })
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+    results.into_iter().collect()
+}
+
+/// The paper's headline sweep statistic: among SLO-satisfying points,
+/// the best throughput and throughput/energy (used by Figs 10–12).
+pub fn best_under_slo(points: &[SweepPoint]) -> Option<&SweepPoint> {
+    points
+        .iter()
+        .filter(|p| p.slo_ok)
+        .max_by(|a, b| {
+            a.metrics
+                .throughput_tok_s
+                .partial_cmp(&b.metrics.throughput_tok_s)
+                .unwrap()
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::npu::H100;
+    use crate::scheduler::BatchingKind;
+    use crate::sim::builder::PoolSpec;
+    use crate::workload::trace::TraceKind;
+
+    #[test]
+    fn sweep_runs_all_rates_and_degrades() {
+        let spec = ServingSpec::new(
+            "llama3-70b",
+            H100,
+            8,
+            PoolSpec::Combined { kind: BatchingKind::Continuous, n: 1 },
+        );
+        let w = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 30, 1.0).with_seed(2);
+        let slo = SloLadder::standard();
+        let points = sweep_rates(&spec, &w, &slo, &[0.5, 2.0, 16.0]).unwrap();
+        assert_eq!(points.len(), 3);
+        // higher injection → worse (or equal) tail TTFT
+        let t0 = points[0].metrics.ttft.p99;
+        let t2 = points[2].metrics.ttft.p99;
+        assert!(t2 >= t0, "t0={t0} t2={t2}");
+    }
+
+    #[test]
+    fn best_under_slo_ignores_violators() {
+        let spec = ServingSpec::new(
+            "llama3-70b",
+            H100,
+            8,
+            PoolSpec::Combined { kind: BatchingKind::Continuous, n: 1 },
+        );
+        let w = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 25, 1.0).with_seed(9);
+        let slo = SloLadder::standard();
+        let points = sweep_rates(&spec, &w, &slo, &[0.25, 0.5, 64.0]).unwrap();
+        if let Some(best) = best_under_slo(&points) {
+            assert!(best.slo_ok);
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Simulation assembly and driving: the time base, the builder that turns
+//! a `SimConfig` into a wired coordinator + clients, and the run driver.
+
+pub mod builder;
+pub mod driver;
+pub mod time;
+
+pub use time::SimTime;

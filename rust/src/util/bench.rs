@@ -1,0 +1,142 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Each `benches/*.rs` is a `harness = false` binary that uses this module
+//! to time closures (warmup + sampling, mean/p50/p99 reporting) and to
+//! print paper-style tables. Keep it dependency-free and deterministic.
+
+use super::stats::Summary;
+use std::time::Instant;
+
+/// Time `f` for `samples` iterations after `warmup` iterations.
+pub fn time_fn<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut xs = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        xs.push(t0.elapsed().as_secs_f64());
+    }
+    let s = Summary::of(&xs);
+    println!(
+        "{name:<44} mean={:>10} p50={:>10} p99={:>10} (n={})",
+        fmt_secs(s.mean),
+        fmt_secs(s.p50),
+        fmt_secs(s.p99),
+        s.n
+    );
+    s
+}
+
+/// Human-readable seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{:.3}s", s)
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Fixed-width table printer for the figure/table regeneration benches.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            widths: headers.iter().map(|h| h.len()).collect(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let line = |cells: &[String], widths: &[usize]| {
+            let body = cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}", w = w))
+                .collect::<Vec<_>>()
+                .join(" | ");
+            println!("| {body} |");
+        };
+        line(&self.headers, &self.widths);
+        let sep = self
+            .widths
+            .iter()
+            .map(|w| "-".repeat(*w))
+            .collect::<Vec<_>>()
+            .join("-|-");
+        println!("|-{sep}-|");
+        for r in &self.rows {
+            line(r, &self.widths);
+        }
+    }
+}
+
+/// Section banner so bench output reads like the paper's figure captions.
+pub fn banner(title: &str) {
+    println!();
+    println!("{}", "=".repeat(title.len().min(100)));
+    println!("{title}");
+    println!("{}", "=".repeat(title.len().min(100)));
+}
+
+/// Prevent the optimizer from discarding a value (black_box substitute).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_returns_positive() {
+        let s = time_fn("noop-loop", 2, 5, || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert_eq!(s.n, 5);
+        assert!(s.mean > 0.0);
+        assert!(s.p99 >= s.p50);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert_eq!(fmt_secs(2.0), "2.000s");
+        assert_eq!(fmt_secs(2e-3), "2.000ms");
+        assert_eq!(fmt_secs(2e-6), "2.000us");
+        assert_eq!(fmt_secs(2e-9), "2.0ns");
+    }
+
+    #[test]
+    fn table_rows() {
+        let mut t = Table::new(&["a", "bee"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["333".into(), "4".into()]);
+        t.print(); // should not panic
+        assert_eq!(t.rows.len(), 2);
+    }
+}

@@ -1,0 +1,180 @@
+//! Tiny command-line parser (clap is unavailable offline).
+//!
+//! Grammar: `hermes <subcommand> [--key value]... [--flag]... [positional]...`
+//! Values are looked up typed with defaults; unknown flags are an error so
+//! typos fail fast.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// flags that were consumed by a typed getter — used by `finish()`
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments *excluding* argv[0].
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless next token is another flag → boolean
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(name.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(name.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.contains_key(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags.get(key).cloned()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.mark(key);
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.mark(key);
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.mark(key);
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.mark(key);
+        self.flags
+            .get(key)
+            .map(|v| v == "true" || v == "1" || v == "yes")
+            .unwrap_or(default)
+    }
+
+    /// Error if any provided flag was never consumed by a getter.
+    pub fn finish(&self) -> Result<(), String> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<&String> = self
+            .flags
+            .keys()
+            .filter(|k| !seen.iter().any(|s| s == *k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!(
+                "unknown flag(s): {}",
+                unknown
+                    .iter()
+                    .map(|k| format!("--{k}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        // NOTE: a bool flag followed by a positional is ambiguous; use
+        // `--verbose=true` or put positionals first.
+        let a = parse("simulate pos1 --config c.json --rate 2.5 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.str_or("config", ""), "c.json");
+        assert_eq!(a.f64_or("rate", 0.0), 2.5);
+        assert!(a.bool_or("verbose", false));
+        assert_eq!(a.positional, vec!["pos1"]);
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("run --n=12 --mode=chunked");
+        assert_eq!(a.usize_or("n", 0), 12);
+        assert_eq!(a.str_or("mode", ""), "chunked");
+    }
+
+    #[test]
+    fn boolean_flag_before_flag() {
+        let a = parse("x --dry-run --out f.json");
+        assert!(a.bool_or("dry-run", false));
+        assert_eq!(a.str_or("out", ""), "f.json");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("x");
+        assert_eq!(a.usize_or("n", 7), 7);
+        assert_eq!(a.str_or("mode", "static"), "static");
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = parse("x --typo 1");
+        let _ = a.usize_or("n", 0);
+        assert!(a.finish().is_err());
+    }
+}

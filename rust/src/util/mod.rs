@@ -1,0 +1,11 @@
+//! Support substrates built in-repo because the build environment is
+//! offline (no serde / clap / criterion / proptest / rand in the crate
+//! cache): JSON, RNG + distributions, statistics, CLI parsing, a
+//! micro-bench harness and a property-test runner.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

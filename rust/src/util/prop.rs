@@ -1,0 +1,99 @@
+//! Minimal property-based testing runner (proptest is unavailable offline).
+//!
+//! `check(seed, cases, |rng| { ... })` runs a closure against `cases`
+//! independently-seeded PCG streams; on failure it reports the case seed so
+//! the exact failing input can be replayed with `replay(seed, ...)`.
+
+use super::rng::Pcg;
+
+/// Run `prop` for `cases` random cases. `prop` returns `Err(msg)` to fail.
+/// Panics with the failing case seed embedded in the message.
+pub fn check<F>(seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Pcg) -> Result<(), String>,
+{
+    let mut meta = Pcg::new(seed);
+    for case in 0..cases {
+        let case_seed = meta.next_u64();
+        let mut rng = Pcg::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed on case {case}/{cases} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay<F>(case_seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Pcg) -> Result<(), String>,
+{
+    let mut rng = Pcg::new(case_seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("replayed property failed (seed {case_seed:#x}): {msg}");
+    }
+}
+
+/// Assertion helpers that produce `Result` instead of panicking, so the
+/// runner can attach the replay seed.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(1, 50, |rng| {
+            n += 1;
+            let x = rng.f64();
+            prop_assert!((0.0..1.0).contains(&x), "x out of range: {x}");
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check(2, 100, |rng| {
+            let x = rng.below(10);
+            prop_assert!(x < 9, "hit {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_assert_eq_formats() {
+        let r: Result<(), String> = (|| {
+            prop_assert_eq!(1 + 1, 3);
+            Ok(())
+        })();
+        assert!(r.unwrap_err().contains("1 + 1"));
+    }
+}

@@ -1,0 +1,254 @@
+//! Summary statistics used across metrics collection and fidelity checks:
+//! percentiles (T50/T90/T99 as the paper reports), CDFs (Fig 15), and a
+//! small least-squares helper used by tests that sanity-check the
+//! Python-fit polynomial coefficients.
+
+/// Mean of a slice; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Percentile with linear interpolation (q in [0,100]); 0.0 for empty input.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, q)
+}
+
+/// Percentile over an already-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let pos = (q / 100.0).clamp(0.0, 1.0) * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Common latency summary: mean, T50, T90, T99 (paper §III-F.2).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n: v.len(),
+            mean: mean(&v),
+            p50: percentile_sorted(&v, 50.0),
+            p90: percentile_sorted(&v, 90.0),
+            p99: percentile_sorted(&v, 99.0),
+            min: v[0],
+            max: *v.last().unwrap(),
+        }
+    }
+}
+
+/// Empirical CDF sampled at `points` evenly-spaced quantiles — the Fig 15
+/// plotting format (x = latency, y = fraction ≤ x).
+pub fn cdf(xs: &[f64], points: usize) -> Vec<(f64, f64)> {
+    if xs.is_empty() || points == 0 {
+        return Vec::new();
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (0..points)
+        .map(|i| {
+            let q = (i + 1) as f64 / points as f64;
+            (percentile_sorted(&v, q * 100.0), q)
+        })
+        .collect()
+}
+
+/// Ordinary least squares fit: returns coefficients w minimizing
+/// ||X w − y||², via normal equations + Gaussian elimination with partial
+/// pivoting. Feature counts here are tiny (≤8), so this is plenty.
+pub fn lstsq(x: &[Vec<f64>], y: &[f64]) -> Vec<f64> {
+    assert_eq!(x.len(), y.len());
+    assert!(!x.is_empty());
+    let f = x[0].len();
+    // A = XᵀX (f×f), b = Xᵀy
+    let mut a = vec![vec![0.0f64; f]; f];
+    let mut b = vec![0.0f64; f];
+    for (row, &yi) in x.iter().zip(y.iter()) {
+        for i in 0..f {
+            b[i] += row[i] * yi;
+            for j in 0..f {
+                a[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    // Ridge epsilon for numeric safety on collinear features.
+    for i in 0..f {
+        a[i][i] += 1e-12;
+    }
+    solve(a, b)
+}
+
+/// Solve a dense linear system via Gaussian elimination w/ partial pivoting.
+pub fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
+    let n = b.len();
+    for col in 0..n {
+        // pivot
+        let piv = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let d = a[col][col];
+        if d.abs() < 1e-300 {
+            continue;
+        }
+        for row in col + 1..n {
+            let factor = a[row][col] / d;
+            if factor == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                a[row][k] -= factor * a[col][k];
+            }
+            b[row] -= factor * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut acc = b[row];
+        for k in row + 1..n {
+            acc -= a[row][k] * x[k];
+        }
+        x[row] = if a[row][row].abs() < 1e-300 {
+            0.0
+        } else {
+            acc / a[row][row]
+        };
+    }
+    x
+}
+
+/// Mean squared error between predictions and targets.
+pub fn mse(pred: &[f64], target: &[f64]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    mean(&pred
+        .iter()
+        .zip(target)
+        .map(|(p, t)| (p - t) * (p - t))
+        .collect::<Vec<_>>())
+}
+
+/// Mean absolute percentage error (used for Fig 6 fidelity reporting).
+pub fn mape(pred: &[f64], target: &[f64]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    mean(&pred
+        .iter()
+        .zip(target)
+        .map(|(p, t)| ((p - t) / t.max(1e-300)).abs())
+        .collect::<Vec<_>>())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.p50, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!(s.p90 > 4.0 && s.p90 <= 5.0);
+    }
+
+    #[test]
+    fn summary_empty() {
+        assert_eq!(Summary::of(&[]), Summary::default());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [10.0, 20.0];
+        assert_eq!(percentile(&v, 0.0), 10.0);
+        assert_eq!(percentile(&v, 100.0), 20.0);
+        assert_eq!(percentile(&v, 50.0), 15.0);
+    }
+
+    #[test]
+    fn cdf_monotone_and_covers() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let c = cdf(&xs, 10);
+        assert_eq!(c.len(), 10);
+        assert!(c.windows(2).all(|w| w[1].0 >= w[0].0 && w[1].1 > w[0].1));
+        assert_eq!(c.last().unwrap().1, 1.0);
+    }
+
+    #[test]
+    fn lstsq_recovers_exact_linear() {
+        // y = 3 + 2a - 0.5b
+        let x: Vec<Vec<f64>> = (0..50)
+            .map(|i| vec![1.0, i as f64, (i * i % 17) as f64])
+            .collect();
+        let y: Vec<f64> = x.iter().map(|r| 3.0 + 2.0 * r[1] - 0.5 * r[2]).collect();
+        let w = lstsq(&x, &y);
+        assert!((w[0] - 3.0).abs() < 1e-6);
+        assert!((w[1] - 2.0).abs() < 1e-6);
+        assert!((w[2] + 0.5).abs() < 1e-6);
+        let pred: Vec<f64> = x
+            .iter()
+            .map(|r| r.iter().zip(&w).map(|(a, b)| a * b).sum())
+            .collect();
+        assert!(mse(&pred, &y) < 1e-12);
+    }
+
+    #[test]
+    fn solve_pivots() {
+        // needs a row swap to avoid zero pivot
+        let a = vec![vec![0.0, 1.0], vec![2.0, 0.0]];
+        let b = vec![3.0, 4.0];
+        let x = solve(a, b);
+        assert!((x[0] - 2.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mape_simple() {
+        assert!((mape(&[110.0], &[100.0]) - 0.1).abs() < 1e-12);
+    }
+}

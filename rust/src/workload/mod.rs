@@ -1,0 +1,9 @@
+//! Request modeling (paper §III-F): request/stage definitions, synthetic
+//! Azure-like traces, reasoning expansion, and arrival processes (the
+//! arrival distributions themselves live in `util::rng::Arrival`).
+
+pub mod request;
+pub mod trace;
+
+pub use request::{KvParams, RagParams, ReqId, Request, Stage};
+pub use trace::{Pipeline, Reasoning, TraceKind, WorkloadSpec};

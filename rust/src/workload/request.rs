@@ -1,0 +1,360 @@
+//! Request model (paper §III-F): a request is a pipeline of stages with
+//! distinct compute/memory demands, plus the per-stage and per-token
+//! timestamps the metrics layer aggregates.
+
+use crate::sim::SimTime;
+
+pub type ReqId = u64;
+
+/// RAG stage parameters (paper §IV-B defaults: IVF-PQ with 4M centroids,
+/// 50 probes, 5K points per probe; 20 docs × 512 tokens retrieved).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RagParams {
+    /// tokens embedded by the encoder (the user query)
+    pub query_tokens: usize,
+    /// documents returned after re-ranking
+    pub docs: usize,
+    /// tokens per document appended to the prompt
+    pub doc_tokens: usize,
+    pub centroids: f64,
+    pub nprobe: usize,
+    pub points_per_probe: usize,
+}
+
+impl Default for RagParams {
+    fn default() -> RagParams {
+        RagParams {
+            query_tokens: 128,
+            docs: 20,
+            doc_tokens: 512,
+            centroids: 4e6,
+            nprobe: 50,
+            points_per_probe: 5000,
+        }
+    }
+}
+
+impl RagParams {
+    /// Context tokens the RAG stage prepends to the prompt.
+    pub fn context_tokens(&self) -> usize {
+        self.docs * self.doc_tokens
+    }
+}
+
+/// KV-cache retrieval stage parameters (§V-A: 3K cached tokens; Fig 15:
+/// 4K short / 24K long).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KvParams {
+    /// past-context tokens whose KV is fetched instead of recomputed
+    pub cached_tokens: usize,
+}
+
+/// One stage of the inference pipeline (Fig 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Stage {
+    /// tokenization/padding on a preprocessing client
+    Preprocess,
+    /// embedding + retrieval + re-rank on a RAG client
+    Rag(RagParams),
+    /// fetch past KV from the memory hierarchy on a KV-retrieval client
+    KvRetrieval(KvParams),
+    /// prompt processing on an LLM client (possibly chunked)
+    Prefill,
+    /// autoregressive generation on an LLM client
+    Decode,
+    /// detokenize + guard-model filtering on a postprocessing client
+    Postprocess,
+}
+
+impl Stage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Preprocess => "preprocess",
+            Stage::Rag(_) => "rag",
+            Stage::KvRetrieval(_) => "kv_retrieval",
+            Stage::Prefill => "prefill",
+            Stage::Decode => "decode",
+            Stage::Postprocess => "postprocess",
+        }
+    }
+}
+
+/// Timestamps for one completed stage (metrics / Chrome tracing).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageRecord {
+    pub stage_idx: usize,
+    pub client: usize,
+    pub start: SimTime,
+    pub end: SimTime,
+}
+
+/// A request flowing through the simulated serving system.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: ReqId,
+    pub model: &'static str,
+    pub arrival: SimTime,
+    /// pipeline definition
+    pub stages: Vec<Stage>,
+    /// index of the stage currently executing / queued
+    pub stage_idx: usize,
+
+    // ---- token accounting -------------------------------------------------
+    /// prompt tokens that must be prefilled (RAG context is added on
+    /// completion of the RAG stage)
+    pub prompt_tokens: usize,
+    /// past tokens whose KV was retrieved (attended over, not recomputed)
+    pub past_tokens: usize,
+    /// decode target per branch
+    pub output_tokens: usize,
+    /// parallel reasoning branches (1 = single-path); prefill KV shared
+    pub branches: usize,
+
+    // ---- runtime state ----------------------------------------------------
+    /// prompt tokens already prefilled (chunked batching progresses this)
+    pub prefilled: usize,
+    /// decode tokens generated per branch
+    pub decoded: usize,
+    /// client currently holding the request
+    pub client: Option<usize>,
+
+    // ---- metrics ----------------------------------------------------------
+    /// when the current stage was accepted by its client (set by the
+    /// coordinator on push; used for stage span records)
+    pub stage_accept: SimTime,
+    pub records: Vec<StageRecord>,
+    pub first_token_time: Option<SimTime>,
+    pub last_token_time: Option<SimTime>,
+    pub finished: Option<SimTime>,
+}
+
+impl Request {
+    pub fn new(
+        id: ReqId,
+        model: &'static str,
+        arrival: SimTime,
+        stages: Vec<Stage>,
+        prompt_tokens: usize,
+        output_tokens: usize,
+    ) -> Request {
+        assert!(!stages.is_empty());
+        assert!(prompt_tokens > 0 && output_tokens > 0);
+        Request {
+            id,
+            model,
+            arrival,
+            stages,
+            stage_idx: 0,
+            prompt_tokens,
+            past_tokens: 0,
+            output_tokens,
+            branches: 1,
+            prefilled: 0,
+            decoded: 0,
+            client: None,
+            stage_accept: SimTime::ZERO,
+            records: Vec::new(),
+            first_token_time: None,
+            last_token_time: None,
+            finished: None,
+        }
+    }
+
+    pub fn stage(&self) -> Stage {
+        self.stages[self.stage_idx]
+    }
+
+    pub fn is_last_stage(&self) -> bool {
+        self.stage_idx + 1 == self.stages.len()
+    }
+
+    /// Advance the pipeline, applying stage side effects (RAG context
+    /// growth). KV-retrieval outcomes are applied by the retrieval client
+    /// via [`Request::apply_kv_retrieval`] because they depend on the
+    /// sampled hit/recompute result. Returns false if that was the final
+    /// stage.
+    pub fn advance_stage(&mut self) -> bool {
+        if let Stage::Rag(p) = self.stage() {
+            self.prompt_tokens += p.context_tokens();
+        }
+        if self.is_last_stage() {
+            return false;
+        }
+        self.stage_idx += 1;
+        true
+    }
+
+    /// Record the KV-retrieval stage outcome: a hit credits the cached
+    /// context as `past_tokens` (attended over, not recomputed); a full
+    /// miss means the context must be *recomputed* — it joins the prompt
+    /// and will be prefilled (paper §III-E.3).
+    pub fn apply_kv_retrieval(&mut self, cached_tokens: usize, hit: bool) {
+        if hit {
+            self.past_tokens += cached_tokens;
+        } else {
+            self.prompt_tokens += cached_tokens;
+        }
+    }
+
+    // ---- scheduler-facing accounting ---------------------------------------
+
+    /// Prompt tokens still to prefill.
+    pub fn prefill_remaining(&self) -> usize {
+        self.prompt_tokens.saturating_sub(self.prefilled)
+    }
+
+    pub fn prefill_complete(&self) -> bool {
+        self.prefill_remaining() == 0
+    }
+
+    /// Decode tokens still to generate (per branch).
+    pub fn decode_remaining(&self) -> usize {
+        self.output_tokens.saturating_sub(self.decoded)
+    }
+
+    pub fn decode_complete(&self) -> bool {
+        self.decode_remaining() == 0
+    }
+
+    /// Sequences this request contributes to a decode batch.
+    pub fn decode_seqs(&self) -> usize {
+        self.branches
+    }
+
+    /// KV-cache tokens currently held for this request: shared prefix
+    /// (past + prefilled prompt) counted once + per-branch decode chains.
+    pub fn kv_tokens(&self) -> f64 {
+        (self.past_tokens + self.prefilled) as f64 + (self.branches * self.decoded) as f64
+    }
+
+    /// KV footprint when decode finishes — used for admission control.
+    pub fn kv_tokens_peak(&self) -> f64 {
+        (self.past_tokens + self.prompt_tokens) as f64
+            + (self.branches * self.output_tokens) as f64
+    }
+
+    /// Total context a decode step attends over, per branch.
+    pub fn decode_ctx(&self) -> f64 {
+        (self.past_tokens + self.prompt_tokens + self.decoded) as f64
+    }
+
+    /// "Work left" metric for Least-Work-Left packing / load routing.
+    pub fn work_left_tokens(&self) -> f64 {
+        self.prefill_remaining() as f64
+            + (self.decode_remaining() * self.branches) as f64
+    }
+
+    // ---- latency metrics ----------------------------------------------------
+
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_time
+            .map(|t| (t - self.arrival).as_secs())
+    }
+
+    /// Time per output token after the first (s/token).
+    pub fn tpot(&self) -> Option<f64> {
+        match (self.first_token_time, self.last_token_time) {
+            (Some(a), Some(b)) if self.decoded > 1 => {
+                Some((b - a).as_secs() / (self.decoded - 1) as f64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn e2e_latency(&self) -> Option<f64> {
+        self.finished.map(|t| (t - self.arrival).as_secs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimTime;
+
+    fn req(stages: Vec<Stage>) -> Request {
+        Request::new(1, "llama3-70b", SimTime::ZERO, stages, 1000, 200)
+    }
+
+    #[test]
+    fn pipeline_advances_with_side_effects() {
+        let mut r = req(vec![
+            Stage::Rag(RagParams::default()),
+            Stage::Prefill,
+            Stage::Decode,
+        ]);
+        assert_eq!(r.stage(), Stage::Rag(RagParams::default()));
+        assert!(r.advance_stage());
+        // RAG added 20 × 512 = 10240 context tokens (Fig 9 setup)
+        assert_eq!(r.prompt_tokens, 1000 + 10_240);
+        assert_eq!(r.stage(), Stage::Prefill);
+        assert!(r.advance_stage());
+        assert_eq!(r.stage(), Stage::Decode);
+        assert!(!r.advance_stage());
+    }
+
+    #[test]
+    fn kv_retrieval_hit_adds_past_tokens() {
+        let mut r = req(vec![
+            Stage::KvRetrieval(KvParams { cached_tokens: 3000 }),
+            Stage::Prefill,
+            Stage::Decode,
+        ]);
+        r.apply_kv_retrieval(3000, true);
+        r.advance_stage();
+        assert_eq!(r.past_tokens, 3000);
+        // prefill unchanged — cached context is NOT recomputed (paper §V-A)
+        assert_eq!(r.prompt_tokens, 1000);
+        assert_eq!(r.decode_ctx(), 4000.0);
+    }
+
+    #[test]
+    fn kv_retrieval_miss_recomputes_context() {
+        let mut r = req(vec![
+            Stage::KvRetrieval(KvParams { cached_tokens: 3000 }),
+            Stage::Prefill,
+            Stage::Decode,
+        ]);
+        r.apply_kv_retrieval(3000, false);
+        assert_eq!(r.past_tokens, 0);
+        assert_eq!(r.prompt_tokens, 4000, "missed context joins the prompt");
+    }
+
+    #[test]
+    fn prefill_and_decode_progress() {
+        let mut r = req(vec![Stage::Prefill, Stage::Decode]);
+        assert_eq!(r.prefill_remaining(), 1000);
+        r.prefilled += 512;
+        assert_eq!(r.prefill_remaining(), 488);
+        assert!(!r.prefill_complete());
+        r.prefilled = 1000;
+        assert!(r.prefill_complete());
+        r.decoded = 200;
+        assert!(r.decode_complete());
+    }
+
+    #[test]
+    fn multipath_reasoning_kv_accounting() {
+        let mut r = req(vec![Stage::Prefill, Stage::Decode]);
+        r.branches = 8;
+        r.prefilled = 1000;
+        r.decoded = 100;
+        // shared prefix once + 8 branches × 100 decode tokens
+        assert_eq!(r.kv_tokens(), 1000.0 + 800.0);
+        assert_eq!(r.kv_tokens_peak(), 1000.0 + 8.0 * 200.0);
+        assert_eq!(r.decode_seqs(), 8);
+        assert_eq!(r.work_left_tokens(), 100.0 * 8.0);
+    }
+
+    #[test]
+    fn latency_metrics() {
+        let mut r = req(vec![Stage::Prefill, Stage::Decode]);
+        assert_eq!(r.ttft(), None);
+        r.first_token_time = Some(SimTime::from_secs(0.5));
+        r.last_token_time = Some(SimTime::from_secs(2.5));
+        r.decoded = 201;
+        r.finished = Some(SimTime::from_secs(3.0));
+        assert!((r.ttft().unwrap() - 0.5).abs() < 1e-12);
+        assert!((r.tpot().unwrap() - 0.01).abs() < 1e-12);
+        assert!((r.e2e_latency().unwrap() - 3.0).abs() < 1e-12);
+    }
+}

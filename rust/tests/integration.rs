@@ -1,0 +1,253 @@
+//! End-to-end integration over the config system, builder, coordinator
+//! and metrics: every batching strategy, every router policy, config
+//! round trips, Chrome-trace export, determinism.
+
+use hermes::config::slo::SloLadder;
+use hermes::config::SimConfig;
+use hermes::coordinator::{LoadMetric, RoutePolicy};
+use hermes::hardware::npu::H100;
+use hermes::metrics::{trace_export, RunMetrics};
+use hermes::scheduler::BatchingKind;
+use hermes::sim::builder::{PerfBackend, PoolSpec, ServingSpec};
+use hermes::sim::driver;
+use hermes::util::json::Json;
+use hermes::workload::trace::{TraceKind, WorkloadSpec};
+
+fn workload(n: usize, rate: f64, seed: u64) -> WorkloadSpec {
+    WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, n, rate).with_seed(seed)
+}
+
+#[test]
+fn every_batching_strategy_completes_the_workload() {
+    let slo = SloLadder::standard();
+    let pools = [
+        PoolSpec::Combined { kind: BatchingKind::Static, n: 2 },
+        PoolSpec::Combined { kind: BatchingKind::Continuous, n: 2 },
+        PoolSpec::Combined { kind: BatchingKind::Chunked { chunk: 256 }, n: 2 },
+        PoolSpec::Combined { kind: BatchingKind::Mixed, n: 2 },
+        PoolSpec::Disaggregated { prefill: 1, decode: 1, local: false },
+        PoolSpec::Disaggregated { prefill: 2, decode: 2, local: true },
+    ];
+    for pool in pools {
+        let spec = ServingSpec::new("llama3-70b", H100, 4, pool).with_perf(PerfBackend::Poly);
+        let m = driver::run(&spec, &workload(40, 4.0, 1), &slo).unwrap();
+        assert_eq!(m.n_serviced, 40, "{}", spec.pool.label());
+        assert_eq!(m.n_failed, 0);
+        assert!(m.ttft.p50 > 0.0 && m.tpot.p50 > 0.0, "{}", spec.pool.label());
+    }
+}
+
+#[test]
+fn every_router_policy_works() {
+    let slo = SloLadder::standard();
+    let policies = [
+        RoutePolicy::RoundRobin,
+        RoutePolicy::LoadBased(LoadMetric::InputLen),
+        RoutePolicy::LoadBased(LoadMetric::OutputLen),
+        RoutePolicy::LoadBased(LoadMetric::KvSize),
+        RoutePolicy::LoadBased(LoadMetric::TokensLeft),
+        RoutePolicy::HeavyLight {
+            metric: LoadMetric::TokensLeft,
+            threshold_tokens: 1024,
+            heavy_frac: 0.5,
+        },
+    ];
+    for policy in policies {
+        let spec = ServingSpec::new(
+            "llama3-70b",
+            H100,
+            4,
+            PoolSpec::Combined { kind: BatchingKind::Continuous, n: 4 },
+        )
+        .with_perf(PerfBackend::Poly)
+        .with_route(policy);
+        let m = driver::run(&spec, &workload(60, 8.0, 2), &slo).unwrap();
+        assert_eq!(m.n_serviced, 60, "{policy:?}");
+    }
+}
+
+#[test]
+fn identical_seeds_identical_metrics() {
+    let slo = SloLadder::standard();
+    let spec = ServingSpec::new(
+        "llama3-70b",
+        H100,
+        8,
+        PoolSpec::Disaggregated { prefill: 2, decode: 2, local: false },
+    )
+    .with_perf(PerfBackend::Poly);
+    let a = driver::run(&spec, &workload(50, 6.0, 7), &slo).unwrap();
+    let b = driver::run(&spec, &workload(50, 6.0, 7), &slo).unwrap();
+    assert_eq!(a.makespan, b.makespan);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.e2e_samples, b.e2e_samples);
+    assert_eq!(a.energy_joules, b.energy_joules);
+}
+
+#[test]
+fn config_json_end_to_end() {
+    let doc = Json::parse(
+        r#"{
+        "model": "llama3-70b", "npu": "h100", "tp": 4,
+        "pool": { "batching": "chunked", "n": 2, "chunk": 512 },
+        "scheduler": { "max_batch_seqs": 64, "max_batch_tokens": 4096,
+                       "packing": "least-work-left" },
+        "router": "load:kv-size",
+        "perf_model": "poly",
+        "workload": { "trace": "azure-code", "n": 30, "rate": 3.0,
+                      "arrival": "normal", "pipeline": "regular" },
+        "seed": 3
+    }"#,
+    )
+    .unwrap();
+    let cfg = SimConfig::from_json(&doc).unwrap();
+    let mut coord = cfg.serving.build().unwrap();
+    coord.inject(cfg.workload.generate(0));
+    coord.run();
+    let m = RunMetrics::collect(&coord, &cfg.slo);
+    assert_eq!(m.n_serviced, 30);
+
+    // metrics JSON round-trips
+    let j = Json::parse(&m.to_json().to_pretty()).unwrap();
+    assert_eq!(j.usize_or("n_serviced", 0), 30);
+}
+
+#[test]
+fn chrome_trace_is_valid_and_complete() {
+    let slo = SloLadder::standard();
+    let spec = ServingSpec::new(
+        "llama3-70b",
+        H100,
+        8,
+        PoolSpec::Disaggregated { prefill: 1, decode: 1, local: false },
+    )
+    .with_perf(PerfBackend::Poly);
+    let mut coord = spec.build().unwrap();
+    coord.inject(workload(10, 4.0, 4).generate(0));
+    coord.run();
+    let _ = RunMetrics::collect(&coord, &slo);
+    let doc = trace_export::chrome_trace(&coord);
+    let text = doc.to_string();
+    let parsed = Json::parse(&text).unwrap();
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    // disaggregated pipeline: ≥2 stage spans + 1 marker per request
+    assert!(events.len() >= 30, "events={}", events.len());
+}
+
+#[test]
+fn multiple_models_served_concurrently() {
+    // The paper's headline: "multiple heterogeneous clients servicing
+    // distinct models simultaneously". Two pools serve two models; the
+    // router must dispatch by request model.
+    use hermes::client::{Client, LlmClient};
+    use hermes::coordinator::{Coordinator, Router};
+    use hermes::hardware::models::{LLAMA3_70B, MISTRAL_7B};
+    use hermes::hardware::roofline::LlmCluster;
+    use hermes::network::Network;
+    use hermes::perfmodel::RooflinePerfModel;
+    use hermes::scheduler::{LlmSched, Packing, SchedConfig};
+
+    let mk = |id: usize, model: hermes::hardware::ModelSpec, tp: usize| -> Box<dyn Client> {
+        let cluster = LlmCluster::new(model, H100, tp);
+        Box::new(LlmClient::new(
+            id,
+            cluster.clone(),
+            LlmSched::new(BatchingKind::Continuous, Packing::Fcfs, SchedConfig::default()),
+            Box::new(RooflinePerfModel::new(cluster)),
+        ))
+    };
+    let clients = vec![
+        mk(0, LLAMA3_70B, 8),
+        mk(1, LLAMA3_70B, 8),
+        mk(2, MISTRAL_7B, 1),
+    ];
+    let mut coord = Coordinator::new(
+        clients,
+        Router::new(RoutePolicy::LoadBased(LoadMetric::TokensLeft)),
+        Network::single_platform(3),
+    );
+    let mut reqs = workload(20, 5.0, 5).generate(0);
+    reqs.extend(
+        WorkloadSpec::new("mistral-7b", TraceKind::AzureConv, 20, 5.0)
+            .with_seed(6)
+            .generate(1000),
+    );
+    coord.inject(reqs);
+    coord.run();
+    assert!(coord.all_serviced());
+    assert_eq!(coord.serviced.len(), 40);
+    // the mistral client served only mistral requests
+    assert!(coord.clients[2].stats().requests_served >= 20);
+    for id in &coord.serviced {
+        let r = &coord.pool[id];
+        assert!(r.decode_complete());
+    }
+}
+
+#[test]
+fn higher_injection_rate_never_reduces_latency() {
+    let slo = SloLadder::standard();
+    let spec = ServingSpec::new(
+        "llama3-70b",
+        H100,
+        8,
+        PoolSpec::Combined { kind: BatchingKind::Continuous, n: 1 },
+    )
+    .with_perf(PerfBackend::Poly);
+    let points =
+        driver::sweep_rates(&spec, &workload(60, 1.0, 11), &slo, &[0.5, 4.0, 32.0]).unwrap();
+    assert!(points[2].metrics.ttft.p99 >= points[0].metrics.ttft.p99 * 0.9);
+    // throughput saturates rather than growing unboundedly
+    assert!(points[2].metrics.throughput_tok_s < points[0].metrics.throughput_tok_s * 100.0);
+}
+
+#[test]
+fn guarded_pipeline_passes_through_prepost_clients() {
+    use hermes::sim::builder::PrePostSpec;
+    let slo = SloLadder::standard();
+    let spec = ServingSpec::new(
+        "llama3-70b",
+        H100,
+        8,
+        PoolSpec::Combined { kind: BatchingKind::Continuous, n: 1 },
+    )
+    .with_perf(PerfBackend::Poly)
+    .with_prepost(PrePostSpec {
+        count: 1,
+        cores: 8,
+        guard_npu: Some(hermes::hardware::npu::A100),
+    });
+    let w = workload(15, 3.0, 12).with_pipeline(hermes::workload::trace::Pipeline::Guarded);
+    let m = driver::run(&spec, &w, &slo).unwrap();
+    assert_eq!(m.n_serviced, 15);
+    // four stages per request → at least 3 inter-stage hops recorded
+    assert!(m.transfers >= 15);
+}
+
+#[test]
+fn shipped_example_configs_parse_and_run() {
+    for entry in std::fs::read_dir("examples/configs").unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let mut cfg = SimConfig::from_file(path.to_str().unwrap())
+            .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        // shrink the workload so the test stays fast, keep everything else
+        cfg.workload.n_requests = cfg.workload.n_requests.min(30);
+        // avoid PJRT setup cost in the test: poly is numerically identical
+        if cfg.serving.perf == hermes::sim::builder::PerfBackend::PjrtMemo {
+            cfg.serving.perf = hermes::sim::builder::PerfBackend::Poly;
+        }
+        let mut coord = cfg.serving.build().unwrap();
+        coord.inject(cfg.workload.generate(0));
+        coord.run();
+        assert!(
+            coord.all_serviced(),
+            "{}: {} of {} serviced",
+            path.display(),
+            coord.serviced.len(),
+            coord.pool.len()
+        );
+    }
+}

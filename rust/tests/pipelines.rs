@@ -1,0 +1,176 @@
+//! Multi-stage pipeline integration (Fig 1's three request shapes):
+//! RAG, KV-retrieval and guarded pipelines flowing through heterogeneous
+//! clients under every batching strategy, with stage-level assertions.
+
+use hermes::config::slo::SloLadder;
+use hermes::hardware::npu::{A100, GRACE_CPU, H100};
+use hermes::memory::storage::{KvScenario, StorageConfig};
+use hermes::metrics::RunMetrics;
+use hermes::scheduler::BatchingKind;
+use hermes::sim::builder::{
+    KvRetrievalSpec, PerfBackend, PoolSpec, RagSpec, ServingSpec,
+};
+use hermes::workload::request::{KvParams, RagParams, Stage};
+use hermes::workload::trace::{Pipeline, TraceKind, WorkloadSpec};
+
+fn base_spec(pool: PoolSpec) -> ServingSpec {
+    ServingSpec::new("llama3-70b", H100, 4, pool).with_perf(PerfBackend::Poly)
+}
+
+fn conv(n: usize, rate: f64) -> WorkloadSpec {
+    WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, n, rate).with_seed(21)
+}
+
+#[test]
+fn rag_pipeline_grows_prompts_before_prefill() {
+    let rag = RagParams { docs: 6, doc_tokens: 500, ..Default::default() };
+    let spec = base_spec(PoolSpec::Combined { kind: BatchingKind::Continuous, n: 2 }).with_rag(
+        RagSpec {
+            count: 1,
+            embed_model: hermes::hardware::models::E5_BASE,
+            embed_npu: A100,
+            retrieval_npu: GRACE_CPU,
+            ivf: Default::default(),
+            max_batch: 0,
+        },
+    );
+    let mut coord = spec.build().unwrap();
+    let w = conv(25, 5.0).with_pipeline(Pipeline::Rag(rag));
+    coord.inject(w.generate(0));
+    coord.run();
+    assert!(coord.all_serviced());
+    for id in &coord.serviced {
+        let r = &coord.pool[id];
+        // every prompt gained the retrieved context
+        assert!(r.prompt_tokens >= 3000, "req {id}: {}", r.prompt_tokens);
+        assert!(r.prefill_complete() && r.decode_complete());
+        // three stage records: rag, prefill+decode (combined), …
+        assert!(r.records.len() >= 2, "req {id}: {:?}", r.records);
+        assert_eq!(r.stages[0], Stage::Rag(rag));
+    }
+}
+
+#[test]
+fn kv_retrieval_hits_skip_prefill_misses_recompute() {
+    for (storage, expect_recompute) in [
+        (StorageConfig::PlatformShared, false),
+        (StorageConfig::Recompute, true),
+    ] {
+        let spec = base_spec(PoolSpec::Combined { kind: BatchingKind::Continuous, n: 2 })
+            .with_kv_retrieval(KvRetrievalSpec {
+                count: 1,
+                storage,
+                scenario: KvScenario::Private,
+                max_batch: 0,
+                ports: 4,
+            });
+        let mut coord = spec.build().unwrap();
+        let w = conv(30, 6.0)
+            .with_pipeline(Pipeline::KvRetrieval(KvParams { cached_tokens: 3000 }));
+        coord.inject(w.generate(0));
+        coord.run();
+        assert!(coord.all_serviced(), "{storage:?}");
+        if expect_recompute {
+            assert_eq!(coord.stats.recomputes, 30, "all misses recompute");
+            for id in &coord.serviced {
+                assert!(coord.pool[id].prompt_tokens > 3000);
+                assert_eq!(coord.pool[id].past_tokens, 0);
+            }
+        } else {
+            // 95% hit tier → most requests carry past context
+            let hits = coord
+                .serviced
+                .iter()
+                .filter(|id| coord.pool[*id].past_tokens == 3000)
+                .count();
+            assert!(hits >= 24, "hits={hits}");
+        }
+    }
+}
+
+#[test]
+fn kv_hits_are_faster_than_recompute_end_to_end() {
+    let run = |storage| {
+        let spec = base_spec(PoolSpec::Combined { kind: BatchingKind::Continuous, n: 2 })
+            .with_kv_retrieval(KvRetrievalSpec {
+                count: 1,
+                storage,
+                scenario: KvScenario::Private,
+                max_batch: 0,
+                ports: 4,
+            });
+        let w = conv(40, 4.0)
+            .with_pipeline(Pipeline::KvRetrieval(KvParams { cached_tokens: 24576 }));
+        hermes::sim::driver::run(&spec, &w, &SloLadder::retrieval())
+            .unwrap()
+            .e2e
+            .p50
+    };
+    let hit_tier = run(StorageConfig::PlatformShared);
+    let recompute = run(StorageConfig::Recompute);
+    // 24K tokens: retrieval (fast tier) must beat recomputation (paper §V-B)
+    assert!(
+        hit_tier < recompute,
+        "24K: platform tier {hit_tier}s should beat recompute {recompute}s"
+    );
+}
+
+#[test]
+fn disaggregated_rag_combo_pipeline() {
+    // RAG + disaggregated prefill/decode: three client kinds cooperating
+    let rag = RagParams { docs: 6, doc_tokens: 500, ..Default::default() };
+    let spec = base_spec(PoolSpec::Disaggregated { prefill: 2, decode: 1, local: false })
+        .with_rag(RagSpec {
+            count: 1,
+            embed_model: hermes::hardware::models::E5_BASE,
+            embed_npu: A100,
+            retrieval_npu: GRACE_CPU,
+            ivf: Default::default(),
+            max_batch: 0,
+        });
+    let mut coord = spec.build().unwrap();
+    coord.inject(conv(20, 4.0).with_pipeline(Pipeline::Rag(rag)).generate(0));
+    coord.run();
+    assert!(coord.all_serviced());
+    // stages hop rag-client → prefill-client → decode-client
+    assert!(coord.stats.transfers >= 40, "transfers={}", coord.stats.transfers);
+    let m = RunMetrics::collect(&coord, &SloLadder::retrieval());
+    assert_eq!(m.n_serviced, 20);
+}
+
+#[test]
+fn reasoning_branches_respect_kv_limits() {
+    let spec = base_spec(PoolSpec::Combined { kind: BatchingKind::Continuous, n: 1 });
+    let w = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 12, 2.0)
+        .with_reasoning(hermes::workload::trace::Reasoning::MultiPath {
+            scale: 4.0,
+            branches: 8,
+        })
+        .with_seed(23);
+    let mut coord = spec.build().unwrap();
+    coord.inject(w.generate(0));
+    coord.run();
+    assert!(coord.all_serviced());
+    for id in &coord.serviced {
+        let r = &coord.pool[id];
+        assert_eq!(r.branches, 8);
+        assert!(r.decode_complete());
+        // KV peak accounted all branches
+        assert!(r.kv_tokens_peak() >= 8.0 * r.output_tokens as f64);
+    }
+}
+
+#[test]
+fn bursty_arrivals_are_absorbed() {
+    let spec = base_spec(PoolSpec::Combined { kind: BatchingKind::Chunked { chunk: 512 }, n: 2 });
+    let w = conv(60, 6.0).with_arrival(hermes::util::rng::Arrival::Bursty {
+        rate: 12.0,
+        burst_mult: 5.0,
+        calm_s: 5.0,
+        burst_s: 1.0,
+    });
+    let m = hermes::sim::driver::run(&spec, &w, &SloLadder::standard()).unwrap();
+    assert_eq!(m.n_serviced, 60);
+    // bursts inflate tail latency beyond the median
+    assert!(m.ttft.p99 > m.ttft.p50);
+}

@@ -1,0 +1,136 @@
+//! Three-layer integration: the AOT-compiled Pallas/JAX predictor loaded
+//! through PJRT must agree with the native rust evaluation of the same
+//! coefficients (f32-rounding tolerance), and both must track the
+//! roofline ground truth the coefficients were fitted on.
+//!
+//! Requires `make artifacts` (the Makefile runs it before `cargo test`).
+
+use hermes::hardware::models::LLAMA3_70B;
+use hermes::hardware::npu::H100;
+use hermes::hardware::roofline::LlmCluster;
+use hermes::perfmodel::pjrt::PjrtPerfModel;
+use hermes::perfmodel::poly::PolyPerfModel;
+use hermes::perfmodel::{PerfModel, RooflinePerfModel, StepFeatures};
+use hermes::runtime::ArtifactBundle;
+
+const KEY: &str = "llama3-70b@h100/tp8";
+
+fn artifacts_dir() -> std::path::PathBuf {
+    ArtifactBundle::default_dir()
+}
+
+fn feature_grid() -> Vec<StepFeatures> {
+    let mut feats = Vec::new();
+    // decode-only grid
+    for b in [1usize, 4, 16, 64, 256] {
+        for ctx in [128.0, 1024.0, 4096.0] {
+            feats.push(StepFeatures::decode(b, b as f64 * ctx));
+        }
+    }
+    // prefill-only grid
+    for new in [128.0, 512.0, 2048.0, 8192.0] {
+        for past in [0.0, 2048.0] {
+            feats.push(StepFeatures::prefill(new, past, 2));
+        }
+    }
+    // mixed steps (chunked batching shape)
+    for new in [256.0, 512.0] {
+        for b in [8usize, 32] {
+            feats.push(StepFeatures {
+                pf_new: new,
+                pf_past: 1024.0,
+                pf_items: 1.0,
+                dec_batch: b as f64,
+                dec_kv: b as f64 * 2048.0,
+            });
+        }
+    }
+    // padding / empty row
+    feats.push(StepFeatures::default());
+    feats
+}
+
+#[test]
+fn pjrt_matches_native_poly() {
+    let dir = artifacts_dir();
+    let bundle = ArtifactBundle::open(&dir).expect("run `make artifacts` first");
+    let mut pjrt = PjrtPerfModel::load(&dir, KEY).unwrap();
+    let mut poly = PolyPerfModel::from_coefficients(&bundle.coefficients, KEY).unwrap();
+
+    let feats = feature_grid();
+    let a = pjrt.predict_batch(&feats);
+    let b = poly.predict_batch(&feats);
+    for (i, (pa, pb)) in a.iter().zip(&b).enumerate() {
+        for (x, y, head) in [
+            (pa.t_prefill, pb.t_prefill, "pf"),
+            (pa.t_decode, pb.t_decode, "dec"),
+            (pa.t_step, pb.t_step, "step"),
+        ] {
+            let tol = 1e-5 * y.abs().max(1e-3);
+            assert!(
+                (x - y).abs() <= tol,
+                "row {i} head {head}: pjrt={x} native={y} (feats {:?})",
+                feats[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_tracks_roofline_ground_truth() {
+    let dir = artifacts_dir();
+    let mut pjrt = PjrtPerfModel::load(&dir, KEY).unwrap();
+    let mut roof = RooflinePerfModel::new(LlmCluster::new(LLAMA3_70B, H100, 8));
+
+    // pure decode and pure prefill within the fitted range: <15% error
+    let mut feats = Vec::new();
+    for b in [1usize, 16, 128] {
+        feats.push(StepFeatures::decode(b, b as f64 * 2048.0));
+    }
+    for new in [256.0, 2048.0, 8192.0] {
+        feats.push(StepFeatures::prefill(new, 0.0, 1));
+    }
+    let pred = pjrt.predict_batch(&feats);
+    let truth = roof.predict_batch(&feats);
+    for (i, (p, t)) in pred.iter().zip(&truth).enumerate() {
+        let rel = (p.t_step - t.t_step).abs() / t.t_step;
+        assert!(
+            rel < 0.15,
+            "row {i}: pred={} truth={} rel={rel} ({:?})",
+            p.t_step,
+            t.t_step,
+            feats[i]
+        );
+    }
+}
+
+#[test]
+fn all_manifest_variants_load_and_run() {
+    let dir = artifacts_dir();
+    let bundle = ArtifactBundle::open(&dir).unwrap();
+    let keys = bundle.variant_keys();
+    assert!(keys.len() >= 3, "expected >=3 AOT variants, got {keys:?}");
+    for key in keys {
+        let mut m = PjrtPerfModel::load(&dir, &key).unwrap();
+        let p = m.predict(StepFeatures::decode(8, 8.0 * 1024.0));
+        assert!(
+            p.t_step > 0.0 && p.t_step < 1.0,
+            "{key}: implausible decode step {p:?}"
+        );
+    }
+}
+
+#[test]
+fn batches_larger_than_exe_rows_chunk_correctly() {
+    let dir = artifacts_dir();
+    let mut pjrt = PjrtPerfModel::load(&dir, KEY).unwrap();
+    let rows = pjrt.rows();
+    let feats: Vec<StepFeatures> = (0..rows * 2 + 7)
+        .map(|i| StepFeatures::decode(1 + i % 32, ((1 + i % 32) * 1024) as f64))
+        .collect();
+    let out = pjrt.predict_batch(&feats);
+    assert_eq!(out.len(), feats.len());
+    // same features → same prediction regardless of chunk position
+    let single = pjrt.predict(feats[rows + 3]);
+    assert_eq!(out[rows + 3], single);
+}

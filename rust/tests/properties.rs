@@ -1,0 +1,314 @@
+//! Property-based tests over randomized serving configurations: request
+//! conservation, KV-capacity safety, clock monotonicity (implied by
+//! completion), metric sanity, and router balance — the coordinator
+//! invariants the paper's Algorithm 1 must uphold for ANY configuration.
+
+use hermes::config::slo::SloLadder;
+use hermes::coordinator::{LoadMetric, RoutePolicy};
+use hermes::hardware::npu::H100;
+use hermes::metrics::RunMetrics;
+use hermes::prop_assert;
+use hermes::scheduler::BatchingKind;
+use hermes::sim::builder::{PerfBackend, PoolSpec, ServingSpec};
+use hermes::util::prop::check;
+use hermes::util::rng::Pcg;
+use hermes::workload::trace::{Pipeline, Reasoning, TraceKind, WorkloadSpec};
+
+/// Draw a random but valid serving spec + workload.
+fn random_case(rng: &mut Pcg) -> (ServingSpec, WorkloadSpec) {
+    let tp = *rng.choose(&[2usize, 4, 8]);
+    let n = rng.range_usize(1, 5);
+    let pool = match rng.below(6) {
+        0 => PoolSpec::Combined { kind: BatchingKind::Static, n },
+        1 => PoolSpec::Combined { kind: BatchingKind::Continuous, n },
+        2 => PoolSpec::Combined {
+            kind: BatchingKind::Chunked { chunk: *rng.choose(&[128usize, 512, 2048]) },
+            n,
+        },
+        3 => PoolSpec::Combined { kind: BatchingKind::Mixed, n },
+        4 => PoolSpec::Disaggregated {
+            prefill: rng.range_usize(1, 4),
+            decode: rng.range_usize(1, 4),
+            local: false,
+        },
+        _ => PoolSpec::Disaggregated {
+            prefill: rng.range_usize(1, 3),
+            decode: rng.range_usize(1, 3),
+            local: true,
+        },
+    };
+    let route = match rng.below(3) {
+        0 => RoutePolicy::RoundRobin,
+        1 => RoutePolicy::LoadBased(*rng.choose(&[
+            LoadMetric::InputLen,
+            LoadMetric::OutputLen,
+            LoadMetric::KvSize,
+            LoadMetric::TokensLeft,
+        ])),
+        _ => RoutePolicy::HeavyLight {
+            metric: LoadMetric::TokensLeft,
+            threshold_tokens: 1024,
+            heavy_frac: 0.5,
+        },
+    };
+    let spec = ServingSpec::new("llama3-70b", H100, tp, pool)
+        .with_perf(PerfBackend::Poly)
+        .with_route(route)
+        .with_seed(rng.next_u64());
+
+    let trace = if rng.chance(0.5) { TraceKind::AzureConv } else { TraceKind::AzureCode };
+    let reasoning = if rng.chance(0.2) {
+        Reasoning::MultiPath { scale: 2.0, branches: rng.range_usize(2, 5) }
+    } else {
+        Reasoning::None
+    };
+    let n_req = rng.range_usize(5, 30);
+    let rate = rng.range_f64(0.5, 10.0);
+    let workload = WorkloadSpec::new("llama3-70b", trace, n_req, rate)
+        .with_pipeline(Pipeline::Regular)
+        .with_reasoning(reasoning)
+        .with_seed(rng.next_u64());
+    (spec, workload)
+}
+
+#[test]
+fn conservation_every_request_serviced_exactly_once() {
+    check(0xC0DE, 25, |rng| {
+        let (spec, workload) = random_case(rng);
+        let mut coord = spec.build().map_err(|e| e.to_string())?;
+        let reqs = workload.generate(0);
+        let n = reqs.len();
+        coord.inject(reqs);
+        coord.run();
+        prop_assert!(
+            coord.serviced.len() + coord.failed.len() == n,
+            "lost requests: serviced {} + failed {} != {n} ({})",
+            coord.serviced.len(),
+            coord.failed.len(),
+            spec.pool.label()
+        );
+        // no duplicates in serviced
+        let mut ids: Vec<u64> = coord.serviced.clone();
+        ids.sort();
+        ids.dedup();
+        prop_assert!(ids.len() == coord.serviced.len(), "duplicate completions");
+        Ok(())
+    });
+}
+
+#[test]
+fn latency_metrics_are_internally_consistent() {
+    check(0xFACE, 15, |rng| {
+        let (spec, workload) = random_case(rng);
+        let mut coord = spec.build().map_err(|e| e.to_string())?;
+        coord.inject(workload.generate(0));
+        coord.run();
+        let m = RunMetrics::collect(&coord, &SloLadder::standard());
+        for id in &coord.serviced {
+            let r = &coord.pool[id];
+            let ttft = r.ttft().ok_or("missing ttft")?;
+            let e2e = r.e2e_latency().ok_or("missing e2e")?;
+            prop_assert!(ttft >= 0.0, "negative ttft");
+            prop_assert!(e2e + 1e-9 >= ttft, "e2e {e2e} < ttft {ttft}");
+            if let Some(tpot) = r.tpot() {
+                prop_assert!(tpot >= 0.0, "negative tpot");
+            }
+            prop_assert!(r.decoded >= r.output_tokens, "incomplete decode");
+        }
+        prop_assert!(m.e2e.p99 + 1e-12 >= m.e2e.p50, "p99 < p50");
+        prop_assert!(m.makespan > 0.0, "zero makespan");
+        prop_assert!(m.energy_joules > 0.0, "zero energy");
+        Ok(())
+    });
+}
+
+#[test]
+fn kv_capacity_never_exceeded() {
+    // stress admission with reasoning workloads against small KV budgets
+    check(0xCAFE, 12, |rng| {
+        let tp = *rng.choose(&[2usize, 4]);
+        let spec = ServingSpec::new(
+            "llama3-70b",
+            H100,
+            tp,
+            PoolSpec::Combined { kind: BatchingKind::Continuous, n: 1 },
+        )
+        .with_perf(PerfBackend::Poly);
+        let workload = WorkloadSpec::new(
+            "llama3-70b",
+            TraceKind::AzureConv,
+            rng.range_usize(5, 15),
+            rng.range_f64(1.0, 4.0),
+        )
+        .with_reasoning(Reasoning::MultiPath { scale: 8.0, branches: 8 })
+        .with_seed(rng.next_u64());
+        let mut coord = spec.build().map_err(|e| e.to_string())?;
+        coord.inject(workload.generate(0));
+        coord.run();
+        // finishing at all (no deadlock/panic) plus conservation is the
+        // observable invariant; capacity breaches would panic in debug
+        prop_assert!(coord.all_serviced(), "deadlocked under KV pressure");
+        Ok(())
+    });
+}
+
+#[test]
+fn round_robin_balances_identical_clients() {
+    check(0xBA1A, 10, |rng| {
+        let n = rng.range_usize(2, 6);
+        let spec = ServingSpec::new(
+            "llama3-70b",
+            H100,
+            8,
+            PoolSpec::Combined { kind: BatchingKind::Continuous, n },
+        )
+        .with_perf(PerfBackend::Poly)
+        .with_route(RoutePolicy::RoundRobin);
+        let n_req = n * rng.range_usize(8, 15);
+        let workload = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, n_req, 2.0)
+            .with_seed(rng.next_u64());
+        let mut coord = spec.build().map_err(|e| e.to_string())?;
+        coord.inject(workload.generate(0));
+        coord.run();
+        let served: Vec<u64> = coord.clients.iter().map(|c| c.stats().requests_served).collect();
+        let per = n_req as f64 / n as f64;
+        for (i, s) in served.iter().enumerate() {
+            prop_assert!(
+                (*s as f64 - per).abs() <= 1.0,
+                "client {i} served {s}, expected ~{per} (round robin)"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn energy_scales_with_work() {
+    check(0xE4E4, 8, |rng| {
+        let spec = ServingSpec::new(
+            "llama3-70b",
+            H100,
+            8,
+            PoolSpec::Combined { kind: BatchingKind::Continuous, n: 2 },
+        )
+        .with_perf(PerfBackend::Poly);
+        let seed = rng.next_u64();
+        let small = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 10, 4.0).with_seed(seed);
+        let big = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 40, 4.0).with_seed(seed);
+        let slo = SloLadder::standard();
+        let ms = hermes::sim::driver::run(&spec, &small, &slo).map_err(|e| e.to_string())?;
+        let mb = hermes::sim::driver::run(&spec, &big, &slo).map_err(|e| e.to_string())?;
+        prop_assert!(
+            mb.energy_joules > ms.energy_joules,
+            "4x work should cost more energy ({} vs {})",
+            mb.energy_joules,
+            ms.energy_joules
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn json_roundtrips_arbitrary_documents() {
+    use hermes::util::json::Json;
+    fn gen(rng: &mut Pcg, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.normal() * 1e6).round() / 64.0),
+            3 => {
+                let n = rng.range_usize(0, 12);
+                Json::Str(
+                    (0..n)
+                        .map(|_| {
+                            *rng.choose(&['a', 'ß', '"', '\\', '\n', '\t', '雪', 'z', ' '])
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.range_usize(0, 5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => {
+                let mut o = Json::obj();
+                for i in 0..rng.range_usize(0, 5) {
+                    o.set(&format!("k{i}"), gen(rng, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    check(0x7501, 200, |rng| {
+        let doc = gen(rng, 3);
+        let compact = Json::parse(&doc.to_string()).map_err(|e| e.to_string())?;
+        let pretty = Json::parse(&doc.to_pretty()).map_err(|e| e.to_string())?;
+        prop_assert!(compact == doc, "compact mismatch: {}", doc.to_string());
+        prop_assert!(pretty == doc, "pretty mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn chunked_scheduler_never_exceeds_token_budget() {
+    use hermes::memory::hierarchy::KvManager;
+    use hermes::scheduler::{LlmSched, Packing, RequestPool, SchedConfig};
+    use hermes::workload::request::{Request, Stage};
+
+    check(0xC4D6, 30, |rng| {
+        let chunk = *rng.choose(&[64usize, 256, 512, 2048]);
+        let mut sched = LlmSched::new(
+            BatchingKind::Chunked { chunk },
+            Packing::Fcfs,
+            SchedConfig::default(),
+        );
+        let mut pool = RequestPool::new();
+        let mut kv = KvManager::new(1e9);
+        for id in 0..rng.range_usize(1, 12) as u64 {
+            let r = Request::new(
+                id,
+                "llama3-70b",
+                hermes::sim::SimTime::from_secs(id as f64 * 0.001),
+                vec![Stage::Prefill, Stage::Decode],
+                rng.range_usize(16, 6000),
+                rng.range_usize(1, 64),
+            );
+            sched.enqueue(id);
+            pool.insert(id, r);
+        }
+        // drive to completion, checking the budget every step
+        for _ in 0..200_000 {
+            let plan = match sched.plan(&pool, &mut kv) {
+                Some(p) => p,
+                None => break,
+            };
+            let dec_tokens: usize =
+                plan.decode.iter().map(|id| pool[id].decode_seqs()).sum();
+            prop_assert!(
+                plan.prefill_tokens() + dec_tokens <= chunk.max(dec_tokens),
+                "chunk budget exceeded: {} prefill + {} decode > {}",
+                plan.prefill_tokens(),
+                dec_tokens,
+                chunk
+            );
+            for (id, n) in &plan.prefill {
+                pool.get_mut(id).unwrap().prefilled += n;
+            }
+            let mut done = Vec::new();
+            for id in &plan.decode {
+                let r = pool.get_mut(id).unwrap();
+                r.decoded += 1;
+                if r.decode_complete() {
+                    done.push(*id);
+                }
+            }
+            for id in done {
+                if let Some(res) = sched.remove(id) {
+                    kv.release(res);
+                }
+            }
+        }
+        prop_assert!(
+            pool.values().all(|r| r.decode_complete()),
+            "chunked scheduler failed to drain"
+        );
+        Ok(())
+    });
+}
