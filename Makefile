@@ -1,0 +1,27 @@
+# HERMES build shortcuts. The Rust side is fully offline; `artifacts`
+# needs a Python environment with JAX (see python/compile/).
+
+.PHONY: build test bench doc clippy artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# paper-figure regenerators at CI scale; HERMES_FULL=1 for paper scale
+bench:
+	cargo bench
+
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+clippy:
+	cargo clippy --all-targets -- -D warnings
+
+# Fit the step-time regression and AOT-compile the Pallas/JAX predictor
+# into artifacts/ (manifest.json, coefficients.json, *.hlo.txt). The
+# simulator falls back to the analytical roofline when this has not run.
+artifacts:
+	python3 python/compile/fit.py
+	python3 python/compile/aot.py

@@ -1,11 +1,13 @@
-//! LLM inference client (paper §III-C.4): an `LlmSched` batching policy
-//! in front of a hardware cluster, with step latency priced by the
-//! `PerfModel` (AOT Pallas predictor / native poly / roofline).
+//! LLM inference client (paper §III-C.4): an `LlmSched` with a pluggable
+//! [`BatchPolicy`](crate::scheduler::BatchPolicy) in front of a hardware
+//! cluster, with step latency priced by the `PerfModel` (AOT Pallas
+//! predictor / native poly / roofline).
 //!
 //! A *combined* client serves both prefill and decode (continuous /
 //! chunked / static / mixed batching). Disaggregated serving instantiates
-//! prefill-role and decode-role clients; the coordinator moves the KV
-//! cache between them.
+//! prefill-role and decode-role clients; the roles are derived from the
+//! policy's `serves_prefill`/`serves_decode` answers and the coordinator
+//! moves the KV cache between them.
 
 use crate::client::{Client, ClientLoad, ClientStats, StepOutcome};
 use crate::hardware::power;
@@ -67,10 +69,6 @@ impl LlmClient {
     pub fn is_busy(&self) -> bool {
         self.current.is_some()
     }
-
-    fn role(&self) -> crate::scheduler::BatchingKind {
-        self.sched.kind
-    }
 }
 
 impl Client for LlmClient {
@@ -79,9 +77,9 @@ impl Client for LlmClient {
     }
 
     fn kind_name(&self) -> &'static str {
-        match self.role() {
-            crate::scheduler::BatchingKind::PrefillOnly => "llm-prefill",
-            crate::scheduler::BatchingKind::DecodeOnly => "llm-decode",
+        match (self.sched.serves_prefill(), self.sched.serves_decode()) {
+            (true, false) => "llm-prefill",
+            (false, true) => "llm-decode",
             _ => "llm",
         }
     }
@@ -94,10 +92,9 @@ impl Client for LlmClient {
         if model != self.cluster.model.name {
             return false;
         }
-        match (stage, self.role()) {
-            (Stage::Prefill, crate::scheduler::BatchingKind::DecodeOnly) => false,
-            (Stage::Decode, crate::scheduler::BatchingKind::PrefillOnly) => false,
-            (Stage::Prefill | Stage::Decode, _) => true,
+        match stage {
+            Stage::Prefill => self.sched.serves_prefill(),
+            Stage::Decode => self.sched.serves_decode(),
             _ => false,
         }
     }
@@ -169,20 +166,17 @@ impl Client for LlmClient {
                     r.decoded = 1;
                     self.stats.decode_tokens += r.decode_seqs() as u64;
                 }
-                match self.role() {
-                    crate::scheduler::BatchingKind::PrefillOnly => {
-                        // hand off to a decode client
-                        out.stage_done.push(*id);
+                if !self.sched.serves_decode() {
+                    // prefill-role client: hand off to a decode client
+                    out.stage_done.push(*id);
+                } else {
+                    // combined client: Prefill stage → Decode stage in
+                    // place (no coordinator round-trip)
+                    if r.stage() == Stage::Prefill && !r.is_last_stage() {
+                        r.advance_stage();
                     }
-                    _ => {
-                        // combined client: Prefill stage → Decode stage in
-                        // place (no coordinator round-trip)
-                        if r.stage() == Stage::Prefill && !r.is_last_stage() {
-                            r.advance_stage();
-                        }
-                        if r.decode_complete() {
-                            out.stage_done.push(*id); // 1-token outputs
-                        }
+                    if r.decode_complete() {
+                        out.stage_done.push(*id); // 1-token outputs
                     }
                 }
             }

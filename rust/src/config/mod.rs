@@ -1,6 +1,14 @@
-//! Configuration system: JSON documents → typed simulation specs.
+//! Configuration system (paper §III-A "declarative front-end"): JSON
+//! documents → typed simulation specs.
 //!
-//! Example (see `examples/configs/` for more):
+//! The parsing helpers ([`parse_pool`], [`parse_serving`],
+//! [`parse_workload`], [`parse_router`], [`parse_storage`],
+//! [`parse_granularity`], [`parse_slo`]) are public because the scenario
+//! registry ([`crate::scenario`]) builds on the same schema: a scenario
+//! file is a config document plus a batching roster, a rate sweep and
+//! scale knobs (see `docs/scenarios.md`).
+//!
+//! Example (see `scenarios/` for full scenario files):
 //! ```json
 //! {
 //!   "model": "llama3-70b", "npu": "h100", "tp": 2,
@@ -24,6 +32,7 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::{LoadMetric, RoutePolicy};
 use crate::hardware::models;
 use crate::memory::storage::{KvScenario, StorageConfig};
+use crate::network::Granularity;
 use crate::scheduler::{BatchingKind, Packing, SchedConfig};
 use crate::sim::builder::{
     npu_by_name, KvRetrievalSpec, NetSpec, PerfBackend, PoolSpec, PrePostSpec, RagSpec,
@@ -52,100 +61,16 @@ impl SimConfig {
     }
 
     pub fn from_json(doc: &Json) -> Result<SimConfig> {
-        let model_name = doc.str_or("model", "llama3-70b").to_string();
-        let model_spec =
-            models::model(&model_name).with_context(|| format!("unknown model {model_name}"))?;
-        let model: &'static str = model_spec.name;
-        let npu = npu_by_name(doc.str_or("npu", "h100"))?;
-        let tp = doc.usize_or("tp", 8);
-
-        let pool = parse_pool(doc.get("pool"))?;
-        let mut serving = ServingSpec::new(model, npu, tp, pool);
-
-        if let Some(s) = doc.get("scheduler") {
-            serving.sched = SchedConfig {
-                max_batch_seqs: s.usize_or("max_batch_seqs", 256),
-                max_batch_tokens: s.usize_or("max_batch_tokens", 8192),
-            };
-            serving.packing = match s.str_or("packing", "fcfs") {
-                "fcfs" => Packing::Fcfs,
-                "least-work-left" | "lwl" => Packing::LeastWorkLeft,
-                other => bail!("unknown packing '{other}'"),
-            };
-        }
-
-        serving.route = parse_router(doc.str_or("router", "load:tokens-left"))?;
-        serving.perf = match doc.str_or("perf_model", "poly") {
-            "roofline" => PerfBackend::Roofline,
-            "poly" => PerfBackend::Poly,
-            "pjrt" => PerfBackend::Pjrt,
-            "pjrt-memo" => PerfBackend::PjrtMemo,
-            other => bail!("unknown perf_model '{other}'"),
-        };
-
-        if let Some(n) = doc.get("network") {
-            serving.net = NetSpec::Hierarchy {
-                per_platform: n.usize_or("per_platform", 4),
-                per_rack: n.usize_or("per_rack", 16),
-            };
-        }
-
-        if let Some(r) = doc.get("rag_clients") {
-            serving.rag = Some(RagSpec {
-                count: r.usize_or("count", 1),
-                embed_model: models::model(r.str_or("embed_model", "e5-base"))
-                    .context("unknown embed model")?,
-                embed_npu: npu_by_name(r.str_or("embed_npu", "grace-cpu"))?,
-                retrieval_npu: npu_by_name(r.str_or("retrieval_npu", "grace-cpu"))?,
-                ivf: Default::default(),
-                max_batch: r.usize_or("max_batch", 0),
-            });
-        }
-
-        if let Some(k) = doc.get("kv_clients") {
-            serving.kv_retrieval = Some(KvRetrievalSpec {
-                count: k.usize_or("count", 1),
-                storage: parse_storage(k.str_or("storage", "platform"))?,
-                scenario: match k.str_or("scenario", "private") {
-                    "private" => KvScenario::Private,
-                    "shared" => KvScenario::Shared,
-                    other => bail!("unknown scenario '{other}'"),
-                },
-                max_batch: k.usize_or("max_batch", 0),
-                ports: k.usize_or("ports", 1),
-            });
-        }
-
-        if let Some(p) = doc.get("prepost_clients") {
-            serving.prepost = Some(PrePostSpec {
-                count: p.usize_or("count", 1),
-                cores: p.usize_or("cores", 16),
-                guard_npu: p
-                    .get("guard_npu")
-                    .and_then(Json::as_str)
-                    .map(npu_by_name)
-                    .transpose()?,
-            });
-        }
-
-        serving.seed = doc.f64_or("seed", 0.0) as u64;
+        let pool = parse_pool(doc.get("pool").context("config needs 'pool'")?)?;
+        let serving = parse_serving(doc, pool)?;
 
         let workload = parse_workload(
-            model,
+            serving.model,
             doc.get("workload").context("config needs 'workload'")?,
             serving.seed,
         )?;
 
-        let slo = match doc.str_or("slo", "auto") {
-            "standard" => SloLadder::standard(),
-            "retrieval" => SloLadder::retrieval(),
-            // auto: retrieval baseline when the pipeline has RAG/KV stages
-            "auto" => match workload.pipeline {
-                Pipeline::Rag(_) | Pipeline::KvRetrieval(_) => SloLadder::retrieval(),
-                _ => SloLadder::standard(),
-            },
-            other => bail!("unknown slo '{other}'"),
-        };
+        let slo = parse_slo(doc.str_or("slo", "auto"), &workload.pipeline)?;
 
         Ok(SimConfig {
             serving,
@@ -155,8 +80,101 @@ impl SimConfig {
     }
 }
 
-fn parse_pool(j: Option<&Json>) -> Result<PoolSpec> {
-    let j = j.context("config needs 'pool'")?;
+/// Parse everything about the serving system except the workload: model,
+/// hardware, scheduler, router, perf backend, network, auxiliary
+/// clients, granularity and seed. The LLM `pool` is passed in because
+/// scenario files derive it from a batching roster rather than a single
+/// `pool` object.
+pub fn parse_serving(doc: &Json, pool: PoolSpec) -> Result<ServingSpec> {
+    let model_name = doc.str_or("model", "llama3-70b").to_string();
+    let model_spec =
+        models::model(&model_name).with_context(|| format!("unknown model {model_name}"))?;
+    let model: &'static str = model_spec.name;
+    let npu = npu_by_name(doc.str_or("npu", "h100"))?;
+    let tp = doc.usize_or("tp", 8);
+
+    let llm_clients = pool.n_clients();
+    let mut serving = ServingSpec::new(model, npu, tp, pool);
+
+    if let Some(s) = doc.get("scheduler") {
+        serving.sched = SchedConfig {
+            max_batch_seqs: s.usize_or("max_batch_seqs", 256),
+            max_batch_tokens: s.usize_or("max_batch_tokens", 8192),
+        };
+        serving.packing = parse_packing(s.str_or("packing", "fcfs"))?;
+    }
+
+    serving.route = parse_router(doc.str_or("router", "load:tokens-left"))?;
+    serving.perf = parse_perf_backend(doc.str_or("perf_model", "poly"))?;
+
+    if let Some(n) = doc.get("network") {
+        serving.net = NetSpec::Hierarchy {
+            per_platform: n.usize_or("per_platform", 4),
+            per_rack: n.usize_or("per_rack", 16),
+        };
+    }
+
+    if let Some(g) = doc.get("granularity").and_then(Json::as_str) {
+        serving.granularity = parse_granularity(g)?;
+    }
+
+    if let Some(r) = doc.get("rag_clients") {
+        serving.rag = Some(RagSpec {
+            count: aux_count(r, llm_clients),
+            embed_model: models::model(r.str_or("embed_model", "e5-base"))
+                .context("unknown embed model")?,
+            embed_npu: npu_by_name(r.str_or("embed_npu", "grace-cpu"))?,
+            retrieval_npu: npu_by_name(r.str_or("retrieval_npu", "grace-cpu"))?,
+            ivf: Default::default(),
+            max_batch: r.usize_or("max_batch", 0),
+        });
+    }
+
+    if let Some(k) = doc.get("kv_clients") {
+        serving.kv_retrieval = Some(KvRetrievalSpec {
+            count: aux_count(k, llm_clients),
+            storage: parse_storage(k.str_or("storage", "platform"))?,
+            scenario: match k.str_or("scenario", "private") {
+                "private" => KvScenario::Private,
+                "shared" => KvScenario::Shared,
+                other => bail!("unknown scenario '{other}'"),
+            },
+            max_batch: k.usize_or("max_batch", 0),
+            ports: k.usize_or("ports", 1),
+        });
+    }
+
+    if let Some(p) = doc.get("prepost_clients") {
+        serving.prepost = Some(PrePostSpec {
+            count: aux_count(p, llm_clients),
+            cores: p.usize_or("cores", 16),
+            guard_npu: p
+                .get("guard_npu")
+                .and_then(Json::as_str)
+                .map(npu_by_name)
+                .transpose()?,
+        });
+    }
+
+    serving.seed = doc.f64_or("seed", 0.0) as u64;
+    Ok(serving)
+}
+
+/// Auxiliary-client count: either a fixed `count` or `per_llm: N`
+/// (one auxiliary client per N LLM clients, at least one) so scenario
+/// files scale their RAG/KV tiers with the swept pool size.
+fn aux_count(block: &Json, llm_clients: usize) -> usize {
+    match block.get("per_llm").and_then(Json::as_usize) {
+        Some(per) => (llm_clients / per.max(1)).max(1),
+        None => block.usize_or("count", 1),
+    }
+}
+
+/// Parse a `pool` object: `{"batching": "...", ...}`. Accepted forms:
+/// `static` / `continuous` / `mixed` / `chunked` (+`chunk`) with `n`
+/// clients, `per-client` with a `kinds` array, and
+/// `disaggregated[-local|-global]` with `prefill`/`decode` counts.
+pub fn parse_pool(j: &Json) -> Result<PoolSpec> {
     let batching = j.str_or("batching", "continuous");
     Ok(match batching {
         "static" => PoolSpec::Combined {
@@ -177,6 +195,20 @@ fn parse_pool(j: Option<&Json>) -> Result<PoolSpec> {
             kind: BatchingKind::Mixed,
             n: j.usize_or("n", 1),
         },
+        "per-client" => {
+            let kinds = j
+                .get("kinds")
+                .and_then(Json::as_arr)
+                .context("per-client pool needs a 'kinds' array")?
+                .iter()
+                .map(|k| {
+                    k.as_str()
+                        .context("per-client 'kinds' entries must be strings")
+                        .and_then(parse_batching_kind)
+                })
+                .collect::<Result<Vec<BatchingKind>>>()?;
+            PoolSpec::PerClient { kinds }
+        }
         "disaggregated" | "disaggregated-global" => PoolSpec::Disaggregated {
             prefill: j.usize_or("prefill", 1),
             decode: j.usize_or("decode", 1),
@@ -191,7 +223,53 @@ fn parse_pool(j: Option<&Json>) -> Result<PoolSpec> {
     })
 }
 
-fn parse_router(s: &str) -> Result<RoutePolicy> {
+/// Parse a combined-client batching kind from its string form:
+/// `static`, `continuous`, `mixed`, `chunked` or `chunked:<budget>`,
+/// `prefill-only`, `decode-only`.
+pub fn parse_batching_kind(s: &str) -> Result<BatchingKind> {
+    Ok(match s {
+        "static" => BatchingKind::Static,
+        "continuous" => BatchingKind::Continuous,
+        "mixed" => BatchingKind::Mixed,
+        "chunked" => BatchingKind::Chunked { chunk: 512 },
+        "prefill-only" => BatchingKind::PrefillOnly,
+        "decode-only" => BatchingKind::DecodeOnly,
+        s if s.starts_with("chunked:") => {
+            let chunk: usize = s[8..]
+                .parse()
+                .with_context(|| format!("bad chunk in '{s}'"))?;
+            if chunk == 0 {
+                bail!("chunk budget must be positive in '{s}'");
+            }
+            BatchingKind::Chunked { chunk }
+        }
+        other => bail!("unknown batching kind '{other}'"),
+    })
+}
+
+/// Parse a perf-backend name (`roofline` / `poly` / `pjrt` / `pjrt-memo`).
+pub fn parse_perf_backend(s: &str) -> Result<PerfBackend> {
+    Ok(match s {
+        "roofline" => PerfBackend::Roofline,
+        "poly" => PerfBackend::Poly,
+        "pjrt" => PerfBackend::Pjrt,
+        "pjrt-memo" => PerfBackend::PjrtMemo,
+        other => bail!("unknown perf_model '{other}'"),
+    })
+}
+
+/// Parse a packing policy name (`fcfs` / `least-work-left`).
+pub fn parse_packing(s: &str) -> Result<Packing> {
+    Ok(match s {
+        "fcfs" => Packing::Fcfs,
+        "least-work-left" | "lwl" => Packing::LeastWorkLeft,
+        other => bail!("unknown packing '{other}'"),
+    })
+}
+
+/// Parse a router policy string (`round-robin`, `load:<metric>`,
+/// `heavy-light:<metric>`).
+pub fn parse_router(s: &str) -> Result<RoutePolicy> {
     let metric = |m: &str| -> Result<LoadMetric> {
         Ok(match m {
             "input-len" => LoadMetric::InputLen,
@@ -213,7 +291,8 @@ fn parse_router(s: &str) -> Result<RoutePolicy> {
     })
 }
 
-fn parse_storage(s: &str) -> Result<StorageConfig> {
+/// Parse a KV-storage tier name (Fig 14 design points).
+pub fn parse_storage(s: &str) -> Result<StorageConfig> {
     Ok(match s {
         "dedicated" | "a" => StorageConfig::DedicatedPerClient,
         "platform" | "b" => StorageConfig::PlatformShared,
@@ -224,7 +303,40 @@ fn parse_storage(s: &str) -> Result<StorageConfig> {
     })
 }
 
-fn parse_workload(model: &'static str, j: &Json, seed: u64) -> Result<WorkloadSpec> {
+/// Parse a KV hand-off granularity: `full` or `layerwise:<layers>`.
+pub fn parse_granularity(s: &str) -> Result<Granularity> {
+    Ok(match s {
+        "full" => Granularity::Full,
+        s if s.starts_with("layerwise:") => {
+            let layers: usize = s[10..]
+                .parse()
+                .with_context(|| format!("bad layer count in '{s}'"))?;
+            if layers == 0 {
+                bail!("layer count must be positive in '{s}'");
+            }
+            Granularity::Layerwise { layers }
+        }
+        other => bail!("unknown granularity '{other}'"),
+    })
+}
+
+/// Resolve an SLO ladder name; `auto` picks the retrieval ladder when
+/// the pipeline has RAG/KV stages (Table II).
+pub fn parse_slo(name: &str, pipeline: &Pipeline) -> Result<SloLadder> {
+    Ok(match name {
+        "standard" => SloLadder::standard(),
+        "retrieval" => SloLadder::retrieval(),
+        "auto" => match pipeline {
+            Pipeline::Rag(_) | Pipeline::KvRetrieval(_) => SloLadder::retrieval(),
+            _ => SloLadder::standard(),
+        },
+        other => bail!("unknown slo '{other}'"),
+    })
+}
+
+/// Parse one workload class: trace family, arrival process, pipeline
+/// shape and reasoning mode.
+pub fn parse_workload(model: &'static str, j: &Json, seed: u64) -> Result<WorkloadSpec> {
     let trace = match j.str_or("trace", "azure-conv") {
         "azure-conv" => TraceKind::AzureConv,
         "azure-code" => TraceKind::AzureCode,
@@ -342,6 +454,67 @@ mod tests {
             PoolSpec::Combined { kind: BatchingKind::Chunked { chunk: 256 }, n: 4 }
         );
         assert_eq!(cfg.slo.ttft_base, 0.25);
+    }
+
+    #[test]
+    fn per_client_pool_parses() {
+        let cfg = SimConfig::from_json(
+            &Json::parse(
+                r#"{"pool": {"batching": "per-client",
+                             "kinds": ["continuous", "chunked:256", "static"]},
+                    "workload": {"n": 10}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.serving.pool,
+            PoolSpec::PerClient {
+                kinds: vec![
+                    BatchingKind::Continuous,
+                    BatchingKind::Chunked { chunk: 256 },
+                    BatchingKind::Static,
+                ]
+            }
+        );
+        assert_eq!(cfg.serving.pool.n_clients(), 3);
+    }
+
+    #[test]
+    fn aux_clients_scale_per_llm() {
+        let cfg = SimConfig::from_json(
+            &Json::parse(
+                r#"{"pool": {"batching": "continuous", "n": 16},
+                    "rag_clients": {"per_llm": 8},
+                    "workload": {"n": 10, "pipeline": "rag"}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.serving.rag.as_ref().unwrap().count, 2);
+    }
+
+    #[test]
+    fn granularity_parses() {
+        assert_eq!(parse_granularity("full").unwrap(), Granularity::Full);
+        assert_eq!(
+            parse_granularity("layerwise:70").unwrap(),
+            Granularity::Layerwise { layers: 70 }
+        );
+        assert!(parse_granularity("halfwise").is_err());
+        assert!(parse_granularity("layerwise:0").is_err());
+    }
+
+    #[test]
+    fn batching_kind_strings() {
+        assert_eq!(parse_batching_kind("continuous").unwrap(), BatchingKind::Continuous);
+        assert_eq!(
+            parse_batching_kind("chunked:1024").unwrap(),
+            BatchingKind::Chunked { chunk: 1024 }
+        );
+        assert_eq!(parse_batching_kind("chunked").unwrap(), BatchingKind::Chunked { chunk: 512 });
+        assert!(parse_batching_kind("quantum").is_err());
+        assert!(parse_batching_kind("chunked:0").is_err(), "zero budget can never plan");
     }
 
     #[test]

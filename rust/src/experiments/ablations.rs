@@ -1,4 +1,5 @@
-//! Ablation studies over HERMES's own design choices (DESIGN.md §6):
+//! Ablation studies over HERMES's own design choices (DESIGN.md §6),
+//! driven by `scenarios/ablations.json`:
 //!
 //!  A. routing policy — the paper's "up to nine distinct routing
 //!     strategies" (§III-B.1): RR vs load-based × metric vs heavy-light,
@@ -7,56 +8,54 @@
 //!     disaggregated serving (§III-B.2 / Splitwise);
 //!  C. packing policy — FCFS vs Least-Work-Left under bursty arrivals.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::config::slo::SloLadder;
-use crate::coordinator::{LoadMetric, RoutePolicy};
-use crate::hardware::npu::H100;
-use crate::network::Granularity;
-use crate::scheduler::{BatchingKind, Packing, SchedConfig};
-use crate::sim::builder::{PerfBackend, PoolSpec, ServingSpec};
+use crate::config::{self, slo::SloLadder};
+use crate::scenario::Scenario;
+use crate::sim::builder::{NetSpec, PoolSpec, ServingSpec};
 use crate::sim::driver;
 use crate::util::bench::Table;
+use crate::util::json::Json;
+use crate::util::rng::Arrival;
 use crate::workload::trace::{TraceKind, WorkloadSpec};
 
 pub fn run(fast: bool) -> Result<()> {
-    routing(fast)?;
-    granularity(fast)?;
-    packing(fast)?;
+    let sc = Scenario::load("ablations")?;
+    let ex = sc.extras();
+    let use_fast = sc.use_fast(fast);
+    routing(&sc, ex.get("routing").context("ablations extras.routing")?, use_fast)?;
+    granularity(&sc, ex.get("granularity").context("ablations extras.granularity")?, use_fast)?;
+    packing(&sc, ex.get("packing").context("ablations extras.packing")?, use_fast)?;
     Ok(())
 }
 
-fn routing(fast: bool) -> Result<()> {
-    let (n_req, clients) = if fast { (160, 4) } else { (960, 8) };
+/// Read the `<key>_fast` / `<key>_full` variant for this run; missing
+/// keys are an error so a full run can never silently use toy scale.
+fn n_of(j: &Json, use_fast: bool, key: &str) -> Result<usize> {
+    let k = format!("{key}_{}", if use_fast { "fast" } else { "full" });
+    j.get(&k)
+        .and_then(Json::as_usize)
+        .with_context(|| format!("ablations scenario needs {k}"))
+}
+
+fn routing(sc: &Scenario, j: &Json, use_fast: bool) -> Result<()> {
+    let n_req = n_of(j, use_fast, "n_requests")?;
+    let clients = n_of(j, use_fast, "clients")?;
+    let rate = j.f64_or("rate_per_client", 1.5);
+    let seed = j.f64_or("seed", 31.0) as u64;
     println!("\nA. Routing policies (code trace — long, highly variable prompts)");
     let mut t = Table::new(&["policy", "ttft_p50(ms)", "ttft_p99(ms)", "e2e_p99(s)", "thr tok/s"]);
-    let policies: Vec<(&str, RoutePolicy)> = vec![
-        ("round-robin", RoutePolicy::RoundRobin),
-        ("load:input-len", RoutePolicy::LoadBased(LoadMetric::InputLen)),
-        ("load:output-len", RoutePolicy::LoadBased(LoadMetric::OutputLen)),
-        ("load:kv-size", RoutePolicy::LoadBased(LoadMetric::KvSize)),
-        ("load:tokens-left", RoutePolicy::LoadBased(LoadMetric::TokensLeft)),
-        (
-            "heavy-light",
-            RoutePolicy::HeavyLight {
-                metric: LoadMetric::TokensLeft,
-                threshold_tokens: 2048,
-                heavy_frac: 0.5,
-            },
-        ),
-    ];
     let slo = SloLadder::standard();
-    for (name, policy) in policies {
-        let spec = ServingSpec::new(
-            "llama3-70b",
-            H100,
-            2,
-            PoolSpec::Combined { kind: BatchingKind::Continuous, n: clients },
-        )
-        .with_perf(PerfBackend::Poly)
-        .with_route(policy);
-        let w = WorkloadSpec::new("llama3-70b", TraceKind::AzureCode, n_req, clients as f64 * 1.5)
-            .with_seed(31);
+    let policies = j
+        .get("policies")
+        .and_then(Json::as_arr)
+        .context("routing ablation needs 'policies'")?;
+    for p in policies {
+        let name = p.as_str().context("policy entries are strings")?;
+        let mut spec = sc.serving(&sc.roster[0], clients)?;
+        spec.route = config::parse_router(name)?;
+        let w = WorkloadSpec::new(spec.model, TraceKind::AzureCode, n_req, clients as f64 * rate)
+            .with_seed(seed);
         let m = driver::run(&spec, &w, &slo)?;
         t.row(&[
             name.to_string(),
@@ -70,8 +69,9 @@ fn routing(fast: bool) -> Result<()> {
     Ok(())
 }
 
-fn granularity(fast: bool) -> Result<()> {
-    let n_req = if fast { 150 } else { 600 };
+fn granularity(sc: &Scenario, j: &Json, use_fast: bool) -> Result<()> {
+    let n_req = n_of(j, use_fast, "n_requests")?;
+    let seed = j.f64_or("seed", 32.0) as u64;
     // Bloom-176B's MHA KV (~3.8 MB/token) makes the prefill→decode
     // hand-off a multi-GB transfer — exactly the case layerwise
     // streaming (Splitwise §4) was designed for. TTFT is unaffected
@@ -82,20 +82,31 @@ fn granularity(fast: bool) -> Result<()> {
         "granularity", "tpot_p99(ms)", "e2e_p50(s)", "e2e_p99(s)", "exposed transfer s/req",
     ]);
     let slo = SloLadder::standard();
-    for (name, gran) in [
-        ("full-cache", Granularity::Full),
-        ("layerwise(70)", Granularity::Layerwise { layers: 70 }),
-    ] {
+    let model = crate::hardware::model(j.str_or("model", "bloom-176b"))
+        .context("granularity ablation model")?
+        .name;
+    let prefill = j.usize_or("prefill", 4);
+    let decode = j.usize_or("decode", 2);
+    let options = j
+        .get("options")
+        .and_then(Json::as_arr)
+        .context("granularity ablation needs 'options'")?;
+    for g in options {
+        let name = g.as_str().context("granularity entries are strings")?;
         let mut spec = ServingSpec::new(
-            "bloom-176b",
-            H100,
-            8,
-            PoolSpec::Disaggregated { prefill: 4, decode: 2, local: false },
-        )
-        .with_perf(PerfBackend::Poly)
-        .with_net(crate::sim::builder::NetSpec::Hierarchy { per_platform: 2, per_rack: 6 });
-        spec.granularity = gran;
-        let w = WorkloadSpec::new("bloom-176b", TraceKind::AzureConv, n_req, 10.0).with_seed(32);
+            model,
+            crate::hardware::npu(sc.doc.str_or("npu", "h100")).context("npu")?,
+            j.usize_or("tp", 8),
+            PoolSpec::Disaggregated { prefill, decode, local: false },
+        );
+        spec.perf = config::parse_perf_backend(sc.doc.str_or("perf_model", "poly"))?;
+        spec.net = NetSpec::Hierarchy {
+            per_platform: j.usize_or("per_platform", 2),
+            per_rack: j.usize_or("per_rack", 6),
+        };
+        spec.granularity = config::parse_granularity(name)?;
+        let w = WorkloadSpec::new(model, TraceKind::AzureConv, n_req, j.f64_or("rate", 10.0))
+            .with_seed(seed);
         let m = driver::run(&spec, &w, &slo)?;
         t.row(&[
             name.to_string(),
@@ -109,29 +120,31 @@ fn granularity(fast: bool) -> Result<()> {
     Ok(())
 }
 
-fn packing(fast: bool) -> Result<()> {
-    let n_req = if fast { 200 } else { 800 };
+fn packing(sc: &Scenario, j: &Json, use_fast: bool) -> Result<()> {
+    let n_req = n_of(j, use_fast, "n_requests")?;
+    let clients = j.usize_or("clients", 2);
+    let rate = j.f64_or("rate", 3.0);
+    let seed = j.f64_or("seed", 33.0) as u64;
     println!("\nC. Packing policy under bursty arrivals (LWL favors short requests)");
     let mut t = Table::new(&["packing", "ttft_p50(ms)", "ttft_p99(ms)", "e2e_p50(s)", "e2e_p99(s)"]);
     let slo = SloLadder::standard();
-    for (name, packing) in [("fcfs", Packing::Fcfs), ("least-work-left", Packing::LeastWorkLeft)] {
-        let mut spec = ServingSpec::new(
-            "llama3-70b",
-            H100,
-            2,
-            PoolSpec::Combined { kind: BatchingKind::Continuous, n: 2 },
-        )
-        .with_perf(PerfBackend::Poly);
-        spec.packing = packing;
-        spec.sched = SchedConfig { max_batch_seqs: 64, max_batch_tokens: 8192 };
-        let w = WorkloadSpec::new("llama3-70b", TraceKind::AzureCode, n_req, 3.0)
-            .with_arrival(crate::util::rng::Arrival::Bursty {
-                rate: 3.0,
-                burst_mult: 6.0,
-                calm_s: 10.0,
-                burst_s: 2.0,
+    let options = j
+        .get("options")
+        .and_then(Json::as_arr)
+        .context("packing ablation needs 'options'")?;
+    for p in options {
+        let name = p.as_str().context("packing entries are strings")?;
+        let mut spec = sc.serving(&sc.roster[0], clients)?;
+        spec.packing = config::parse_packing(name)?;
+        spec.sched.max_batch_seqs = j.usize_or("max_batch_seqs", 64);
+        let w = WorkloadSpec::new(spec.model, TraceKind::AzureCode, n_req, rate)
+            .with_arrival(Arrival::Bursty {
+                rate,
+                burst_mult: j.f64_or("burst_mult", 6.0),
+                calm_s: j.f64_or("calm_s", 10.0),
+                burst_s: j.f64_or("burst_s", 2.0),
             })
-            .with_seed(33);
+            .with_seed(seed);
         let m = driver::run(&spec, &w, &slo)?;
         t.row(&[
             name.to_string(),

@@ -2,58 +2,39 @@
 //! prefill-decode requests: (a) coding trace (long inputs, short
 //! outputs), (b) conversation trace.
 //!
-//! Paper setup: Llama-3.1-70B on 32 clients of H100 TP2; strategies =
-//! continuous (vLLM), chunked (Sarathi), mixed, global disaggregated
-//! 20P/12D and 12P/20D; rising per-client rate; report normalized
-//! throughput + throughput/energy among SLO-passing points.
+//! All configuration — model, hardware, strategy roster, panels, scales
+//! and rates — lives in `scenarios/fig10.json`; this wrapper only runs
+//! the sweep and prints the normalized table. Figs 11/12 reuse
+//! [`run_scenario`] with their own scenario files.
 //!
 //! Expected shape: code → chunked/disagg highest throughput, disagg
 //! (20P/12D) best throughput/energy; conv → disagg best across the board.
 
 use anyhow::Result;
 
-use crate::config::slo::SloLadder;
-use crate::experiments::common::{self, Scale};
-use crate::workload::trace::{Pipeline, Reasoning, TraceKind};
+use crate::experiments::common;
+use crate::scenario::Scenario;
 
 pub struct Fig10Result {
-    pub panel: &'static str,
+    pub panel: String,
     pub results: Vec<common::StrategyResult>,
     pub winners: (Option<String>, Option<String>, Option<String>),
 }
 
-pub fn panels() -> [(&'static str, TraceKind); 2] {
-    [
-        ("a: Code trace", TraceKind::AzureCode),
-        ("b: Conversation trace", TraceKind::AzureConv),
-    ]
-}
-
-pub fn run_pipeline(
-    fast: bool,
-    pipeline: Pipeline,
-    caption: &str,
-    slo: &SloLadder,
-) -> Result<Vec<Fig10Result>> {
-    let scale = Scale::pick(
-        fast,
-        Scale { clients: 32, requests_per_client: 40, rates: &[0.5, 1.0, 2.0, 4.0, 6.0] },
-        Scale { clients: 4, requests_per_client: 12, rates: &[0.5, 2.0] },
-    );
+/// Sweep every panel of a Fig 10-family scenario and print normalized
+/// throughput / throughput-per-energy tables.
+pub fn run_scenario(fast: bool, sc: &Scenario, caption: &str) -> Result<Vec<Fig10Result>> {
+    let scale = sc.scale(fast);
+    let clients = scale.clients;
+    let npu = sc.doc.str_or("npu", "h100").to_uppercase();
+    let tp = sc.doc.usize_or("tp", 2);
     let mut out = Vec::new();
-    for (panel, trace) in panels() {
-        let results = common::compare_strategies(
-            "llama3-70b",
-            2,
-            scale.clients,
-            trace,
-            pipeline,
-            Reasoning::None,
-            scale.requests_per_client,
-            scale.rates,
-            slo,
-        )?;
-        common::print_normalized(&results, &format!("{caption} {panel} ({} clients of H100 TP2)", scale.clients));
+    for panel in sc.panels_or_default() {
+        let results = common::compare_scenario(sc, Some(&panel), fast)?;
+        common::print_normalized(
+            &results,
+            &format!("{caption} {} ({clients} clients of {npu} TP{tp})", panel.label),
+        );
         let winners = common::winners(&results);
         println!(
             "winners: TTFT={}  throughput={}  throughput/energy={}",
@@ -61,11 +42,16 @@ pub fn run_pipeline(
             winners.1.as_deref().unwrap_or("-"),
             winners.2.as_deref().unwrap_or("-")
         );
-        out.push(Fig10Result { panel, results, winners });
+        out.push(Fig10Result {
+            panel: panel.label.clone(),
+            results,
+            winners,
+        });
     }
     Ok(out)
 }
 
 pub fn run(fast: bool) -> Result<Vec<Fig10Result>> {
-    run_pipeline(fast, Pipeline::Regular, "Fig 10", &SloLadder::standard())
+    let sc = Scenario::load("fig10")?;
+    run_scenario(fast, &sc, "Fig 10")
 }

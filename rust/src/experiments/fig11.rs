@@ -1,26 +1,19 @@
 //! Fig 11 — batching strategies with a RAG stage (§V-A.1).
 //!
-//! "Including a RAG stage introduces 3K additional retrieval tokens,
-//! extending prefill duration" → 6 docs × 500 tokens; RAG clients run
-//! E5-Base on A100 with Grace-class retrieval. The RAG-pipeline SLO
-//! ladder (TTFT base 1000 ms) applies.
+//! Configuration lives in `scenarios/fig11.json`: 6 docs × 500 tokens
+//! add ~3K retrieval tokens to every prompt, RAG clients run E5-Base on
+//! A100 with Grace-class retrieval, and the RAG-pipeline SLO ladder
+//! (TTFT base 1000 ms) applies.
 //!
 //! Expected shape: lower sustainable injection rates than Fig 10;
 //! chunked/disaggregated top throughput, disaggregated best energy.
 
 use anyhow::Result;
 
-use crate::config::slo::SloLadder;
 use crate::experiments::fig10::{self, Fig10Result};
-use crate::workload::request::RagParams;
-use crate::workload::trace::Pipeline;
+use crate::scenario::Scenario;
 
 pub fn run(fast: bool) -> Result<Vec<Fig10Result>> {
-    let rag = RagParams {
-        query_tokens: 128,
-        docs: 6,
-        doc_tokens: 500, // 3K retrieval tokens (§V-A.1)
-        ..Default::default()
-    };
-    fig10::run_pipeline(fast, Pipeline::Rag(rag), "Fig 11 (RAG)", &SloLadder::retrieval())
+    let sc = Scenario::load("fig11")?;
+    fig10::run_scenario(fast, &sc, "Fig 11 (RAG)")
 }

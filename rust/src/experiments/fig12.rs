@@ -1,25 +1,20 @@
 //! Fig 12 — batching strategies with KV-cache retrieval (§V-A.1).
 //!
-//! "For requests that depend on previously cached context (3K tokens),
-//! we assume cache availability without recomputation. Retrieval does
-//! not extend generation time, but increases input size and thus reduces
-//! maximum batch sizes." Retrieval SLO ladder applies.
+//! Configuration lives in `scenarios/fig12.json`: requests depend on 3K
+//! tokens of previously cached context served from platform-shared
+//! stores; retrieval does not extend generation time but increases
+//! input size and thus reduces maximum batch sizes. Retrieval SLO
+//! ladder applies.
 //!
 //! Expected shape: chunked best throughput at high rates (long-input
 //! pressure), disaggregated best throughput/energy.
 
 use anyhow::Result;
 
-use crate::config::slo::SloLadder;
 use crate::experiments::fig10::{self, Fig10Result};
-use crate::workload::request::KvParams;
-use crate::workload::trace::Pipeline;
+use crate::scenario::Scenario;
 
 pub fn run(fast: bool) -> Result<Vec<Fig10Result>> {
-    fig10::run_pipeline(
-        fast,
-        Pipeline::KvRetrieval(KvParams { cached_tokens: 3000 }),
-        "Fig 12 (KV retrieval)",
-        &SloLadder::retrieval(),
-    )
+    let sc = Scenario::load("fig12")?;
+    fig10::run_scenario(fast, &sc, "Fig 12 (KV retrieval)")
 }

@@ -1,10 +1,11 @@
 //! Fig 13 — effective goodput vs generation SLA while scaling clients
 //! (§V-A.2).
 //!
-//! Paper setup: Azure conversational trace, Llama-3-70B on 2×H100 (TP2)
-//! per client, client counts 2→32; for each count and strategy, the
-//! highest per-client rate whose run has ≥99% of requests meeting the
-//! token-generation (TPOT) target, as the target tightens.
+//! Configuration lives in `scenarios/fig13.json`: Azure conversational
+//! trace, Llama-3-70B on 2×H100 (TP2) per client, client counts 2→32;
+//! for each count and strategy, the highest per-client rate whose run
+//! has ≥99% of requests meeting the token-generation (TPOT) target, as
+//! the target tightens.
 //!
 //! Expected shape: chunked sustains the highest rates under relaxed
 //! SLAs but collapses as the SLA tightens; disaggregated with a 60%
@@ -12,13 +13,8 @@
 
 use anyhow::Result;
 
-use crate::config::slo::SloLadder;
-use crate::hardware::npu::H100;
-use crate::scheduler::BatchingKind;
-use crate::sim::builder::{PerfBackend, PoolSpec, ServingSpec};
-use crate::sim::driver;
+use crate::scenario::{runner, Scenario};
 use crate::util::bench::Table;
-use crate::workload::trace::{TraceKind, WorkloadSpec};
 
 #[derive(Debug, Clone)]
 pub struct Fig13Row {
@@ -30,35 +26,21 @@ pub struct Fig13Row {
     pub max_rate: f64,
 }
 
-fn strategies(n: usize) -> Vec<PoolSpec> {
-    let p60 = ((n as f64 * 0.6).round() as usize).clamp(1, n.saturating_sub(1).max(1));
-    vec![
-        PoolSpec::Combined { kind: BatchingKind::Continuous, n },
-        PoolSpec::Combined { kind: BatchingKind::Chunked { chunk: 512 }, n },
-        PoolSpec::Disaggregated { prefill: p60, decode: (n - p60).max(1), local: false },
-    ]
-}
-
 pub fn run(fast: bool) -> Result<Vec<Fig13Row>> {
-    let (client_counts, rates, n_per_client): (&[usize], &[f64], usize) = if fast {
-        (&[2, 4], &[0.25, 0.5, 1.0, 2.0], 12)
-    } else {
-        (&[2, 4, 8, 16, 32], &[0.25, 0.5, 1.0, 2.0, 4.0, 8.0], 40)
-    };
-    let sla_mults: &[f64] = &[5.0, 2.5, 1.5, 1.25];
-    let slo = SloLadder::standard();
+    let sc = Scenario::load("fig13")?;
+    let client_counts = sc.extra_usize_list(&sc.scaled_key(fast, "client_counts"))?;
+    let sla_mults = sc.extra_f64_list("sla_mults")?;
+    let tpot_base = sc.extras().f64_or("tpot_base_s", 0.025);
+    let scale = sc.scale(fast);
 
     let mut rows = Vec::new();
-    for &n in client_counts {
-        for pool in strategies(n) {
-            let spec = ServingSpec::new("llama3-70b", H100, 2, pool).with_perf(PerfBackend::Poly);
-            let workload =
-                WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, n_per_client * n, 1.0)
-                    .with_seed(13);
-            let points = driver::sweep_rates(&spec, &workload, &slo, rates)?;
-            for &mult in sla_mults {
-                let target = 0.025 * mult;
-                let max_rate = points
+    for &n in &client_counts {
+        let sweeps = runner::sweep_at(&sc, None, n, scale.requests_per_client, &scale.rates)?;
+        for s in &sweeps {
+            for &mult in &sla_mults {
+                let target = tpot_base * mult;
+                let max_rate = s
+                    .points
                     .iter()
                     .filter(|p| {
                         // 99% of requests meet the generation target
@@ -74,7 +56,7 @@ pub fn run(fast: bool) -> Result<Vec<Fig13Row>> {
                     .map(|p| p.rate)
                     .fold(0.0f64, f64::max);
                 rows.push(Fig13Row {
-                    strategy: spec.pool.label(),
+                    strategy: s.label.clone(),
                     clients: n,
                     sla_mult: mult,
                     max_rate,

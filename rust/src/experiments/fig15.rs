@@ -1,27 +1,27 @@
 //! Fig 15 — remote KV-cache storage architectures (§V-B).
 //!
-//! Paper setup: 128 clients of Llama-3.1-70B (H100 TP2) across 4 racks;
-//! AzureConv requests at 240 req/s Poisson; short (4K) and long (24K)
-//! KV retrieval; private vs shared scenarios; storage tiers A (dedicated
-//! LPDDR), B (platform-shared), C (rack-shared), C+DCN, and full
-//! recompute. Metric: CDF of end-to-end request latency.
+//! Configuration lives in `scenarios/fig15.json`: 128 clients of
+//! Llama-3.1-70B (H100 TP2) across 4 racks; AzureConv requests at
+//! 240 req/s Poisson; short (4K) and long (24K) KV retrieval; private vs
+//! shared scenarios; storage tiers A (dedicated LPDDR),
+//! B (platform-shared), C (rack-shared), C+DCN, and full recompute.
+//! Metric: CDF of end-to-end request latency.
 //!
 //! Expected shape: B best for private KV at T90; C best for shared
 //! corpora; recompute competitive at 4K, prohibitive at 24K; the DCN
 //! fallback's ~20 ms link latency shows in the tail.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::config::slo::SloLadder;
 use crate::memory::storage::{KvScenario, StorageConfig};
 use crate::metrics::RunMetrics;
-use crate::sim::builder::{KvRetrievalSpec, NetSpec, PerfBackend, PoolSpec, ServingSpec};
+use crate::scenario::Scenario;
+use crate::sim::builder::{KvRetrievalSpec, NetSpec};
 use crate::sim::driver;
 use crate::util::bench::Table;
+use crate::util::json::Json;
 use crate::workload::request::KvParams;
 use crate::workload::trace::{Pipeline, TraceKind, WorkloadSpec};
-use crate::hardware::npu::H100;
-use crate::scheduler::BatchingKind;
 
 #[derive(Debug, Clone)]
 pub struct Fig15Row {
@@ -32,47 +32,70 @@ pub struct Fig15Row {
 }
 
 pub fn run(fast: bool) -> Result<Vec<Fig15Row>> {
-    let (clients, total_rate, n_req) = if fast { (8, 16.0, 160) } else { (128, 240.0, 3000) };
-    let slo = SloLadder::retrieval();
+    let sc = Scenario::load("fig15")?;
+    let ex = sc.extras();
+
+    let clients = sc.scale(fast).clients;
+    let total_rate = sc.extra_f64(&sc.scaled_key(fast, "total_rate"))?;
+    let n_req = sc.extra_usize(&sc.scaled_key(fast, "n_requests"))?;
+    let per_platform = ex.usize_or("per_platform", 4);
+    let replicas = ex.get("replicas_per").cloned().unwrap_or_else(Json::obj);
+    let cache_sizes = sc.extra_usize_list("cache_tokens")?;
+    let kv_scenarios: Vec<(&'static str, KvScenario)> = ex
+        .get("kv_scenarios")
+        .and_then(Json::as_arr)
+        .context("fig15 scenario needs extras.kv_scenarios")?
+        .iter()
+        .filter_map(Json::as_str)
+        .map(|s| match s {
+            "private" => Ok(("private", KvScenario::Private)),
+            "shared" => Ok(("shared", KvScenario::Shared)),
+            other => Err(anyhow::anyhow!("unknown kv scenario '{other}'")),
+        })
+        .collect::<Result<_>>()?;
+    let seed = sc.doc.f64_or("seed", 15.0) as u64;
+    let mix = sc.workload(None, n_req)?;
+    let model = mix.primary().model;
+    let slo = sc.slo(None, &mix)?;
+
     let mut rows = Vec::new();
-    for (scenario, sc) in [("private", KvScenario::Private), ("shared", KvScenario::Shared)] {
-        for cache_tokens in [4096usize, 24576] {
+    for &(scenario, kv_scenario) in &kv_scenarios {
+        for &cache_tokens in &cache_sizes {
             for cfg in StorageConfig::all() {
                 // replica counts per tier (Fig 14): dedicated = one per
                 // client; platform-shared = one per 4 clients; rack-shared
                 // = one per 32 clients
                 let stores = match cfg {
-                    StorageConfig::DedicatedPerClient => clients,
-                    StorageConfig::PlatformShared => (clients / 4).max(1),
+                    StorageConfig::DedicatedPerClient => {
+                        clients / replicas.usize_or("dedicated", 1).max(1)
+                    }
+                    StorageConfig::PlatformShared => {
+                        clients / replicas.usize_or("platform", 4).max(1)
+                    }
                     StorageConfig::RackShared | StorageConfig::RackSharedWithDcn => {
-                        (clients / 32).max(1)
+                        clients / replicas.usize_or("rack", 32).max(1)
                     }
                     StorageConfig::Recompute => 1,
-                };
+                }
+                .max(1);
                 // every serving client holds one connection at the tier's
                 // per-client bandwidth; a store aggregates its share
                 let ports = (clients / stores).max(1);
-                let spec = ServingSpec::new(
-                    "llama3-70b",
-                    H100,
-                    2,
-                    PoolSpec::Combined { kind: BatchingKind::Continuous, n: clients },
-                )
-                .with_perf(PerfBackend::Poly)
-                .with_net(NetSpec::Hierarchy {
-                    per_platform: 4,
-                    per_rack: (clients / 4).max(1),
-                })
-                .with_kv_retrieval(KvRetrievalSpec {
+                let mut spec = sc.serving(&sc.roster[0], clients)?;
+                spec.net = NetSpec::Hierarchy {
+                    per_platform,
+                    per_rack: (clients / per_platform).max(1),
+                };
+                spec.kv_retrieval = Some(KvRetrievalSpec {
                     count: stores,
                     storage: cfg,
-                    scenario: sc,
+                    scenario: kv_scenario,
                     max_batch: 0,
                     ports,
                 });
-                let workload = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, n_req, total_rate)
+                let workload = WorkloadSpec::new(model, TraceKind::AzureConv, n_req, total_rate)
                     .with_pipeline(Pipeline::KvRetrieval(KvParams { cached_tokens: cache_tokens }))
-                    .with_seed(15);
+                    .with_seed(seed);
                 let metrics = driver::run(&spec, &workload, &slo)?;
                 rows.push(Fig15Row {
                     scenario,

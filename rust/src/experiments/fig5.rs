@@ -1,21 +1,23 @@
 //! Fig 5 — end-to-end validation against splitwise-sim.
 //!
-//! Paper setup: 80-GPU system, 8 prefill + 2 decode clients at TP8,
-//! Llama-2-70B and Bloom-176B, Azure traces at RPS 20 and 40. The paper
-//! reports ≤6% runtime difference, attributed to the communication model
-//! (splitwise-sim uses a dummy single link with a lower-bound bandwidth;
-//! HERMES models the real hierarchy via astra-sim — here, our
-//! hierarchical network substitute vs the same engine with the dummy
-//! link, DESIGN.md §3).
+//! Configuration lives in `scenarios/fig5.json`: 80-GPU system,
+//! 8 prefill + 2 decode clients at TP8, Llama-2-70B and Bloom-176B,
+//! Azure traces at RPS 20 and 40. The paper reports ≤6% runtime
+//! difference, attributed to the communication model (splitwise-sim uses
+//! a dummy single link with a lower-bound bandwidth; HERMES models the
+//! real hierarchy — here, our hierarchical network substitute vs the
+//! same engine with the dummy link, DESIGN.md §3).
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::config::slo::SloLadder;
-use crate::hardware::npu::H100;
+use crate::hardware::models;
 use crate::metrics::RunMetrics;
 use crate::network::link::LinkSpec;
-use crate::sim::builder::{NetSpec, PerfBackend, PoolSpec, ServingSpec};
+use crate::scenario::Scenario;
+use crate::sim::builder::NetSpec;
 use crate::util::bench::Table;
+use crate::util::json::Json;
 use crate::workload::trace::{TraceKind, WorkloadSpec};
 
 #[derive(Debug, Clone)]
@@ -28,33 +30,55 @@ pub struct Fig5Row {
 }
 
 pub fn run(fast: bool) -> Result<Vec<Fig5Row>> {
-    let (n_req, models): (usize, Vec<&'static str>) = if fast {
-        (120, vec!["llama2-70b"])
-    } else {
-        (600, vec!["llama2-70b", "bloom-176b"])
-    };
+    let sc = Scenario::load("fig5")?;
+    let ex = sc.extras();
+
+    let models_key = sc.scaled_key(fast, "models");
+    let model_names: Vec<String> = ex
+        .get(&models_key)
+        .and_then(Json::as_arr)
+        .with_context(|| format!("fig5 scenario needs extras.{models_key}"))?
+        .iter()
+        .filter_map(Json::as_str)
+        .map(str::to_string)
+        .collect();
+    if model_names.is_empty() {
+        anyhow::bail!("fig5 scenario: extras.{models_key} is empty");
+    }
+    let rps_list = sc.extra_f64_list("rps")?;
+    let n_req = sc.extra_usize(&sc.scaled_key(fast, "n_requests"))?;
+    let hierarchy = ex.get("hierarchy").cloned().unwrap_or_else(Json::obj);
+    let dummy = ex.get("dummy_link").cloned().unwrap_or_else(Json::obj);
+    let clients = sc.scale(fast).clients;
+    let seed = sc.doc.f64_or("seed", 5.0) as u64;
+
     let mut rows = Vec::new();
-    for model in models {
-        for rps in [20.0, 40.0] {
-            let mk_spec = |net: NetSpec| {
-                ServingSpec::new(
-                    model,
-                    H100,
-                    8,
-                    PoolSpec::Disaggregated { prefill: 8, decode: 2, local: false },
-                )
-                .with_perf(PerfBackend::Poly)
-                .with_net(net)
+    for model_name in &model_names {
+        let model = models::model(model_name)
+            .with_context(|| format!("fig5 scenario names unknown model {model_name}"))?
+            .name;
+        for &rps in &rps_list {
+            let mk_spec = |net: NetSpec| -> Result<crate::sim::builder::ServingSpec> {
+                let mut spec = sc.serving(&sc.roster[0], clients)?;
+                spec.model = model;
+                Ok(spec.with_net(net))
             };
-            let workload = WorkloadSpec::new(model, TraceKind::AzureConv, n_req, rps).with_seed(5);
-            let run_one = |spec: &ServingSpec| -> Result<RunMetrics> {
-                crate::sim::driver::run(spec, &workload, &SloLadder::standard())
+            let workload = WorkloadSpec::new(model, TraceKind::AzureConv, n_req, rps)
+                .with_seed(seed);
+            let run_one = |net: NetSpec| -> Result<RunMetrics> {
+                crate::sim::driver::run(&mk_spec(net)?, &workload, &SloLadder::standard())
             };
             // HERMES: hierarchical topology (10 clients, platforms of 2)
-            let hermes = run_one(&mk_spec(NetSpec::Hierarchy { per_platform: 2, per_rack: 10 }))?;
+            let hermes = run_one(NetSpec::Hierarchy {
+                per_platform: hierarchy.usize_or("per_platform", 2),
+                per_rack: hierarchy.usize_or("per_rack", 10),
+            })?;
             // splitwise-sim baseline: dummy link at its documented
             // lower-bound bandwidth
-            let base = run_one(&mk_spec(NetSpec::Dummy(LinkSpec { bw: 200e9, lat: 1e-5 })))?;
+            let base = run_one(NetSpec::Dummy(LinkSpec {
+                bw: dummy.f64_or("bw", 200e9),
+                lat: dummy.f64_or("lat", 1e-5),
+            }))?;
             let gap = (hermes.makespan - base.makespan).abs() / base.makespan * 100.0;
             rows.push(Fig5Row {
                 model,

@@ -1,20 +1,22 @@
 //! Fig 6 — fidelity of the ML-predicted runtime path vs the fine-grained
 //! hardware model.
 //!
-//! Paper setup: Llama-3.1-70B on HGX-H100×8 with vLLM chunked batching,
-//! varying context length, request count and chunk size across TP2/4/8,
-//! 200 output tokens; HERMES achieves <2% average end-to-end error. Our
-//! "measured" side is the roofline oracle the regression was fitted on
-//! (DESIGN.md §3): the figure quantifies how much fidelity the
-//! fitted-polynomial fast path loses end-to-end.
+//! Configuration lives in `scenarios/fig6.json`: Llama-3.1-70B on
+//! HGX-H100×8 with vLLM chunked batching, varying context length,
+//! request count and chunk size across TP2/4/8, 200 output tokens;
+//! HERMES achieves <2% average end-to-end error. Our "measured" side is
+//! the roofline oracle the regression was fitted on (DESIGN.md §3): the
+//! figure quantifies how much fidelity the fitted-polynomial fast path
+//! loses end-to-end.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::config::slo::SloLadder;
-use crate::hardware::npu::H100;
+use crate::scenario::Scenario;
 use crate::scheduler::BatchingKind;
-use crate::sim::builder::{PerfBackend, PoolSpec, ServingSpec};
+use crate::sim::builder::{PerfBackend, PoolSpec};
 use crate::util::bench::Table;
+use crate::util::json::Json;
 use crate::util::stats;
 use crate::workload::trace::{TraceKind, WorkloadSpec};
 
@@ -30,36 +32,45 @@ pub struct Fig6Row {
 }
 
 pub fn run(fast: bool) -> Result<Vec<Fig6Row>> {
-    let tps: &[usize] = if fast { &[8] } else { &[2, 4, 8] };
-    let ctxs: &[f64] = if fast { &[1024.0, 4096.0] } else { &[1024.0, 2048.0, 4096.0] };
-    let nreqs: &[usize] = if fast { &[16] } else { &[8, 16, 32] };
-    let chunks: &[usize] = if fast { &[512] } else { &[512, 1024, 2048] };
+    let sc = Scenario::load("fig6")?;
+    let tps = sc.extra_usize_list(&sc.scaled_key(fast, "tps"))?;
+    let ctxs = sc.extra_f64_list(&sc.scaled_key(fast, "ctxs"))?;
+    let nreqs = sc.extra_usize_list(&sc.scaled_key(fast, "nreqs"))?;
+    let chunks = sc.extra_usize_list(&sc.scaled_key(fast, "chunks"))?;
+    let ctx_std_frac = sc.extras().f64_or("ctx_std_frac", 0.1);
+    let model: &'static str = crate::hardware::model(sc.doc.str_or("model", "llama3-70b"))
+        .context("fig6 scenario model")?
+        .name;
+    let base_workload = sc.doc.get("workload").cloned().unwrap_or_else(Json::obj);
+    let out_mean = base_workload.f64_or("out_mean", 200.0);
+    let rate = base_workload.f64_or("rate", 8.0);
+    let seed = sc.doc.f64_or("seed", 6.0) as u64;
 
     let mut rows = Vec::new();
-    for &tp in tps {
-        for &ctx in ctxs {
-            for &n in nreqs {
-                for &chunk in chunks {
+    for &tp in &tps {
+        for &ctx in &ctxs {
+            for &n in &nreqs {
+                for &chunk in &chunks {
                     let workload = WorkloadSpec::new(
-                        "llama3-70b",
+                        model,
                         TraceKind::Synthetic {
                             in_mean: ctx,
-                            in_std: ctx * 0.1,
-                            out_mean: 200.0, // paper: 200 output tokens
+                            in_std: ctx * ctx_std_frac,
+                            out_mean, // paper: 200 output tokens
                             out_std: 1.0,
                         },
                         n,
-                        8.0,
+                        rate,
                     )
-                    .with_seed(6);
-                    let run_one = |perf: PerfBackend| {
-                        let spec = ServingSpec::new(
-                            "llama3-70b",
-                            H100,
-                            tp,
-                            PoolSpec::Combined { kind: BatchingKind::Chunked { chunk }, n: 1 },
-                        )
-                        .with_perf(perf);
+                    .with_seed(seed);
+                    let run_one = |perf: PerfBackend| -> Result<crate::metrics::RunMetrics> {
+                        let mut spec = sc.serving(&sc.roster[0], 1)?;
+                        spec.tp = tp;
+                        spec.pool = PoolSpec::Combined {
+                            kind: BatchingKind::Chunked { chunk },
+                            n: 1,
+                        };
+                        spec.perf = perf;
                         crate::sim::driver::run(&spec, &workload, &SloLadder::standard())
                     };
                     let pred = run_one(PerfBackend::Poly)?;

@@ -1,54 +1,33 @@
 //! Fig 8 — goodput under reasoning workloads (§IV-A).
 //!
-//! Paper setup: Llama-3.1-70B on 64 GPUs (8 clients × TP8); multi-path
-//! reasoning with the prefill KV shared across branches.
-//!   (a) AzureConv-like inputs, outputs ~2k σ30%, 8 parallel branches
-//!   (b) AzureCode-like inputs, outputs ~2k σ30%, 4 parallel branches
+//! Configuration lives in `scenarios/fig8.json`: Llama-3.1-70B on
+//! 8 clients × TP8, multi-path reasoning with the prefill KV shared
+//! across branches; panels (a) conv-like inputs / 8 branches and
+//! (b) code-like inputs / 4 branches, outputs ~2k σ30%.
+//!
 //! Expected shape: chunked sustains decode throughput but breaks TTFT at
 //! high rates; continuous wins TTFT; disaggregated wins code overall.
 
 use anyhow::Result;
 
-use crate::config::slo::SloLadder;
-use crate::experiments::common::{self, Scale};
+use crate::experiments::common;
+use crate::scenario::Scenario;
 use crate::util::bench::Table;
-use crate::workload::trace::{Pipeline, Reasoning, TraceKind};
 
 pub struct Fig8Result {
-    pub panel: &'static str,
+    pub panel: String,
     pub results: Vec<common::StrategyResult>,
 }
 
 pub fn run(fast: bool) -> Result<Vec<Fig8Result>> {
-    let scale = Scale::pick(
-        fast,
-        Scale { clients: 8, requests_per_client: 40, rates: &[0.05, 0.1, 0.2, 0.4, 0.8] },
-        Scale { clients: 2, requests_per_client: 10, rates: &[0.05, 0.2] },
-    );
-    let slo = SloLadder::standard();
+    let sc = Scenario::load("fig8")?;
     let mut out = Vec::new();
-    for (panel, in_mean, in_std, branches) in [
-        ("a: Conv-like inputs, 8 branches", 1020.0, 450.0, 8usize),
-        ("b: Code-like inputs, 4 branches", 1930.0, 900.0, 4usize),
-    ] {
-        let results = common::compare_strategies(
-            "llama3-70b",
-            8,
-            scale.clients,
-            TraceKind::Synthetic {
-                in_mean,
-                in_std,
-                out_mean: 2000.0,
-                out_std: 600.0, // 2k / σ=30%
-            },
-            Pipeline::Regular,
-            Reasoning::MultiPath { scale: 1.0, branches },
-            scale.requests_per_client,
-            scale.rates,
-            &slo,
-        )?;
-        println!("\nFig 8{panel} — goodput (requests/s meeting SLO) vs injection rate");
-        let mut t = Table::new(&["strategy", "rate/client", "goodput req/s", "goodput %", "ttft_p90(ms)", "tpot_p90(ms)"]);
+    for panel in sc.panels_or_default() {
+        let results = common::compare_scenario(&sc, Some(&panel), fast)?;
+        println!("\nFig 8{} — goodput (requests/s meeting SLO) vs injection rate", panel.label);
+        let mut t = Table::new(&[
+            "strategy", "rate/client", "goodput req/s", "goodput %", "ttft_p90(ms)", "tpot_p90(ms)",
+        ]);
         for r in &results {
             for p in &r.points {
                 t.row(&[
@@ -62,7 +41,10 @@ pub fn run(fast: bool) -> Result<Vec<Fig8Result>> {
             }
         }
         t.print();
-        out.push(Fig8Result { panel, results });
+        out.push(Fig8Result {
+            panel: panel.label.clone(),
+            results,
+        });
     }
     Ok(out)
 }

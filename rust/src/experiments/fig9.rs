@@ -1,31 +1,33 @@
 //! Fig 9 — RAG pipeline bottlenecks across embedding-model placements
 //! (§IV-B).
 //!
-//! Three hardware configurations: 1) Large CPU (Grace-like) embeds +
-//! retrieves, 2) Small CPU (Sapphire-Rapids-like) embeds + retrieves,
-//! 3) A100 embeds + Large CPU retrieves. Two embedding models (E5-Base,
-//! Mistral-7B). Prefill/decode on one H100 with Llama-3.1-8B. IVF-PQ:
-//! 4M centroids, 50 probes, 5K points/probe; 20 docs × 512 tokens → +10K
-//! context tokens; retrieval→prefill link = PCIe4.0×4 (32 GB/s).
+//! Configuration lives in `scenarios/fig9.json` (`extras`): three
+//! hardware placements — 1) Large CPU (Grace-like) embeds + retrieves,
+//! 2) Small CPU (Sapphire-Rapids-like) embeds + retrieves, 3) A100
+//! embeds + Large CPU retrieves — two embedding models (E5-Base,
+//! Mistral-7B), prefill/decode on one H100 with Llama-3.1-8B, IVF-PQ at
+//! 4M centroids / 50 probes / 5K points per probe, 20 docs × 512 tokens
+//! (+10K context), retrieval→prefill link = PCIe4.0×4 (32 GB/s).
 //!
 //! Expected: Mistral-7B on the small CPU is a severe TTFT bottleneck;
 //! offloading the embedder to the A100 collapses it; context transfer is
 //! <1% of runtime even on PCIe.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::hardware::models::{E5_BASE, LLAMA3_8B, MISTRAL_7B};
-use crate::hardware::npu::{A100, GRACE_CPU, H100, SPR_CPU};
 use crate::hardware::roofline::{LlmCluster, PrefillItem};
-use crate::rag::ivfpq::IvfPq;
+use crate::hardware::{model, npu};
+use crate::rag::ivfpq::{IvfPq, IvfPqConfig};
 use crate::rag::RagEngine;
+use crate::scenario::Scenario;
 use crate::util::bench::Table;
+use crate::util::json::Json;
 use crate::workload::request::RagParams;
 
 #[derive(Debug, Clone)]
 pub struct Fig9Row {
-    pub embed_model: &'static str,
-    pub hw: &'static str,
+    pub embed_model: String,
+    pub hw: String,
     pub embed_s: f64,
     pub retrieve_s: f64,
     pub rerank_s: f64,
@@ -36,34 +38,52 @@ pub struct Fig9Row {
 }
 
 pub fn run(_fast: bool) -> Result<Vec<Fig9Row>> {
-    // paper parameters
+    let sc = Scenario::load("fig9")?;
+    let ex = sc.extras();
+    let rag = ex.get("rag").cloned().unwrap_or_else(Json::obj);
     let params = RagParams {
-        query_tokens: 128,
-        docs: 20,
-        doc_tokens: 512,
-        centroids: 4e6,
-        nprobe: 50,
-        points_per_probe: 5000,
+        query_tokens: rag.usize_or("query_tokens", 128),
+        docs: rag.usize_or("docs", 20),
+        doc_tokens: rag.usize_or("doc_tokens", 512),
+        centroids: rag.f64_or("centroids", 4e6),
+        nprobe: rag.usize_or("nprobe", 50),
+        points_per_probe: rag.usize_or("points_per_probe", 5000),
     };
-    let pcie4_x4 = 32e9; // B/s — retrieval→prefill link
-    let llm = LlmCluster::new(LLAMA3_8B, H100, 1);
+    let link_bw = ex.f64_or("link_bw", 32e9); // B/s — retrieval→prefill link
+    let link_lat = ex.f64_or("link_lat", 1e-5);
+    let llm_model = model(sc.doc.str_or("model", "llama3-8b")).context("fig9 llm model")?;
+    let llm_npu = npu(sc.doc.str_or("npu", "h100")).context("fig9 llm npu")?;
+    let llm = LlmCluster::new(llm_model, llm_npu, sc.doc.usize_or("tp", 1));
+
+    let embed_models: Vec<String> = ex
+        .get("embed_models")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_str).map(str::to_string).collect())
+        .unwrap_or_else(|| vec!["e5-base".into(), "mistral-7b".into()]);
+    let placements: Vec<Json> = ex
+        .get("placements")
+        .and_then(Json::as_arr)
+        .context("fig9 scenario needs extras.placements")?
+        .to_vec();
 
     let mut rows = Vec::new();
-    for (embed_model, spec) in [("e5-base", E5_BASE), ("mistral-7b", MISTRAL_7B)] {
-        let configs = [
-            ("large-cpu(grace)", spec.clone(), GRACE_CPU, GRACE_CPU),
-            ("small-cpu(spr)", spec.clone(), SPR_CPU, SPR_CPU),
-            ("a100+large-cpu", spec.clone(), A100, GRACE_CPU),
-        ];
-        for (hw, emodel, embed_npu, retr_npu) in configs {
+    for embed_model in &embed_models {
+        let emodel = model(embed_model)
+            .with_context(|| format!("unknown embed model {embed_model}"))?;
+        for placement in &placements {
+            let hw = placement.str_or("label", "?").to_string();
+            let embed_npu = npu(placement.str_or("embed_npu", "grace-cpu"))
+                .context("placement embed_npu")?;
+            let retr_npu = npu(placement.str_or("retrieval_npu", "grace-cpu"))
+                .context("placement retrieval_npu")?;
             let engine = RagEngine::new(
-                LlmCluster::new(emodel, embed_npu, 1),
-                IvfPq::new(retr_npu, Default::default()),
+                LlmCluster::new(emodel.clone(), embed_npu, 1),
+                IvfPq::new(retr_npu, IvfPqConfig::default()),
             );
             let t = engine.batch_timing(1, &params);
             // retrieved context text moves to the prefill client over PCIe
             let ctx_tokens = params.context_tokens() as f64;
-            let transfer_s = ctx_tokens * 4.0 / pcie4_x4 + 10e-6;
+            let transfer_s = ctx_tokens * 4.0 / link_bw + link_lat;
             // prefill of query + retrieved context on the H100
             let prefill_s = llm.prefill_time(&[PrefillItem {
                 past: 0.0,
@@ -71,7 +91,7 @@ pub fn run(_fast: bool) -> Result<Vec<Fig9Row>> {
             }]);
             let ttft = t.total() + transfer_s + prefill_s;
             rows.push(Fig9Row {
-                embed_model,
+                embed_model: embed_model.clone(),
                 hw,
                 embed_s: t.embed_s,
                 retrieve_s: t.retrieve_s,
@@ -89,8 +109,8 @@ pub fn run(_fast: bool) -> Result<Vec<Fig9Row>> {
     ]);
     for r in &rows {
         t.row(&[
-            r.embed_model.to_string(),
-            r.hw.to_string(),
+            r.embed_model.clone(),
+            r.hw.clone(),
             format!("{:.1}", r.embed_s * 1e3),
             format!("{:.1}", r.retrieve_s * 1e3),
             format!("{:.2}", r.rerank_s * 1e3),

@@ -2,21 +2,21 @@
 //!
 //! For each (trace, request type, system size), sweep the strategy
 //! roster and report the winner per optimization objective (TTFT,
-//! throughput, throughput/energy). Small = 4×TP2, Large = 32×TP2,
+//! throughput, throughput/energy). The (trace × request-type) grid is
+//! the panel list of `scenarios/table3_small.json` /
+//! `scenarios/table3_large.json`; small = 4×TP2, large = 32×TP2,
 //! serving Llama-3-70B (§V-A, Table III caption).
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::config::slo::SloLadder;
-use crate::experiments::common::{self, Scale};
+use crate::experiments::common;
+use crate::scenario::Scenario;
 use crate::util::bench::Table;
-use crate::workload::request::{KvParams, RagParams};
-use crate::workload::trace::{Pipeline, Reasoning, TraceKind};
 
 #[derive(Debug, Clone)]
 pub struct Table3Row {
-    pub trace: &'static str,
-    pub request_type: &'static str,
+    pub trace: String,
+    pub request_type: String,
     pub system: &'static str,
     pub ttft: String,
     pub throughput: String,
@@ -24,76 +24,42 @@ pub struct Table3Row {
 }
 
 pub fn run(fast: bool) -> Result<Vec<Table3Row>> {
-    let small = Scale::pick(
-        fast,
-        Scale { clients: 4, requests_per_client: 30, rates: &[0.5, 1.0, 2.0, 4.0] },
-        Scale { clients: 2, requests_per_client: 8, rates: &[0.5, 2.0] },
-    );
-    let large = Scale::pick(
-        fast,
-        Scale { clients: 32, requests_per_client: 30, rates: &[0.5, 1.0, 2.0, 4.0] },
-        Scale { clients: 4, requests_per_client: 8, rates: &[0.5, 2.0] },
-    );
-
-    let request_types: Vec<(&'static str, Pipeline, Reasoning, SloLadder)> = vec![
-        ("regular", Pipeline::Regular, Reasoning::None, SloLadder::standard()),
-        (
-            "rag",
-            Pipeline::Rag(RagParams { docs: 6, doc_tokens: 500, ..Default::default() }),
-            Reasoning::None,
-            SloLadder::retrieval(),
-        ),
-        (
-            "memory-cache",
-            Pipeline::KvRetrieval(KvParams { cached_tokens: 3000 }),
-            Reasoning::None,
-            SloLadder::retrieval(),
-        ),
-        (
-            "reasoning",
-            Pipeline::Regular,
-            Reasoning::MultiPath { scale: 4.0, branches: 8 },
-            SloLadder::standard(),
-        ),
-    ];
+    let small = Scenario::load("table3_small")?;
+    let large = Scenario::load("table3_large")?;
 
     let mut rows = Vec::new();
-    for (trace_name, trace) in [("code", TraceKind::AzureCode), ("conv", TraceKind::AzureConv)] {
-        for (req_name, pipeline, reasoning, slo) in &request_types {
-            // the paper only evaluates reasoning on conversational traces
-            if *req_name == "reasoning" && trace_name == "code" {
-                continue;
-            }
-            for (sys_name, scale) in [("small", small), ("large", large)] {
-                let results = common::compare_strategies(
-                    "llama3-70b",
-                    2,
-                    scale.clients,
-                    trace,
-                    *pipeline,
-                    *reasoning,
-                    scale.requests_per_client,
-                    scale.rates,
-                    slo,
-                )?;
-                let (ttft, thr, energy) = common::winners(&results);
-                rows.push(Table3Row {
-                    trace: trace_name,
-                    request_type: req_name,
-                    system: sys_name,
-                    ttft: ttft.unwrap_or_else(|| "-".into()),
-                    throughput: thr.unwrap_or_else(|| "-".into()),
-                    throughput_energy: energy.unwrap_or_else(|| "-".into()),
-                });
-            }
+    // both scenarios share the panel grid; iterate small's list so row
+    // order matches the paper's table
+    for panel in small.panels_or_default() {
+        for (system, sc) in [("small", &small), ("large", &large)] {
+            // the two files must carry the same panel grid — a silent
+            // substitution would compute the 'large' column from the
+            // small file's panel definition
+            let sc_panel = sc
+                .panels_or_default()
+                .into_iter()
+                .find(|p| p.label == panel.label)
+                .with_context(|| {
+                    format!("panel '{}' missing from scenario '{}'", panel.label, sc.name)
+                })?;
+            let results = common::compare_scenario(sc, Some(&sc_panel), fast)?;
+            let (ttft, thr, energy) = common::winners(&results);
+            rows.push(Table3Row {
+                trace: panel.raw.str_or("trace", "?").to_string(),
+                request_type: panel.raw.str_or("request_type", "?").to_string(),
+                system,
+                ttft: ttft.unwrap_or_else(|| "-".into()),
+                throughput: thr.unwrap_or_else(|| "-".into()),
+                throughput_energy: energy.unwrap_or_else(|| "-".into()),
+            });
         }
     }
 
     let mut t = Table::new(&["trace", "request type", "system", "TTFT", "throughput", "throughput/energy"]);
     for r in &rows {
         t.row(&[
-            r.trace.to_string(),
-            r.request_type.to_string(),
+            r.trace.clone(),
+            r.request_type.clone(),
             r.system.to_string(),
             r.ttft.clone(),
             r.throughput.clone(),

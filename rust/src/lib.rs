@@ -3,7 +3,33 @@
 //! Rust + JAX + Pallas reproduction of "Understanding and Optimizing
 //! Multi-Stage AI Inference Pipelines" (Bambhaniya et al., 2025).
 //!
-//! See DESIGN.md for the module map and the per-experiment index.
+//! The dataflow follows the paper's architecture (§III):
+//!
+//! ```text
+//! scenarios/*.json ──► scenario ──► config ──► sim::builder ──► Coordinator
+//!                                                                   │ events
+//!                                           clients (LLM/RAG/KV/prepost)
+//!                                                │ step plans       │
+//!                                 scheduler (BatchPolicy) ── perfmodel
+//!                                                                   │
+//!                                                  metrics ◄── requests
+//! ```
+//!
+//! * [`coordinator`] — global event loop, routing, inter-client transfers
+//!   (§III-B, Algorithm 1).
+//! * [`client`] — LLM / RAG / KV-retrieval / pre-post serving clients
+//!   (§III-C).
+//! * [`scheduler`] — pluggable batching policies + packing + admission
+//!   (§III-D).
+//! * [`perfmodel`] / [`hardware`] — step-time prediction: roofline
+//!   analytical model, fitted polynomial, AOT Pallas via PJRT (§III-E).
+//! * [`workload`] / [`rag`] / [`memory`] / [`network`] — request
+//!   pipelines, retrieval and communication modeling (§III-E/F).
+//! * [`scenario`] / [`config`] — declarative front-end: data-driven
+//!   scenario registry and the JSON config schema (§III-A).
+//! * [`experiments`] — paper figure/table regenerators (§IV–V).
+//!
+//! See README.md for the quickstart and the bench → paper-figure map.
 
 pub mod util;
 pub mod hardware;
@@ -18,5 +44,6 @@ pub mod scheduler;
 pub mod client;
 pub mod coordinator;
 pub mod config;
+pub mod scenario;
 pub mod metrics;
 pub mod experiments;

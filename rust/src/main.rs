@@ -3,6 +3,8 @@
 //!   hermes simulate --config cfg.json [--out metrics.json]
 //!                   [--trace trace.json] [--quiet]
 //!   hermes sweep    --config cfg.json --rates 1,2,4,8 [--out sweep.json]
+//!   hermes scenario <name|path.json> [--fast] [--out sweep.json]
+//!   hermes scenario --list                # registry under scenarios/
 //!   hermes experiment <fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3>
 //!                   [--fast]
 //!   hermes artifacts                      # list AOT predictor variants
@@ -15,6 +17,7 @@ use hermes::config::SimConfig;
 use hermes::experiments;
 use hermes::metrics::{trace_export, RunMetrics};
 use hermes::runtime::ArtifactBundle;
+use hermes::scenario::{runner, Scenario};
 use hermes::sim::driver;
 use hermes::util::cli::Args;
 
@@ -30,10 +33,11 @@ fn run() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("simulate") => simulate(&args),
         Some("sweep") => sweep(&args),
+        Some("scenario") => scenario(&args),
         Some("experiment") => experiment(&args),
         Some("artifacts") => artifacts(&args),
         Some(other) => {
-            bail!("unknown subcommand '{other}' (try: simulate, sweep, experiment, artifacts)")
+            bail!("unknown subcommand '{other}' (try: simulate, sweep, scenario, experiment, artifacts)")
         }
         None => {
             print_usage();
@@ -48,6 +52,7 @@ fn print_usage() {
     println!("usage:");
     println!("  hermes simulate --config cfg.json [--out m.json] [--trace t.json]");
     println!("  hermes sweep --config cfg.json --rates 1,2,4 [--out sweep.json]");
+    println!("  hermes scenario <name|path.json> [--fast] [--out sweep.json]   (--list to enumerate)");
     println!("  hermes experiment <fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|ablations|all> [--fast]");
     println!("  hermes artifacts");
 }
@@ -165,6 +170,66 @@ fn sweep(args: &Args) -> Result<()> {
         );
     } else {
         println!("no swept rate satisfies all six SLOs");
+    }
+    if let Some(path) = out {
+        std::fs::write(&path, hermes::util::json::Json::Arr(doc_rows).to_pretty())?;
+        println!("sweep -> {path}");
+    }
+    Ok(())
+}
+
+/// Run a declarative scenario file: sweep every batching strategy in its
+/// roster across its rate ladder and print the paper-style table. New
+/// scenarios need only a JSON file — no Rust.
+fn scenario(args: &Args) -> Result<()> {
+    if args.bool_or("list", false) {
+        args.finish().map_err(|e| anyhow::anyhow!(e))?;
+        println!("scenarios in {}:", Scenario::dir().display());
+        for name in Scenario::list() {
+            match Scenario::load(&name) {
+                Ok(sc) => {
+                    let figure = sc.figure.clone().map(|f| format!(" [{f}]")).unwrap_or_default();
+                    println!("  {name:<16} {}{figure}", sc.title);
+                }
+                Err(e) => println!("  {name:<16} (unreadable: {e})"),
+            }
+        }
+        return Ok(());
+    }
+    let which = args
+        .positional
+        .first()
+        .cloned()
+        .context("scenario name or path required (see `hermes scenario --list`)")?;
+    let fast = args.bool_or("fast", false);
+    let out = args.opt_str("out");
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    let sc = Scenario::load(&which)?;
+    let scale = sc.scale(fast);
+    println!(
+        "scenario '{}' — {} ({} clients, rates {:?})",
+        sc.name, sc.title, scale.clients, scale.rates
+    );
+    let mut doc_rows = Vec::new();
+    for panel in sc.panels_or_default() {
+        let results = runner::sweep(&sc, Some(&panel), fast)?;
+        let caption = if panel.label.is_empty() {
+            sc.title.clone()
+        } else {
+            format!("{} — {}", sc.title, panel.label)
+        };
+        hermes::experiments::common::print_normalized(&results, &caption);
+        for r in &results {
+            for p in &r.points {
+                let mut row = p.metrics.to_json();
+                row.set("strategy", r.label.clone())
+                    .set("panel", panel.label.clone())
+                    .set("rate", p.rate)
+                    .set("slo_ok", p.slo_ok);
+                doc_rows.push(row);
+            }
+        }
     }
     if let Some(path) = out {
         std::fs::write(&path, hermes::util::json::Json::Arr(doc_rows).to_pretty())?;

@@ -1,0 +1,649 @@
+//! Declarative scenario registry: JSON files under `scenarios/` →
+//! complete, sweepable serving experiments (see `docs/scenarios.md`).
+//!
+//! A scenario bundles everything the paper varies between figures —
+//! hardware pool, workload mix (regular / RAG / KV-retrieval /
+//! reasoning fractions), batching-policy roster, SLO ladder, rate sweep
+//! and fast/full scale knobs — so a new experiment is a data file, not
+//! Rust code. Every `experiments::fig*` regenerator is a thin wrapper
+//! over one of these files, and `hermes scenario <name>` runs any of
+//! them (or any path) from the CLI.
+//!
+//! The schema is the config-system schema ([`crate::config`]) plus four
+//! scenario-only keys:
+//!
+//! * `"batching"` — the policy roster: an array of entries, each either
+//!   a kind string (`"continuous"`, `"chunked:512"`, `"static"`,
+//!   `"mixed"`), a fractional disaggregated split resolved against the
+//!   swept pool size (`"disagg:0.625"`, `"disagg-local:0.5"`), an
+//!   absolute split (`"disagg:20P/12D"`), or a full `pool` object.
+//! * `"workload"` — one class object, or an array of classes each
+//!   carrying a `"fraction"` (the workload mix).
+//! * `"sweep"` — `{"full": {...}, "fast": {...}}` scale knobs:
+//!   `clients`, `requests_per_client`, `rates`.
+//! * `"panels"` — optional list of `{label, workload: {patch}, slo?}`
+//!   sub-experiments sharing the roster (a paper figure's (a)/(b) panels).
+//!
+//! Figure-specific one-off knobs live under `"extras"` and are read by
+//! the figure wrapper through [`Scenario::extras`].
+
+pub mod runner;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::slo::SloLadder;
+use crate::config::{self, parse_batching_kind};
+use crate::scheduler::BatchingKind;
+use crate::sim::builder::{PoolSpec, ServingSpec};
+use crate::util::json::Json;
+use crate::workload::trace::{WorkloadMix, WorkloadSpec};
+
+/// One batching-roster entry, resolved against the swept pool size.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RosterEntry {
+    /// n identical clients of one kind
+    Kind(BatchingKind),
+    /// disaggregated split as a prefill fraction of the pool
+    DisaggFrac { prefill_frac: f64, local: bool },
+    /// a fully specified pool (ignores the swept size)
+    Fixed(PoolSpec),
+}
+
+impl RosterEntry {
+    /// Parse the string grammar (see module docs).
+    pub fn parse(s: &str) -> Result<RosterEntry> {
+        let disagg = |rest: &str, local: bool| -> Result<RosterEntry> {
+            if let Some((p, d)) = rest.split_once('/') {
+                let prefill: usize = p
+                    .trim_end_matches(['P', 'p'])
+                    .parse()
+                    .with_context(|| format!("bad prefill count in 'disagg:{rest}'"))?;
+                let decode: usize = d
+                    .trim_end_matches(['D', 'd'])
+                    .parse()
+                    .with_context(|| format!("bad decode count in 'disagg:{rest}'"))?;
+                return Ok(RosterEntry::Fixed(PoolSpec::Disaggregated {
+                    prefill,
+                    decode,
+                    local,
+                }));
+            }
+            let frac: f64 = rest
+                .parse()
+                .with_context(|| format!("bad prefill fraction in 'disagg:{rest}'"))?;
+            if !(0.0..1.0).contains(&frac) || frac == 0.0 {
+                bail!("disaggregated prefill fraction must be in (0, 1), got {frac}");
+            }
+            Ok(RosterEntry::DisaggFrac {
+                prefill_frac: frac,
+                local,
+            })
+        };
+        if let Some(rest) = s.strip_prefix("disagg-local:") {
+            disagg(rest, true)
+        } else if let Some(rest) = s.strip_prefix("disagg:") {
+            disagg(rest, false)
+        } else {
+            Ok(RosterEntry::Kind(parse_batching_kind(s)?))
+        }
+    }
+
+    /// Resolve to a concrete pool of `n` LLM clients.
+    pub fn pool(&self, n: usize) -> PoolSpec {
+        match self {
+            RosterEntry::Kind(kind) => PoolSpec::Combined { kind: *kind, n },
+            RosterEntry::DisaggFrac { prefill_frac, local } => {
+                if n < 2 {
+                    // a split needs both roles
+                    PoolSpec::Disaggregated { prefill: 1, decode: 1, local: *local }
+                } else {
+                    let prefill =
+                        (((n as f64) * prefill_frac).round() as usize).clamp(1, n - 1);
+                    PoolSpec::Disaggregated {
+                        prefill,
+                        decode: n - prefill,
+                        local: *local,
+                    }
+                }
+            }
+            RosterEntry::Fixed(pool) => pool.clone(),
+        }
+    }
+}
+
+/// One sub-experiment of a scenario (e.g. a paper figure's (a)/(b)
+/// panels): a label, a shallow patch merged over every workload class,
+/// and an optional SLO-ladder override.
+#[derive(Debug, Clone)]
+pub struct Panel {
+    pub label: String,
+    /// shallow JSON patch applied to each workload class object
+    pub patch: Json,
+    /// `"standard"` / `"retrieval"` / `"auto"` override
+    pub slo: Option<String>,
+    /// the raw panel object, for wrapper-specific keys (e.g. Table III's
+    /// `trace`/`request_type` columns)
+    pub raw: Json,
+}
+
+impl Panel {
+    fn from_json(j: &Json) -> Result<Panel> {
+        Ok(Panel {
+            label: j
+                .get("label")
+                .and_then(Json::as_str)
+                .context("panel needs a 'label'")?
+                .to_string(),
+            patch: j.get("workload").cloned().unwrap_or_else(Json::obj),
+            slo: j.get("slo").and_then(Json::as_str).map(str::to_string),
+            raw: j.clone(),
+        })
+    }
+}
+
+/// Fast/full scale knobs for one scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioScale {
+    /// LLM clients in the pool (roster entries resolve against this)
+    pub clients: usize,
+    pub requests_per_client: usize,
+    /// per-client injection rates to sweep
+    pub rates: Vec<f64>,
+}
+
+impl ScenarioScale {
+    fn from_json(j: &Json, default: &ScenarioScale) -> Result<ScenarioScale> {
+        let rates = match j.get("rates") {
+            None => default.rates.clone(),
+            Some(r) => {
+                // strict: a present-but-malformed rate ladder must error,
+                // not silently sweep nothing
+                let arr = r.as_arr().context("'rates' must be an array")?;
+                let rates: Vec<f64> = arr
+                    .iter()
+                    .enumerate()
+                    .map(|(i, v)| {
+                        v.as_f64()
+                            .with_context(|| format!("'rates[{i}]' is not a number"))
+                    })
+                    .collect::<Result<_>>()?;
+                if rates.is_empty() {
+                    bail!("'rates' must not be empty");
+                }
+                rates
+            }
+        };
+        Ok(ScenarioScale {
+            clients: j.usize_or("clients", default.clients),
+            requests_per_client: j.usize_or("requests_per_client", default.requests_per_client),
+            rates,
+        })
+    }
+}
+
+/// A parsed scenario file. See the module docs for the schema.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub title: String,
+    /// paper figure/table this reproduces, if any
+    pub figure: Option<String>,
+    /// the full parsed document (serving keys, workload, extras…)
+    pub doc: Json,
+    pub roster: Vec<RosterEntry>,
+    pub panels: Vec<Panel>,
+    full: ScenarioScale,
+    fast: ScenarioScale,
+}
+
+impl Scenario {
+    // ---- registry ---------------------------------------------------------
+
+    /// Scenario directory: `$HERMES_SCENARIOS`, else `./scenarios` when
+    /// present, else `<crate root>/scenarios` (so tests and benches find
+    /// the shipped files regardless of the working directory).
+    pub fn dir() -> PathBuf {
+        if let Ok(d) = std::env::var("HERMES_SCENARIOS") {
+            return PathBuf::from(d);
+        }
+        let cwd = PathBuf::from("scenarios");
+        if cwd.is_dir() {
+            return cwd;
+        }
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("scenarios")
+    }
+
+    /// Names of every scenario shipped in [`Scenario::dir`], sorted.
+    pub fn list() -> Vec<String> {
+        let mut names: Vec<String> = std::fs::read_dir(Scenario::dir())
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter_map(|e| {
+                        let p = e.path();
+                        if p.extension().is_some_and(|x| x == "json") {
+                            p.file_stem().map(|s| s.to_string_lossy().into_owned())
+                        } else {
+                            None
+                        }
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        names.sort();
+        names
+    }
+
+    /// Load by registry name (`"fig10"`) or by path (`"my/exp.json"`).
+    pub fn load(name_or_path: &str) -> Result<Scenario> {
+        let as_path = Path::new(name_or_path);
+        if name_or_path.ends_with(".json") || as_path.is_file() {
+            Scenario::from_file(as_path)
+        } else {
+            let path = Scenario::dir().join(format!("{name_or_path}.json"));
+            Scenario::from_file(&path).with_context(|| {
+                format!(
+                    "scenario '{name_or_path}' not found (known: {})",
+                    Scenario::list().join(", ")
+                )
+            })
+        }
+    }
+
+    pub fn from_file(path: &Path) -> Result<Scenario> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario {}", path.display()))?;
+        let doc = Json::parse(&text)
+            .with_context(|| format!("parsing scenario {}", path.display()))?;
+        let stem = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "scenario".to_string());
+        Scenario::from_json(&stem, doc)
+    }
+
+    // ---- parsing ----------------------------------------------------------
+
+    pub fn from_json(default_name: &str, doc: Json) -> Result<Scenario> {
+        let name = doc.str_or("name", default_name).to_string();
+        let title = doc.str_or("title", &name).to_string();
+        let figure = doc.get("figure").and_then(Json::as_str).map(str::to_string);
+
+        // roster: "batching" entries, else the config-style "pool" object
+        let roster: Vec<RosterEntry> = match doc.get("batching") {
+            Some(Json::Arr(entries)) => entries
+                .iter()
+                .map(|e| match e {
+                    Json::Str(s) => RosterEntry::parse(s),
+                    Json::Obj(_) => Ok(RosterEntry::Fixed(config::parse_pool(e)?)),
+                    _ => bail!("roster entries must be strings or pool objects"),
+                })
+                .collect::<Result<_>>()?,
+            Some(Json::Str(s)) => vec![RosterEntry::parse(s)?],
+            Some(_) => bail!("'batching' must be a string or an array"),
+            None => {
+                let pool = doc
+                    .get("pool")
+                    .context("scenario needs 'batching' (roster) or 'pool'")?;
+                vec![RosterEntry::Fixed(config::parse_pool(pool)?)]
+            }
+        };
+
+        let panels = match doc.get("panels") {
+            Some(Json::Arr(ps)) => ps
+                .iter()
+                .map(Panel::from_json)
+                .collect::<Result<Vec<Panel>>>()?,
+            Some(_) => bail!("'panels' must be an array"),
+            None => Vec::new(),
+        };
+
+        let default_scale = ScenarioScale {
+            clients: 4,
+            requests_per_client: 20,
+            rates: vec![0.5, 1.0, 2.0, 4.0],
+        };
+        let sweep = doc.get("sweep").cloned().unwrap_or_else(Json::obj);
+        let full = match sweep.get("full") {
+            Some(j) => ScenarioScale::from_json(j, &default_scale),
+            None => ScenarioScale::from_json(&sweep, &default_scale),
+        }
+        .context("parsing sweep.full")?;
+        let fast = match sweep.get("fast") {
+            Some(j) => ScenarioScale::from_json(j, &full).context("parsing sweep.fast")?,
+            None => full.clone(),
+        };
+
+        let sc = Scenario {
+            name,
+            title,
+            figure,
+            doc,
+            roster,
+            panels,
+            full,
+            fast,
+        };
+        // fail fast on malformed serving/workload sections
+        sc.serving(&sc.roster[0], sc.full.clients)?;
+        sc.workload(sc.panels.first(), 8)?;
+        Ok(sc)
+    }
+
+    // ---- resolution -------------------------------------------------------
+
+    /// Does a run requested with `fast` actually use the fast scale?
+    /// (`HERMES_FULL=1` forces paper scale.) Figure wrappers use this to
+    /// pick between `*_fast`/`*_full` keys in `extras`.
+    pub fn use_fast(&self, fast: bool) -> bool {
+        fast && std::env::var("HERMES_FULL").is_err()
+    }
+
+    /// Scale knobs for this run; `HERMES_FULL=1` forces paper scale.
+    pub fn scale(&self, fast: bool) -> &ScenarioScale {
+        if self.use_fast(fast) {
+            &self.fast
+        } else {
+            &self.full
+        }
+    }
+
+    /// Build the serving spec for one roster entry at a pool size.
+    /// Auxiliary RAG/KV/pre-post tiers scale with `clients` through their
+    /// `per_llm` knobs.
+    pub fn serving(&self, entry: &RosterEntry, clients: usize) -> Result<ServingSpec> {
+        self.serving_panel(entry, clients, None)
+    }
+
+    /// Like [`Scenario::serving`], with a panel's serving-side overrides
+    /// applied: a panel may set or replace `rag_clients`, `kv_clients`,
+    /// `prepost_clients`, `network` or `granularity`, and `null` removes
+    /// the key — so auxiliary tiers are provisioned only for the panels
+    /// whose pipeline uses them (energy accounting stays faithful to the
+    /// paper's per-request-type methodology).
+    pub fn serving_panel(
+        &self,
+        entry: &RosterEntry,
+        clients: usize,
+        panel: Option<&Panel>,
+    ) -> Result<ServingSpec> {
+        const OVERRIDABLE: [&str; 5] =
+            ["rag_clients", "kv_clients", "prepost_clients", "network", "granularity"];
+        let overrides: Vec<(&str, &Json)> = panel
+            .map(|p| {
+                OVERRIDABLE
+                    .iter()
+                    .filter_map(|k| p.raw.get(k).map(|v| (*k, v)))
+                    .collect()
+            })
+            .unwrap_or_default();
+        if overrides.is_empty() {
+            return config::parse_serving(&self.doc, entry.pool(clients));
+        }
+        let mut doc = self.doc.clone();
+        for (key, value) in overrides {
+            if matches!(value, Json::Null) {
+                doc.remove(key);
+            } else {
+                doc.set(key, value.clone());
+            }
+        }
+        config::parse_serving(&doc, entry.pool(clients))
+    }
+
+    /// Build the workload mix for `n_requests` total, with an optional
+    /// panel patch applied to every class.
+    pub fn workload(&self, panel: Option<&Panel>, n_requests: usize) -> Result<WorkloadMix> {
+        let name = self.doc.str_or("model", "llama3-70b");
+        let model: &'static str = crate::hardware::model(name)
+            .with_context(|| format!("unknown model {name}"))?
+            .name;
+        let seed = self.doc.f64_or("seed", 0.0) as u64;
+        let w = self
+            .doc
+            .get("workload")
+            .context("scenario needs 'workload'")?;
+        let patch = panel.map(|p| &p.patch);
+        let class = |j: &Json| -> Result<WorkloadSpec> {
+            let merged = match patch {
+                Some(p) => j.merged(p),
+                None => j.clone(),
+            };
+            config::parse_workload(model, &merged, seed)
+        };
+        let mix = match w {
+            Json::Arr(classes) => {
+                if classes.is_empty() {
+                    bail!("workload mix must have at least one class");
+                }
+                WorkloadMix::new(
+                    classes
+                        .iter()
+                        .map(|c| Ok((c.f64_or("fraction", 1.0), class(c)?)))
+                        .collect::<Result<Vec<_>>>()?,
+                )
+            }
+            _ => WorkloadMix::single(class(w)?),
+        };
+        let total_rate: f64 = mix
+            .classes
+            .iter()
+            .map(|(f, s)| f * s.arrival.rate())
+            .sum();
+        Ok(mix.scaled(n_requests, total_rate.max(1e-9)))
+    }
+
+    /// SLO ladder: the panel's override, else the scenario's `slo` key
+    /// (with `auto` resolved against the mix's primary pipeline).
+    pub fn slo(&self, panel: Option<&Panel>, mix: &WorkloadMix) -> Result<SloLadder> {
+        let name = panel
+            .and_then(|p| p.slo.as_deref())
+            .unwrap_or_else(|| self.doc.str_or("slo", "auto"));
+        config::parse_slo(name, &mix.primary().pipeline)
+    }
+
+    /// Figure-specific knobs (the `"extras"` object; empty if absent).
+    pub fn extras(&self) -> Json {
+        self.doc.get("extras").cloned().unwrap_or_else(Json::obj)
+    }
+
+    /// `<key>_fast` / `<key>_full` for this run — the naming convention
+    /// scale-dependent `extras` keys use.
+    pub fn scaled_key(&self, fast: bool, key: &str) -> String {
+        format!("{key}_{}", if self.use_fast(fast) { "fast" } else { "full" })
+    }
+
+    /// Strict scalar accessors for `extras`: a missing key is an error,
+    /// so a paper-scale run can never silently fall back to toy values.
+    pub fn extra_f64(&self, key: &str) -> Result<f64> {
+        self.extras()
+            .get(key)
+            .and_then(Json::as_f64)
+            .with_context(|| format!("scenario '{}' needs numeric extras.{key}", self.name))
+    }
+
+    pub fn extra_usize(&self, key: &str) -> Result<usize> {
+        self.extras()
+            .get(key)
+            .and_then(Json::as_usize)
+            .with_context(|| format!("scenario '{}' needs integer extras.{key}", self.name))
+    }
+
+    /// Strict numeric-array accessor: errors on a missing key, an empty
+    /// array, or any non-numeric entry (no silent `filter_map` drops).
+    pub fn extra_f64_list(&self, key: &str) -> Result<Vec<f64>> {
+        let extras = self.extras();
+        let arr = extras
+            .get(key)
+            .and_then(Json::as_arr)
+            .with_context(|| format!("scenario '{}' needs array extras.{key}", self.name))?;
+        let out: Vec<f64> = arr
+            .iter()
+            .enumerate()
+            .map(|(i, v)| {
+                v.as_f64().with_context(|| {
+                    format!("scenario '{}': extras.{key}[{i}] is not a number", self.name)
+                })
+            })
+            .collect::<Result<_>>()?;
+        if out.is_empty() {
+            bail!("scenario '{}': extras.{key} is empty", self.name);
+        }
+        Ok(out)
+    }
+
+    pub fn extra_usize_list(&self, key: &str) -> Result<Vec<usize>> {
+        Ok(self
+            .extra_f64_list(key)?
+            .into_iter()
+            .map(|v| v as usize)
+            .collect())
+    }
+
+    /// Panels, or a single unlabeled panel when the scenario has none —
+    /// callers can always iterate.
+    pub fn panels_or_default(&self) -> Vec<Panel> {
+        if self.panels.is_empty() {
+            vec![Panel {
+                label: String::new(),
+                patch: Json::obj(),
+                slo: None,
+                raw: Json::obj(),
+            }]
+        } else {
+            self.panels.clone()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(s: &str) -> Json {
+        Json::parse(s).unwrap()
+    }
+
+    const MINIMAL: &str = r#"{
+        "title": "minimal",
+        "model": "llama3-70b", "npu": "h100", "tp": 8,
+        "batching": ["continuous", "chunked:256", "disagg:0.6"],
+        "perf_model": "roofline",
+        "workload": { "trace": "azure-conv" },
+        "sweep": { "full": { "clients": 8, "requests_per_client": 30,
+                             "rates": [1.0, 2.0] },
+                   "fast": { "clients": 2, "requests_per_client": 8,
+                             "rates": [1.0] } }
+    }"#;
+
+    #[test]
+    fn roster_entries_resolve_against_pool_size() {
+        let sc = Scenario::from_json("t", doc(MINIMAL)).unwrap();
+        assert_eq!(sc.roster.len(), 3);
+        assert_eq!(
+            sc.roster[0].pool(8),
+            PoolSpec::Combined { kind: BatchingKind::Continuous, n: 8 }
+        );
+        assert_eq!(
+            sc.roster[1].pool(3),
+            PoolSpec::Combined { kind: BatchingKind::Chunked { chunk: 256 }, n: 3 }
+        );
+        assert_eq!(
+            sc.roster[2].pool(8),
+            PoolSpec::Disaggregated { prefill: 5, decode: 3, local: false }
+        );
+        // fraction resolves differently at a different scale
+        assert_eq!(
+            sc.roster[2].pool(32),
+            PoolSpec::Disaggregated { prefill: 19, decode: 13, local: false }
+        );
+    }
+
+    #[test]
+    fn roster_string_grammar() {
+        assert_eq!(
+            RosterEntry::parse("disagg:20P/12D").unwrap(),
+            RosterEntry::Fixed(PoolSpec::Disaggregated { prefill: 20, decode: 12, local: false })
+        );
+        assert_eq!(
+            RosterEntry::parse("disagg-local:0.5").unwrap(),
+            RosterEntry::DisaggFrac { prefill_frac: 0.5, local: true }
+        );
+        assert!(RosterEntry::parse("disagg:1.5").is_err());
+        assert!(RosterEntry::parse("warp-drive").is_err());
+    }
+
+    #[test]
+    fn scales_honor_fast_flag() {
+        let sc = Scenario::from_json("t", doc(MINIMAL)).unwrap();
+        assert_eq!(sc.scale(false).clients, 8);
+        if std::env::var("HERMES_FULL").is_err() {
+            assert_eq!(sc.scale(true).clients, 2);
+            assert_eq!(sc.scale(true).rates, vec![1.0]);
+        }
+    }
+
+    #[test]
+    fn serving_and_workload_build() {
+        let sc = Scenario::from_json("t", doc(MINIMAL)).unwrap();
+        let spec = sc.serving(&sc.roster[0], 2).unwrap();
+        assert_eq!(spec.pool.n_clients(), 2);
+        let mix = sc.workload(None, 40).unwrap();
+        assert_eq!(mix.n_total(), 40);
+        let mut coord = spec.build().unwrap();
+        coord.inject(mix.generate());
+        coord.run();
+        assert!(coord.all_serviced());
+    }
+
+    #[test]
+    fn workload_mix_and_panels() {
+        let sc = Scenario::from_json(
+            "t",
+            doc(r#"{
+                "model": "llama3-70b",
+                "batching": ["continuous"],
+                "workload": [
+                    { "fraction": 0.75, "trace": "azure-conv" },
+                    { "fraction": 0.25, "trace": "azure-conv", "pipeline": "rag",
+                      "docs": 6, "doc_tokens": 500 }
+                ],
+                "panels": [
+                    { "label": "code", "workload": { "trace": "azure-code" },
+                      "slo": "retrieval" }
+                ],
+                "sweep": { "clients": 2, "requests_per_client": 10, "rates": [1.0] }
+            }"#),
+        )
+        .unwrap();
+        let mix = sc.workload(None, 80).unwrap();
+        assert_eq!(mix.classes.len(), 2);
+        assert_eq!(mix.classes[0].1.n_requests, 60);
+        assert_eq!(mix.classes[1].1.n_requests, 20);
+        // panel patch applies to every class
+        let panel = &sc.panels[0];
+        let patched = sc.workload(Some(panel), 8).unwrap();
+        for (_, class) in &patched.classes {
+            assert_eq!(class.trace, crate::workload::trace::TraceKind::AzureCode);
+        }
+        // panel SLO override
+        let slo = sc.slo(Some(panel), &patched).unwrap();
+        assert_eq!(slo.ttft_base, 1.0);
+        // default: auto → standard for the regular-dominated mix
+        let slo = sc.slo(None, &mix).unwrap();
+        assert_eq!(slo.ttft_base, 0.25);
+    }
+
+    #[test]
+    fn malformed_scenarios_fail_fast() {
+        for bad in [
+            r#"{"workload": {"trace": "azure-conv"}}"#,
+            r#"{"batching": ["quantum"], "workload": {}}"#,
+            r#"{"batching": ["continuous"]}"#,
+            r#"{"batching": ["continuous"], "workload": {"trace": "alien"}}"#,
+        ] {
+            assert!(Scenario::from_json("bad", doc(bad)).is_err(), "{bad}");
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Generic scenario execution: resolve a [`Scenario`](super::Scenario)'s
+//! roster at the requested scale and rate-sweep every strategy (the
+//! §V-A "gradually increase the per-client request rate" methodology).
+//! This is what `hermes scenario <name>` and all `experiments::fig*`
+//! wrappers run; no Rust code is needed to execute a new scenario file.
+
+use anyhow::Result;
+
+use super::{Panel, Scenario};
+use crate::sim::driver::{self, SweepPoint};
+
+/// One strategy's sweep outcome.
+#[derive(Debug, Clone)]
+pub struct StrategySweep {
+    /// the resolved pool label (e.g. `continuous`, `disagg-5P/3D`)
+    pub label: String,
+    pub points: Vec<SweepPoint>,
+}
+
+impl StrategySweep {
+    /// Best SLO-satisfying throughput (tokens/s); None if nothing passes.
+    pub fn best(&self) -> Option<&SweepPoint> {
+        driver::best_under_slo(&self.points)
+    }
+
+    /// Best point by throughput/energy under SLO.
+    pub fn best_energy(&self) -> Option<&SweepPoint> {
+        self.points
+            .iter()
+            .filter(|p| p.slo_ok)
+            .max_by(|a, b| {
+                a.metrics
+                    .tok_per_joule
+                    .partial_cmp(&b.metrics.tok_per_joule)
+                    .unwrap()
+            })
+    }
+
+    /// Lowest p50 TTFT across swept points (TTFT objective column).
+    pub fn best_ttft(&self) -> Option<f64> {
+        self.points
+            .iter()
+            .filter(|p| p.slo_ok)
+            .map(|p| p.metrics.ttft.p50)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+}
+
+/// Sweep every roster entry at an explicit scale (pool size, request
+/// count per client, per-client rates).
+pub fn sweep_at(
+    sc: &Scenario,
+    panel: Option<&Panel>,
+    clients: usize,
+    requests_per_client: usize,
+    rates: &[f64],
+) -> Result<Vec<StrategySweep>> {
+    // the workload and SLO ladder are identical across strategies by
+    // construction — build them once, outside the roster loop
+    let mix = sc.workload(panel, requests_per_client * clients)?;
+    let slo = sc.slo(panel, &mix)?;
+    let mut out = Vec::with_capacity(sc.roster.len());
+    for entry in &sc.roster {
+        let spec = sc.serving_panel(entry, clients, panel)?;
+        let points = driver::sweep_rates_mix(&spec, &mix, &slo, rates)?;
+        out.push(StrategySweep {
+            label: spec.pool.label(),
+            points,
+        });
+    }
+    Ok(out)
+}
+
+/// Sweep every roster entry at the scenario's own fast/full scale.
+pub fn sweep(sc: &Scenario, panel: Option<&Panel>, fast: bool) -> Result<Vec<StrategySweep>> {
+    let scale = sc.scale(fast);
+    sweep_at(sc, panel, scale.clients, scale.requests_per_client, &scale.rates)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn sweeps_roster_and_changing_batching_changes_results() {
+        let sc = Scenario::from_json(
+            "t",
+            Json::parse(
+                r#"{
+                "model": "llama3-70b", "npu": "h100", "tp": 8,
+                "batching": ["static", "continuous", "chunked:512"],
+                "perf_model": "roofline",
+                "workload": { "trace": "azure-conv" },
+                "sweep": { "clients": 1, "requests_per_client": 25, "rates": [2.0] }
+            }"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let sweeps = sweep(&sc, None, true).unwrap();
+        assert_eq!(sweeps.len(), 3);
+        assert_eq!(sweeps[0].label, "static");
+        assert_eq!(sweeps[1].label, "continuous");
+        assert_eq!(sweeps[2].label, "chunked");
+        for s in &sweeps {
+            assert_eq!(s.points.len(), 1);
+            assert!(s.points[0].metrics.n_serviced > 0, "{}", s.label);
+        }
+        // the acceptance check of the scenario refactor: identical data,
+        // different `batching` entry → different reported latency under
+        // the same arrival stream, with no recompilation
+        let ttft = |s: &StrategySweep| s.points[0].metrics.ttft.p50;
+        assert!(
+            (ttft(&sweeps[0]) - ttft(&sweeps[1])).abs() > 1e-9
+                || (ttft(&sweeps[2]) - ttft(&sweeps[1])).abs() > 1e-9,
+            "batching policy had no effect on TTFT: static={} continuous={} chunked={}",
+            ttft(&sweeps[0]),
+            ttft(&sweeps[1]),
+            ttft(&sweeps[2])
+        );
+    }
+}

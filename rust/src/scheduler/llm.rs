@@ -1,25 +1,29 @@
-//! The LLM scheduler: five batching strategies behind one planner
-//! (paper §III-D.1), with KV admission control and token/sequence caps.
+//! The LLM scheduler: queue + KV-admission bookkeeping in front of a
+//! pluggable [`BatchPolicy`] (paper §III-D.1).
 //!
-//!   Static        — FasterTransformer-style: fill a batch, run it to
-//!                   completion, only then admit the next batch.
-//!   Continuous    — Orca/vLLM: admit every step; prefill-prioritized
-//!                   (a pending prefill preempts decoding).
-//!   Chunked       — Sarathi/DeepSpeed-FastGen: fixed per-step token
-//!                   budget; decodes ride along with prefill chunks.
-//!   Mixed         — Splitwise mixed pool: full prefills and decodes
-//!                   co-scheduled without a chunk budget.
-//!   PrefillOnly / — the two halves of disaggregated serving
-//!   DecodeOnly      (Splitwise/DistServe); the coordinator moves KV
-//!                   between them.
+//! `LlmSched` owns what every batching strategy shares — the waiting
+//! queue, the admitted set, per-request KV reservations, and the
+//! admission loop with its sequence/KV caps — and delegates the two
+//! policy decisions (when to admit, what a step executes) to a
+//! [`BatchPolicy`]. The paper's strategy roster is the [`BatchingKind`]
+//! enum, which maps 1:1 onto the built-in policies in
+//! [`policy`](super::policy); custom policies plug in through
+//! [`LlmSched::with_policy`].
 
 use std::collections::{HashMap, VecDeque};
 
 use super::packing::Packing;
+use super::policy::{
+    BatchPolicy, ChunkedPrefill, ContinuousBatching, DecodeRole, MixedBatching, PlanCtx,
+    PrefillRole, StaticBatching,
+};
 use super::{RequestPool, StepPlan};
 use crate::memory::hierarchy::KvManager;
 use crate::workload::request::ReqId;
 
+/// Declarative name for one of the built-in batching policies; the
+/// config / scenario layers and pool labels speak this enum, the
+/// scheduler speaks [`BatchPolicy`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum BatchingKind {
     Static,
@@ -39,6 +43,18 @@ impl BatchingKind {
             BatchingKind::Mixed => "mixed",
             BatchingKind::PrefillOnly => "prefill-only",
             BatchingKind::DecodeOnly => "decode-only",
+        }
+    }
+
+    /// Instantiate the built-in policy this kind names.
+    pub fn policy(&self) -> Box<dyn BatchPolicy> {
+        match *self {
+            BatchingKind::Static => Box::new(StaticBatching),
+            BatchingKind::Continuous => Box::new(ContinuousBatching),
+            BatchingKind::Chunked { chunk } => Box::new(ChunkedPrefill { chunk }),
+            BatchingKind::Mixed => Box::new(MixedBatching),
+            BatchingKind::PrefillOnly => Box::new(PrefillRole),
+            BatchingKind::DecodeOnly => Box::new(DecodeRole),
         }
     }
 }
@@ -64,7 +80,7 @@ impl Default for SchedConfig {
 
 /// vLLM-like scheduler state for one LLM client.
 pub struct LlmSched {
-    pub kind: BatchingKind,
+    policy: Box<dyn BatchPolicy>,
     pub packing: Packing,
     pub cfg: SchedConfig,
     /// arrived but not yet admitted (no KV reservation)
@@ -78,9 +94,19 @@ pub struct LlmSched {
 }
 
 impl LlmSched {
+    /// Scheduler running one of the built-in batching strategies.
     pub fn new(kind: BatchingKind, packing: Packing, cfg: SchedConfig) -> LlmSched {
+        LlmSched::with_policy(kind.policy(), packing, cfg)
+    }
+
+    /// Scheduler running a custom [`BatchPolicy`].
+    pub fn with_policy(
+        policy: Box<dyn BatchPolicy>,
+        packing: Packing,
+        cfg: SchedConfig,
+    ) -> LlmSched {
         LlmSched {
-            kind,
+            policy,
             packing,
             cfg,
             waiting: VecDeque::new(),
@@ -88,6 +114,20 @@ impl LlmSched {
             reserved: HashMap::new(),
             admissions: 0,
         }
+    }
+
+    pub fn policy(&self) -> &dyn BatchPolicy {
+        &*self.policy
+    }
+
+    /// Can this scheduler's policy execute prompt processing?
+    pub fn serves_prefill(&self) -> bool {
+        self.policy.serves_prefill()
+    }
+
+    /// Can this scheduler's policy execute token generation?
+    pub fn serves_decode(&self) -> bool {
+        self.policy.serves_decode()
     }
 
     pub fn enqueue(&mut self, id: ReqId) {
@@ -119,16 +159,6 @@ impl LlmSched {
         }
     }
 
-    /// KV tokens to reserve at admission, by role: a prefill-only client
-    /// never holds decode KV; everyone else reserves the full peak.
-    fn admit_tokens(&self, pool: &RequestPool, id: ReqId) -> f64 {
-        let r = &pool[&id];
-        match self.kind {
-            BatchingKind::PrefillOnly => (r.past_tokens + r.prompt_tokens) as f64,
-            _ => r.kv_tokens_peak(),
-        }
-    }
-
     /// Admit from `waiting` in packing order while KV + seq caps allow.
     fn admit(&mut self, pool: &RequestPool, kv: &mut KvManager) {
         if self.waiting.is_empty() {
@@ -145,7 +175,7 @@ impl LlmSched {
             if seqs + pool[&id].decode_seqs() > self.cfg.max_batch_seqs {
                 break;
             }
-            let tokens = self.admit_tokens(pool, id);
+            let tokens = self.policy.admit_tokens(&pool[&id]);
             if kv.admit(tokens) {
                 self.waiting.retain(|r| *r != id);
                 self.running.push(id);
@@ -161,190 +191,15 @@ impl LlmSched {
 
     /// Build the next step plan; `None` when there is nothing to run.
     pub fn plan(&mut self, pool: &RequestPool, kv: &mut KvManager) -> Option<StepPlan> {
-        match self.kind {
-            BatchingKind::Static => self.plan_static(pool, kv),
-            BatchingKind::Continuous => self.plan_continuous(pool, kv),
-            BatchingKind::Chunked { chunk } => self.plan_chunked(pool, kv, chunk),
-            BatchingKind::Mixed => self.plan_mixed(pool, kv),
-            BatchingKind::PrefillOnly => self.plan_prefill_only(pool, kv),
-            BatchingKind::DecodeOnly => self.plan_decode_only(pool, kv),
-        }
-    }
-
-    fn prefillers(&self, pool: &RequestPool) -> Vec<ReqId> {
-        self.running
-            .iter()
-            .copied()
-            .filter(|id| !pool[id].prefill_complete())
-            .collect()
-    }
-
-    fn decoders(&self, pool: &RequestPool) -> Vec<ReqId> {
-        self.running
-            .iter()
-            .copied()
-            .filter(|id| pool[id].prefill_complete() && !pool[id].decode_complete())
-            .collect()
-    }
-
-    fn plan_static(&mut self, pool: &RequestPool, kv: &mut KvManager) -> Option<StepPlan> {
-        // admit only when the previous batch fully drained
-        if self.running.is_empty() {
+        if self.policy.admits_mid_batch() || self.running.is_empty() {
             self.admit(pool, kv);
         }
-        if self.running.is_empty() {
-            return None;
-        }
-        let pf = self.prefillers(pool);
-        if !pf.is_empty() {
-            // whole prompts, one step (FasterTransformer has no chunking)
-            return Some(StepPlan {
-                prefill: pf
-                    .iter()
-                    .map(|id| (*id, pool[id].prefill_remaining()))
-                    .collect(),
-                decode: Vec::new(),
-            });
-        }
-        Some(StepPlan {
-            prefill: Vec::new(),
-            decode: self.decoders(pool),
-        })
-    }
-
-    fn plan_continuous(&mut self, pool: &RequestPool, kv: &mut KvManager) -> Option<StepPlan> {
-        self.admit(pool, kv);
-        if self.running.is_empty() {
-            return None;
-        }
-        // prefill-prioritized: pending prefills preempt decode
-        let mut pf = self.prefillers(pool);
-        if !pf.is_empty() {
-            self.packing.order(&mut pf, pool);
-            let mut budget = self.cfg.max_batch_tokens;
-            let mut prefill = Vec::new();
-            for id in pf {
-                if budget == 0 {
-                    break;
-                }
-                let take = pool[&id].prefill_remaining().min(budget);
-                // continuous batching does not split prompts: take all or
-                // wait (unless a single prompt alone exceeds the budget)
-                if take < pool[&id].prefill_remaining() && !prefill.is_empty() {
-                    break;
-                }
-                budget -= take;
-                prefill.push((id, take));
-            }
-            if !prefill.is_empty() {
-                return Some(StepPlan {
-                    prefill,
-                    decode: Vec::new(),
-                });
-            }
-        }
-        let dec = self.decoders(pool);
-        if dec.is_empty() {
-            return None;
-        }
-        Some(StepPlan {
-            prefill: Vec::new(),
-            decode: dec,
-        })
-    }
-
-    fn plan_chunked(
-        &mut self,
-        pool: &RequestPool,
-        kv: &mut KvManager,
-        chunk: usize,
-    ) -> Option<StepPlan> {
-        self.admit(pool, kv);
-        if self.running.is_empty() {
-            return None;
-        }
-        // decodes ride in every step (1 token per branch-sequence)...
-        let decode = self.decoders(pool);
-        let dec_tokens: usize = decode.iter().map(|id| pool[id].decode_seqs()).sum();
-        // ...and the remaining budget is filled with prefill chunks
-        let mut budget = chunk.saturating_sub(dec_tokens);
-        let mut pf = self.prefillers(pool);
-        self.packing.order(&mut pf, pool);
-        let mut prefill = Vec::new();
-        for id in pf {
-            if budget == 0 {
-                break;
-            }
-            let take = pool[&id].prefill_remaining().min(budget);
-            budget -= take;
-            prefill.push((id, take));
-        }
-        if prefill.is_empty() && decode.is_empty() {
-            return None;
-        }
-        Some(StepPlan { prefill, decode })
-    }
-
-    fn plan_mixed(&mut self, pool: &RequestPool, kv: &mut KvManager) -> Option<StepPlan> {
-        self.admit(pool, kv);
-        if self.running.is_empty() {
-            return None;
-        }
-        let mut pf = self.prefillers(pool);
-        self.packing.order(&mut pf, pool);
-        let mut budget = self.cfg.max_batch_tokens;
-        let mut prefill = Vec::new();
-        for id in pf {
-            let take = pool[&id].prefill_remaining().min(budget);
-            if take == 0 {
-                break;
-            }
-            budget -= take;
-            prefill.push((id, take));
-        }
-        let decode = self.decoders(pool);
-        if prefill.is_empty() && decode.is_empty() {
-            return None;
-        }
-        Some(StepPlan { prefill, decode })
-    }
-
-    fn plan_prefill_only(&mut self, pool: &RequestPool, kv: &mut KvManager) -> Option<StepPlan> {
-        self.admit(pool, kv);
-        let mut pf = self.prefillers(pool);
-        if pf.is_empty() {
-            return None;
-        }
-        self.packing.order(&mut pf, pool);
-        let mut budget = self.cfg.max_batch_tokens;
-        let mut prefill = Vec::new();
-        for id in pf {
-            if budget == 0 {
-                break;
-            }
-            let take = pool[&id].prefill_remaining().min(budget);
-            if take < pool[&id].prefill_remaining() && !prefill.is_empty() {
-                break; // no chunking across steps beyond the head request
-            }
-            budget -= take;
-            prefill.push((id, take));
-        }
-        Some(StepPlan {
-            prefill,
-            decode: Vec::new(),
-        })
-    }
-
-    fn plan_decode_only(&mut self, pool: &RequestPool, kv: &mut KvManager) -> Option<StepPlan> {
-        self.admit(pool, kv);
-        let dec = self.decoders(pool);
-        if dec.is_empty() {
-            return None;
-        }
-        Some(StepPlan {
-            prefill: Vec::new(),
-            decode: dec,
-        })
+        let ctx = PlanCtx {
+            running: &self.running,
+            cfg: &self.cfg,
+            packing: self.packing,
+        };
+        self.policy.compose(&ctx, pool)
     }
 }
 
@@ -541,5 +396,23 @@ mod tests {
         let _ = pool;
         assert!(s.remove(1).is_none(), "still waiting -> no KV to release");
         assert_eq!(s.queue_len(), 0);
+    }
+
+    #[test]
+    fn kind_maps_to_policy_names_and_roles() {
+        for (kind, name) in [
+            (BatchingKind::Static, "static"),
+            (BatchingKind::Continuous, "continuous"),
+            (BatchingKind::Chunked { chunk: 64 }, "chunked"),
+            (BatchingKind::Mixed, "mixed"),
+            (BatchingKind::PrefillOnly, "prefill-only"),
+            (BatchingKind::DecodeOnly, "decode-only"),
+        ] {
+            let p = kind.policy();
+            assert_eq!(p.name(), name);
+            assert_eq!(p.name(), kind.name());
+        }
+        let s = LlmSched::new(BatchingKind::PrefillOnly, Packing::Fcfs, SchedConfig::default());
+        assert!(s.serves_prefill() && !s.serves_decode());
     }
 }

@@ -1,10 +1,11 @@
 //! Client-side schedulers (paper §III-D).
 //!
-//! The LLM scheduler is modeled after vLLM's: it enforces a batching
-//! policy (static / continuous / chunked / mixed / disaggregated-role),
-//! a request packing policy (FCFS / Least-Work-Left), user constraints
-//! (max batched sequences, max batched tokens) and KV memory admission
-//! (no admission when the KV manager is full; eviction on completion).
+//! The LLM scheduler is modeled after vLLM's: a pluggable batching
+//! policy ([`policy::BatchPolicy`]: static / continuous / chunked /
+//! mixed / disaggregated-role, or user-defined), a request packing
+//! policy (FCFS / Least-Work-Left), user constraints (max batched
+//! sequences, max batched tokens) and KV memory admission (no admission
+//! when the KV manager is full; eviction on completion).
 //!
 //! Non-LLM clients use the two base schedulers in [`simple`]: `Batched`
 //! (single-step tasks with reuse, e.g. RAG lookups) and `Sequential`
@@ -12,6 +13,7 @@
 
 pub mod llm;
 pub mod packing;
+pub mod policy;
 pub mod simple;
 
 use std::collections::HashMap;
@@ -20,6 +22,7 @@ use crate::workload::request::{ReqId, Request};
 
 pub use llm::{BatchingKind, LlmSched, SchedConfig};
 pub use packing::Packing;
+pub use policy::BatchPolicy;
 
 /// The requests a client currently owns, keyed by id.
 pub type RequestPool = HashMap<ReqId, Request>;

@@ -1,0 +1,454 @@
+//! Pluggable batching policies (paper §III-D.1).
+//!
+//! [`BatchPolicy`] is the extension point behind the LLM scheduler: a
+//! policy decides *when* waiting requests may join the admitted set and
+//! *what* one engine step executes. [`LlmSched`](super::LlmSched) owns
+//! the queue/KV-reservation bookkeeping that is common to every policy
+//! and delegates these two decisions, so adding a batching strategy —
+//! or selecting one per client from a scenario file — requires no
+//! scheduler or coordinator changes.
+//!
+//! Six built-in policies mirror the paper's roster:
+//!
+//! * [`StaticBatching`] — FasterTransformer-style: fill a batch, run it
+//!   to completion, only then admit the next batch.
+//! * [`ContinuousBatching`] — Orca/vLLM: admit every step,
+//!   prefill-prioritized (a pending prefill preempts decoding).
+//! * [`ChunkedPrefill`] — Sarathi/DeepSpeed-FastGen hybrid: fixed
+//!   per-step token budget; decodes ride along with prefill chunks.
+//! * [`MixedBatching`] — Splitwise mixed pool: full prefills and
+//!   decodes co-scheduled without a chunk budget.
+//! * [`PrefillRole`] / [`DecodeRole`] — the two halves of disaggregated
+//!   serving (Splitwise/DistServe); the coordinator moves KV between
+//!   them.
+
+use super::packing::Packing;
+use super::{RequestPool, SchedConfig, StepPlan};
+use crate::workload::request::{ReqId, Request};
+
+/// Read-only view of the scheduler state a policy composes steps from.
+pub struct PlanCtx<'a> {
+    /// admitted requests (KV reserved), in admission order
+    pub running: &'a [ReqId],
+    pub cfg: &'a SchedConfig,
+    pub packing: Packing,
+}
+
+impl PlanCtx<'_> {
+    /// Admitted requests whose prompt is not fully prefilled.
+    pub fn prefillers(&self, pool: &RequestPool) -> Vec<ReqId> {
+        self.running
+            .iter()
+            .copied()
+            .filter(|id| !pool[id].prefill_complete())
+            .collect()
+    }
+
+    /// Admitted requests ready to generate (prefill done, decode not).
+    pub fn decoders(&self, pool: &RequestPool) -> Vec<ReqId> {
+        self.running
+            .iter()
+            .copied()
+            .filter(|id| pool[id].prefill_complete() && !pool[id].decode_complete())
+            .collect()
+    }
+}
+
+/// A batching strategy for one LLM client.
+pub trait BatchPolicy {
+    /// Stable label used in pool labels and reports.
+    fn name(&self) -> &'static str;
+
+    /// May waiting requests be admitted while earlier admissions are
+    /// still in flight? Static batching answers `false`: a new batch
+    /// forms only once the previous one fully drains.
+    fn admits_mid_batch(&self) -> bool {
+        true
+    }
+
+    /// Role gates for disaggregated serving; the client's
+    /// `can_serve`/hand-off behavior derives from these.
+    fn serves_prefill(&self) -> bool {
+        true
+    }
+
+    fn serves_decode(&self) -> bool {
+        true
+    }
+
+    /// KV tokens to reserve when admitting `r`. Combined clients
+    /// reserve the full decode-complete peak; a prefill-only client
+    /// overrides this to the prefix footprint it actually holds.
+    fn admit_tokens(&self, r: &Request) -> f64 {
+        r.kv_tokens_peak()
+    }
+
+    /// Compose the next engine step from the admitted set; `None` (or an
+    /// empty plan) when this policy has nothing to run.
+    fn compose(&self, ctx: &PlanCtx, pool: &RequestPool) -> Option<StepPlan>;
+}
+
+/// FasterTransformer-style run-to-completion batching.
+pub struct StaticBatching;
+
+impl BatchPolicy for StaticBatching {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn admits_mid_batch(&self) -> bool {
+        false
+    }
+
+    fn compose(&self, ctx: &PlanCtx, pool: &RequestPool) -> Option<StepPlan> {
+        if ctx.running.is_empty() {
+            return None;
+        }
+        let pf = ctx.prefillers(pool);
+        if !pf.is_empty() {
+            // whole prompts, one step (FasterTransformer has no chunking)
+            return Some(StepPlan {
+                prefill: pf
+                    .iter()
+                    .map(|id| (*id, pool[id].prefill_remaining()))
+                    .collect(),
+                decode: Vec::new(),
+            });
+        }
+        Some(StepPlan {
+            prefill: Vec::new(),
+            decode: ctx.decoders(pool),
+        })
+    }
+}
+
+/// Orca/vLLM continuous (in-flight) batching, prefill-prioritized.
+pub struct ContinuousBatching;
+
+impl BatchPolicy for ContinuousBatching {
+    fn name(&self) -> &'static str {
+        "continuous"
+    }
+
+    fn compose(&self, ctx: &PlanCtx, pool: &RequestPool) -> Option<StepPlan> {
+        if ctx.running.is_empty() {
+            return None;
+        }
+        // prefill-prioritized: pending prefills preempt decode
+        let mut pf = ctx.prefillers(pool);
+        if !pf.is_empty() {
+            ctx.packing.order(&mut pf, pool);
+            let mut budget = ctx.cfg.max_batch_tokens;
+            let mut prefill = Vec::new();
+            for id in pf {
+                if budget == 0 {
+                    break;
+                }
+                let take = pool[&id].prefill_remaining().min(budget);
+                // continuous batching does not split prompts: take all or
+                // wait (unless a single prompt alone exceeds the budget)
+                if take < pool[&id].prefill_remaining() && !prefill.is_empty() {
+                    break;
+                }
+                budget -= take;
+                prefill.push((id, take));
+            }
+            if !prefill.is_empty() {
+                return Some(StepPlan {
+                    prefill,
+                    decode: Vec::new(),
+                });
+            }
+        }
+        let dec = ctx.decoders(pool);
+        if dec.is_empty() {
+            return None;
+        }
+        Some(StepPlan {
+            prefill: Vec::new(),
+            decode: dec,
+        })
+    }
+}
+
+/// Sarathi/DeepSpeed-FastGen chunked-prefill hybrid batching.
+pub struct ChunkedPrefill {
+    /// per-step token budget shared by decodes and prefill chunks
+    pub chunk: usize,
+}
+
+impl BatchPolicy for ChunkedPrefill {
+    fn name(&self) -> &'static str {
+        "chunked"
+    }
+
+    fn compose(&self, ctx: &PlanCtx, pool: &RequestPool) -> Option<StepPlan> {
+        if ctx.running.is_empty() {
+            return None;
+        }
+        // decodes ride in every step (1 token per branch-sequence)...
+        let decode = ctx.decoders(pool);
+        let dec_tokens: usize = decode.iter().map(|id| pool[id].decode_seqs()).sum();
+        // ...and the remaining budget is filled with prefill chunks
+        let mut budget = self.chunk.saturating_sub(dec_tokens);
+        let mut pf = ctx.prefillers(pool);
+        ctx.packing.order(&mut pf, pool);
+        let mut prefill = Vec::new();
+        for id in pf {
+            if budget == 0 {
+                break;
+            }
+            let take = pool[&id].prefill_remaining().min(budget);
+            budget -= take;
+            prefill.push((id, take));
+        }
+        if prefill.is_empty() && decode.is_empty() {
+            return None;
+        }
+        Some(StepPlan { prefill, decode })
+    }
+}
+
+/// Splitwise mixed pool: full prefills co-scheduled with decodes.
+pub struct MixedBatching;
+
+impl BatchPolicy for MixedBatching {
+    fn name(&self) -> &'static str {
+        "mixed"
+    }
+
+    fn compose(&self, ctx: &PlanCtx, pool: &RequestPool) -> Option<StepPlan> {
+        if ctx.running.is_empty() {
+            return None;
+        }
+        let mut pf = ctx.prefillers(pool);
+        ctx.packing.order(&mut pf, pool);
+        let mut budget = ctx.cfg.max_batch_tokens;
+        let mut prefill = Vec::new();
+        for id in pf {
+            let take = pool[&id].prefill_remaining().min(budget);
+            if take == 0 {
+                break;
+            }
+            budget -= take;
+            prefill.push((id, take));
+        }
+        let decode = ctx.decoders(pool);
+        if prefill.is_empty() && decode.is_empty() {
+            return None;
+        }
+        Some(StepPlan { prefill, decode })
+    }
+}
+
+/// Prefill half of a disaggregated deployment: prefills only, reserves
+/// only the prefix KV it holds, hands finished prompts to the
+/// coordinator for transfer to a decode client.
+pub struct PrefillRole;
+
+impl BatchPolicy for PrefillRole {
+    fn name(&self) -> &'static str {
+        "prefill-only"
+    }
+
+    fn serves_decode(&self) -> bool {
+        false
+    }
+
+    fn admit_tokens(&self, r: &Request) -> f64 {
+        (r.past_tokens + r.prompt_tokens) as f64
+    }
+
+    fn compose(&self, ctx: &PlanCtx, pool: &RequestPool) -> Option<StepPlan> {
+        let mut pf = ctx.prefillers(pool);
+        if pf.is_empty() {
+            return None;
+        }
+        ctx.packing.order(&mut pf, pool);
+        let mut budget = ctx.cfg.max_batch_tokens;
+        let mut prefill = Vec::new();
+        for id in pf {
+            if budget == 0 {
+                break;
+            }
+            let take = pool[&id].prefill_remaining().min(budget);
+            if take < pool[&id].prefill_remaining() && !prefill.is_empty() {
+                break; // no chunking across steps beyond the head request
+            }
+            budget -= take;
+            prefill.push((id, take));
+        }
+        Some(StepPlan {
+            prefill,
+            decode: Vec::new(),
+        })
+    }
+}
+
+/// Decode half of a disaggregated deployment: batches transferred-in
+/// requests for generation only.
+pub struct DecodeRole;
+
+impl BatchPolicy for DecodeRole {
+    fn name(&self) -> &'static str {
+        "decode-only"
+    }
+
+    fn serves_prefill(&self) -> bool {
+        false
+    }
+
+    fn compose(&self, ctx: &PlanCtx, pool: &RequestPool) -> Option<StepPlan> {
+        let dec = ctx.decoders(pool);
+        if dec.is_empty() {
+            return None;
+        }
+        Some(StepPlan {
+            prefill: Vec::new(),
+            decode: dec,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{BatchingKind, LlmSched};
+    use super::*;
+    use crate::memory::hierarchy::KvManager;
+    use crate::sim::SimTime;
+    use crate::workload::request::Stage;
+
+    fn mk(id: u64, prompt: usize, out: usize) -> Request {
+        Request::new(
+            id,
+            "llama3-70b",
+            SimTime::from_secs(id as f64 * 0.01),
+            vec![Stage::Prefill, Stage::Decode],
+            prompt,
+            out,
+        )
+    }
+
+    fn sched(kind: BatchingKind, reqs: Vec<Request>) -> (LlmSched, RequestPool, KvManager) {
+        let mut pool = RequestPool::new();
+        let mut s = LlmSched::new(kind, Packing::Fcfs, SchedConfig::default());
+        for r in reqs {
+            s.enqueue(r.id);
+            pool.insert(r.id, r);
+        }
+        (s, pool, KvManager::new(1e9))
+    }
+
+    fn apply(plan: &StepPlan, pool: &mut RequestPool) {
+        for (id, n) in &plan.prefill {
+            pool.get_mut(id).unwrap().prefilled += n;
+        }
+        for id in &plan.decode {
+            pool.get_mut(id).unwrap().decoded += 1;
+        }
+    }
+
+    /// The satellite's headline contract: continuous batching admits a
+    /// request that arrives mid-iteration into the very next step, while
+    /// static batching makes it wait for the in-flight batch to drain.
+    #[test]
+    fn continuous_admits_mid_iteration_static_does_not() {
+        for (kind, admitted_next_step) in [
+            (BatchingKind::Continuous, true),
+            (BatchingKind::Static, false),
+        ] {
+            let (mut s, mut pool, mut kv) = sched(kind, vec![mk(1, 100, 4)]);
+            apply(&s.plan(&pool, &mut kv).unwrap(), &mut pool); // prefill req 1
+            apply(&s.plan(&pool, &mut kv).unwrap(), &mut pool); // decode step
+
+            // request 2 arrives while request 1 is mid-decode
+            pool.insert(2, mk(2, 50, 4));
+            s.enqueue(2);
+            let p = s.plan(&pool, &mut kv).unwrap();
+            let planned_for_2 = p.prefill.iter().any(|(id, _)| *id == 2);
+            assert_eq!(
+                planned_for_2, admitted_next_step,
+                "{}: mid-iteration arrival",
+                kind.name()
+            );
+            if !admitted_next_step {
+                // static: request 2 still waiting, batch of 1 decodes on
+                assert_eq!(s.queue_len(), 1);
+                assert_eq!(p.decode, vec![1]);
+            }
+        }
+    }
+
+    #[test]
+    fn policy_roles_gate_stages() {
+        assert!(PrefillRole.serves_prefill() && !PrefillRole.serves_decode());
+        assert!(!DecodeRole.serves_prefill() && DecodeRole.serves_decode());
+        assert!(ContinuousBatching.serves_prefill() && ContinuousBatching.serves_decode());
+        assert!(!StaticBatching.admits_mid_batch());
+        assert!(ChunkedPrefill { chunk: 512 }.admits_mid_batch());
+    }
+
+    #[test]
+    fn prefill_role_reserves_prefix_only() {
+        let mut r = mk(1, 1000, 400);
+        r.branches = 4;
+        assert_eq!(PrefillRole.admit_tokens(&r), 1000.0);
+        // combined policies reserve the decode-complete peak
+        assert_eq!(ContinuousBatching.admit_tokens(&r), 1000.0 + 4.0 * 400.0);
+    }
+
+    #[test]
+    fn chunked_budget_shared_between_decode_and_prefill() {
+        let (mut s, mut pool, mut kv) = sched(
+            BatchingKind::Chunked { chunk: 128 },
+            vec![mk(1, 64, 8), mk(2, 1000, 8)],
+        );
+        // step 1: 64 (req1) + 64 (req2 chunk)
+        let p1 = s.plan(&pool, &mut kv).unwrap();
+        assert_eq!(p1.prefill_tokens(), 128);
+        apply(&p1, &mut pool);
+        // step 2: req1 decodes (1 token), req2 gets 127 budget
+        let p2 = s.plan(&pool, &mut kv).unwrap();
+        assert_eq!(p2.decode, vec![1]);
+        assert_eq!(p2.prefill, vec![(2, 127)]);
+    }
+
+    #[test]
+    fn custom_policy_plugs_into_scheduler() {
+        /// Decode-first toy policy: drains all decodes before any
+        /// prefill — the inverse of continuous batching's priority.
+        struct DecodeFirst;
+        impl BatchPolicy for DecodeFirst {
+            fn name(&self) -> &'static str {
+                "decode-first"
+            }
+            fn compose(&self, ctx: &PlanCtx, pool: &RequestPool) -> Option<StepPlan> {
+                let dec = ctx.decoders(pool);
+                if !dec.is_empty() {
+                    return Some(StepPlan { prefill: Vec::new(), decode: dec });
+                }
+                ContinuousBatching.compose(ctx, pool)
+            }
+        }
+
+        let mut pool = RequestPool::new();
+        let mut s = LlmSched::with_policy(
+            Box::new(DecodeFirst),
+            Packing::Fcfs,
+            SchedConfig::default(),
+        );
+        let mut kv = KvManager::new(1e9);
+        for r in [mk(1, 100, 4), mk(2, 100, 4)] {
+            s.enqueue(r.id);
+            pool.insert(r.id, r);
+        }
+        assert_eq!(s.policy().name(), "decode-first");
+        apply(&s.plan(&pool, &mut kv).unwrap(), &mut pool); // prefill both
+        pool.insert(3, mk(3, 100, 4));
+        s.enqueue(3);
+        // decode-first: the new prefill does NOT preempt
+        let p = s.plan(&pool, &mut kv).unwrap();
+        assert_eq!(p.decode.len(), 2);
+        assert!(p.prefill.is_empty());
+    }
+}

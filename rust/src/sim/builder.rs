@@ -35,7 +35,7 @@ pub enum PerfBackend {
 }
 
 /// LLM serving pool shape.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum PoolSpec {
     /// n identical combined clients running `kind` batching
     Combined { kind: BatchingKind, n: usize },
@@ -45,25 +45,35 @@ pub enum PoolSpec {
         decode: usize,
         local: bool,
     },
+    /// heterogeneous pool: one client per entry, each with its own
+    /// batching policy (the "per-client policy selection" the scenario
+    /// registry exposes)
+    PerClient { kinds: Vec<BatchingKind> },
 }
 
 impl PoolSpec {
     pub fn n_clients(&self) -> usize {
-        match *self {
-            PoolSpec::Combined { n, .. } => n,
+        match self {
+            PoolSpec::Combined { n, .. } => *n,
             PoolSpec::Disaggregated { prefill, decode, .. } => prefill + decode,
+            PoolSpec::PerClient { kinds } => kinds.len(),
         }
     }
 
     pub fn label(&self) -> String {
-        match *self {
+        match self {
             PoolSpec::Combined { kind, .. } => kind.name().to_string(),
             PoolSpec::Disaggregated { prefill, decode, local } => format!(
                 "disagg-{}{}P/{}D",
-                if local { "local-" } else { "" },
+                if *local { "local-" } else { "" },
                 prefill,
                 decode
             ),
+            PoolSpec::PerClient { kinds } => {
+                let mut names: Vec<&str> = kinds.iter().map(|k| k.name()).collect();
+                names.dedup();
+                format!("per-client[{}]", names.join("+"))
+            }
         }
     }
 }
@@ -188,34 +198,87 @@ impl ServingSpec {
         self
     }
 
+    /// Swap the LLM pool shape (the scenario runner applies each roster
+    /// entry through this).
+    pub fn with_pool(mut self, p: PoolSpec) -> ServingSpec {
+        self.pool = p;
+        self
+    }
+
+    /// Build the step-time predictor for one client. Every non-roofline
+    /// backend degrades to the analytical roofline when its inputs are
+    /// missing — an un-fitted configuration, an absent artifact bundle
+    /// (`make artifacts` not run), or an unavailable PJRT runtime — so a
+    /// fresh checkout can run every experiment without the AOT toolchain.
+    /// The degradation is announced once per process on stderr so a run
+    /// labeled `poly`/`pjrt` never silently reports roofline numbers.
     fn make_perf(
         &self,
         cluster: &LlmCluster,
         shared_exe: &mut Option<std::rc::Rc<crate::runtime::PredictorExe>>,
     ) -> Result<Box<dyn PerfModel>> {
+        fn warn_fallback(reason: &str) {
+            static ONCE: std::sync::Once = std::sync::Once::new();
+            let msg = reason.to_string();
+            ONCE.call_once(move || {
+                eprintln!(
+                    "hermes: {msg}; using the analytical roofline perf model \
+                     (run `make artifacts` for the fitted predictor)"
+                );
+            });
+        }
         let key = ArtifactBundle::variant_key(cluster.model.name, cluster.npu.name, cluster.tp);
+        let roofline = || -> Box<dyn PerfModel> { Box::new(RooflinePerfModel::new(cluster.clone())) };
         Ok(match self.perf {
-            PerfBackend::Roofline => Box::new(RooflinePerfModel::new(cluster.clone())),
+            PerfBackend::Roofline => roofline(),
             PerfBackend::Poly => {
-                let bundle = ArtifactBundle::open(&ArtifactBundle::default_dir())?;
-                match PolyPerfModel::from_coefficients(&bundle.coefficients, &key) {
-                    Ok(m) => Box::new(m),
-                    // un-fitted configuration: analytical fallback
-                    // (the paper's LLMCompass/GenZ role)
-                    Err(_) => Box::new(RooflinePerfModel::new(cluster.clone())),
+                match ArtifactBundle::open(&ArtifactBundle::default_dir()) {
+                    Ok(bundle) => match PolyPerfModel::from_coefficients(&bundle.coefficients, &key)
+                    {
+                        Ok(m) => Box::new(m),
+                        // un-fitted configuration: analytical fallback
+                        // (the paper's LLMCompass/GenZ role)
+                        Err(_) => {
+                            warn_fallback(&format!("no fitted coefficients for {key}"));
+                            roofline()
+                        }
+                    },
+                    Err(e) => {
+                        warn_fallback(&format!("artifact bundle unavailable ({e})"));
+                        roofline()
+                    }
                 }
             }
             PerfBackend::Pjrt | PerfBackend::PjrtMemo => {
                 let dir = ArtifactBundle::default_dir();
-                let bundle = ArtifactBundle::open(&dir)?;
+                let bundle = match ArtifactBundle::open(&dir) {
+                    Ok(b) => b,
+                    Err(e) => {
+                        warn_fallback(&format!("artifact bundle unavailable ({e})"));
+                        return Ok(roofline());
+                    }
+                };
                 if !bundle.has_variant(&key) {
-                    return Ok(Box::new(RooflinePerfModel::new(cluster.clone())));
+                    warn_fallback(&format!("no AOT variant for {key}"));
+                    return Ok(roofline());
                 }
                 // compile the variant once, share across the pool
                 if shared_exe.is_none() {
-                    let rt = Runtime::cpu()?;
-                    *shared_exe =
-                        Some(std::rc::Rc::new(bundle.load_predictor(&rt, &key)?));
+                    let rt = match Runtime::cpu() {
+                        Ok(rt) => rt,
+                        Err(e) => {
+                            // offline build: the vendored xla stub has no PJRT
+                            warn_fallback(&format!("PJRT unavailable ({e})"));
+                            return Ok(roofline());
+                        }
+                    };
+                    match bundle.load_predictor(&rt, &key) {
+                        Ok(exe) => *shared_exe = Some(std::rc::Rc::new(exe)),
+                        Err(e) => {
+                            warn_fallback(&format!("loading AOT predictor failed ({e})"));
+                            return Ok(roofline());
+                        }
+                    }
                 }
                 let exe = shared_exe.as_ref().unwrap().clone();
                 if self.perf == PerfBackend::Pjrt {
@@ -234,8 +297,9 @@ impl ServingSpec {
 
         let mut clients: Vec<Box<dyn Client>> = Vec::new();
         let mut shared_exe: Option<std::rc::Rc<crate::runtime::PredictorExe>> = None;
-        match self.pool {
+        match &self.pool {
             PoolSpec::Combined { kind, n } => {
+                let (kind, n) = (*kind, *n);
                 if n == 0 {
                     bail!("empty client pool");
                 }
@@ -251,7 +315,24 @@ impl ServingSpec {
                     ));
                 }
             }
+            PoolSpec::PerClient { kinds } => {
+                if kinds.is_empty() {
+                    bail!("empty client pool");
+                }
+                for (i, kind) in kinds.iter().enumerate() {
+                    clients.push(Box::new(
+                        LlmClient::new(
+                            i,
+                            cluster.clone(),
+                            LlmSched::new(*kind, self.packing, self.sched),
+                            self.make_perf(&cluster, &mut shared_exe)?,
+                        )
+                        .with_group(i),
+                    ));
+                }
+            }
             PoolSpec::Disaggregated { prefill, decode, local } => {
+                let (prefill, decode, local) = (*prefill, *decode, *local);
                 if prefill == 0 || decode == 0 {
                     bail!("disaggregated pools need both roles");
                 }
@@ -337,7 +418,7 @@ impl ServingSpec {
 
         let mut coord = Coordinator::new(clients, Router::new(self.route), network);
         coord.granularity = self.granularity;
-        if let PoolSpec::Disaggregated { local: true, .. } = self.pool {
+        if matches!(self.pool, PoolSpec::Disaggregated { local: true, .. }) {
             coord.local_disagg = true;
         }
         Ok(coord)

@@ -7,7 +7,8 @@ use anyhow::Result;
 use super::builder::ServingSpec;
 use crate::config::slo::SloLadder;
 use crate::metrics::RunMetrics;
-use crate::workload::trace::WorkloadSpec;
+use crate::workload::request::Request;
+use crate::workload::trace::{WorkloadMix, WorkloadSpec};
 
 /// Build, inject, run, collect.
 pub fn run(spec: &ServingSpec, workload: &WorkloadSpec, slo: &SloLadder) -> Result<RunMetrics> {
@@ -25,27 +26,64 @@ pub struct SweepPoint {
     pub slo_ok: bool,
 }
 
-/// Sweep per-client injection rates; each point is an independent
-/// simulation (own thread — specs/workloads are constructed inside the
-/// worker because PJRT handles are not Send).
+/// Sweep per-client injection rates over a single-class workload: at
+/// each rate the whole pool is injected at `rate × n_clients` (Poisson).
 pub fn sweep_rates(
     spec: &ServingSpec,
     workload: &WorkloadSpec,
     slo: &SloLadder,
     rates: &[f64],
 ) -> Result<Vec<SweepPoint>> {
+    sweep_rates_with(spec, slo, rates, |rate| {
+        workload
+            .clone()
+            .with_arrival(crate::util::rng::Arrival::Poisson {
+                rate: rate * spec.pool.n_clients() as f64,
+            })
+            .generate(0)
+    })
+}
+
+/// Sweep per-client injection rates over a [`WorkloadMix`]: the total
+/// rate (`rate × n_clients`) and request count are split across classes
+/// by their fractions, each keeping its own arrival-process shape.
+pub fn sweep_rates_mix(
+    spec: &ServingSpec,
+    mix: &WorkloadMix,
+    slo: &SloLadder,
+    rates: &[f64],
+) -> Result<Vec<SweepPoint>> {
+    let n = mix.n_total();
+    sweep_rates_with(spec, slo, rates, |rate| {
+        mix.scaled(n, rate * spec.pool.n_clients() as f64).generate()
+    })
+}
+
+/// Generic rate sweep; each point is an independent simulation (own
+/// worker thread — coordinators are constructed inside the worker
+/// because PJRT handles are not Send). `make_requests` maps a per-client
+/// rate to the full request stream for that point.
+pub fn sweep_rates_with<F>(
+    spec: &ServingSpec,
+    slo: &SloLadder,
+    rates: &[f64],
+    make_requests: F,
+) -> Result<Vec<SweepPoint>>
+where
+    F: Fn(f64) -> Vec<Request> + Sync,
+{
     let results: Vec<Result<SweepPoint>> = std::thread::scope(|scope| {
+        let make_requests = &make_requests;
         let handles: Vec<_> = rates
             .iter()
             .map(|&rate| {
                 let spec = spec.clone();
-                let workload = workload.clone();
                 let slo = *slo;
                 scope.spawn(move || -> Result<SweepPoint> {
-                    let w = workload.with_arrival(crate::util::rng::Arrival::Poisson {
-                        rate: rate * spec.pool.n_clients() as f64,
-                    });
-                    let metrics = run(&spec, &w, &slo)?;
+                    let mut coord = spec.build()?;
+                    coord.inject(make_requests(rate));
+                    coord.run();
+                    let metrics = RunMetrics::collect(&coord, &slo);
                     let slo_ok = metrics.slo_satisfied(&slo);
                     Ok(SweepPoint { rate, metrics, slo_ok })
                 })

@@ -1,5 +1,7 @@
-//! Simulation assembly and driving: the time base, the builder that turns
-//! a `SimConfig` into a wired coordinator + clients, and the run driver.
+//! Simulation assembly and driving (paper §III-A): the time base, the
+//! builder that turns a declarative `ServingSpec` (from a config
+//! document or a scenario file) into a wired coordinator + clients, and
+//! the run driver with its parallel rate sweeps.
 
 pub mod builder;
 pub mod driver;

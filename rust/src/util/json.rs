@@ -43,6 +43,15 @@ impl Json {
         }
     }
 
+    /// Remove a key from an object; no-op on non-objects. Returns the
+    /// removed value, if any.
+    pub fn remove(&mut self, key: &str) -> Option<Json> {
+        match self {
+            Json::Obj(m) => m.remove(key),
+            _ => None,
+        }
+    }
+
     /// Path access: `j.at(&["cluster", "clients"])`.
     pub fn at(&self, path: &[&str]) -> Option<&Json> {
         let mut cur = self;
@@ -158,6 +167,23 @@ impl Json {
                 }
                 out.push('}');
             }
+        }
+    }
+
+    /// Shallow-merge `patch` over `self` (objects only): keys in `patch`
+    /// replace keys in `self`, other keys are kept. Non-object inputs
+    /// return `patch` unchanged. The scenario registry uses this to apply
+    /// panel overrides onto a base workload description.
+    pub fn merged(&self, patch: &Json) -> Json {
+        match (self, patch) {
+            (Json::Obj(base), Json::Obj(over)) => {
+                let mut m = base.clone();
+                for (k, v) in over {
+                    m.insert(k.clone(), v.clone());
+                }
+                Json::Obj(m)
+            }
+            _ => patch.clone(),
         }
     }
 
@@ -515,6 +541,18 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("tru").is_err());
         assert!(Json::parse("1 2").is_err());
+    }
+
+    #[test]
+    fn merged_overrides_shallowly() {
+        let base = Json::parse(r#"{"trace": "azure-conv", "n": 100, "rate": 2.0}"#).unwrap();
+        let patch = Json::parse(r#"{"trace": "azure-code", "branches": 4}"#).unwrap();
+        let m = base.merged(&patch);
+        assert_eq!(m.str_or("trace", ""), "azure-code");
+        assert_eq!(m.usize_or("n", 0), 100);
+        assert_eq!(m.usize_or("branches", 0), 4);
+        // non-object patch replaces wholesale
+        assert_eq!(base.merged(&Json::Num(1.0)), Json::Num(1.0));
     }
 
     #[test]

@@ -227,6 +227,27 @@ impl Arrival {
             | Arrival::Bursty { rate, .. } => rate,
         }
     }
+
+    /// The same process shape at a different base rate (rate sweeps over
+    /// non-Poisson arrivals keep their cv / burst structure).
+    pub fn scaled_to(&self, rate: f64) -> Arrival {
+        match *self {
+            Arrival::Uniform { .. } => Arrival::Uniform { rate },
+            Arrival::Normal { cv, .. } => Arrival::Normal { rate, cv },
+            Arrival::Poisson { .. } => Arrival::Poisson { rate },
+            Arrival::Bursty {
+                burst_mult,
+                calm_s,
+                burst_s,
+                ..
+            } => Arrival::Bursty {
+                rate,
+                burst_mult,
+                calm_s,
+                burst_s,
+            },
+        }
+    }
 }
 
 #[cfg(test)]

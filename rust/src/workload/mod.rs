@@ -6,4 +6,4 @@ pub mod request;
 pub mod trace;
 
 pub use request::{KvParams, RagParams, ReqId, Request, Stage};
-pub use trace::{Pipeline, Reasoning, TraceKind, WorkloadSpec};
+pub use trace::{Pipeline, Reasoning, TraceKind, WorkloadMix, WorkloadSpec};

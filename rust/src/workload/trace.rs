@@ -184,6 +184,92 @@ impl WorkloadSpec {
     }
 }
 
+/// A mixture of request classes sharing one serving system — the
+/// "workload mix" axis of the scenario registry (e.g. 70% regular
+/// prefill-decode + 30% RAG). Each class keeps its own trace, pipeline,
+/// reasoning mode and arrival process; fractions weight both the request
+/// count and the injection rate.
+#[derive(Debug, Clone)]
+pub struct WorkloadMix {
+    /// (fraction, class); fractions are normalized on construction
+    pub classes: Vec<(f64, WorkloadSpec)>,
+}
+
+impl WorkloadMix {
+    /// A single-class mix (the common case).
+    pub fn single(spec: WorkloadSpec) -> WorkloadMix {
+        WorkloadMix {
+            classes: vec![(1.0, spec)],
+        }
+    }
+
+    /// Build from weighted classes; weights are normalized to fractions.
+    pub fn new(classes: Vec<(f64, WorkloadSpec)>) -> WorkloadMix {
+        let total: f64 = classes.iter().map(|(f, _)| f.max(0.0)).sum();
+        let norm = if total > 0.0 { total } else { 1.0 };
+        WorkloadMix {
+            classes: classes
+                .into_iter()
+                .map(|(f, s)| (f.max(0.0) / norm, s))
+                .collect(),
+        }
+    }
+
+    pub fn n_total(&self) -> usize {
+        self.classes.iter().map(|(_, s)| s.n_requests).sum()
+    }
+
+    /// The dominant class (largest fraction) — used for `auto` SLO
+    /// resolution and reporting.
+    pub fn primary(&self) -> &WorkloadSpec {
+        &self
+            .classes
+            .iter()
+            .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+            .expect("empty workload mix")
+            .1
+    }
+
+    /// Distribute `n` requests across classes by fraction (remainder to
+    /// the first class) and set each class's arrival to its share of the
+    /// total injection rate, preserving the process shape.
+    pub fn scaled(&self, n: usize, total_rate: f64) -> WorkloadMix {
+        let mut classes: Vec<(f64, WorkloadSpec)> = self
+            .classes
+            .iter()
+            .map(|(f, s)| {
+                let mut s = s.clone();
+                s.n_requests = ((n as f64) * f).round() as usize;
+                s.arrival = s.arrival.scaled_to((total_rate * f).max(1e-9));
+                (*f, s)
+            })
+            .collect();
+        let assigned: i64 = classes.iter().map(|(_, s)| s.n_requests as i64).sum();
+        if let Some((_, first)) = classes.first_mut() {
+            // absorb the rounding remainder so the mix totals exactly n
+            first.n_requests =
+                (first.n_requests as i64 + n as i64 - assigned).max(0) as usize;
+        }
+        WorkloadMix { classes }
+    }
+
+    /// Generate the merged request stream: per-class streams with
+    /// disjoint dense id ranges, interleaved by arrival time.
+    pub fn generate(&self) -> Vec<Request> {
+        let mut all = Vec::with_capacity(self.n_total());
+        let mut id_base = 0u64;
+        for (i, (_, spec)) in self.classes.iter().enumerate() {
+            let mut spec = spec.clone();
+            // decorrelate class streams that share a scenario seed
+            spec.seed = spec.seed.wrapping_add(i as u64 * 0x9E37_79B9);
+            all.extend(spec.generate(id_base));
+            id_base += spec.n_requests as u64;
+        }
+        all.sort_by(|a, b| a.arrival.cmp(&b.arrival).then(a.id.cmp(&b.id)));
+        all
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -269,6 +355,45 @@ mod tests {
             Stage::KvRetrieval(KvParams { cached_tokens: 3000 })
         );
         assert_eq!(Pipeline::Guarded.stages().len(), 4);
+    }
+
+    #[test]
+    fn mix_scales_counts_rates_and_merges_sorted() {
+        let conv = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 0, 4.0);
+        let rag = conv
+            .clone()
+            .with_pipeline(Pipeline::Rag(RagParams::default()));
+        let mix = WorkloadMix::new(vec![(3.0, conv), (1.0, rag)]).scaled(100, 8.0);
+        assert_eq!(mix.n_total(), 100);
+        assert_eq!(mix.classes[0].1.n_requests, 75);
+        assert_eq!(mix.classes[1].1.n_requests, 25);
+        assert!((mix.classes[0].1.arrival.rate() - 6.0).abs() < 1e-9);
+        assert!((mix.classes[1].1.arrival.rate() - 2.0).abs() < 1e-9);
+        assert!((mix.classes[0].0 - 0.75).abs() < 1e-12, "weights normalized");
+        let reqs = mix.generate();
+        assert_eq!(reqs.len(), 100);
+        assert!(reqs.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        // ids are unique across classes
+        let mut ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 100);
+        // both pipeline shapes present
+        assert!(reqs.iter().any(|r| r.stages.len() == 2));
+        assert!(reqs.iter().any(|r| r.stages.len() == 3));
+    }
+
+    #[test]
+    fn single_class_mix_matches_plain_generation() {
+        let spec = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 50, 5.0).with_seed(3);
+        let plain = spec.clone().generate(0);
+        let mixed = WorkloadMix::single(spec).generate();
+        assert_eq!(plain.len(), mixed.len());
+        for (a, b) in plain.iter().zip(&mixed) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.prompt_tokens, b.prompt_tokens);
+            assert_eq!(a.arrival, b.arrival);
+        }
     }
 
     #[test]

@@ -1,0 +1,140 @@
+//! Offline stub of the `xla` (xla_extension 0.5.1) PJRT bindings.
+//!
+//! The real crate links libxla_extension and executes AOT-compiled
+//! Pallas/JAX artifacts on the XLA CPU client. This container image has
+//! no XLA shared library, so this stub mirrors the API surface
+//! `hermes::runtime` uses and returns a uniform "PJRT runtime
+//! unavailable" error from every entry point. The simulator detects the
+//! failure at client-construction time and falls back to the analytical
+//! roofline predictor (`sim::builder::ServingSpec::build`), so every
+//! experiment still runs — only the PJRT parity tests are skipped.
+//!
+//! Swapping in the real bindings requires no source change elsewhere:
+//! point the `xla` path dependency in the workspace `Cargo.toml` at the
+//! real crate.
+
+use std::fmt;
+
+/// The single error every stubbed operation returns.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT runtime unavailable (offline `xla` stub built without libxla_extension)"
+    ))
+}
+
+/// Stub of the PJRT client handle.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Always fails in the stub; callers fall back to analytical models.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Stub of a parsed HLO module.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Stub of an XLA computation graph.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Stub of a host literal (dense tensor value).
+#[derive(Clone)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1(_values: &[f32]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable("Literal::reshape"))
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+/// Stub of a compiled, loaded executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Stub of a device buffer.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0, 2.0]);
+        assert!(lit.reshape(&[2, 1]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("PJRT runtime unavailable"));
+    }
+}
