@@ -1,0 +1,30 @@
+//! Core-simulator speed benchmark — the `cargo bench` face of
+//! `hermes bench` (docs/performance.md).
+//!
+//! Runs every `scenarios/bench_*.json` scenario at CI scale by default
+//! (`HERMES_FULL=1` for the 50k–200k-request paper scale), prints
+//! wall-clock / events-per-second / peak-pool numbers, and writes
+//! `BENCH_core.json` so the repo carries a perf trajectory across PRs.
+//! Scenarios opting in via `extras.baseline` are also run under the
+//! full-scan routing baseline to report the incremental-load speedup.
+//! All of the run/report logic lives in `hermes::bench`, shared with
+//! the `hermes bench` subcommand.
+
+use hermes::bench::{self, Baseline};
+use hermes::util::bench::banner;
+
+fn main() {
+    // mirror the fig* regenerators: fast scale unless HERMES_FULL=1
+    let fast = std::env::var("HERMES_FULL").is_err();
+    let names = bench::bench_scenarios();
+    if names.is_empty() {
+        eprintln!("no bench_* scenarios found under scenarios/");
+        std::process::exit(1);
+    }
+
+    banner("core simulator speed (BENCH_core.json)");
+    if let Err(e) = bench::run_and_report(&names, fast, Baseline::Auto, "BENCH_core.json") {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

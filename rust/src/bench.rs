@@ -1,0 +1,287 @@
+//! Core-simulator speed benchmarks (`hermes bench`, `cargo bench
+//! --bench core_speed`).
+//!
+//! The ROADMAP's north star is a simulator that handles production-scale
+//! traffic "as fast as the hardware allows"; peers treat simulation
+//! speed as a first-class deliverable (LLMServingSim, Frontier). This
+//! harness runs the `scenarios/bench_*.json` scenarios — parameterized
+//! large-scale single runs of 50k–200k requests across LLM / RAG /
+//! KV-retrieval pools — and reports wall-clock, events/second and peak
+//! pool sizes, writing `BENCH_core.json` so every subsequent PR has a
+//! perf trajectory to defend.
+//!
+//! Each scenario is always run with the incremental O(1) load
+//! accounting ([`LoadMode::Incremental`]); scenarios that opt in via
+//! `extras.baseline` (or a `--baseline on` override) are additionally
+//! run under [`LoadMode::FullScan`] — the pre-refactor
+//! O(total-requests × clients) routing path — to measure the speedup
+//! the incremental accounting buys. See `docs/performance.md`.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::slo::SloLadder;
+use crate::coordinator::LoadMode;
+use crate::metrics::RunMetrics;
+use crate::scenario::Scenario;
+use crate::util::json::Json;
+
+/// Timing and scale counters from one benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchRun {
+    /// wall-clock seconds spent draining the event queue
+    pub wall_s: f64,
+    pub events: u64,
+    pub events_per_s: f64,
+    /// event-queue high-water mark
+    pub peak_queue: usize,
+    /// arrived-but-unfinished request high-water mark
+    pub peak_inflight: usize,
+    pub n_requests: usize,
+    pub n_serviced: usize,
+    pub n_clients: usize,
+    /// simulated seconds covered by the run
+    pub makespan_s: f64,
+    /// simulated seconds per wall second
+    pub sim_rate: f64,
+    pub throughput_tok_s: f64,
+}
+
+/// One scenario's outcome: the incremental run, plus the full-scan
+/// baseline when enabled.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub title: String,
+    pub incremental: BenchRun,
+    pub baseline: Option<BenchRun>,
+}
+
+impl BenchResult {
+    /// Full-scan wall-clock / incremental wall-clock (>1 = faster now).
+    pub fn speedup(&self) -> Option<f64> {
+        self.baseline
+            .as_ref()
+            .map(|b| b.wall_s / self.incremental.wall_s.max(1e-12))
+    }
+}
+
+/// Whether to run the full-scan baseline alongside each scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Baseline {
+    /// scenario's `extras.baseline` decides; fast scale always permits
+    /// it (the full-scan pass on 100k+ requests takes hours)
+    Auto,
+    On,
+    Off,
+}
+
+/// Registry names of the shipped benchmark scenarios (`bench_*`).
+pub fn bench_scenarios() -> Vec<String> {
+    Scenario::list()
+        .into_iter()
+        .filter(|n| n.starts_with("bench_"))
+        .collect()
+}
+
+/// Run `sc` once under `mode` and time the event loop. Workload
+/// generation and pool construction happen outside the timed section;
+/// the wall clock covers exactly what `Coordinator::run` does.
+pub fn run_once(sc: &Scenario, fast: bool, mode: LoadMode) -> Result<BenchRun> {
+    let scale = sc.scale(fast);
+    let entry = sc
+        .roster
+        .first()
+        .context("bench scenario needs a roster entry")?;
+    let spec = sc.serving(entry, scale.clients)?;
+    let rate = *scale
+        .rates
+        .first()
+        .context("bench scenario needs a rate")?;
+    let n_requests = scale.clients * scale.requests_per_client;
+    let mix = sc
+        .workload(None, n_requests)?
+        .scaled(n_requests, rate * spec.pool.n_clients() as f64);
+    let requests = mix.generate();
+    let n_requests = requests.len();
+
+    let mut coord = spec.build()?;
+    coord.load_mode = mode;
+    coord.inject(requests);
+    let t0 = Instant::now();
+    coord.run();
+    let wall = t0.elapsed().as_secs_f64();
+
+    let m = RunMetrics::collect(&coord, &SloLadder::standard());
+    Ok(BenchRun {
+        wall_s: wall,
+        events: coord.stats.events,
+        events_per_s: coord.stats.events as f64 / wall.max(1e-9),
+        peak_queue: coord.stats.peak_queue,
+        peak_inflight: coord.stats.peak_inflight,
+        n_requests,
+        n_serviced: m.n_serviced,
+        n_clients: coord.clients.len(),
+        makespan_s: m.makespan,
+        sim_rate: m.makespan / wall.max(1e-9),
+        throughput_tok_s: m.throughput_tok_s,
+    })
+}
+
+/// Benchmark one scenario by registry name or path.
+pub fn run_scenario(name: &str, fast: bool, baseline: Baseline) -> Result<BenchResult> {
+    let sc = Scenario::load(name)?;
+    let incremental = run_once(&sc, fast, LoadMode::Incremental)?;
+    let want_baseline = match baseline {
+        Baseline::On => true,
+        Baseline::Off => false,
+        Baseline::Auto => sc.extras().bool_or("baseline", false) || sc.use_fast(fast),
+    };
+    let baseline = if want_baseline {
+        Some(run_once(&sc, fast, LoadMode::FullScan)?)
+    } else {
+        None
+    };
+    Ok(BenchResult {
+        name: sc.name.clone(),
+        title: sc.title.clone(),
+        incremental,
+        baseline,
+    })
+}
+
+fn run_to_json(b: &BenchRun) -> Json {
+    let mut j = Json::obj();
+    j.set("wall_s", b.wall_s)
+        .set("events", b.events)
+        .set("events_per_s", b.events_per_s)
+        .set("peak_event_queue", b.peak_queue)
+        .set("peak_inflight_requests", b.peak_inflight)
+        .set("n_requests", b.n_requests)
+        .set("n_serviced", b.n_serviced)
+        .set("n_clients", b.n_clients)
+        .set("makespan_s", b.makespan_s)
+        .set("sim_seconds_per_wall_second", b.sim_rate)
+        .set("throughput_tok_s", b.throughput_tok_s);
+    j
+}
+
+/// The `BENCH_core.json` document.
+pub fn to_json(results: &[BenchResult]) -> Json {
+    let rows = results
+        .iter()
+        .map(|r| {
+            let mut j = Json::obj();
+            j.set("name", r.name.clone())
+                .set("title", r.title.clone())
+                .set("incremental", run_to_json(&r.incremental));
+            if let Some(b) = &r.baseline {
+                j.set("full_scan_baseline", run_to_json(b));
+            }
+            if let Some(s) = r.speedup() {
+                j.set("speedup_vs_full_scan", s);
+            }
+            j
+        })
+        .collect();
+    Json::Arr(rows)
+}
+
+/// Run every scenario in `names` (printing per-scenario progress),
+/// print the summary table, and write the JSON document to `out_path`.
+/// Shared by `hermes bench` and `cargo bench --bench core_speed` so the
+/// two faces of the harness cannot drift apart.
+pub fn run_and_report(
+    names: &[String],
+    fast: bool,
+    baseline: Baseline,
+    out_path: &str,
+) -> Result<Vec<BenchResult>> {
+    let mut results = Vec::new();
+    for name in names {
+        println!("benchmarking '{name}'{} ...", if fast { " (fast scale)" } else { "" });
+        let r = run_scenario(name, fast, baseline)?;
+        let inc = &r.incremental;
+        println!(
+            "  {} requests on {} clients: {:.3}s wall, {} events ({:.0} events/s, {:.1} sim-s/wall-s)",
+            inc.n_requests, inc.n_clients, inc.wall_s, inc.events, inc.events_per_s, inc.sim_rate
+        );
+        println!(
+            "  peak event queue {}  peak in-flight {}  serviced {}/{}",
+            inc.peak_queue, inc.peak_inflight, inc.n_serviced, inc.n_requests
+        );
+        if let Some(b) = &r.baseline {
+            println!(
+                "  full-scan baseline: {:.3}s wall ({:.0} events/s) -> {:.1}x speedup",
+                b.wall_s,
+                b.events_per_s,
+                r.speedup().unwrap_or(0.0)
+            );
+        }
+        results.push(r);
+    }
+
+    let mut table = crate::util::bench::Table::new(&[
+        "scenario", "requests", "clients", "wall(s)", "events/s", "sim-s/wall-s", "peak queue",
+        "speedup",
+    ]);
+    for r in &results {
+        table.row(&[
+            r.name.clone(),
+            r.incremental.n_requests.to_string(),
+            r.incremental.n_clients.to_string(),
+            format!("{:.3}", r.incremental.wall_s),
+            format!("{:.0}", r.incremental.events_per_s),
+            format!("{:.1}", r.incremental.sim_rate),
+            r.incremental.peak_queue.to_string(),
+            r.speedup().map(|s| format!("{s:.1}x")).unwrap_or_else(|| "-".to_string()),
+        ]);
+    }
+    table.print();
+
+    std::fs::write(out_path, to_json(&results).to_pretty())
+        .with_context(|| format!("writing {out_path}"))?;
+    println!("bench results -> {out_path}");
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_registry_has_scenarios() {
+        let names = bench_scenarios();
+        assert!(
+            names.iter().any(|n| n == "bench_llm_50k"),
+            "missing bench_llm_50k in {names:?}"
+        );
+        assert!(names.iter().any(|n| n == "bench_mixed_100k"));
+        assert!(names.iter().any(|n| n == "bench_kv_200k"));
+    }
+
+    #[test]
+    fn fast_bench_runs_and_baseline_agrees() {
+        // HERMES_FULL=1 would override the fast flag and turn this into
+        // a 50k-request run plus an hours-long full-scan baseline —
+        // this is a smoke test, so skip rather than inherit paper scale
+        if std::env::var("HERMES_FULL").is_ok() {
+            return;
+        }
+        // fast scale keeps this a smoke test; Auto enables the baseline
+        // at fast scale, so both load modes execute end to end
+        let r = run_scenario("bench_llm_50k", true, Baseline::Auto).unwrap();
+        assert!(r.incremental.n_serviced > 0);
+        assert_eq!(r.incremental.n_serviced, r.incremental.n_requests);
+        let b = r.baseline.as_ref().expect("fast scale runs the baseline");
+        // routing from cached vs recomputed loads must not change the
+        // simulation itself
+        assert_eq!(b.events, r.incremental.events);
+        assert_eq!(b.n_serviced, r.incremental.n_serviced);
+        assert_eq!(b.makespan_s, r.incremental.makespan_s);
+        let j = to_json(&[r]);
+        let parsed = Json::parse(&j.to_pretty()).unwrap();
+        assert!(parsed.as_arr().unwrap()[0].get("incremental").is_some());
+    }
+}

@@ -3,7 +3,7 @@
 //! past-memory retrieval). Misses fall back to recompute — the cached
 //! tokens join the prompt and get prefilled downstream.
 
-use crate::client::{Client, ClientLoad, ClientStats, StepOutcome};
+use crate::client::{Client, ClientLoad, ClientStats, LoadAccount, StepOutcome};
 use crate::memory::hierarchy::Retrieval;
 use crate::memory::storage::KvStore;
 use crate::scheduler::simple::Batched;
@@ -21,6 +21,7 @@ pub struct KvRetrievalClient {
     group: usize,
     rng: Pcg,
     current: Option<(Vec<(ReqId, bool)>, SimTime)>, // (req, hit), finish
+    acct: LoadAccount,
     stats: ClientStats,
     pub hits: u64,
     pub recomputes: u64,
@@ -42,6 +43,7 @@ impl KvRetrievalClient {
             group: 0,
             rng: Pcg::new(seed ^ 0x4b56),
             current: None,
+            acct: LoadAccount::default(),
             stats: ClientStats::default(),
             hits: 0,
             recomputes: 0,
@@ -72,7 +74,9 @@ impl Client for KvRetrievalClient {
     }
 
     fn accept(&mut self, _now: SimTime, id: ReqId, pool: &mut RequestPool) {
-        pool.get_mut(&id).expect("accept").client = Some(self.id);
+        let r = pool.get_mut(&id).expect("accept");
+        r.client = Some(self.id);
+        self.acct.accept(r);
         self.sched.enqueue(id);
     }
 
@@ -103,11 +107,14 @@ impl Client for KvRetrievalClient {
                 }
             }
         }
-        let dur = (finish - now).as_secs().max(1e-6);
+        // one clamped completion time drives both the EngineStep event
+        // and the busy-time accounting, so per-client utilization sums
+        // match the event timeline exactly
+        let end = finish.max(now + SimTime::from_nanos(1000));
         self.stats.steps += 1;
-        self.stats.busy_seconds += dur;
-        self.current = Some((results, finish.max(now + SimTime::from_nanos(1000))));
-        Some(self.current.as_ref().unwrap().1)
+        self.stats.busy_seconds += (end - now).as_secs();
+        self.current = Some((results, end));
+        Some(end)
     }
 
     fn finish_step(&mut self, _now: SimTime, pool: &mut RequestPool) -> StepOutcome {
@@ -115,6 +122,11 @@ impl Client for KvRetrievalClient {
         let mut out = StepOutcome::default();
         for (id, hit) in results {
             let r = pool.get_mut(&id).expect("kv req");
+            // release the load contribution *before* a miss folds the
+            // cached context into the prompt — the request leaves this
+            // client in this very event, so the mutation belongs to the
+            // downstream prefill client's accounting
+            self.acct.release(r);
             if let Stage::KvRetrieval(p) = r.stage() {
                 r.apply_kv_retrieval(p.cached_tokens, hit);
             }
@@ -127,7 +139,15 @@ impl Client for KvRetrievalClient {
         out
     }
 
-    fn load(&self, pool: &RequestPool) -> ClientLoad {
+    fn load(&self) -> ClientLoad {
+        ClientLoad {
+            queued_requests: self.sched.queue_len(),
+            tokens_left: self.acct.tokens_left,
+            ..Default::default()
+        }
+    }
+
+    fn recompute_load(&self, pool: &RequestPool) -> ClientLoad {
         let mut l = ClientLoad {
             queued_requests: self.sched.queue_len(),
             ..Default::default()
@@ -206,6 +226,30 @@ mod tests {
         assert_eq!(out.recomputed, vec![1]);
         assert_eq!(pool[&1].past_tokens, 0);
         assert_eq!(pool[&1].prompt_tokens, 3500);
+    }
+
+    #[test]
+    fn busy_seconds_match_event_timeline() {
+        // regression: busy time must be derived from the same clamped
+        // completion instant the EngineStep event is scheduled at
+        let mut c = client(StorageConfig::PlatformShared);
+        let mut pool = RequestPool::new();
+        let mut now = SimTime::ZERO;
+        let mut timeline = 0.0;
+        for id in 1..=20u64 {
+            pool.insert(id, kv_req(id, 500 * id as usize));
+            c.accept(now, id, &mut pool);
+            let fin = c.maybe_start_step(now, &mut pool).unwrap();
+            c.finish_step(fin, &mut pool);
+            timeline += (fin - now).as_secs();
+            now = fin;
+        }
+        assert!(
+            (c.stats().busy_seconds - timeline).abs() < 1e-12,
+            "busy {} vs timeline {}",
+            c.stats().busy_seconds,
+            timeline
+        );
     }
 
     #[test]

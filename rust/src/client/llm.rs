@@ -9,7 +9,7 @@
 //! policy's `serves_prefill`/`serves_decode` answers and the coordinator
 //! moves the KV cache between them.
 
-use crate::client::{Client, ClientLoad, ClientStats, StepOutcome};
+use crate::client::{Client, ClientLoad, ClientStats, LoadAccount, StepOutcome};
 use crate::hardware::power;
 use crate::hardware::roofline::LlmCluster;
 use crate::memory::hierarchy::KvManager;
@@ -27,6 +27,8 @@ pub struct LlmClient {
     group: usize,
     /// the in-flight step, if any
     current: Option<(StepPlan, SimTime, f64)>, // (plan, start, duration)
+    /// incremental token counters behind the O(1) `load()`
+    acct: LoadAccount,
     stats: ClientStats,
     /// queue-length / memory samples for scheduler-level metrics
     pub queue_samples: Vec<(SimTime, usize, f64)>,
@@ -49,6 +51,7 @@ impl LlmClient {
             perf,
             group: 0,
             current: None,
+            acct: LoadAccount::default(),
             stats: ClientStats::default(),
             queue_samples: Vec::new(),
             sample_queue: false,
@@ -102,6 +105,7 @@ impl Client for LlmClient {
     fn accept(&mut self, _now: SimTime, id: ReqId, pool: &mut RequestPool) {
         let r = pool.get_mut(&id).expect("accept: unknown request");
         r.client = Some(self.id);
+        self.acct.accept(r);
         self.sched.enqueue(id);
     }
 
@@ -157,6 +161,7 @@ impl Client for LlmClient {
         for (id, n) in &plan.prefill {
             let r = pool.get_mut(id).expect("prefill req");
             r.prefilled += n;
+            self.acct.prefill_progress(*n);
             self.stats.prefill_tokens += *n as u64;
             if r.prefill_complete() {
                 // the step completing a prompt emits the first token
@@ -164,6 +169,7 @@ impl Client for LlmClient {
                     r.first_token_time = Some(now);
                     r.last_token_time = Some(now);
                     r.decoded = 1;
+                    self.acct.decode_progress(r.decode_seqs());
                     self.stats.decode_tokens += r.decode_seqs() as u64;
                 }
                 if !self.sched.serves_decode() {
@@ -185,6 +191,7 @@ impl Client for LlmClient {
         for id in &plan.decode {
             let r = pool.get_mut(id).expect("decode req");
             r.decoded += 1;
+            self.acct.decode_progress(r.decode_seqs());
             self.stats.decode_tokens += r.decode_seqs() as u64;
             if r.first_token_time.is_none() {
                 r.first_token_time = Some(now);
@@ -200,12 +207,23 @@ impl Client for LlmClient {
             if let Some(reserved) = self.sched.remove(*id) {
                 self.kv.release(reserved);
             }
+            self.acct.release(&pool[id]);
             self.stats.requests_served += 1;
         }
         out
     }
 
-    fn load(&self, pool: &RequestPool) -> ClientLoad {
+    fn load(&self) -> ClientLoad {
+        ClientLoad {
+            queued_requests: self.sched.queue_len() + self.sched.running_len(),
+            input_tokens: self.acct.input_tokens,
+            output_tokens: self.acct.output_tokens,
+            kv_tokens: self.kv.used_tokens,
+            tokens_left: self.acct.tokens_left,
+        }
+    }
+
+    fn recompute_load(&self, pool: &RequestPool) -> ClientLoad {
         let mut l = ClientLoad {
             queued_requests: self.sched.queue_len() + self.sched.running_len(),
             kv_tokens: self.kv.used_tokens,
@@ -365,10 +383,36 @@ mod tests {
         pool.insert(1, req(1, 1000, 50));
         pool.insert(2, req(2, 2000, 10)); // not accepted
         c.accept(SimTime::ZERO, 1, &mut pool);
-        let l = c.load(&pool);
+        let l = c.load();
         assert_eq!(l.queued_requests, 1);
         assert_eq!(l.input_tokens, 1000.0);
         assert_eq!(l.tokens_left, 1050.0);
+        assert_eq!(l, c.recompute_load(&pool));
+    }
+
+    #[test]
+    fn incremental_load_tracks_step_progress() {
+        let mut c = client(BatchingKind::Continuous);
+        let mut pool = RequestPool::new();
+        pool.insert(1, req(1, 1000, 50));
+        c.accept(SimTime::ZERO, 1, &mut pool);
+        let mut now = SimTime::ZERO;
+        // after every step the O(1) counters must match the pool scan
+        for _ in 0..100_000 {
+            match c.maybe_start_step(now, &mut pool) {
+                Some(fin) => {
+                    now = fin;
+                    c.finish_step(now, &mut pool);
+                    assert_eq!(c.load(), c.recompute_load(&pool), "drift at {now}");
+                }
+                None => break,
+            }
+        }
+        // drained: every counter returned to zero
+        let l = c.load();
+        assert_eq!(l.tokens_left, 0.0);
+        assert_eq!(l.input_tokens, 0.0);
+        assert_eq!(l.queued_requests, 0);
     }
 
     #[test]

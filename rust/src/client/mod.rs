@@ -10,7 +10,7 @@ pub mod rag;
 
 use crate::scheduler::RequestPool;
 use crate::sim::SimTime;
-use crate::workload::request::{ReqId, Stage};
+use crate::workload::request::{ReqId, Request, Stage};
 
 pub use kv::KvRetrievalClient;
 pub use llm::LlmClient;
@@ -26,6 +26,48 @@ pub struct ClientLoad {
     pub output_tokens: f64,
     pub kv_tokens: f64,
     pub tokens_left: f64,
+}
+
+/// Incrementally maintained token counters behind a client's O(1)
+/// [`Client::load`]. Every mutation of an owned request must be
+/// mirrored here; all deltas are integer-valued, so the running sums
+/// stay bit-identical to a fresh full-pool recomputation
+/// ([`Client::recompute_load`]) — the invariant the coordinator checks
+/// after every event in debug builds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LoadAccount {
+    pub input_tokens: f64,
+    pub output_tokens: f64,
+    pub tokens_left: f64,
+}
+
+impl LoadAccount {
+    /// A routed request entered this client (must reflect the request's
+    /// state *at accept time*).
+    pub fn accept(&mut self, r: &Request) {
+        self.input_tokens += r.prompt_tokens as f64;
+        self.output_tokens += (r.output_tokens * r.branches) as f64;
+        self.tokens_left += r.work_left_tokens();
+    }
+
+    /// A request left this client (stage done / transferred out) —
+    /// subtract its *current* remaining contribution.
+    pub fn release(&mut self, r: &Request) {
+        self.input_tokens -= r.prompt_tokens as f64;
+        self.output_tokens -= (r.output_tokens * r.branches) as f64;
+        self.tokens_left -= r.work_left_tokens();
+    }
+
+    /// `tokens` prompt tokens were prefilled this step.
+    pub fn prefill_progress(&mut self, tokens: usize) {
+        self.tokens_left -= tokens as f64;
+    }
+
+    /// One decode iteration completed for a request with `seqs` parallel
+    /// branches.
+    pub fn decode_progress(&mut self, seqs: usize) {
+        self.tokens_left -= seqs as f64;
+    }
 }
 
 /// What happened to requests when a step finished.
@@ -63,8 +105,17 @@ pub trait Client {
     /// The in-flight step completed: apply its effects.
     fn finish_step(&mut self, now: SimTime, pool: &mut RequestPool) -> StepOutcome;
 
-    /// Router-visible load.
-    fn load(&self, pool: &RequestPool) -> ClientLoad;
+    /// Router-visible load: an O(1) read of incrementally maintained
+    /// counters. Implementations must never iterate the request pool
+    /// here — this sits on the per-stage-transition routing hot path.
+    fn load(&self) -> ClientLoad;
+
+    /// Recompute the load from the request pool (O(owned requests)).
+    /// Ground truth for the debug-mode drift invariant, the
+    /// differential tests and the `hermes bench` full-scan baseline;
+    /// must equal [`Client::load`] exactly after every coordinator
+    /// event.
+    fn recompute_load(&self, pool: &RequestPool) -> ClientLoad;
 
     /// Busy-time and energy accounting (joules, busy-seconds, steps).
     fn stats(&self) -> ClientStats;

@@ -108,11 +108,16 @@ impl Client for PrePostClient {
         }
     }
 
-    fn load(&self, _pool: &RequestPool) -> ClientLoad {
+    fn load(&self) -> ClientLoad {
         ClientLoad {
             queued_requests: self.sched.queue_len(),
             ..Default::default()
         }
+    }
+
+    fn recompute_load(&self, _pool: &RequestPool) -> ClientLoad {
+        // queue length is the only load signal; it is O(1) already
+        self.load()
     }
 
     fn stats(&self) -> ClientStats {

@@ -2,7 +2,7 @@
 //! re-ranking ahead of LLM inference. Uses the `Batched` base scheduler
 //! ("to maximize the efficiency").
 
-use crate::client::{Client, ClientLoad, ClientStats, StepOutcome};
+use crate::client::{Client, ClientLoad, ClientStats, LoadAccount, StepOutcome};
 use crate::rag::{RagEngine, RagTiming};
 use crate::scheduler::simple::Batched;
 use crate::scheduler::RequestPool;
@@ -15,6 +15,7 @@ pub struct RagClient {
     sched: Batched,
     group: usize,
     current: Option<Vec<ReqId>>,
+    acct: LoadAccount,
     stats: ClientStats,
     /// accumulated per-stage timing for Fig 9's breakdown
     pub timing_total: RagTiming,
@@ -28,6 +29,7 @@ impl RagClient {
             sched: Batched::new(max_batch),
             group: 0,
             current: None,
+            acct: LoadAccount::default(),
             stats: ClientStats::default(),
             timing_total: RagTiming::default(),
         }
@@ -57,7 +59,9 @@ impl Client for RagClient {
     }
 
     fn accept(&mut self, _now: SimTime, id: ReqId, pool: &mut RequestPool) {
-        pool.get_mut(&id).expect("accept").client = Some(self.id);
+        let r = pool.get_mut(&id).expect("accept");
+        r.client = Some(self.id);
+        self.acct.accept(r);
         self.sched.enqueue(id);
     }
 
@@ -94,8 +98,14 @@ impl Client for RagClient {
         Some(now + SimTime::from_secs(dur))
     }
 
-    fn finish_step(&mut self, _now: SimTime, _pool: &mut RequestPool) -> StepOutcome {
+    fn finish_step(&mut self, _now: SimTime, pool: &mut RequestPool) -> StepOutcome {
         let batch = self.current.take().expect("finish without step");
+        for id in &batch {
+            // the retrieved context is folded into the prompt by the
+            // coordinator *after* the request leaves this client, so the
+            // accept-time contribution is exactly what we release
+            self.acct.release(&pool[id]);
+        }
         self.stats.requests_served += batch.len() as u64;
         StepOutcome {
             stage_done: batch,
@@ -103,7 +113,16 @@ impl Client for RagClient {
         }
     }
 
-    fn load(&self, pool: &RequestPool) -> ClientLoad {
+    fn load(&self) -> ClientLoad {
+        ClientLoad {
+            queued_requests: self.sched.queue_len(),
+            input_tokens: self.acct.input_tokens,
+            tokens_left: self.acct.tokens_left,
+            ..Default::default()
+        }
+    }
+
+    fn recompute_load(&self, pool: &RequestPool) -> ClientLoad {
         let mut l = ClientLoad {
             queued_requests: self.sched.queue_len(),
             ..Default::default()

@@ -89,9 +89,11 @@ impl SloLadder {
         v
     }
 
-    /// Per-request check (goodput counting, Figs 8 & 13).
-    pub fn request_ok(&self, ttft: f64, tpot: f64) -> bool {
-        ttft <= self.ttft_limits()[0] && tpot <= self.tpot_limits()[0]
+    /// Per-request check (goodput counting, Figs 8 & 13). A request
+    /// that decoded ≤1 token has no TPOT and cannot violate the TPOT
+    /// objective, so a missing sample passes explicitly.
+    pub fn request_ok(&self, ttft: f64, tpot: Option<f64>) -> bool {
+        ttft <= self.ttft_limits()[0] && tpot.map_or(true, |tp| tp <= self.tpot_limits()[0])
     }
 }
 
@@ -141,8 +143,11 @@ mod tests {
     #[test]
     fn per_request_check() {
         let s = SloLadder::standard();
-        assert!(s.request_ok(0.4, 0.03));
-        assert!(!s.request_ok(0.6, 0.03));
-        assert!(!s.request_ok(0.4, 0.04));
+        assert!(s.request_ok(0.4, Some(0.03)));
+        assert!(!s.request_ok(0.6, Some(0.03)));
+        assert!(!s.request_ok(0.4, Some(0.04)));
+        // 1-token outputs have no TPOT — they cannot violate it
+        assert!(s.request_ok(0.4, None));
+        assert!(!s.request_ok(0.6, None));
     }
 }

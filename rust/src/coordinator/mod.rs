@@ -26,6 +26,26 @@ pub struct CoordStats {
     pub transfer_seconds: f64,
     pub recomputes: u64,
     pub failed: u64,
+    /// largest event-queue length observed after any event
+    pub peak_queue: usize,
+    /// requests currently arrived but not yet finished/failed
+    pub inflight: usize,
+    /// high-water mark of `inflight` (the bench harness's "peak pool")
+    pub peak_inflight: usize,
+}
+
+/// How the router obtains candidate loads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LoadMode {
+    /// O(1) incrementally maintained counters ([`Client::load`]) — the
+    /// default and the only mode the hot path should use
+    #[default]
+    Incremental,
+    /// recompute every candidate's load from the full request pool on
+    /// every routing decision (O(total requests) per candidate) — the
+    /// pre-refactor behavior, kept as the `hermes bench` baseline and
+    /// for differential testing
+    FullScan,
 }
 
 pub struct Coordinator {
@@ -44,6 +64,8 @@ pub struct Coordinator {
     /// restrict prefill→decode hand-offs to the same placement group
     /// ("Local" disaggregation; default false = "Global", Splitwise-like)
     pub local_disagg: bool,
+    /// incremental (default) vs full-scan candidate loads
+    pub load_mode: LoadMode,
     pub stats: CoordStats,
     /// hard stop against runaway simulations
     pub max_events: u64,
@@ -67,6 +89,7 @@ impl Coordinator {
             failed: Vec::new(),
             granularity: Granularity::Layerwise { layers: 80 },
             local_disagg: false,
+            load_mode: LoadMode::Incremental,
             stats: CoordStats::default(),
             max_events: 500_000_000,
         }
@@ -88,22 +111,58 @@ impl Coordinator {
 
     /// Algorithm 1: drain the event queue.
     pub fn run(&mut self) {
-        while let Some((t, e)) = self.queue.pop() {
-            debug_assert!(t >= self.clock, "time went backwards");
-            self.clock = t;
-            self.stats.events += 1;
-            assert!(
-                self.stats.events < self.max_events,
-                "event budget exceeded — runaway simulation?"
+        while self.step_event() {}
+    }
+
+    /// Pop and process a single event; returns `false` once the queue
+    /// is drained. Exposed so tests can interleave per-event checks
+    /// (the load-invariant differential test) with the event loop.
+    pub fn step_event(&mut self) -> bool {
+        let Some((t, e)) = self.queue.pop() else {
+            return false;
+        };
+        debug_assert!(t >= self.clock, "time went backwards");
+        self.clock = t;
+        self.stats.events += 1;
+        assert!(
+            self.stats.events < self.max_events,
+            "event budget exceeded — runaway simulation?"
+        );
+        match e {
+            Event::RequestPush { req, dst } => self.on_push(req, dst),
+            Event::EngineStep { client } => self.on_step(client),
+        }
+        self.stats.peak_queue = self.stats.peak_queue.max(self.queue.len());
+        // drift invariant: the incremental per-client loads must equal a
+        // fresh full-pool recomputation after every event (debug builds)
+        #[cfg(debug_assertions)]
+        self.assert_load_invariant();
+        true
+    }
+
+    /// Assert that every client's incremental [`Client::load`] matches
+    /// a fresh full-pool [`Client::recompute_load`]. All load deltas are
+    /// integer-valued, so the comparison is exact (no epsilon).
+    pub fn assert_load_invariant(&self) {
+        for c in &self.clients {
+            let incremental = c.load();
+            let recomputed = c.recompute_load(&self.pool);
+            assert_eq!(
+                incremental,
+                recomputed,
+                "client {} ({}) load drifted at {}: incremental vs recomputed",
+                c.id(),
+                c.kind_name(),
+                self.clock
             );
-            match e {
-                Event::RequestPush { req, dst } => self.on_push(req, dst),
-                Event::EngineStep { client } => self.on_step(client),
-            }
         }
     }
 
-    /// Bytes that move between two consecutive stages.
+    /// Bytes that move when `req` leaves `from` for its next stage.
+    /// Evaluated on the request's state *while still in* `from` — the
+    /// pre-advance state — so pricing cannot depend on the order in
+    /// which `advance_stage()` side effects (RAG context folding) are
+    /// applied.
     fn transfer_bytes(req: &Request, from: Option<Stage>) -> f64 {
         let kv_per_tok = hardware::model(req.model)
             .map(|m| m.kv_bytes_per_token())
@@ -113,8 +172,11 @@ impl Coordinator {
             Some(Stage::Prefill) => (req.past_tokens + req.prompt_tokens) as f64 * kv_per_tok,
             // retrieved past-context KV moves to the prefill client
             Some(Stage::KvRetrieval(_)) => req.past_tokens as f64 * kv_per_tok,
-            // retrieved documents move as text (~4 B/token)
-            Some(Stage::Rag(_)) => req.prompt_tokens as f64 * 4.0,
+            // the prompt plus the retrieved documents move as text
+            // (~4 B/token); pre-advance, `prompt_tokens` does not yet
+            // include the retrieved context, so add it from the stage
+            // parameters rather than relying on the mutation
+            Some(Stage::Rag(p)) => (req.prompt_tokens + p.context_tokens()) as f64 * 4.0,
             // fresh arrivals / pre-post hops move prompt text
             _ => req.prompt_tokens as f64 * 4.0,
         }
@@ -129,7 +191,9 @@ impl Coordinator {
             }
             None => {
                 // fresh arrival: route (ingress pays no inter-client link)
-                if let Some(c) = self.route(req, None, None) {
+                self.stats.inflight += 1;
+                self.stats.peak_inflight = self.stats.peak_inflight.max(self.stats.inflight);
+                if let Some(c) = self.route(req, None, 0.0) {
                     self.pool.get_mut(&req).unwrap().stage_accept = self.clock;
                     self.clients[c].accept(self.clock, req, &mut self.pool);
                     self.activate(c);
@@ -153,9 +217,13 @@ impl Coordinator {
     /// Request finished its stage on `src`: advance the pipeline, route
     /// the next stage, simulate the transfer.
     fn advance(&mut self, id: ReqId, src: usize) {
-        let (done, from_stage) = {
+        let (done, bytes) = {
             let r = self.pool.get_mut(&id).expect("advance: unknown request");
             let from = r.stage();
+            // price the outbound transfer on the pre-advance state:
+            // `advance_stage()` folds retrieved RAG context into
+            // `prompt_tokens`, and pricing must not see that mutation
+            let bytes = Self::transfer_bytes(r, Some(from));
             r.records.push(crate::workload::request::StageRecord {
                 stage_idx: r.stage_idx,
                 client: src,
@@ -164,17 +232,17 @@ impl Coordinator {
             });
             r.client = None;
             let more = r.advance_stage();
-            (!more, from)
+            (!more, bytes)
         };
         if done {
             let r = self.pool.get_mut(&id).unwrap();
             r.finished = Some(self.clock);
             self.serviced.push(id);
+            self.stats.inflight -= 1;
             return;
         }
-        match self.route(id, Some(src), Some(from_stage)) {
+        match self.route(id, Some(src), bytes) {
             Some(dst) => {
-                let bytes = Self::transfer_bytes(&self.pool[&id], Some(from_stage));
                 let arrive = self
                     .network
                     .transfer(self.clock, src, dst, bytes, self.granularity);
@@ -188,12 +256,15 @@ impl Coordinator {
         }
     }
 
-    /// Candidates = clients that can serve the request's current stage.
-    fn route(&mut self, id: ReqId, src: Option<usize>, from: Option<Stage>) -> Option<usize> {
+    /// Candidates = clients that can serve the request's current stage;
+    /// `bytes` is the outbound transfer size the caller priced on the
+    /// pre-advance request state (0 for ingress, where no inter-client
+    /// link is paid). Cost: O(clients) — each candidate contributes an
+    /// O(1) cached load plus an O(1) transfer estimate.
+    fn route(&mut self, id: ReqId, src: Option<usize>, bytes: f64) -> Option<usize> {
         let r = &self.pool[&id];
         let stage = r.stage();
         let src_group = src.map(|s| self.clients[s].group());
-        let bytes = Self::transfer_bytes(r, from);
         let mut cands: Vec<Candidate> = Vec::new();
         for c in &self.clients {
             if !c.can_serve(&stage, r.model) {
@@ -209,9 +280,13 @@ impl Coordinator {
             let transfer_cost = src
                 .map(|s| self.network.estimate(s, c.id(), bytes, self.granularity))
                 .unwrap_or(0.0);
+            let load = match self.load_mode {
+                LoadMode::Incremental => c.load(),
+                LoadMode::FullScan => c.recompute_load(&self.pool),
+            };
             cands.push(Candidate {
                 client: c.id(),
-                load: c.load(&self.pool),
+                load,
                 transfer_cost,
             });
         }
@@ -224,6 +299,7 @@ impl Coordinator {
     fn fail(&mut self, id: ReqId) {
         self.stats.failed += 1;
         self.failed.push(id);
+        self.stats.inflight -= 1;
         self.pool.get_mut(&id).unwrap().finished = None;
     }
 
@@ -347,6 +423,57 @@ mod tests {
             )
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn rag_handoff_priced_on_pre_advance_state() {
+        // regression: the post-RAG text transfer must be priced from the
+        // pre-advance request state (prompt + retrieved docs from the
+        // stage params), not from whatever `advance_stage()` left in
+        // `prompt_tokens`
+        use crate::hardware::models::E5_BASE;
+        use crate::hardware::npu::GRACE_CPU;
+        use crate::rag::ivfpq::IvfPq;
+        use crate::rag::RagEngine;
+        use crate::workload::request::{RagParams, Request};
+
+        let clients: Vec<Box<dyn Client>> = vec![
+            llm_client(0, BatchingKind::Continuous),
+            Box::new(crate::client::RagClient::new(
+                1,
+                RagEngine::new(
+                    LlmCluster::new(E5_BASE, GRACE_CPU, 1),
+                    IvfPq::new(GRACE_CPU, Default::default()),
+                ),
+                0,
+            )),
+        ];
+        let mut coord = Coordinator::new(
+            clients,
+            Router::new(RoutePolicy::RoundRobin),
+            Network::single_platform(2),
+        );
+        let params = RagParams::default();
+        let prompt = 1000usize;
+        let req = Request::new(
+            1,
+            "llama3-70b",
+            SimTime::ZERO,
+            vec![Stage::Rag(params), Stage::Prefill, Stage::Decode],
+            prompt,
+            8,
+        );
+        coord.inject(vec![req]);
+        coord.run();
+        assert!(coord.all_serviced());
+        // exactly one inter-client hop: RAG → LLM, moving the prompt
+        // plus the retrieved documents as text at 4 B/token
+        assert_eq!(coord.stats.transfers, 1);
+        let expected = (prompt + params.context_tokens()) as f64 * 4.0;
+        assert_eq!(
+            coord.stats.transfer_bytes, expected,
+            "post-RAG transfer must move prompt + retrieved context"
+        );
     }
 
     #[test]

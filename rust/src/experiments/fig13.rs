@@ -43,15 +43,13 @@ pub fn run(fast: bool) -> Result<Vec<Fig13Row>> {
                     .points
                     .iter()
                     .filter(|p| {
-                        // 99% of requests meet the generation target
-                        let ok = p
-                            .metrics
-                            .tpot_samples
-                            .iter()
-                            .filter(|&&t| t <= target)
-                            .count();
-                        p.metrics.n_serviced > 0
-                            && ok as f64 / p.metrics.n_serviced as f64 >= 0.99
+                        // 99% of requests meet the generation target;
+                        // tpot_samples exclude ≤1-token outputs, which
+                        // have no TPOT and therefore cannot violate it
+                        let m = &p.metrics;
+                        let ok = m.tpot_samples.iter().filter(|&&t| t <= target).count()
+                            + m.n_serviced.saturating_sub(m.tpot_samples.len());
+                        m.n_serviced > 0 && ok as f64 / m.n_serviced as f64 >= 0.99
                     })
                     .map(|p| p.rate)
                     .fold(0.0f64, f64::max);

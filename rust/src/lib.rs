@@ -28,6 +28,8 @@
 //! * [`scenario`] / [`config`] — declarative front-end: data-driven
 //!   scenario registry and the JSON config schema (§III-A).
 //! * [`experiments`] — paper figure/table regenerators (§IV–V).
+//! * [`bench`] — the `hermes bench` core-speed harness
+//!   (`BENCH_core.json`, docs/performance.md).
 //!
 //! See README.md for the quickstart and the bench → paper-figure map.
 
@@ -47,3 +49,4 @@ pub mod config;
 pub mod scenario;
 pub mod metrics;
 pub mod experiments;
+pub mod bench;

@@ -5,6 +5,8 @@
 //!   hermes sweep    --config cfg.json --rates 1,2,4,8 [--out sweep.json]
 //!   hermes scenario <name|path.json> [--fast] [--out sweep.json]
 //!   hermes scenario --list                # registry under scenarios/
+//!   hermes bench    [name...] [--fast] [--baseline auto|on|off]
+//!                   [--out BENCH_core.json]
 //!   hermes experiment <fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3>
 //!                   [--fast]
 //!   hermes artifacts                      # list AOT predictor variants
@@ -13,6 +15,7 @@
 
 use anyhow::{bail, Context, Result};
 
+use hermes::bench;
 use hermes::config::SimConfig;
 use hermes::experiments;
 use hermes::metrics::{trace_export, RunMetrics};
@@ -34,10 +37,11 @@ fn run() -> Result<()> {
         Some("simulate") => simulate(&args),
         Some("sweep") => sweep(&args),
         Some("scenario") => scenario(&args),
+        Some("bench") => bench_cmd(&args),
         Some("experiment") => experiment(&args),
         Some("artifacts") => artifacts(&args),
         Some(other) => {
-            bail!("unknown subcommand '{other}' (try: simulate, sweep, scenario, experiment, artifacts)")
+            bail!("unknown subcommand '{other}' (try: simulate, sweep, scenario, bench, experiment, artifacts)")
         }
         None => {
             print_usage();
@@ -53,6 +57,7 @@ fn print_usage() {
     println!("  hermes simulate --config cfg.json [--out m.json] [--trace t.json]");
     println!("  hermes sweep --config cfg.json --rates 1,2,4 [--out sweep.json]");
     println!("  hermes scenario <name|path.json> [--fast] [--out sweep.json]   (--list to enumerate)");
+    println!("  hermes bench [name...] [--fast] [--baseline auto|on|off] [--out BENCH_core.json]");
     println!("  hermes experiment <fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|ablations|all> [--fast]");
     println!("  hermes artifacts");
 }
@@ -235,6 +240,42 @@ fn scenario(args: &Args) -> Result<()> {
         std::fs::write(&path, hermes::util::json::Json::Arr(doc_rows).to_pretty())?;
         println!("sweep -> {path}");
     }
+    Ok(())
+}
+
+/// Run the core-speed benchmark scenarios (`scenarios/bench_*.json` by
+/// default), print a summary table and write `BENCH_core.json` — the
+/// perf trajectory every PR defends (docs/performance.md).
+fn bench_cmd(args: &Args) -> Result<()> {
+    // the parser reads `--fast <name>` as fast="<name>" (its documented
+    // boolean/positional ambiguity); at bench scale that silently swaps
+    // an hours-long paper run for a seconds smoke, so reject it loudly
+    match args.str_or("fast", "false").as_str() {
+        "true" | "false" | "1" | "0" | "yes" | "no" => {}
+        other => bail!(
+            "--fast takes no value (got '{other}'); put scenario names first: hermes bench {other} --fast"
+        ),
+    }
+    let fast = args.bool_or("fast", false);
+    let out = args.str_or("out", "BENCH_core.json");
+    let baseline = match args.str_or("baseline", "auto").as_str() {
+        "auto" => bench::Baseline::Auto,
+        "on" | "true" | "1" | "yes" => bench::Baseline::On,
+        "off" | "false" | "0" | "no" => bench::Baseline::Off,
+        other => bail!("--baseline must be auto|on|off, got '{other}'"),
+    };
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    let names = if args.positional.is_empty() {
+        bench::bench_scenarios()
+    } else {
+        args.positional.clone()
+    };
+    if names.is_empty() {
+        bail!("no bench_* scenarios found under scenarios/");
+    }
+
+    bench::run_and_report(&names, fast, baseline, &out)?;
     Ok(())
 }
 

@@ -51,13 +51,16 @@ impl RunMetrics {
         let mut slo_ok = 0usize;
         for id in &coord.serviced {
             let r = &coord.pool[id];
-            let (t1, tp, te) = (
-                r.ttft().unwrap_or(f64::INFINITY),
-                r.tpot().unwrap_or(0.0),
-                r.e2e_latency().unwrap_or(f64::INFINITY),
-            );
+            let t1 = r.ttft().unwrap_or(f64::INFINITY);
+            let tp = r.tpot();
+            let te = r.e2e_latency().unwrap_or(f64::INFINITY);
             ttft.push(t1);
-            tpot.push(tp);
+            // requests that decode ≤1 token have no TPOT; excluding them
+            // keeps the percentiles honest instead of deflating the
+            // distribution with 0.0 samples
+            if let Some(tp) = tp {
+                tpot.push(tp);
+            }
             e2e.push(te);
             tokens += (r.decoded * r.branches) as f64;
             if slo.request_ok(t1, tp) {
@@ -182,6 +185,49 @@ mod tests {
         assert!(m.tok_per_joule > 0.0);
         assert!((0.0..=1.0).contains(&m.goodput_frac));
         assert_eq!(m.e2e_samples.len(), 15);
+    }
+
+    #[test]
+    fn single_token_outputs_excluded_from_tpot() {
+        use crate::sim::SimTime;
+        use crate::workload::request::{Request, Stage};
+
+        let cluster = LlmCluster::new(LLAMA3_70B, H100, 8);
+        let clients: Vec<Box<dyn Client>> = vec![Box::new(LlmClient::new(
+            0,
+            cluster.clone(),
+            LlmSched::new(BatchingKind::Continuous, Packing::Fcfs, SchedConfig::default()),
+            Box::new(RooflinePerfModel::new(cluster)),
+        ))];
+        let mut coord = Coordinator::new(
+            clients,
+            Router::new(RoutePolicy::RoundRobin),
+            Network::single_platform(1),
+        );
+        // r1: real decode run (TPOT = 10ms); r2: 1-token output (no TPOT)
+        let mut r1 = Request::new(1, "llama3-70b", SimTime::ZERO,
+            vec![Stage::Prefill, Stage::Decode], 100, 101);
+        r1.decoded = 101;
+        r1.first_token_time = Some(SimTime::from_secs(0.1));
+        r1.last_token_time = Some(SimTime::from_secs(1.1));
+        r1.finished = Some(SimTime::from_secs(1.1));
+        let mut r2 = Request::new(2, "llama3-70b", SimTime::ZERO,
+            vec![Stage::Prefill, Stage::Decode], 100, 1);
+        r2.decoded = 1;
+        r2.first_token_time = Some(SimTime::from_secs(0.1));
+        r2.last_token_time = Some(SimTime::from_secs(0.1));
+        r2.finished = Some(SimTime::from_secs(0.1));
+        coord.pool.insert(1, r1);
+        coord.pool.insert(2, r2);
+        coord.serviced = vec![1, 2];
+        coord.clock = SimTime::from_secs(1.1);
+
+        let m = RunMetrics::collect(&coord, &SloLadder::standard());
+        // the 1-token request must not contribute a 0.0 TPOT sample...
+        assert_eq!(m.tpot_samples.len(), 1);
+        assert!((m.tpot.p50 - 0.01).abs() < 1e-9, "p50={}", m.tpot.p50);
+        // ...and it passes the per-request SLO check (TTFT ok, no TPOT)
+        assert_eq!(m.goodput_frac, 1.0);
     }
 
     #[test]

@@ -23,26 +23,34 @@ impl StrategySweep {
         driver::best_under_slo(&self.points)
     }
 
-    /// Best point by throughput/energy under SLO.
+    /// Best point by throughput/energy under SLO. Total comparison, like
+    /// [`driver::best_under_slo`]: a NaN metric loses instead of
+    /// panicking.
     pub fn best_energy(&self) -> Option<&SweepPoint> {
+        fn key(x: f64) -> f64 {
+            if x.is_nan() {
+                f64::NEG_INFINITY
+            } else {
+                x
+            }
+        }
         self.points
             .iter()
             .filter(|p| p.slo_ok)
-            .max_by(|a, b| {
-                a.metrics
-                    .tok_per_joule
-                    .partial_cmp(&b.metrics.tok_per_joule)
-                    .unwrap()
-            })
+            .max_by(|a, b| key(a.metrics.tok_per_joule).total_cmp(&key(b.metrics.tok_per_joule)))
     }
 
     /// Lowest p50 TTFT across swept points (TTFT objective column).
+    /// Total comparison: a NaN sample loses instead of panicking.
     pub fn best_ttft(&self) -> Option<f64> {
         self.points
             .iter()
             .filter(|p| p.slo_ok)
             .map(|p| p.metrics.ttft.p50)
-            .min_by(|a, b| a.partial_cmp(b).unwrap())
+            .min_by(|a, b| {
+                let k = |x: f64| if x.is_nan() { f64::INFINITY } else { x };
+                k(*a).total_cmp(&k(*b))
+            })
     }
 }
 

@@ -95,17 +95,23 @@ where
 }
 
 /// The paper's headline sweep statistic: among SLO-satisfying points,
-/// the best throughput and throughput/energy (used by Figs 10–12).
+/// the highest-throughput point, with throughput ties broken by
+/// throughput/energy (`tok_per_joule`, used by Figs 10–12). The
+/// comparison is total: a NaN metric sorts below every real value
+/// instead of panicking (or winning the max).
 pub fn best_under_slo(points: &[SweepPoint]) -> Option<&SweepPoint> {
-    points
-        .iter()
-        .filter(|p| p.slo_ok)
-        .max_by(|a, b| {
-            a.metrics
-                .throughput_tok_s
-                .partial_cmp(&b.metrics.throughput_tok_s)
-                .unwrap()
-        })
+    fn key(x: f64) -> f64 {
+        if x.is_nan() {
+            f64::NEG_INFINITY
+        } else {
+            x
+        }
+    }
+    points.iter().filter(|p| p.slo_ok).max_by(|a, b| {
+        key(a.metrics.throughput_tok_s)
+            .total_cmp(&key(b.metrics.throughput_tok_s))
+            .then_with(|| key(a.metrics.tok_per_joule).total_cmp(&key(b.metrics.tok_per_joule)))
+    })
 }
 
 #[cfg(test)]
@@ -132,6 +138,25 @@ mod tests {
         let t0 = points[0].metrics.ttft.p99;
         let t2 = points[2].metrics.ttft.p99;
         assert!(t2 >= t0, "t0={t0} t2={t2}");
+    }
+
+    #[test]
+    fn best_under_slo_total_order_and_energy_tie_break() {
+        let mk = |thr: f64, tpj: f64| SweepPoint {
+            rate: 1.0,
+            metrics: RunMetrics {
+                throughput_tok_s: thr,
+                tok_per_joule: tpj,
+                ..Default::default()
+            },
+            slo_ok: true,
+        };
+        // NaN throughput must neither panic nor win the max; equal
+        // throughputs are settled by throughput/energy
+        let points = vec![mk(f64::NAN, 99.0), mk(100.0, 1.0), mk(100.0, 5.0), mk(50.0, 50.0)];
+        let best = best_under_slo(&points).unwrap();
+        assert_eq!(best.metrics.throughput_tok_s, 100.0);
+        assert_eq!(best.metrics.tok_per_joule, 5.0);
     }
 
     #[test]
