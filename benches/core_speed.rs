@@ -3,9 +3,11 @@
 //!
 //! Runs every `scenarios/bench_*.json` scenario at CI scale by default
 //! (`HERMES_FULL=1` for the 50k–200k-request paper scale), prints
-//! wall-clock / events-per-second / peak-pool numbers, and writes
-//! `BENCH_core.json` so the repo carries a perf trajectory across PRs.
-//! Scenarios opting in via `extras.baseline` are also run under the
+//! wall-clock / events-per-second / peak-pool / pool-op numbers, and
+//! writes `BENCH_core.json` so the repo carries a perf trajectory
+//! across PRs. Every scenario also runs against the hashmap-pool
+//! baseline (pre-arena `RequestPool`) for the arena speedup column;
+//! scenarios opting in via `extras.baseline` additionally run under the
 //! full-scan routing baseline to report the incremental-load speedup.
 //! All of the run/report logic lives in `hermes::bench`, shared with
 //! the `hermes bench` subcommand.

@@ -6,16 +6,26 @@
 //! speed as a first-class deliverable (LLMServingSim, Frontier). This
 //! harness runs the `scenarios/bench_*.json` scenarios — parameterized
 //! large-scale single runs of 50k–200k requests across LLM / RAG /
-//! KV-retrieval pools — and reports wall-clock, events/second and peak
-//! pool sizes, writing `BENCH_core.json` so every subsequent PR has a
-//! perf trajectory to defend.
+//! KV-retrieval pools — and reports wall-clock, events/second, peak
+//! pool sizes and request-pool operation counters, writing
+//! `BENCH_core.json` so every subsequent PR has a perf trajectory to
+//! defend.
 //!
-//! Each scenario is always run with the incremental O(1) load
-//! accounting ([`LoadMode::Incremental`]); scenarios that opt in via
-//! `extras.baseline` (or a `--baseline on` override) are additionally
-//! run under [`LoadMode::FullScan`] — the pre-refactor
-//! O(total-requests × clients) routing path — to measure the speedup
-//! the incremental accounting buys. See `docs/performance.md`.
+//! Every scenario runs in the shipping configuration first: the dense
+//! arena-backed [`RequestPool`] with incremental O(1) load accounting
+//! ([`LoadMode::Incremental`]). Two baselines quantify the two hot-path
+//! refactors:
+//!
+//! * **hashmap pool** ([`PoolBackend::Map`], incremental routing) — the
+//!   pre-arena pool; runs whenever the baseline setting is not `off`
+//!   (it costs about as much as the main run). Reported as
+//!   `speedup_vs_hashmap_pool`.
+//! * **full scan** ([`LoadMode::FullScan`], hashmap pool) — the
+//!   pre-incremental-routing path, O(pool × clients) per routing
+//!   decision; opt-in via `extras.baseline` or `--baseline on` (hours
+//!   at 100k+ scale). Reported as `speedup_vs_full_scan`.
+//!
+//! See `docs/performance.md`.
 
 use std::time::Instant;
 
@@ -25,6 +35,7 @@ use crate::config::slo::SloLadder;
 use crate::coordinator::LoadMode;
 use crate::metrics::RunMetrics;
 use crate::scenario::Scenario;
+use crate::scheduler::{PoolBackend, RequestPool};
 use crate::util::json::Json;
 
 /// Timing and scale counters from one benchmark run.
@@ -46,16 +57,27 @@ pub struct BenchRun {
     /// simulated seconds per wall second
     pub sim_rate: f64,
     pub throughput_tok_s: f64,
+    /// request-pool reads during the event loop (injection excluded)
+    pub pool_reads: u64,
+    /// request-pool writes during the event loop (injection excluded)
+    pub pool_writes: u64,
+    /// allocated arena slots (map backend: live entries)
+    pub pool_slots: usize,
+    /// high-water mark of client-resident requests (arena occupancy)
+    pub pool_peak_resident: usize,
 }
 
-/// One scenario's outcome: the incremental run, plus the full-scan
-/// baseline when enabled.
+/// One scenario's outcome: the shipping run plus the enabled baselines.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
     pub name: String,
     pub title: String,
+    /// arena pool + incremental load accounting (the shipping config)
     pub incremental: BenchRun,
+    /// `LoadMode::FullScan` + hashmap pool (pre-incremental routing)
     pub baseline: Option<BenchRun>,
+    /// hashmap pool + incremental routing (pre-arena pool)
+    pub map_pool: Option<BenchRun>,
 }
 
 impl BenchResult {
@@ -65,13 +87,21 @@ impl BenchResult {
             .as_ref()
             .map(|b| b.wall_s / self.incremental.wall_s.max(1e-12))
     }
+
+    /// Hashmap-pool wall-clock / arena wall-clock (>1 = arena faster).
+    pub fn pool_speedup(&self) -> Option<f64> {
+        self.map_pool
+            .as_ref()
+            .map(|b| b.wall_s / self.incremental.wall_s.max(1e-12))
+    }
 }
 
-/// Whether to run the full-scan baseline alongside each scenario.
+/// Whether to run the baselines alongside each scenario.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Baseline {
-    /// scenario's `extras.baseline` decides; fast scale always permits
-    /// it (the full-scan pass on 100k+ requests takes hours)
+    /// hashmap-pool baseline always; full-scan only where the scenario's
+    /// `extras.baseline` (or fast scale) permits it — the full-scan pass
+    /// on 100k+ requests takes hours
     Auto,
     On,
     Off,
@@ -85,10 +115,17 @@ pub fn bench_scenarios() -> Vec<String> {
         .collect()
 }
 
-/// Run `sc` once under `mode` and time the event loop. Workload
-/// generation and pool construction happen outside the timed section;
-/// the wall clock covers exactly what `Coordinator::run` does.
-pub fn run_once(sc: &Scenario, fast: bool, mode: LoadMode) -> Result<BenchRun> {
+/// Run `sc` once under `mode`/`backend` and time the event loop.
+/// Workload generation and pool construction happen outside the timed
+/// section; the wall clock covers exactly what `Coordinator::run` does,
+/// and the pool counters are reset after injection so they cover the
+/// same window.
+pub fn run_once(
+    sc: &Scenario,
+    fast: bool,
+    mode: LoadMode,
+    backend: PoolBackend,
+) -> Result<BenchRun> {
     let scale = sc.scale(fast);
     let entry = sc
         .roster
@@ -108,10 +145,13 @@ pub fn run_once(sc: &Scenario, fast: bool, mode: LoadMode) -> Result<BenchRun> {
 
     let mut coord = spec.build()?;
     coord.load_mode = mode;
+    coord.pool = RequestPool::with_backend(backend);
     coord.inject(requests);
+    coord.pool.reset_ops();
     let t0 = Instant::now();
     coord.run();
     let wall = t0.elapsed().as_secs_f64();
+    let ops = coord.pool.ops();
 
     let m = RunMetrics::collect(&coord, &SloLadder::standard());
     Ok(BenchRun {
@@ -126,20 +166,31 @@ pub fn run_once(sc: &Scenario, fast: bool, mode: LoadMode) -> Result<BenchRun> {
         makespan_s: m.makespan,
         sim_rate: m.makespan / wall.max(1e-9),
         throughput_tok_s: m.throughput_tok_s,
+        pool_reads: ops.reads,
+        pool_writes: ops.writes,
+        pool_slots: ops.slots,
+        pool_peak_resident: ops.peak_resident,
     })
 }
 
 /// Benchmark one scenario by registry name or path.
 pub fn run_scenario(name: &str, fast: bool, baseline: Baseline) -> Result<BenchResult> {
     let sc = Scenario::load(name)?;
-    let incremental = run_once(&sc, fast, LoadMode::Incremental)?;
-    let want_baseline = match baseline {
+    let incremental = run_once(&sc, fast, LoadMode::Incremental, PoolBackend::Arena)?;
+    // pre-arena pool: same asymptotics as the shipping run, so it is
+    // cheap enough to run by default
+    let map_pool = if baseline == Baseline::Off {
+        None
+    } else {
+        Some(run_once(&sc, fast, LoadMode::Incremental, PoolBackend::Map)?)
+    };
+    let want_full_scan = match baseline {
         Baseline::On => true,
         Baseline::Off => false,
         Baseline::Auto => sc.extras().bool_or("baseline", false) || sc.use_fast(fast),
     };
-    let baseline = if want_baseline {
-        Some(run_once(&sc, fast, LoadMode::FullScan)?)
+    let baseline = if want_full_scan {
+        Some(run_once(&sc, fast, LoadMode::FullScan, PoolBackend::Map)?)
     } else {
         None
     };
@@ -148,6 +199,7 @@ pub fn run_scenario(name: &str, fast: bool, baseline: Baseline) -> Result<BenchR
         title: sc.title.clone(),
         incremental,
         baseline,
+        map_pool,
     })
 }
 
@@ -163,7 +215,11 @@ fn run_to_json(b: &BenchRun) -> Json {
         .set("n_clients", b.n_clients)
         .set("makespan_s", b.makespan_s)
         .set("sim_seconds_per_wall_second", b.sim_rate)
-        .set("throughput_tok_s", b.throughput_tok_s);
+        .set("throughput_tok_s", b.throughput_tok_s)
+        .set("pool_reads", b.pool_reads)
+        .set("pool_writes", b.pool_writes)
+        .set("pool_slots", b.pool_slots)
+        .set("pool_peak_resident", b.pool_peak_resident);
     j
 }
 
@@ -181,6 +237,12 @@ pub fn to_json(results: &[BenchResult]) -> Json {
             }
             if let Some(s) = r.speedup() {
                 j.set("speedup_vs_full_scan", s);
+            }
+            if let Some(b) = &r.map_pool {
+                j.set("hashmap_pool_baseline", run_to_json(b));
+            }
+            if let Some(s) = r.pool_speedup() {
+                j.set("speedup_vs_hashmap_pool", s);
             }
             j
         })
@@ -211,6 +273,18 @@ pub fn run_and_report(
             "  peak event queue {}  peak in-flight {}  serviced {}/{}",
             inc.peak_queue, inc.peak_inflight, inc.n_serviced, inc.n_requests
         );
+        println!(
+            "  pool: {} reads  {} writes  {} slots  peak resident {}",
+            inc.pool_reads, inc.pool_writes, inc.pool_slots, inc.pool_peak_resident
+        );
+        if let Some(b) = &r.map_pool {
+            println!(
+                "  hashmap-pool baseline: {:.3}s wall ({:.0} events/s) -> {:.2}x arena speedup",
+                b.wall_s,
+                b.events_per_s,
+                r.pool_speedup().unwrap_or(0.0)
+            );
+        }
         if let Some(b) = &r.baseline {
             println!(
                 "  full-scan baseline: {:.3}s wall ({:.0} events/s) -> {:.1}x speedup",
@@ -224,7 +298,7 @@ pub fn run_and_report(
 
     let mut table = crate::util::bench::Table::new(&[
         "scenario", "requests", "clients", "wall(s)", "events/s", "sim-s/wall-s", "peak queue",
-        "speedup",
+        "pool r/w", "vs hashmap", "vs full-scan",
     ]);
     for r in &results {
         table.row(&[
@@ -235,6 +309,10 @@ pub fn run_and_report(
             format!("{:.0}", r.incremental.events_per_s),
             format!("{:.1}", r.incremental.sim_rate),
             r.incremental.peak_queue.to_string(),
+            format!("{}/{}", r.incremental.pool_reads, r.incremental.pool_writes),
+            r.pool_speedup()
+                .map(|s| format!("{s:.2}x"))
+                .unwrap_or_else(|| "-".to_string()),
             r.speedup().map(|s| format!("{s:.1}x")).unwrap_or_else(|| "-".to_string()),
         ]);
     }
@@ -262,26 +340,43 @@ mod tests {
     }
 
     #[test]
-    fn fast_bench_runs_and_baseline_agrees() {
+    fn fast_bench_runs_and_baselines_agree() {
         // HERMES_FULL=1 would override the fast flag and turn this into
         // a 50k-request run plus an hours-long full-scan baseline —
         // this is a smoke test, so skip rather than inherit paper scale
         if std::env::var("HERMES_FULL").is_ok() {
             return;
         }
-        // fast scale keeps this a smoke test; Auto enables the baseline
-        // at fast scale, so both load modes execute end to end
+        // fast scale keeps this a smoke test; Auto enables both
+        // baselines at fast scale, so every configuration executes
         let r = run_scenario("bench_llm_50k", true, Baseline::Auto).unwrap();
         assert!(r.incremental.n_serviced > 0);
         assert_eq!(r.incremental.n_serviced, r.incremental.n_requests);
+        assert!(r.incremental.pool_reads > 0, "pool reads must be counted");
+        assert!(r.incremental.pool_writes > 0, "pool writes must be counted");
+        assert!(r.incremental.pool_peak_resident > 0);
         let b = r.baseline.as_ref().expect("fast scale runs the baseline");
         // routing from cached vs recomputed loads must not change the
         // simulation itself
         assert_eq!(b.events, r.incremental.events);
         assert_eq!(b.n_serviced, r.incremental.n_serviced);
         assert_eq!(b.makespan_s, r.incremental.makespan_s);
+        // ... and neither may the pool backend
+        let m = r.map_pool.as_ref().expect("hashmap baseline runs on Auto");
+        assert_eq!(m.events, r.incremental.events);
+        assert_eq!(m.n_serviced, r.incremental.n_serviced);
+        assert_eq!(m.makespan_s, r.incremental.makespan_s);
         let j = to_json(&[r]);
         let parsed = Json::parse(&j.to_pretty()).unwrap();
-        assert!(parsed.as_arr().unwrap()[0].get("incremental").is_some());
+        let row = &parsed.as_arr().unwrap()[0];
+        assert!(row.get("incremental").is_some());
+        assert!(row.get("hashmap_pool_baseline").is_some());
+        assert!(row.get("speedup_vs_hashmap_pool").is_some());
+        assert!(
+            row.at(&["incremental", "pool_reads"])
+                .and_then(|j| j.as_f64())
+                .unwrap_or(0.0)
+                > 0.0
+        );
     }
 }

@@ -74,9 +74,8 @@ impl Client for KvRetrievalClient {
     }
 
     fn accept(&mut self, _now: SimTime, id: ReqId, pool: &mut RequestPool) {
-        let r = pool.get_mut(&id).expect("accept");
-        r.client = Some(self.id);
-        self.acct.accept(r);
+        pool.assign(id, self.id);
+        self.acct.accept(&pool[&id]);
         self.sched.enqueue(id);
     }
 
@@ -130,6 +129,7 @@ impl Client for KvRetrievalClient {
             if let Stage::KvRetrieval(p) = r.stage() {
                 r.apply_kv_retrieval(p.cached_tokens, hit);
             }
+            pool.unassign(id);
             if !hit {
                 out.recomputed.push(id);
             }
@@ -148,6 +148,17 @@ impl Client for KvRetrievalClient {
     }
 
     fn recompute_load(&self, pool: &RequestPool) -> ClientLoad {
+        let mut l = ClientLoad {
+            queued_requests: self.sched.queue_len(),
+            ..Default::default()
+        };
+        for r in pool.iter_client(self.id) {
+            l.tokens_left += r.work_left_tokens();
+        }
+        l
+    }
+
+    fn full_scan_load(&self, pool: &RequestPool) -> ClientLoad {
         let mut l = ClientLoad {
             queued_requests: self.sched.queue_len(),
             ..Default::default()
@@ -268,7 +279,7 @@ mod tests {
                 if out.recomputed.is_empty() {
                     break;
                 }
-                pool.get_mut(&1).unwrap().client = None;
+                // finish_step already released residency; just re-accept
                 c.accept(SimTime::ZERO, 1, &mut pool);
             }
             fin.as_secs()

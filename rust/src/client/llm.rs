@@ -25,8 +25,12 @@ pub struct LlmClient {
     pub kv: KvManager,
     pub perf: Box<dyn PerfModel>,
     group: usize,
-    /// the in-flight step, if any
-    current: Option<(StepPlan, SimTime, f64)>, // (plan, start, duration)
+    /// the in-flight step, if any: (start, duration)
+    current: Option<(SimTime, f64)>,
+    /// reusable step-plan buffer: filled by `maybe_start_step`, drained
+    /// by `finish_step`, capacity kept across steps (no allocations on
+    /// the steady-state hot path)
+    plan: StepPlan,
     /// incremental token counters behind the O(1) `load()`
     acct: LoadAccount,
     stats: ClientStats,
@@ -51,6 +55,7 @@ impl LlmClient {
             perf,
             group: 0,
             current: None,
+            plan: StepPlan::default(),
             acct: LoadAccount::default(),
             stats: ClientStats::default(),
             queue_samples: Vec::new(),
@@ -103,9 +108,8 @@ impl Client for LlmClient {
     }
 
     fn accept(&mut self, _now: SimTime, id: ReqId, pool: &mut RequestPool) {
-        let r = pool.get_mut(&id).expect("accept: unknown request");
-        r.client = Some(self.id);
-        self.acct.accept(r);
+        pool.assign(id, self.id);
+        self.acct.accept(&pool[&id]);
         self.sched.enqueue(id);
     }
 
@@ -113,11 +117,10 @@ impl Client for LlmClient {
         if self.current.is_some() {
             return None;
         }
-        let plan = self.sched.plan(pool, &mut self.kv)?;
-        if plan.is_empty() {
+        if !self.sched.plan_into(pool, &mut self.kv, &mut self.plan) {
             return None;
         }
-        let feats = plan.features(pool);
+        let feats = self.plan.features(pool);
         // Decode-only steps evolve predictably (same batch, KV grows by
         // one token per sequence per step), so price the next LOOKAHEAD
         // steps in one predict_batch call: behind the memoized PJRT
@@ -150,12 +153,15 @@ impl Client for LlmClient {
         self.stats.busy_seconds += dur;
         self.stats.energy_joules +=
             power::step_energy(&self.cluster.npu, self.cluster.tp, util, dur);
-        self.current = Some((plan, now, dur));
+        self.current = Some((now, dur));
         Some(now + SimTime::from_secs(dur))
     }
 
     fn finish_step(&mut self, now: SimTime, pool: &mut RequestPool) -> StepOutcome {
-        let (plan, _start, _dur) = self.current.take().expect("finish_step without step");
+        self.current.take().expect("finish_step without step");
+        // move the plan buffer out for the duration of the borrow-heavy
+        // body; handed back (with its capacity) at the end
+        let plan = std::mem::take(&mut self.plan);
         let mut out = StepOutcome::default();
 
         for (id, n) in &plan.prefill {
@@ -202,14 +208,16 @@ impl Client for LlmClient {
             }
         }
 
-        // release finished requests from scheduler + KV
+        // release finished requests from scheduler + KV + pool residency
         for id in &out.stage_done {
             if let Some(reserved) = self.sched.remove(*id) {
                 self.kv.release(reserved);
             }
             self.acct.release(&pool[id]);
+            pool.unassign(*id);
             self.stats.requests_served += 1;
         }
+        self.plan = plan;
         out
     }
 
@@ -224,6 +232,20 @@ impl Client for LlmClient {
     }
 
     fn recompute_load(&self, pool: &RequestPool) -> ClientLoad {
+        let mut l = ClientLoad {
+            queued_requests: self.sched.queue_len() + self.sched.running_len(),
+            kv_tokens: self.kv.used_tokens,
+            ..Default::default()
+        };
+        for r in pool.iter_client(self.id) {
+            l.input_tokens += r.prompt_tokens as f64;
+            l.output_tokens += (r.output_tokens * r.branches) as f64;
+            l.tokens_left += r.work_left_tokens();
+        }
+        l
+    }
+
+    fn full_scan_load(&self, pool: &RequestPool) -> ClientLoad {
         let mut l = ClientLoad {
             queued_requests: self.sched.queue_len() + self.sched.running_len(),
             kv_tokens: self.kv.used_tokens,

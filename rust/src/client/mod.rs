@@ -96,6 +96,11 @@ pub trait Client {
     }
 
     /// Take ownership of a routed request (enqueue into the scheduler).
+    /// Implementations must register residency via `RequestPool::assign`
+    /// — never by writing the request's `client` field directly — so the
+    /// pool's per-client resident index stays exact; `finish_step`
+    /// releases it with `RequestPool::unassign` for every request it
+    /// reports in `StepOutcome::stage_done`.
     fn accept(&mut self, now: SimTime, id: ReqId, pool: &mut RequestPool);
 
     /// If idle and work is available, start a step and return its
@@ -110,12 +115,25 @@ pub trait Client {
     /// here — this sits on the per-stage-transition routing hot path.
     fn load(&self) -> ClientLoad;
 
-    /// Recompute the load from the request pool (O(owned requests)).
-    /// Ground truth for the debug-mode drift invariant, the
-    /// differential tests and the `hermes bench` full-scan baseline;
-    /// must equal [`Client::load`] exactly after every coordinator
-    /// event.
+    /// Recompute the load from the pool's per-client resident list
+    /// (`RequestPool::iter_client` — O(resident on this client), not
+    /// O(total pool)). Ground truth for the debug-mode drift invariant
+    /// and the differential tests; must equal [`Client::load`] exactly
+    /// after every coordinator event. The resident list itself is
+    /// validated against every request's `client` field by
+    /// `RequestPool::validate_residency` in the same invariant check.
     fn recompute_load(&self, pool: &RequestPool) -> ClientLoad;
+
+    /// Recompute the load by scanning the *entire* pool and filtering
+    /// on each request's `client` field — the pre-refactor
+    /// O(total pool) computation, kept verbatim as the
+    /// [`LoadMode::FullScan`](crate::coordinator::LoadMode) bench
+    /// baseline (so `speedup_vs_full_scan` stays comparable across
+    /// PRs) and as the strongest ground truth in the debug invariant.
+    /// Must equal [`Client::recompute_load`] exactly.
+    fn full_scan_load(&self, pool: &RequestPool) -> ClientLoad {
+        self.recompute_load(pool)
+    }
 
     /// Busy-time and energy accounting (joules, busy-seconds, steps).
     fn stats(&self) -> ClientStats;

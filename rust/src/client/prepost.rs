@@ -74,7 +74,7 @@ impl Client for PrePostClient {
     }
 
     fn accept(&mut self, _now: SimTime, id: ReqId, pool: &mut RequestPool) {
-        pool.get_mut(&id).expect("accept").client = Some(self.id);
+        pool.assign(id, self.id);
         self.sched.enqueue(id);
     }
 
@@ -99,9 +99,12 @@ impl Client for PrePostClient {
         Some(now + SimTime::from_secs(dur))
     }
 
-    fn finish_step(&mut self, _now: SimTime, _pool: &mut RequestPool) -> StepOutcome {
+    fn finish_step(&mut self, _now: SimTime, pool: &mut RequestPool) -> StepOutcome {
         let wave = self.current.take().expect("finish without step");
         self.stats.requests_served += wave.len() as u64;
+        for id in &wave {
+            pool.unassign(*id);
+        }
         StepOutcome {
             stage_done: wave,
             recomputed: Vec::new(),
@@ -159,10 +162,8 @@ mod tests {
         assert!(fin_pre.as_secs() < 2e-3, "preprocess is sub-ms: {fin_pre}");
         c.finish_step(fin_pre, &mut pool);
 
-        // move to postprocess stage
-        let r = pool.get_mut(&1).unwrap();
-        r.stage_idx = 3;
-        r.client = None;
+        // move to postprocess stage (finish_step released residency)
+        pool.get_mut(&1).unwrap().stage_idx = 3;
         c.accept(fin_pre, 1, &mut pool);
         let fin_post = c.maybe_start_step(fin_pre, &mut pool).unwrap();
         // guard-2B forward over 200 tokens dominates

@@ -59,9 +59,8 @@ impl Client for RagClient {
     }
 
     fn accept(&mut self, _now: SimTime, id: ReqId, pool: &mut RequestPool) {
-        let r = pool.get_mut(&id).expect("accept");
-        r.client = Some(self.id);
-        self.acct.accept(r);
+        pool.assign(id, self.id);
+        self.acct.accept(&pool[&id]);
         self.sched.enqueue(id);
     }
 
@@ -105,6 +104,7 @@ impl Client for RagClient {
             // coordinator *after* the request leaves this client, so the
             // accept-time contribution is exactly what we release
             self.acct.release(&pool[id]);
+            pool.unassign(*id);
         }
         self.stats.requests_served += batch.len() as u64;
         StepOutcome {
@@ -123,6 +123,18 @@ impl Client for RagClient {
     }
 
     fn recompute_load(&self, pool: &RequestPool) -> ClientLoad {
+        let mut l = ClientLoad {
+            queued_requests: self.sched.queue_len(),
+            ..Default::default()
+        };
+        for r in pool.iter_client(self.id) {
+            l.input_tokens += r.prompt_tokens as f64;
+            l.tokens_left += r.work_left_tokens();
+        }
+        l
+    }
+
+    fn full_scan_load(&self, pool: &RequestPool) -> ClientLoad {
         let mut l = ClientLoad {
             queued_requests: self.sched.queue_len(),
             ..Default::default()

@@ -42,9 +42,10 @@ pub enum LoadMode {
     #[default]
     Incremental,
     /// recompute every candidate's load from the full request pool on
-    /// every routing decision (O(total requests) per candidate) — the
-    /// pre-refactor behavior, kept as the `hermes bench` baseline and
-    /// for differential testing
+    /// every routing decision (O(total requests) per candidate, via
+    /// [`Client::full_scan_load`]) — the pre-refactor behavior, kept
+    /// verbatim as the `hermes bench` baseline and for differential
+    /// testing
     FullScan,
 }
 
@@ -69,6 +70,9 @@ pub struct Coordinator {
     pub stats: CoordStats,
     /// hard stop against runaway simulations
     pub max_events: u64,
+    /// reusable candidate buffer for `route` (cleared per decision —
+    /// routing runs on every stage transition, so no allocations)
+    route_buf: Vec<Candidate>,
 }
 
 impl Coordinator {
@@ -92,6 +96,7 @@ impl Coordinator {
             load_mode: LoadMode::Incremental,
             stats: CoordStats::default(),
             max_events: 500_000_000,
+            route_buf: Vec::new(),
         }
     }
 
@@ -141,9 +146,14 @@ impl Coordinator {
     }
 
     /// Assert that every client's incremental [`Client::load`] matches
-    /// a fresh full-pool [`Client::recompute_load`]. All load deltas are
-    /// integer-valued, so the comparison is exact (no epsilon).
+    /// a fresh per-client [`Client::recompute_load`] AND the
+    /// pre-refactor full-pool [`Client::full_scan_load`]. All load
+    /// deltas are integer-valued, so the comparisons are exact (no
+    /// epsilon). Also validates the pool's resident index against every
+    /// request's `client` field (O(pool)), so `recompute_load`'s
+    /// membership source is itself checked against ground truth.
     pub fn assert_load_invariant(&self) {
+        self.pool.validate_residency();
         for c in &self.clients {
             let incremental = c.load();
             let recomputed = c.recompute_load(&self.pool);
@@ -151,6 +161,15 @@ impl Coordinator {
                 incremental,
                 recomputed,
                 "client {} ({}) load drifted at {}: incremental vs recomputed",
+                c.id(),
+                c.kind_name(),
+                self.clock
+            );
+            let scanned = c.full_scan_load(&self.pool);
+            assert_eq!(
+                incremental,
+                scanned,
+                "client {} ({}) load drifted at {}: incremental vs full scan",
                 c.id(),
                 c.kind_name(),
                 self.clock
@@ -219,6 +238,9 @@ impl Coordinator {
     fn advance(&mut self, id: ReqId, src: usize) {
         let (done, bytes) = {
             let r = self.pool.get_mut(&id).expect("advance: unknown request");
+            // the client released pool residency in its finish_step —
+            // stage completion and ownership release are one event
+            debug_assert!(r.client.is_none(), "advance: request still resident");
             let from = r.stage();
             // price the outbound transfer on the pre-advance state:
             // `advance_stage()` folds retrieved RAG context into
@@ -230,7 +252,6 @@ impl Coordinator {
                 start: r.stage_accept,
                 end: self.clock,
             });
-            r.client = None;
             let more = r.advance_stage();
             (!more, bytes)
         };
@@ -265,7 +286,7 @@ impl Coordinator {
         let r = &self.pool[&id];
         let stage = r.stage();
         let src_group = src.map(|s| self.clients[s].group());
-        let mut cands: Vec<Candidate> = Vec::new();
+        self.route_buf.clear();
         for c in &self.clients {
             if !c.can_serve(&stage, r.model) {
                 continue;
@@ -282,18 +303,18 @@ impl Coordinator {
                 .unwrap_or(0.0);
             let load = match self.load_mode {
                 LoadMode::Incremental => c.load(),
-                LoadMode::FullScan => c.recompute_load(&self.pool),
+                LoadMode::FullScan => c.full_scan_load(&self.pool),
             };
-            cands.push(Candidate {
+            self.route_buf.push(Candidate {
                 client: c.id(),
                 load,
                 transfer_cost,
             });
         }
-        if cands.is_empty() {
+        if self.route_buf.is_empty() {
             return None;
         }
-        Some(self.router.pick(r, &cands))
+        Some(self.router.pick(r, &self.route_buf))
     }
 
     fn fail(&mut self, id: ReqId) {

@@ -246,6 +246,11 @@ fn scenario(args: &Args) -> Result<()> {
 /// Run the core-speed benchmark scenarios (`scenarios/bench_*.json` by
 /// default), print a summary table and write `BENCH_core.json` — the
 /// perf trajectory every PR defends (docs/performance.md).
+///
+/// `--baseline` gates both reference configurations: the hashmap-pool
+/// run (pre-arena pool; cheap, on unless `off`) and the full-scan run
+/// (pre-incremental routing; hours at 100k+ scale, so `auto` defers to
+/// the scenario's `extras.baseline`).
 fn bench_cmd(args: &Args) -> Result<()> {
     // the parser reads `--fast <name>` as fast="<name>" (its documented
     // boolean/positional ambiguity); at bench scale that silently swaps

@@ -9,8 +9,16 @@
 //! enum, which maps 1:1 onto the built-in policies in
 //! [`policy`](super::policy); custom policies plug in through
 //! [`LlmSched::with_policy`].
+//!
+//! Hot-loop design (docs/performance.md): the waiting queue supports
+//! O(1) logical removal — a membership set plus tombstones that the
+//! next admission pass compacts away — instead of the old O(queue)
+//! `retain` per admitted request; the admitted sequence count is
+//! maintained incrementally instead of re-summed per candidate; and
+//! candidate/prefiller lists live in reusable scratch buffers, so
+//! steady-state planning performs no allocations.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 
 use super::packing::Packing;
 use super::policy::{
@@ -78,17 +86,40 @@ impl Default for SchedConfig {
     }
 }
 
+/// Per-admission bookkeeping: the KV tokens reserved for the request
+/// and its decode-sequence contribution to the batch-size cap.
+#[derive(Debug, Clone, Copy)]
+struct Reservation {
+    kv: f64,
+    seqs: usize,
+}
+
 /// vLLM-like scheduler state for one LLM client.
 pub struct LlmSched {
     policy: Box<dyn BatchPolicy>,
     pub packing: Packing,
     pub cfg: SchedConfig,
-    /// arrived but not yet admitted (no KV reservation)
+    /// arrived but not yet admitted, in arrival order; may contain
+    /// tombstoned ids (see `gone`) that the next admission compacts out
     waiting: VecDeque<ReqId>,
+    /// ids logically in `waiting` — O(1) membership and removal
+    waiting_set: HashSet<ReqId>,
+    /// tombstone counts: how many stale copies of each id are still
+    /// physically in `waiting` (an id can be removed, re-enqueued and
+    /// removed again before a compaction runs, leaving several stale
+    /// copies)
+    gone: HashMap<ReqId, u32>,
     /// admitted: KV reserved, being prefilled/decoded
     running: Vec<ReqId>,
-    /// KV tokens reserved per admitted request (released via `remove`)
-    reserved: HashMap<ReqId, f64>,
+    /// Σ decode sequences over `running` — kept incrementally so the
+    /// admission loop is O(candidates), not O(candidates × running)
+    running_seqs: usize,
+    /// KV/seq reservation per admitted request (released via `remove`)
+    reserved: HashMap<ReqId, Reservation>,
+    /// reusable candidate buffer for the admission pass
+    cand: Vec<ReqId>,
+    /// reusable prefiller buffer lent to policies via [`PlanCtx`]
+    scratch: Vec<ReqId>,
     /// queue-length samples for scheduler metrics
     pub admissions: u64,
 }
@@ -110,8 +141,13 @@ impl LlmSched {
             packing,
             cfg,
             waiting: VecDeque::new(),
+            waiting_set: HashSet::new(),
+            gone: HashMap::new(),
             running: Vec::new(),
+            running_seqs: 0,
             reserved: HashMap::new(),
+            cand: Vec::new(),
+            scratch: Vec::new(),
             admissions: 0,
         }
     }
@@ -131,11 +167,13 @@ impl LlmSched {
     }
 
     pub fn enqueue(&mut self, id: ReqId) {
+        let fresh = self.waiting_set.insert(id);
+        debug_assert!(fresh, "request {id} enqueued twice");
         self.waiting.push_back(id);
     }
 
     pub fn queue_len(&self) -> usize {
-        self.waiting.len()
+        self.waiting_set.len()
     }
 
     pub fn running_len(&self) -> usize {
@@ -143,43 +181,81 @@ impl LlmSched {
     }
 
     pub fn is_idle(&self) -> bool {
-        self.waiting.is_empty() && self.running.is_empty()
+        self.waiting_set.is_empty() && self.running.is_empty()
     }
 
     /// Remove a completed / transferred-out request. Returns the KV
     /// tokens that were reserved for it (the caller releases them from
-    /// the KvManager), or `None` if it was never admitted.
+    /// the KvManager), or `None` if it was never admitted. O(1) for
+    /// waiting requests (tombstoned, compacted lazily); O(running) for
+    /// admitted ones (bounded by the seq cap).
     pub fn remove(&mut self, id: ReqId) -> Option<f64> {
         if let Some(i) = self.running.iter().position(|r| *r == id) {
             self.running.swap_remove(i);
-            self.reserved.remove(&id)
+            let rsv = self
+                .reserved
+                .remove(&id)
+                .expect("running request without a reservation");
+            self.running_seqs -= rsv.seqs;
+            Some(rsv.kv)
         } else {
-            self.waiting.retain(|r| *r != id);
+            if self.waiting_set.remove(&id) {
+                *self.gone.entry(id).or_insert(0) += 1;
+            }
             None
         }
     }
 
     /// Admit from `waiting` in packing order while KV + seq caps allow.
+    /// Compacts tombstones out of the deque as a side effect.
     fn admit(&mut self, pool: &RequestPool, kv: &mut KvManager) {
-        if self.waiting.is_empty() {
+        if self.waiting_set.is_empty() {
+            if !self.waiting.is_empty() {
+                // only tombstones left — drop them
+                self.waiting.clear();
+                self.gone.clear();
+            }
             return;
         }
-        let mut cand: Vec<ReqId> = self.waiting.iter().copied().collect();
+        let mut cand = std::mem::take(&mut self.cand);
+        cand.clear();
+        if self.gone.is_empty() {
+            cand.extend(self.waiting.iter().copied());
+        } else {
+            // drop stale entries while collecting the live ones; a
+            // re-enqueued id keeps its fresh entry because its stale
+            // copies sit earlier in the FIFO and each consumes one
+            // tombstone count
+            let gone = &mut self.gone;
+            let waiting = &mut self.waiting;
+            waiting.retain(|id| {
+                if let Some(n) = gone.get_mut(id) {
+                    *n -= 1;
+                    let drained = *n == 0;
+                    if drained {
+                        gone.remove(id);
+                    }
+                    false
+                } else {
+                    cand.push(*id);
+                    true
+                }
+            });
+        }
         self.packing.order(&mut cand, pool);
-        for id in cand {
-            let seqs: usize = self
-                .running
-                .iter()
-                .map(|r| pool[r].decode_seqs())
-                .sum::<usize>();
-            if seqs + pool[&id].decode_seqs() > self.cfg.max_batch_seqs {
+        for id in cand.iter().copied() {
+            let seqs = pool[&id].decode_seqs();
+            if self.running_seqs + seqs > self.cfg.max_batch_seqs {
                 break;
             }
             let tokens = self.policy.admit_tokens(&pool[&id]);
             if kv.admit(tokens) {
-                self.waiting.retain(|r| *r != id);
+                self.waiting_set.remove(&id);
+                // tombstone the (single, live) deque entry
+                *self.gone.entry(id).or_insert(0) += 1;
                 self.running.push(id);
-                self.reserved.insert(id, tokens);
+                self.running_seqs += seqs;
+                self.reserved.insert(id, Reservation { kv: tokens, seqs });
                 self.admissions += 1;
             } else {
                 // FCFS head-of-line blocking: stop at the first request
@@ -187,19 +263,42 @@ impl LlmSched {
                 break;
             }
         }
+        self.cand = cand;
     }
 
-    /// Build the next step plan; `None` when there is nothing to run.
-    pub fn plan(&mut self, pool: &RequestPool, kv: &mut KvManager) -> Option<StepPlan> {
+    /// Fill `plan` with the next step; returns `false` (and leaves the
+    /// plan empty) when there is nothing to run. The plan is a reusable
+    /// caller-owned buffer — no allocations in steady state.
+    pub fn plan_into(
+        &mut self,
+        pool: &RequestPool,
+        kv: &mut KvManager,
+        plan: &mut StepPlan,
+    ) -> bool {
+        plan.clear();
         if self.policy.admits_mid_batch() || self.running.is_empty() {
             self.admit(pool, kv);
         }
-        let ctx = PlanCtx {
+        let mut ctx = PlanCtx {
             running: &self.running,
             cfg: &self.cfg,
             packing: self.packing,
+            scratch: &mut self.scratch,
         };
-        self.policy.compose(&ctx, pool)
+        self.policy.compose(&mut ctx, pool, plan);
+        !plan.is_empty()
+    }
+
+    /// Allocating convenience wrapper around [`LlmSched::plan_into`]
+    /// (tests and exploratory code; the client hot path reuses its own
+    /// buffer).
+    pub fn plan(&mut self, pool: &RequestPool, kv: &mut KvManager) -> Option<StepPlan> {
+        let mut plan = StepPlan::default();
+        if self.plan_into(pool, kv, &mut plan) {
+            Some(plan)
+        } else {
+            None
+        }
     }
 }
 
@@ -395,6 +494,44 @@ mod tests {
         let (mut s, pool, _kv) = setup(BatchingKind::Continuous, vec![mk(1, 10, 2)]);
         let _ = pool;
         assert!(s.remove(1).is_none(), "still waiting -> no KV to release");
+        assert_eq!(s.queue_len(), 0);
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn tombstoned_entry_does_not_resurrect_on_reenqueue() {
+        // remove a waiting request, re-enqueue the same id, and make
+        // sure exactly one live entry survives the compaction
+        let (mut s, mut pool, mut kv) =
+            setup(BatchingKind::Continuous, vec![mk(1, 10, 2), mk(2, 10, 2)]);
+        assert!(s.remove(1).is_none());
+        assert_eq!(s.queue_len(), 1);
+        pool.insert(1, mk(1, 30, 2));
+        s.enqueue(1);
+        assert_eq!(s.queue_len(), 2);
+        let p = s.plan(&pool, &mut kv).unwrap();
+        // both admitted, each exactly once, with the *fresh* request 1
+        assert_eq!(s.running_len(), 2);
+        assert_eq!(s.queue_len(), 0);
+        let mut planned = p.prefill.clone();
+        planned.sort_unstable();
+        assert_eq!(planned, vec![(1, 30), (2, 10)]);
+    }
+
+    #[test]
+    fn double_removed_waiting_id_stays_removed() {
+        // two stale copies of the same id can sit in the deque before a
+        // compaction runs; both must be dropped (tombstone counts)
+        let (mut s, mut pool, mut kv) =
+            setup(BatchingKind::Continuous, vec![mk(1, 10, 2), mk(2, 10, 2)]);
+        assert!(s.remove(1).is_none()); // deque [1s, 2]
+        pool.insert(1, mk(1, 30, 2));
+        s.enqueue(1); // deque [1s, 2, 1]
+        assert!(s.remove(1).is_none()); // deque [1s, 2, 1s]
+        assert_eq!(s.queue_len(), 1);
+        let p = s.plan(&pool, &mut kv).unwrap();
+        assert_eq!(p.prefill, vec![(2, 10)], "removed id must not be admitted");
+        assert_eq!(s.running_len(), 1);
         assert_eq!(s.queue_len(), 0);
     }
 

@@ -14,18 +14,15 @@
 pub mod llm;
 pub mod packing;
 pub mod policy;
+pub mod pool;
 pub mod simple;
 
-use std::collections::HashMap;
-
-use crate::workload::request::{ReqId, Request};
+use crate::workload::request::ReqId;
 
 pub use llm::{BatchingKind, LlmSched, SchedConfig};
 pub use packing::Packing;
 pub use policy::BatchPolicy;
-
-/// The requests a client currently owns, keyed by id.
-pub type RequestPool = HashMap<ReqId, Request>;
+pub use pool::{PoolBackend, PoolOps, RequestPool};
 
 /// What one engine step executes.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -39,6 +36,14 @@ pub struct StepPlan {
 impl StepPlan {
     pub fn is_empty(&self) -> bool {
         self.prefill.is_empty() && self.decode.is_empty()
+    }
+
+    /// Empty the plan, keeping the allocated capacity — plans are
+    /// reusable buffers on the per-step hot path (owned by the client,
+    /// filled by [`LlmSched::plan_into`]).
+    pub fn clear(&mut self) {
+        self.prefill.clear();
+        self.decode.clear();
     }
 
     /// Total new prefill tokens in the step.

@@ -8,6 +8,14 @@
 //! or selecting one per client from a scenario file — requires no
 //! scheduler or coordinator changes.
 //!
+//! Composition is allocation-free on the hot path: policies *fill* a
+//! caller-owned [`StepPlan`] buffer instead of returning a fresh one,
+//! and the ordered-prefiller list lives in a scratch buffer owned by
+//! the scheduler and lent out through [`PlanCtx`]. Scratch ownership
+//! rules (docs/performance.md): the buffer is valid only inside one
+//! `compose` call — [`PlanCtx::prefillers`] clears and refills it, so
+//! policies must consume it before asking for it again.
+//!
 //! Six built-in policies mirror the paper's roster:
 //!
 //! * [`StaticBatching`] — FasterTransformer-style: fill a batch, run it
@@ -26,31 +34,42 @@ use super::packing::Packing;
 use super::{RequestPool, SchedConfig, StepPlan};
 use crate::workload::request::{ReqId, Request};
 
-/// Read-only view of the scheduler state a policy composes steps from.
+/// View of the scheduler state a policy composes steps from, plus the
+/// scheduler-owned scratch buffer behind [`PlanCtx::prefillers`].
 pub struct PlanCtx<'a> {
     /// admitted requests (KV reserved), in admission order
     pub running: &'a [ReqId],
     pub cfg: &'a SchedConfig,
     pub packing: Packing,
+    /// reusable id buffer (owned by the scheduler; overwritten by
+    /// [`PlanCtx::prefillers`] on every call)
+    pub scratch: &'a mut Vec<ReqId>,
 }
 
 impl PlanCtx<'_> {
-    /// Admitted requests whose prompt is not fully prefilled.
-    pub fn prefillers(&self, pool: &RequestPool) -> Vec<ReqId> {
-        self.running
-            .iter()
-            .copied()
-            .filter(|id| !pool[id].prefill_complete())
-            .collect()
+    /// Admitted requests whose prompt is not fully prefilled, in
+    /// admission order, filled into the reusable scratch buffer. The
+    /// returned buffer is invalidated by the next `prefillers` call.
+    pub fn prefillers(&mut self, pool: &RequestPool) -> &mut Vec<ReqId> {
+        let running = self.running;
+        let scratch = &mut *self.scratch;
+        scratch.clear();
+        scratch.extend(
+            running
+                .iter()
+                .copied()
+                .filter(|id| !pool[id].prefill_complete()),
+        );
+        scratch
     }
 
-    /// Admitted requests ready to generate (prefill done, decode not).
-    pub fn decoders(&self, pool: &RequestPool) -> Vec<ReqId> {
-        self.running
-            .iter()
-            .copied()
-            .filter(|id| pool[id].prefill_complete() && !pool[id].decode_complete())
-            .collect()
+    /// Append the admitted requests ready to generate (prefill done,
+    /// decode not) to `out`, in admission order.
+    pub fn decoders_into(&self, pool: &RequestPool, out: &mut Vec<ReqId>) {
+        out.extend(self.running.iter().copied().filter(|id| {
+            let r = &pool[id];
+            r.prefill_complete() && !r.decode_complete()
+        }));
     }
 }
 
@@ -83,9 +102,9 @@ pub trait BatchPolicy {
         r.kv_tokens_peak()
     }
 
-    /// Compose the next engine step from the admitted set; `None` (or an
-    /// empty plan) when this policy has nothing to run.
-    fn compose(&self, ctx: &PlanCtx, pool: &RequestPool) -> Option<StepPlan>;
+    /// Compose the next engine step from the admitted set into `plan`
+    /// (handed over empty; left empty when there is nothing to run).
+    fn compose(&self, ctx: &mut PlanCtx, pool: &RequestPool, plan: &mut StepPlan);
 }
 
 /// FasterTransformer-style run-to-completion batching.
@@ -100,25 +119,20 @@ impl BatchPolicy for StaticBatching {
         false
     }
 
-    fn compose(&self, ctx: &PlanCtx, pool: &RequestPool) -> Option<StepPlan> {
+    fn compose(&self, ctx: &mut PlanCtx, pool: &RequestPool, plan: &mut StepPlan) {
         if ctx.running.is_empty() {
-            return None;
+            return;
         }
-        let pf = ctx.prefillers(pool);
-        if !pf.is_empty() {
-            // whole prompts, one step (FasterTransformer has no chunking)
-            return Some(StepPlan {
-                prefill: pf
-                    .iter()
-                    .map(|id| (*id, pool[id].prefill_remaining()))
-                    .collect(),
-                decode: Vec::new(),
-            });
+        // whole prompts, one step (FasterTransformer has no chunking)
+        for id in ctx.running {
+            let r = &pool[id];
+            if !r.prefill_complete() {
+                plan.prefill.push((*id, r.prefill_remaining()));
+            }
         }
-        Some(StepPlan {
-            prefill: Vec::new(),
-            decode: ctx.decoders(pool),
-        })
+        if plan.prefill.is_empty() {
+            ctx.decoders_into(pool, &mut plan.decode);
+        }
     }
 }
 
@@ -130,44 +144,34 @@ impl BatchPolicy for ContinuousBatching {
         "continuous"
     }
 
-    fn compose(&self, ctx: &PlanCtx, pool: &RequestPool) -> Option<StepPlan> {
+    fn compose(&self, ctx: &mut PlanCtx, pool: &RequestPool, plan: &mut StepPlan) {
         if ctx.running.is_empty() {
-            return None;
+            return;
         }
         // prefill-prioritized: pending prefills preempt decode
-        let mut pf = ctx.prefillers(pool);
+        let packing = ctx.packing;
+        let mut budget = ctx.cfg.max_batch_tokens;
+        let pf = ctx.prefillers(pool);
         if !pf.is_empty() {
-            ctx.packing.order(&mut pf, pool);
-            let mut budget = ctx.cfg.max_batch_tokens;
-            let mut prefill = Vec::new();
-            for id in pf {
+            packing.order(pf, pool);
+            for id in pf.iter() {
                 if budget == 0 {
                     break;
                 }
-                let take = pool[&id].prefill_remaining().min(budget);
+                let take = pool[id].prefill_remaining().min(budget);
                 // continuous batching does not split prompts: take all or
                 // wait (unless a single prompt alone exceeds the budget)
-                if take < pool[&id].prefill_remaining() && !prefill.is_empty() {
+                if take < pool[id].prefill_remaining() && !plan.prefill.is_empty() {
                     break;
                 }
                 budget -= take;
-                prefill.push((id, take));
+                plan.prefill.push((*id, take));
             }
-            if !prefill.is_empty() {
-                return Some(StepPlan {
-                    prefill,
-                    decode: Vec::new(),
-                });
+            if !plan.prefill.is_empty() {
+                return;
             }
         }
-        let dec = ctx.decoders(pool);
-        if dec.is_empty() {
-            return None;
-        }
-        Some(StepPlan {
-            prefill: Vec::new(),
-            decode: dec,
-        })
+        ctx.decoders_into(pool, &mut plan.decode);
     }
 }
 
@@ -182,30 +186,26 @@ impl BatchPolicy for ChunkedPrefill {
         "chunked"
     }
 
-    fn compose(&self, ctx: &PlanCtx, pool: &RequestPool) -> Option<StepPlan> {
+    fn compose(&self, ctx: &mut PlanCtx, pool: &RequestPool, plan: &mut StepPlan) {
         if ctx.running.is_empty() {
-            return None;
+            return;
         }
         // decodes ride in every step (1 token per branch-sequence)...
-        let decode = ctx.decoders(pool);
-        let dec_tokens: usize = decode.iter().map(|id| pool[id].decode_seqs()).sum();
+        ctx.decoders_into(pool, &mut plan.decode);
+        let dec_tokens: usize = plan.decode.iter().map(|id| pool[id].decode_seqs()).sum();
         // ...and the remaining budget is filled with prefill chunks
         let mut budget = self.chunk.saturating_sub(dec_tokens);
-        let mut pf = ctx.prefillers(pool);
-        ctx.packing.order(&mut pf, pool);
-        let mut prefill = Vec::new();
-        for id in pf {
+        let packing = ctx.packing;
+        let pf = ctx.prefillers(pool);
+        packing.order(pf, pool);
+        for id in pf.iter() {
             if budget == 0 {
                 break;
             }
-            let take = pool[&id].prefill_remaining().min(budget);
+            let take = pool[id].prefill_remaining().min(budget);
             budget -= take;
-            prefill.push((id, take));
+            plan.prefill.push((*id, take));
         }
-        if prefill.is_empty() && decode.is_empty() {
-            return None;
-        }
-        Some(StepPlan { prefill, decode })
     }
 }
 
@@ -217,27 +217,23 @@ impl BatchPolicy for MixedBatching {
         "mixed"
     }
 
-    fn compose(&self, ctx: &PlanCtx, pool: &RequestPool) -> Option<StepPlan> {
+    fn compose(&self, ctx: &mut PlanCtx, pool: &RequestPool, plan: &mut StepPlan) {
         if ctx.running.is_empty() {
-            return None;
+            return;
         }
-        let mut pf = ctx.prefillers(pool);
-        ctx.packing.order(&mut pf, pool);
+        let packing = ctx.packing;
         let mut budget = ctx.cfg.max_batch_tokens;
-        let mut prefill = Vec::new();
-        for id in pf {
-            let take = pool[&id].prefill_remaining().min(budget);
+        let pf = ctx.prefillers(pool);
+        packing.order(pf, pool);
+        for id in pf.iter() {
+            let take = pool[id].prefill_remaining().min(budget);
             if take == 0 {
                 break;
             }
             budget -= take;
-            prefill.push((id, take));
+            plan.prefill.push((*id, take));
         }
-        let decode = ctx.decoders(pool);
-        if prefill.is_empty() && decode.is_empty() {
-            return None;
-        }
-        Some(StepPlan { prefill, decode })
+        ctx.decoders_into(pool, &mut plan.decode);
     }
 }
 
@@ -259,29 +255,25 @@ impl BatchPolicy for PrefillRole {
         (r.past_tokens + r.prompt_tokens) as f64
     }
 
-    fn compose(&self, ctx: &PlanCtx, pool: &RequestPool) -> Option<StepPlan> {
-        let mut pf = ctx.prefillers(pool);
-        if pf.is_empty() {
-            return None;
-        }
-        ctx.packing.order(&mut pf, pool);
+    fn compose(&self, ctx: &mut PlanCtx, pool: &RequestPool, plan: &mut StepPlan) {
+        let packing = ctx.packing;
         let mut budget = ctx.cfg.max_batch_tokens;
-        let mut prefill = Vec::new();
-        for id in pf {
+        let pf = ctx.prefillers(pool);
+        if pf.is_empty() {
+            return;
+        }
+        packing.order(pf, pool);
+        for id in pf.iter() {
             if budget == 0 {
                 break;
             }
-            let take = pool[&id].prefill_remaining().min(budget);
-            if take < pool[&id].prefill_remaining() && !prefill.is_empty() {
+            let take = pool[id].prefill_remaining().min(budget);
+            if take < pool[id].prefill_remaining() && !plan.prefill.is_empty() {
                 break; // no chunking across steps beyond the head request
             }
             budget -= take;
-            prefill.push((id, take));
+            plan.prefill.push((*id, take));
         }
-        Some(StepPlan {
-            prefill,
-            decode: Vec::new(),
-        })
     }
 }
 
@@ -298,15 +290,8 @@ impl BatchPolicy for DecodeRole {
         false
     }
 
-    fn compose(&self, ctx: &PlanCtx, pool: &RequestPool) -> Option<StepPlan> {
-        let dec = ctx.decoders(pool);
-        if dec.is_empty() {
-            return None;
-        }
-        Some(StepPlan {
-            prefill: Vec::new(),
-            decode: dec,
-        })
+    fn compose(&self, ctx: &mut PlanCtx, pool: &RequestPool, plan: &mut StepPlan) {
+        ctx.decoders_into(pool, &mut plan.decode);
     }
 }
 
@@ -422,12 +407,11 @@ mod tests {
             fn name(&self) -> &'static str {
                 "decode-first"
             }
-            fn compose(&self, ctx: &PlanCtx, pool: &RequestPool) -> Option<StepPlan> {
-                let dec = ctx.decoders(pool);
-                if !dec.is_empty() {
-                    return Some(StepPlan { prefill: Vec::new(), decode: dec });
+            fn compose(&self, ctx: &mut PlanCtx, pool: &RequestPool, plan: &mut StepPlan) {
+                ctx.decoders_into(pool, &mut plan.decode);
+                if plan.decode.is_empty() {
+                    ContinuousBatching.compose(ctx, pool, plan);
                 }
-                ContinuousBatching.compose(ctx, pool)
             }
         }
 
@@ -450,5 +434,20 @@ mod tests {
         let p = s.plan(&pool, &mut kv).unwrap();
         assert_eq!(p.decode.len(), 2);
         assert!(p.prefill.is_empty());
+    }
+
+    #[test]
+    fn plan_buffer_reuse_is_clean_across_steps() {
+        // plan_into must fully overwrite a dirty buffer
+        let (mut s, mut pool, mut kv) =
+            sched(BatchingKind::Continuous, vec![mk(1, 100, 3), mk(2, 200, 3)]);
+        let mut plan = StepPlan::default();
+        assert!(s.plan_into(&pool, &mut kv, &mut plan));
+        assert_eq!(plan.prefill.len(), 2);
+        apply(&plan, &mut pool);
+        // same buffer, next step: prefill entries must be gone
+        assert!(s.plan_into(&pool, &mut kv, &mut plan));
+        assert!(plan.prefill.is_empty());
+        assert_eq!(plan.decode, vec![1, 2]);
     }
 }

@@ -1,0 +1,578 @@
+//! Arena-backed request pool.
+//!
+//! The coordinator owns every request for the lifetime of a run and the
+//! hot loop touches the pool on every event: scheduler admission, step
+//! planning, token progress, load release, routing. The seed kept the
+//! pool as a `HashMap<ReqId, Request>`, which pays a hash per access and
+//! pointer-chases on iteration; worse, `recompute_load` (the full-scan
+//! baseline and the debug-mode drift invariant) scanned the *entire*
+//! pool per client.
+//!
+//! [`RequestPool`] replaces it with a dense arena: request ids are
+//! assigned sequentially by the workload generators
+//! (`WorkloadSpec::generate` / `WorkloadMix::generate` hand out dense id
+//! ranges from 0), so a `Vec<Option<Request>>` indexed directly by
+//! `ReqId` gives O(1) hash-free access and cache-friendly linear
+//! iteration. A per-client *resident index* (`by_client` + per-slot
+//! position) is maintained by [`RequestPool::assign`] /
+//! [`RequestPool::unassign`] in O(1), so per-client recomputation
+//! ([`RequestPool::iter_client`]) is O(resident on that client) instead
+//! of O(total pool).
+//!
+//! The old map representation survives as [`PoolBackend::Map`] — a
+//! reference implementation behind the same API, used by the
+//! differential tests (`rust/tests/pool_equivalence.rs`) and the
+//! `hermes bench` hashmap baseline to prove the arena is behaviorally
+//! invisible and measurably faster.
+//!
+//! Every access is counted (reads via a `Cell`, so `Index` can count
+//! too); `hermes bench` reports the totals and the arena high-water
+//! marks (see [`PoolOps`]).
+
+use std::cell::Cell;
+use std::collections::HashMap;
+
+use crate::workload::request::{ReqId, Request};
+
+/// Which storage backs the pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolBackend {
+    /// dense `Vec` slots indexed by `ReqId` — the shipping configuration
+    Arena,
+    /// `HashMap` reference implementation — differential tests and the
+    /// `hermes bench` pre-arena baseline only
+    Map,
+}
+
+impl PoolBackend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PoolBackend::Arena => "arena",
+            PoolBackend::Map => "hashmap",
+        }
+    }
+}
+
+enum Backend {
+    Arena {
+        /// slot i holds the request with id i (ids are dense)
+        slots: Vec<Option<Request>>,
+        /// position of each assigned id inside its client's resident
+        /// list (`u32::MAX` = unassigned); parallel to `slots`
+        pos: Vec<u32>,
+        len: usize,
+    },
+    Map {
+        map: HashMap<ReqId, Request>,
+    },
+}
+
+/// Pool operation counters for the bench harness (`hermes bench`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolOps {
+    pub reads: u64,
+    pub writes: u64,
+    /// allocated arena slots (map backend: live entries)
+    pub slots: usize,
+    /// requests currently stored
+    pub len: usize,
+    /// requests currently resident on some client
+    pub resident: usize,
+    /// high-water mark of `resident` — the arena occupancy peak
+    pub peak_resident: usize,
+}
+
+/// The requests a simulation run owns, indexed by their dense id.
+pub struct RequestPool {
+    backend: Backend,
+    /// resident request ids per client (index = client id)
+    by_client: Vec<Vec<ReqId>>,
+    resident: usize,
+    peak_resident: usize,
+    /// `Cell` so `Index`/`get` (shared-ref paths) can count too
+    reads: Cell<u64>,
+    writes: Cell<u64>,
+}
+
+impl Default for RequestPool {
+    fn default() -> RequestPool {
+        RequestPool::new()
+    }
+}
+
+impl RequestPool {
+    /// An empty arena-backed pool (the default everywhere).
+    pub fn new() -> RequestPool {
+        RequestPool::with_backend(PoolBackend::Arena)
+    }
+
+    /// The `HashMap` reference backend (differential tests / bench).
+    pub fn map_backed() -> RequestPool {
+        RequestPool::with_backend(PoolBackend::Map)
+    }
+
+    pub fn with_backend(backend: PoolBackend) -> RequestPool {
+        let backend = match backend {
+            PoolBackend::Arena => Backend::Arena {
+                slots: Vec::new(),
+                pos: Vec::new(),
+                len: 0,
+            },
+            PoolBackend::Map => Backend::Map {
+                map: HashMap::new(),
+            },
+        };
+        RequestPool {
+            backend,
+            by_client: Vec::new(),
+            resident: 0,
+            peak_resident: 0,
+            reads: Cell::new(0),
+            writes: Cell::new(0),
+        }
+    }
+
+    pub fn backend(&self) -> PoolBackend {
+        match self.backend {
+            Backend::Arena { .. } => PoolBackend::Arena,
+            Backend::Map { .. } => PoolBackend::Map,
+        }
+    }
+
+    /// Store `r` under `id` (replacing any previous occupant, HashMap
+    /// semantics). Ids must be dense-ish: the arena allocates slots up
+    /// to the largest id seen.
+    pub fn insert(&mut self, id: ReqId, r: Request) {
+        debug_assert_eq!(id, r.id, "pool key must equal the request id");
+        self.writes.set(self.writes.get() + 1);
+        match &mut self.backend {
+            Backend::Arena { slots, pos, len } => {
+                let i = id as usize;
+                if i >= slots.len() {
+                    slots.resize_with(i + 1, || None);
+                    pos.resize(i + 1, u32::MAX);
+                }
+                match slots[i].replace(r) {
+                    None => *len += 1,
+                    Some(old) => debug_assert!(
+                        old.client.is_none(),
+                        "insert replaced a client-resident request"
+                    ),
+                }
+            }
+            Backend::Map { map } => {
+                if let Some(old) = map.insert(id, r) {
+                    debug_assert!(
+                        old.client.is_none(),
+                        "insert replaced a client-resident request"
+                    );
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn request(&self, id: ReqId) -> &Request {
+        match &self.backend {
+            Backend::Arena { slots, .. } => slots[id as usize]
+                .as_ref()
+                .expect("pool: unknown request id"),
+            Backend::Map { map } => map.get(&id).expect("pool: unknown request id"),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, id: &ReqId) -> Option<&Request> {
+        self.reads.set(self.reads.get() + 1);
+        match &self.backend {
+            Backend::Arena { slots, .. } => {
+                slots.get(*id as usize).and_then(|s| s.as_ref())
+            }
+            Backend::Map { map } => map.get(id),
+        }
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, id: &ReqId) -> Option<&mut Request> {
+        self.writes.set(self.writes.get() + 1);
+        match &mut self.backend {
+            Backend::Arena { slots, .. } => {
+                slots.get_mut(*id as usize).and_then(|s| s.as_mut())
+            }
+            Backend::Map { map } => map.get_mut(id),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.backend {
+            Backend::Arena { len, .. } => *len,
+            Backend::Map { map } => map.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Iterate `(id, request)` pairs (arena: id order; map: unordered).
+    pub fn iter(&self) -> PoolIter<'_> {
+        let inner = match &self.backend {
+            Backend::Arena { slots, .. } => PoolIterInner::Arena(slots.iter()),
+            Backend::Map { map } => PoolIterInner::Map(map.iter()),
+        };
+        PoolIter {
+            inner,
+            reads: &self.reads,
+        }
+    }
+
+    pub fn values(&self) -> impl Iterator<Item = &Request> + '_ {
+        self.iter().map(|(_, r)| r)
+    }
+
+    // ---- per-client resident index ----------------------------------------
+
+    /// Hand the request to `client`: sets `Request::client` and records
+    /// the request in the client's resident list. O(1). All ownership
+    /// changes must go through `assign`/[`RequestPool::unassign`] — the
+    /// resident index backs `Client::recompute_load` and drifts if the
+    /// `client` field is mutated directly.
+    pub fn assign(&mut self, id: ReqId, client: usize) {
+        self.writes.set(self.writes.get() + 1);
+        if client >= self.by_client.len() {
+            self.by_client.resize_with(client + 1, Vec::new);
+        }
+        let p = self.by_client[client].len() as u32;
+        match &mut self.backend {
+            Backend::Arena { slots, pos, .. } => {
+                let r = slots[id as usize]
+                    .as_mut()
+                    .expect("assign: unknown request id");
+                debug_assert!(r.client.is_none(), "assign over a live assignment");
+                r.client = Some(client);
+                pos[id as usize] = p;
+            }
+            Backend::Map { map } => {
+                let r = map.get_mut(&id).expect("assign: unknown request id");
+                debug_assert!(r.client.is_none(), "assign over a live assignment");
+                r.client = Some(client);
+            }
+        }
+        self.by_client[client].push(id);
+        self.resident += 1;
+        self.peak_resident = self.peak_resident.max(self.resident);
+    }
+
+    /// The request left its client (stage done / failed): clears
+    /// `Request::client` and drops it from the resident list. O(1) on
+    /// the arena (positional swap-remove); no-op when unassigned.
+    pub fn unassign(&mut self, id: ReqId) {
+        self.writes.set(self.writes.get() + 1);
+        match &mut self.backend {
+            Backend::Arena { slots, pos, .. } => {
+                let r = slots[id as usize]
+                    .as_mut()
+                    .expect("unassign: unknown request id");
+                let Some(c) = r.client.take() else { return };
+                let p = pos[id as usize] as usize;
+                pos[id as usize] = u32::MAX;
+                let list = &mut self.by_client[c];
+                debug_assert_eq!(list[p], id, "resident index corrupted");
+                list.swap_remove(p);
+                if p < list.len() {
+                    pos[list[p] as usize] = p as u32;
+                }
+            }
+            Backend::Map { map } => {
+                let r = map.get_mut(&id).expect("unassign: unknown request id");
+                let Some(c) = r.client.take() else { return };
+                let list = &mut self.by_client[c];
+                let p = list
+                    .iter()
+                    .position(|x| *x == id)
+                    .expect("resident index corrupted");
+                list.swap_remove(p);
+            }
+        }
+        self.resident -= 1;
+    }
+
+    /// Requests currently resident on `client`, in index order
+    /// (deterministic: insertion order perturbed only by swap-removes,
+    /// which are themselves event-deterministic). O(resident).
+    pub fn iter_client(&self, client: usize) -> impl Iterator<Item = &Request> + '_ {
+        let ids: &[ReqId] = self
+            .by_client
+            .get(client)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[]);
+        ids.iter().map(move |id| {
+            self.reads.set(self.reads.get() + 1);
+            self.request(*id)
+        })
+    }
+
+    /// Number of requests resident on `client`.
+    pub fn resident_on(&self, client: usize) -> usize {
+        self.by_client.get(client).map(|v| v.len()).unwrap_or(0)
+    }
+
+    /// Assert that the resident index exactly mirrors the `client`
+    /// fields: every listed id points back at its client, and every
+    /// assigned request is listed exactly once. O(pool) — debug
+    /// invariant / differential tests only.
+    pub fn validate_residency(&self) {
+        let mut listed = vec![0usize; self.by_client.len()];
+        for (c, list) in self.by_client.iter().enumerate() {
+            for id in list {
+                let r = self.request(*id);
+                assert_eq!(
+                    r.client,
+                    Some(c),
+                    "resident index lists request {id} under client {c} but the request says {:?}",
+                    r.client
+                );
+                listed[c] += 1;
+            }
+        }
+        let mut assigned = vec![0usize; self.by_client.len()];
+        let mut total = 0usize;
+        for (_, r) in self.iter() {
+            if let Some(c) = r.client {
+                assert!(
+                    c < self.by_client.len(),
+                    "request {} assigned to unindexed client {c}",
+                    r.id
+                );
+                assigned[c] += 1;
+                total += 1;
+            }
+        }
+        assert_eq!(listed, assigned, "resident index drifted from request.client");
+        assert_eq!(total, self.resident, "resident counter drifted");
+    }
+
+    // ---- op counters -------------------------------------------------------
+
+    /// Snapshot of the operation counters and occupancy marks.
+    pub fn ops(&self) -> PoolOps {
+        PoolOps {
+            reads: self.reads.get(),
+            writes: self.writes.get(),
+            slots: match &self.backend {
+                Backend::Arena { slots, .. } => slots.len(),
+                Backend::Map { map } => map.len(),
+            },
+            len: self.len(),
+            resident: self.resident,
+            peak_resident: self.peak_resident,
+        }
+    }
+
+    /// Zero the read/write counters (occupancy marks are kept) — the
+    /// bench harness calls this after injection so the counters cover
+    /// exactly the event loop.
+    pub fn reset_ops(&self) {
+        self.reads.set(0);
+        self.writes.set(0);
+    }
+}
+
+impl std::ops::Index<&ReqId> for RequestPool {
+    type Output = Request;
+    #[inline]
+    fn index(&self, id: &ReqId) -> &Request {
+        self.reads.set(self.reads.get() + 1);
+        self.request(*id)
+    }
+}
+
+impl std::ops::Index<ReqId> for RequestPool {
+    type Output = Request;
+    #[inline]
+    fn index(&self, id: ReqId) -> &Request {
+        self.reads.set(self.reads.get() + 1);
+        self.request(id)
+    }
+}
+
+/// Iterator over `(id, request)` pairs of either backend. Each yielded
+/// request counts as one pool read, so the op counters also cover the
+/// whole-pool scans (`Client::full_scan_load`, trace export).
+pub struct PoolIter<'a> {
+    inner: PoolIterInner<'a>,
+    reads: &'a Cell<u64>,
+}
+
+enum PoolIterInner<'a> {
+    Arena(std::slice::Iter<'a, Option<Request>>),
+    Map(std::collections::hash_map::Iter<'a, ReqId, Request>),
+}
+
+impl<'a> Iterator for PoolIter<'a> {
+    type Item = (&'a ReqId, &'a Request);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let item = match &mut self.inner {
+            PoolIterInner::Arena(it) => loop {
+                match it.next() {
+                    Some(Some(r)) => break Some((&r.id, r)),
+                    Some(None) => continue,
+                    None => break None,
+                }
+            },
+            PoolIterInner::Map(it) => it.next(),
+        };
+        if item.is_some() {
+            self.reads.set(self.reads.get() + 1);
+        }
+        item
+    }
+}
+
+impl<'a> IntoIterator for &'a RequestPool {
+    type Item = (&'a ReqId, &'a Request);
+    type IntoIter = PoolIter<'a>;
+    fn into_iter(self) -> PoolIter<'a> {
+        self.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimTime;
+    use crate::workload::request::Stage;
+
+    fn req(id: u64) -> Request {
+        Request::new(
+            id,
+            "llama3-70b",
+            SimTime::ZERO,
+            vec![Stage::Prefill, Stage::Decode],
+            100,
+            10,
+        )
+    }
+
+    fn both() -> [RequestPool; 2] {
+        [RequestPool::new(), RequestPool::map_backed()]
+    }
+
+    #[test]
+    fn insert_get_index_len() {
+        for mut pool in both() {
+            assert!(pool.is_empty());
+            for id in [0u64, 3, 1] {
+                pool.insert(id, req(id));
+            }
+            assert_eq!(pool.len(), 3);
+            assert_eq!(pool[&3].id, 3);
+            assert_eq!(pool[1u64].id, 1);
+            assert!(pool.get(&2).is_none());
+            pool.get_mut(&0).unwrap().prefilled = 7;
+            assert_eq!(pool[&0].prefilled, 7);
+            // replacement keeps the length (HashMap semantics)
+            pool.insert(3, req(3));
+            assert_eq!(pool.len(), 3);
+        }
+    }
+
+    #[test]
+    fn iteration_covers_all_requests() {
+        for mut pool in both() {
+            for id in 0..5u64 {
+                pool.insert(id, req(id));
+            }
+            let mut ids: Vec<u64> = pool.iter().map(|(id, _)| *id).collect();
+            ids.sort_unstable();
+            assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+            assert_eq!(pool.values().count(), 5);
+            // for-loop sugar over &pool
+            let mut n = 0;
+            for (id, r) in &pool {
+                assert_eq!(*id, r.id);
+                n += 1;
+            }
+            assert_eq!(n, 5);
+        }
+    }
+
+    #[test]
+    fn resident_index_tracks_assignment() {
+        for mut pool in both() {
+            for id in 0..4u64 {
+                pool.insert(id, req(id));
+            }
+            pool.assign(0, 2);
+            pool.assign(1, 2);
+            pool.assign(2, 2);
+            pool.assign(3, 0);
+            assert_eq!(pool.resident_on(2), 3);
+            assert_eq!(pool.resident_on(0), 1);
+            assert_eq!(pool.resident_on(7), 0);
+            assert_eq!(pool[&1].client, Some(2));
+            pool.validate_residency();
+
+            // middle removal exercises the swap-remove position fix-up
+            pool.unassign(1);
+            assert_eq!(pool.resident_on(2), 2);
+            assert_eq!(pool[&1].client, None);
+            pool.validate_residency();
+            let left: Vec<u64> = pool.iter_client(2).map(|r| r.id).collect();
+            assert_eq!(left.len(), 2);
+            assert!(left.contains(&0) && left.contains(&2));
+
+            // unassigning an unassigned request is a no-op
+            pool.unassign(1);
+            pool.validate_residency();
+
+            // re-assignment after release works (stage transitions)
+            pool.assign(1, 0);
+            assert_eq!(pool.resident_on(0), 2);
+            pool.validate_residency();
+
+            let ops = pool.ops();
+            assert_eq!(ops.resident, 4);
+            assert_eq!(ops.peak_resident, 4);
+        }
+    }
+
+    #[test]
+    fn op_counters_count_and_reset() {
+        let mut pool = RequestPool::new();
+        pool.insert(0, req(0));
+        pool.insert(1, req(1));
+        let w0 = pool.ops().writes;
+        assert_eq!(w0, 2);
+        let _ = &pool[&0];
+        let _ = pool.get(&1);
+        pool.get_mut(&1).unwrap().decoded = 1;
+        let ops = pool.ops();
+        assert_eq!(ops.reads, 2);
+        assert_eq!(ops.writes, 3);
+        assert_eq!(ops.slots, 2);
+        assert_eq!(ops.len, 2);
+        pool.reset_ops();
+        assert_eq!(pool.ops().reads, 0);
+        assert_eq!(pool.ops().writes, 0);
+    }
+
+    #[test]
+    fn arena_handles_sparse_ids() {
+        let mut pool = RequestPool::new();
+        pool.insert(10, req(10));
+        assert_eq!(pool.len(), 1);
+        assert_eq!(pool.ops().slots, 11, "slots allocated up to max id");
+        assert!(pool.get(&4).is_none());
+        assert_eq!(pool.iter().count(), 1);
+    }
+
+    #[test]
+    fn backends_report_their_name() {
+        assert_eq!(RequestPool::new().backend(), PoolBackend::Arena);
+        assert_eq!(RequestPool::map_backed().backend(), PoolBackend::Map);
+        assert_eq!(PoolBackend::Arena.name(), "arena");
+        assert_eq!(PoolBackend::Map.name(), "hashmap");
+    }
+}

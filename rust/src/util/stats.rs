@@ -24,13 +24,17 @@ pub fn stddev(xs: &[f64]) -> f64 {
     variance(xs).sqrt()
 }
 
-/// Percentile with linear interpolation (q in [0,100]); 0.0 for empty input.
+/// Percentile with linear interpolation (q in [0,100]); 0.0 for empty
+/// input. NaN-safe: samples are ordered with `f64::total_cmp`, which
+/// sorts NaNs to the ends instead of panicking mid-sort — metric
+/// streams can legitimately carry NaN (e.g. 0/0 rates) and a summary
+/// must never take the whole run down.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     percentile_sorted(&v, q)
 }
 
@@ -68,7 +72,7 @@ impl Summary {
             return Summary::default();
         }
         let mut v = xs.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         Summary {
             n: v.len(),
             mean: mean(&v),
@@ -88,7 +92,7 @@ pub fn cdf(xs: &[f64], points: usize) -> Vec<(f64, f64)> {
         return Vec::new();
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     (0..points)
         .map(|i| {
             let q = (i + 1) as f64 / points as f64;
@@ -250,5 +254,26 @@ mod tests {
     #[test]
     fn mape_simple() {
         assert!((mape(&[110.0], &[100.0]) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic() {
+        // regression: the percentile sorts used partial_cmp().unwrap(),
+        // which panics on NaN; total_cmp orders NaN after +inf instead
+        let xs = [1.0, f64::NAN, 3.0, 2.0];
+        let p50 = percentile(&xs, 50.0);
+        assert!((p50 - 2.5).abs() < 1e-12, "NaN sorts last: p50={p50}");
+        let s = Summary::of(&xs);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan(), "NaN is the largest under the total order");
+        assert!(s.p50.is_finite());
+        let c = cdf(&xs, 4);
+        assert_eq!(c.len(), 4);
+        // all-NaN input must also survive
+        let all_nan = [f64::NAN, f64::NAN];
+        let s = Summary::of(&all_nan);
+        assert_eq!(s.n, 2);
+        assert!(s.p90.is_nan());
     }
 }

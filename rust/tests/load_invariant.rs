@@ -7,6 +7,11 @@
 //! * equivalence: routing from cached loads produces bit-identical
 //!   simulations to the pre-refactor full-scan routing path;
 //! * determinism: seeded runs reproduce identical metrics.
+//!
+//! The arena-vs-hashmap pool differential lives in
+//! `rust/tests/pool_equivalence.rs`; `assert_load_invariant` now also
+//! validates the pool's per-client resident index, so the differential
+//! loop below checks that too.
 
 use hermes::client::Client;
 use hermes::config::slo::SloLadder;

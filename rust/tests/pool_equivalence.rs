@@ -1,0 +1,128 @@
+//! Arena-pool acceptance tests (the arena-backed `RequestPool`
+//! refactor's differential suite):
+//!
+//! * equivalence: a mixed RAG / KV-retrieval / prefill / decode run on
+//!   the dense arena backend is bit-identical — serviced order, event
+//!   count, clock, every latency sample — to the same run on the
+//!   `HashMap` reference backend;
+//! * residency: the per-client resident index (which
+//!   `Client::recompute_load` now iterates instead of scanning the
+//!   whole pool) matches every request's `client` field after every
+//!   single event;
+//! * counters: the pool operation counters the bench harness reports
+//!   actually count.
+
+use hermes::config::slo::SloLadder;
+use hermes::coordinator::{Coordinator, LoadMode};
+use hermes::hardware::npu::H100;
+use hermes::memory::storage::{KvScenario, StorageConfig};
+use hermes::metrics::RunMetrics;
+use hermes::scheduler::{PoolBackend, RequestPool};
+use hermes::sim::builder::{KvRetrievalSpec, PoolSpec, RagSpec, ServingSpec};
+use hermes::workload::request::{KvParams, RagParams};
+use hermes::workload::trace::{Pipeline, TraceKind, WorkloadMix, WorkloadSpec};
+
+/// A serving system exercising every client kind: disaggregated
+/// prefill/decode LLM clients (KV hand-off transfers), a RAG tier and a
+/// KV-retrieval tier — the same shape as the load-invariant suite.
+fn mixed_spec() -> ServingSpec {
+    ServingSpec::new(
+        "llama3-70b",
+        H100,
+        4,
+        PoolSpec::Disaggregated { prefill: 2, decode: 2, local: false },
+    )
+    .with_rag(RagSpec {
+        count: 1,
+        embed_model: hermes::hardware::models::E5_BASE,
+        embed_npu: hermes::hardware::npu::A100,
+        retrieval_npu: hermes::hardware::npu::GRACE_CPU,
+        ivf: Default::default(),
+        max_batch: 8,
+    })
+    .with_kv_retrieval(KvRetrievalSpec {
+        count: 1,
+        storage: StorageConfig::PlatformShared,
+        scenario: KvScenario::Shared,
+        max_batch: 8,
+        ports: 4,
+    })
+    .with_seed(29)
+}
+
+/// Regular + RAG + KV-retrieval request classes, interleaved.
+fn mixed_workload(n: usize) -> WorkloadMix {
+    let base = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 0, 1.0).with_seed(31);
+    let rag = base
+        .clone()
+        .with_pipeline(Pipeline::Rag(RagParams { docs: 4, doc_tokens: 256, ..Default::default() }));
+    let kv = base
+        .clone()
+        .with_pipeline(Pipeline::KvRetrieval(KvParams { cached_tokens: 2048 }));
+    WorkloadMix::new(vec![(0.5, base), (0.3, rag), (0.2, kv)]).scaled(n, 6.0)
+}
+
+fn run_backend(backend: PoolBackend) -> (Coordinator, RunMetrics) {
+    let mut coord = mixed_spec().build().unwrap();
+    coord.load_mode = LoadMode::Incremental;
+    coord.pool = RequestPool::with_backend(backend);
+    coord.inject(mixed_workload(80).generate());
+    coord.run();
+    let m = RunMetrics::collect(&coord, &SloLadder::retrieval());
+    (coord, m)
+}
+
+#[test]
+fn arena_pool_reproduces_map_pool_run_exactly() {
+    let (arena_coord, arena) = run_backend(PoolBackend::Arena);
+    let (map_coord, map) = run_backend(PoolBackend::Map);
+    assert!(arena_coord.all_serviced(), "serviced {}", arena_coord.serviced.len());
+    assert_eq!(
+        arena_coord.serviced, map_coord.serviced,
+        "completion order diverged between pool backends"
+    );
+    assert_eq!(arena_coord.clock, map_coord.clock);
+    assert_eq!(arena.events, map.events);
+    assert_eq!(arena.makespan, map.makespan);
+    assert_eq!(arena.n_serviced, map.n_serviced);
+    assert_eq!(arena.n_failed, map.n_failed);
+    assert_eq!(arena.ttft_samples, map.ttft_samples);
+    assert_eq!(arena.tpot_samples, map.tpot_samples);
+    assert_eq!(arena.e2e_samples, map.e2e_samples);
+    assert_eq!(arena.transfer_bytes, map.transfer_bytes);
+    assert_eq!(arena.energy_joules, map.energy_joules);
+    assert_eq!(arena.goodput_frac, map.goodput_frac);
+}
+
+#[test]
+fn residency_index_matches_client_fields_after_every_event() {
+    let mut coord = mixed_spec().build().unwrap();
+    coord.inject(mixed_workload(60).generate());
+    let mut events = 0u64;
+    while coord.step_event() {
+        events += 1;
+        // validates both the resident index and the incremental loads;
+        // explicit here so release-mode test runs are covered too
+        coord.assert_load_invariant();
+    }
+    assert!(events > 0);
+    assert!(coord.all_serviced(), "serviced {}", coord.serviced.len());
+    // drained: nothing is resident on any client any more
+    let ops = coord.pool.ops();
+    assert_eq!(ops.resident, 0, "requests left resident after drain");
+    assert!(ops.peak_resident > 0);
+    assert_eq!(ops.len, 60);
+}
+
+#[test]
+fn pool_op_counters_track_the_event_loop() {
+    let mut coord = mixed_spec().build().unwrap();
+    coord.inject(mixed_workload(20).generate());
+    coord.pool.reset_ops();
+    assert_eq!(coord.pool.ops().reads, 0);
+    coord.run();
+    let ops = coord.pool.ops();
+    assert!(ops.reads > 0, "event loop must read the pool");
+    assert!(ops.writes > 0, "event loop must write the pool");
+    assert!(ops.slots >= ops.len);
+}

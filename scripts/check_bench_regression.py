@@ -1,0 +1,108 @@
+#!/usr/bin/env python3
+"""Warn-only events/s diff between a fresh bench run and the committed
+baseline (docs/performance.md).
+
+Usage:
+    python3 scripts/check_bench_regression.py FRESH.json [BASELINE.json]
+
+The baseline must come from runs at the SAME scale as the fresh
+document: CI diffs its --fast smoke (BENCH_smoke.json) against the
+committed fast-scale baseline BENCH_ci_fast.json (produced once in a
+toolchain env via `hermes bench bench_llm_50k --fast --baseline on
+--out BENCH_ci_fast.json`); the full-scale BENCH_core.json trajectory
+is for humans and would be skipped row-by-row here as a scale
+mismatch.
+
+Compares the `incremental.events_per_s` of every scenario present in
+both documents *at the same scale* (rows whose `n_requests` differ —
+e.g. a --fast smoke vs a committed full-scale run — are skipped, since
+that ratio measures scale, not regression) and prints a WARNING when
+the fresh run falls below THRESHOLD x baseline. Always exits 0: CI runners differ wildly in
+per-core speed, so this is a tripwire for humans reading the log, not a
+gate. (A missing baseline — e.g. before the first release-mode
+`hermes bench` run is committed — is reported and tolerated.)
+"""
+
+import json
+import sys
+
+# fresh events/s below 60% of the committed baseline triggers a warning;
+# generous because CI hardware is heterogeneous and the committed
+# baseline comes from a release-mode run on a developer machine
+THRESHOLD = 0.60
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return None
+    except json.JSONDecodeError as e:
+        print(f"bench-diff: cannot parse {path}: {e}")
+        return None
+
+
+def rows_by_name(doc):
+    if not isinstance(doc, list):
+        return {}
+    out = {}
+    for row in doc:
+        name = row.get("name")
+        inc = row.get("incremental", {})
+        eps = inc.get("events_per_s")
+        if name and isinstance(eps, (int, float)):
+            out[name] = (eps, inc.get("n_requests"))
+    return out
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__)
+        return 0
+    fresh_path = argv[1]
+    base_path = argv[2] if len(argv) > 2 else "BENCH_ci_fast.json"
+
+    fresh = rows_by_name(load(fresh_path) or [])
+    base_doc = load(base_path)
+    if base_doc is None:
+        print(
+            f"bench-diff: no committed baseline at {base_path} — nothing to "
+            "compare (commit one from a release-mode `hermes bench` run)"
+        )
+        return 0
+    base = rows_by_name(base_doc)
+
+    if not fresh:
+        print(f"bench-diff: no comparable rows in {fresh_path}")
+        return 0
+
+    warned = False
+    for name, (eps, n) in sorted(fresh.items()):
+        ref_entry = base.get(name)
+        if ref_entry is None or ref_entry[0] <= 0:
+            print(f"bench-diff: {name}: no baseline entry — skipped")
+            continue
+        ref, ref_n = ref_entry
+        if n != ref_n:
+            # a fast-scale smoke vs a full-scale committed run measures
+            # scale, not regression — only same-sized runs are comparable
+            print(
+                f"bench-diff: {name}: scale mismatch ({n} vs baseline "
+                f"{ref_n} requests) — skipped"
+            )
+            continue
+        ratio = eps / ref
+        line = f"bench-diff: {name}: {eps:,.0f} events/s vs baseline {ref:,.0f} ({ratio:.2f}x)"
+        if ratio < THRESHOLD:
+            print(f"WARNING {line} — below the {THRESHOLD:.0%} warn threshold")
+            warned = True
+        else:
+            print(line)
+    if warned:
+        print("bench-diff: WARN-ONLY — not failing the build (see docs/performance.md)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
