@@ -69,7 +69,7 @@ impl Client for KvRetrievalClient {
         self.group
     }
 
-    fn can_serve(&self, stage: &Stage, _model: &str) -> bool {
+    fn can_serve(&self, stage: &Stage, _model: crate::model::ModelId) -> bool {
         matches!(stage, Stage::KvRetrieval(_))
     }
 

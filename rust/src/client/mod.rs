@@ -8,6 +8,7 @@ pub mod llm;
 pub mod prepost;
 pub mod rag;
 
+use crate::model::ModelId;
 use crate::scheduler::RequestPool;
 use crate::sim::SimTime;
 use crate::workload::request::{ReqId, Request, Stage};
@@ -87,8 +88,9 @@ pub trait Client {
 
     fn kind_name(&self) -> &'static str;
 
-    /// Can this client execute `stage` for `model`?
-    fn can_serve(&self, stage: &Stage, model: &str) -> bool;
+    /// Can this client execute `stage` for `model`? `ModelId` equality
+    /// is an integer compare — this sits on the routing hot path.
+    fn can_serve(&self, stage: &Stage, model: ModelId) -> bool;
 
     /// Physical placement group (local-disaggregation locality).
     fn group(&self) -> usize {
@@ -133,6 +135,43 @@ pub trait Client {
     /// Must equal [`Client::recompute_load`] exactly.
     fn full_scan_load(&self, pool: &RequestPool) -> ClientLoad {
         self.recompute_load(pool)
+    }
+
+    // ---- per-model load (multi-model clients) -----------------------------
+    //
+    // The router ranks candidates by the load *for the request's model*:
+    // on a co-resident client, a drained small-model lane must look idle
+    // even while the big-model lane is saturated. Single-model clients
+    // keep the default — their aggregate IS the per-model load — so the
+    // degenerate path stays bit-identical to the pre-multi-model router.
+
+    /// O(1) read of the per-(client, model) counters. Default: the
+    /// aggregate [`Client::load`] (exact for single-model clients).
+    fn load_for_model(&self, model: ModelId) -> ClientLoad {
+        let _ = model;
+        self.load()
+    }
+
+    /// Per-model ground truth from the resident index — the per-model
+    /// drift invariant compares this against [`Client::load_for_model`]
+    /// after every event (debug builds).
+    fn recompute_load_for_model(&self, model: ModelId, pool: &RequestPool) -> ClientLoad {
+        let _ = model;
+        self.recompute_load(pool)
+    }
+
+    /// Per-model whole-pool scan, mirroring [`Client::full_scan_load`]
+    /// for the `LoadMode::FullScan` bench baseline — routing decisions
+    /// must be identical across load modes, multi-model included.
+    fn full_scan_load_for_model(&self, model: ModelId, pool: &RequestPool) -> ClientLoad {
+        let _ = model;
+        self.full_scan_load(pool)
+    }
+
+    /// Models this client hosts (empty for model-agnostic clients).
+    /// Drives the per-model half of the coordinator's load invariant.
+    fn served_models(&self) -> &[ModelId] {
+        &[]
     }
 
     /// Busy-time and energy accounting (joules, busy-seconds, steps).

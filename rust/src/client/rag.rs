@@ -54,7 +54,7 @@ impl Client for RagClient {
         self.group
     }
 
-    fn can_serve(&self, stage: &Stage, _model: &str) -> bool {
+    fn can_serve(&self, stage: &Stage, _model: crate::model::ModelId) -> bool {
         matches!(stage, Stage::Rag(_))
     }
 
@@ -203,9 +203,12 @@ mod tests {
     #[test]
     fn serves_only_rag_stage() {
         let c = client();
-        assert!(c.can_serve(&Stage::Rag(RagParams::default()), "any-model"));
-        assert!(!c.can_serve(&Stage::Prefill, "llama3-70b"));
-        assert!(!c.can_serve(&Stage::Postprocess, "llama3-70b"));
+        // RAG clients are model-agnostic: any model's requests retrieve
+        let any = crate::model::ModelId::named("mistral-7b");
+        let m70 = crate::model::ModelId::named("llama3-70b");
+        assert!(c.can_serve(&Stage::Rag(RagParams::default()), any));
+        assert!(!c.can_serve(&Stage::Prefill, m70));
+        assert!(!c.can_serve(&Stage::Postprocess, m70));
     }
 
     #[test]

@@ -30,8 +30,10 @@ pub mod slo;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{LoadMetric, RoutePolicy};
-use crate::hardware::models;
+use crate::hardware::models::{self, ModelSpec};
 use crate::memory::storage::{KvScenario, StorageConfig};
+use crate::model::ModelId;
+use crate::model::policy::ModelPolicy;
 use crate::network::Granularity;
 use crate::scheduler::{BatchingKind, Packing, SchedConfig};
 use crate::sim::builder::{
@@ -65,7 +67,7 @@ impl SimConfig {
         let serving = parse_serving(doc, pool)?;
 
         let workload = parse_workload(
-            serving.model,
+            ModelId::lookup(serving.model)?,
             doc.get("workload").context("config needs 'workload'")?,
             serving.seed,
         )?;
@@ -86,15 +88,68 @@ impl SimConfig {
 /// scenario files derive it from a batching roster rather than a single
 /// `pool` object.
 pub fn parse_serving(doc: &Json, pool: PoolSpec) -> Result<ServingSpec> {
-    let model_name = doc.str_or("model", "llama3-70b").to_string();
-    let model_spec =
-        models::model(&model_name).with_context(|| format!("unknown model {model_name}"))?;
+    // register catalog models first so 'model'/'models'/'model_policy'
+    // can reference them
+    if let Some(cat) = doc.get("model_catalog") {
+        parse_model_catalog(cat)?;
+    }
+
+    // co-resident model list: 'models' hosts every entry on every LLM
+    // client; the primary is 'model' when present, else models[0]
+    let mut co_models = Vec::new();
+    if let Some(ms) = doc.get("models") {
+        let arr = ms
+            .as_arr()
+            .context("'models' must be an array of model names")?;
+        for (i, v) in arr.iter().enumerate() {
+            let name = v
+                .as_str()
+                .with_context(|| format!("'models[{i}]' must be a string"))?;
+            let id = ModelId::lookup(name)?;
+            if !co_models.contains(&id) {
+                co_models.push(id);
+            }
+        }
+        if co_models.is_empty() {
+            bail!("'models' must not be empty");
+        }
+    }
+    let model_name = match doc.get("model").and_then(Json::as_str) {
+        Some(m) => m.to_string(),
+        None => match co_models.first() {
+            Some(id) => id.name().to_string(),
+            None => "llama3-70b".to_string(),
+        },
+    };
+    let model_spec = models::lookup(&model_name)?;
     let model: &'static str = model_spec.name;
     let npu = npu_by_name(doc.str_or("npu", "h100"))?;
     let tp = doc.usize_or("tp", 8);
 
     let llm_clients = pool.n_clients();
     let mut serving = ServingSpec::new(model, npu, tp, pool);
+    serving.co_models = co_models;
+
+    if let Some(p) = doc.get("model_policy") {
+        let s = p.as_str().context("'model_policy' must be a string")?;
+        let policy = ModelPolicy::parse(s)?;
+        // dangling reference check: every policy model must be hosted
+        let primary = ModelId::lookup(serving.model)?;
+        for m in policy.models() {
+            if m != primary && !serving.co_models.contains(&m) {
+                bail!(
+                    "model_policy references '{m}' but the clients host only \
+                     [{}] (add it to 'models')",
+                    std::iter::once(primary)
+                        .chain(serving.co_models.iter().copied())
+                        .map(|m| m.name())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+            }
+        }
+        serving.model_policy = Some(policy);
+    }
 
     if let Some(s) = doc.get("scheduler") {
         serving.sched = SchedConfig {
@@ -223,6 +278,49 @@ pub fn parse_pool(j: &Json) -> Result<PoolSpec> {
     })
 }
 
+/// Register every architecture in a `model_catalog` array with the
+/// interning registry, so scenario files can serve models beyond the
+/// hardcoded roster. Entries: `{"name", "params", "layers", "hidden",
+/// "heads", ["kv_heads"], ["d_head"], ["bytes_per_param"], ["decoder"]}`.
+/// Registration is idempotent (re-parsing a scenario is free); renaming
+/// an existing model's parameters is an error.
+pub fn parse_model_catalog(j: &Json) -> Result<()> {
+    let arr = j.as_arr().context("'model_catalog' must be an array")?;
+    for (i, e) in arr.iter().enumerate() {
+        let name = e
+            .get("name")
+            .and_then(Json::as_str)
+            .with_context(|| format!("model_catalog[{i}] needs a 'name'"))?;
+        let req_f64 = |key: &str| -> Result<f64> {
+            e.get(key)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("model_catalog[{i}] ('{name}') needs numeric '{key}'"))
+        };
+        let heads = req_f64("heads")? as usize;
+        let hidden = req_f64("hidden")? as usize;
+        if heads == 0 || hidden == 0 {
+            bail!("model_catalog[{i}] ('{name}'): heads/hidden must be positive");
+        }
+        // leak the name only for genuinely new registrations: re-parses
+        // of an already-registered model reuse its interned name (the
+        // registry hands out &'static specs, so names must be 'static)
+        let interned = ModelId::resolve(name).map(|id| id.spec().name);
+        let spec = ModelSpec {
+            name: interned.unwrap_or_else(|| Box::leak(name.to_string().into_boxed_str())),
+            params: req_f64("params")?,
+            layers: req_f64("layers")? as usize,
+            hidden,
+            heads,
+            kv_heads: e.usize_or("kv_heads", heads),
+            d_head: e.usize_or("d_head", hidden / heads),
+            bytes_per_param: e.f64_or("bytes_per_param", 1.0),
+            decoder: e.bool_or("decoder", true),
+        };
+        ModelId::register(spec).with_context(|| format!("model_catalog[{i}]"))?;
+    }
+    Ok(())
+}
+
 /// Parse a combined-client batching kind from its string form:
 /// `static`, `continuous`, `mixed`, `chunked` or `chunked:<budget>`,
 /// `prefill-only`, `decode-only`.
@@ -336,7 +434,7 @@ pub fn parse_slo(name: &str, pipeline: &Pipeline) -> Result<SloLadder> {
 
 /// Parse one workload class: trace family, arrival process, pipeline
 /// shape and reasoning mode.
-pub fn parse_workload(model: &'static str, j: &Json, seed: u64) -> Result<WorkloadSpec> {
+pub fn parse_workload(model: ModelId, j: &Json, seed: u64) -> Result<WorkloadSpec> {
     let trace = match j.str_or("trace", "azure-conv") {
         "azure-conv" => TraceKind::AzureConv,
         "azure-code" => TraceKind::AzureCode,
@@ -377,6 +475,8 @@ pub fn parse_workload(model: &'static str, j: &Json, seed: u64) -> Result<Worklo
         "kv-retrieval" => Pipeline::KvRetrieval(KvParams {
             cached_tokens: j.usize_or("cached_tokens", 3000),
         }),
+        "routed" => Pipeline::Routed,
+        "cascade" => Pipeline::Cascade,
         other => bail!("unknown pipeline '{other}'"),
     };
     let reasoning = match j.str_or("reasoning", "none") {
@@ -528,6 +628,82 @@ mod tests {
                 SimConfig::from_json(&Json::parse(bad).unwrap()).is_err(),
                 "{field} should fail"
             );
+        }
+    }
+
+    #[test]
+    fn multi_model_keys_parse_and_validate() {
+        let doc = Json::parse(
+            r#"{"model": "llama3-70b", "models": ["llama3-70b", "llama3-8b"],
+                "model_policy": "cascade:llama3-8b->llama3-70b:0.2",
+                "pool": {"batching": "continuous", "n": 2},
+                "workload": {"n": 10, "pipeline": "cascade"}}"#,
+        )
+        .unwrap();
+        let cfg = SimConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.serving.model, "llama3-70b");
+        assert!(cfg.serving.co_models.contains(&ModelId::named("llama3-8b")));
+        assert!(matches!(
+            cfg.serving.model_policy,
+            Some(ModelPolicy::Cascade { .. })
+        ));
+        assert_eq!(
+            cfg.workload.pipeline,
+            crate::workload::trace::Pipeline::Cascade
+        );
+
+        // 'models' without 'model': the first entry is the primary
+        let doc = Json::parse(
+            r#"{"models": ["llama3-8b", "llama3-70b"],
+                "pool": {"batching": "continuous", "n": 1},
+                "workload": {"n": 5, "pipeline": "routed"}}"#,
+        )
+        .unwrap();
+        let cfg = SimConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.serving.model, "llama3.1-8b", "canonical primary");
+
+        // a policy naming an un-hosted model is a dangling reference
+        let doc = Json::parse(
+            r#"{"model": "llama3-70b",
+                "model_policy": "cascade:llama3-8b->llama3-70b:0.2",
+                "pool": {"batching": "continuous", "n": 1},
+                "workload": {"n": 5}}"#,
+        )
+        .unwrap();
+        let err = SimConfig::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("model_policy references"), "{err}");
+    }
+
+    #[test]
+    fn model_catalog_registers_and_serves() {
+        let doc = Json::parse(
+            r#"{"model_catalog": [
+                    {"name": "cfgtest-30b", "params": 30e9, "layers": 48,
+                     "hidden": 6144, "heads": 48, "kv_heads": 8}
+                ],
+                "model": "cfgtest-30b",
+                "pool": {"batching": "continuous", "n": 1},
+                "perf_model": "roofline",
+                "workload": {"trace": "azure-conv", "n": 6, "rate": 2.0}}"#,
+        )
+        .unwrap();
+        let cfg = SimConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.serving.model, "cfgtest-30b");
+        let spec = ModelId::named("cfgtest-30b").spec();
+        assert_eq!(spec.layers, 48);
+        assert_eq!(spec.kv_heads, 8);
+        assert_eq!(spec.d_head, 6144 / 48, "defaulted from hidden/heads");
+        // the registered model actually serves traffic
+        let mut coord = cfg.serving.build().unwrap();
+        coord.inject(cfg.workload.generate(0));
+        coord.run();
+        assert!(coord.all_serviced());
+        // malformed entries fail fast
+        for bad in [
+            r#"[{"params": 1e9, "layers": 2, "hidden": 64, "heads": 4}]"#,
+            r#"[{"name": "x-1b", "layers": 2, "hidden": 64, "heads": 4}]"#,
+        ] {
+            assert!(parse_model_catalog(&Json::parse(bad).unwrap()).is_err(), "{bad}");
         }
     }
 

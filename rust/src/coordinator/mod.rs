@@ -8,7 +8,7 @@ pub mod event;
 pub mod router;
 
 use crate::client::{Client, StepOutcome};
-use crate::hardware;
+use crate::model::policy::{ModelPolicy, RouteDecision};
 use crate::network::{Granularity, Network};
 use crate::scheduler::RequestPool;
 use crate::sim::SimTime;
@@ -67,6 +67,11 @@ pub struct Coordinator {
     pub local_disagg: bool,
     /// incremental (default) vs full-scan candidate loads
     pub load_mode: LoadMode,
+    /// dynamic model-selection policy behind `Stage::ModelRoute`
+    /// (None = identity: routed pipelines keep their initial model)
+    pub model_policy: Option<ModelPolicy>,
+    /// seed for the policy's deterministic per-request decision streams
+    pub model_seed: u64,
     pub stats: CoordStats,
     /// hard stop against runaway simulations
     pub max_events: u64,
@@ -94,6 +99,8 @@ impl Coordinator {
             granularity: Granularity::Layerwise { layers: 80 },
             local_disagg: false,
             load_mode: LoadMode::Incremental,
+            model_policy: None,
+            model_seed: 0,
             stats: CoordStats::default(),
             max_events: 500_000_000,
             route_buf: Vec::new(),
@@ -174,6 +181,26 @@ impl Coordinator {
                 c.kind_name(),
                 self.clock
             );
+            // per-(client, model) counters: the router's candidate loads
+            // must match a fresh per-model recomputation and the
+            // per-model whole-pool scan (multi-model clients)
+            for &m in c.served_models() {
+                let inc = c.load_for_model(m);
+                assert_eq!(
+                    inc,
+                    c.recompute_load_for_model(m, &self.pool),
+                    "client {} model {m} load drifted at {}: incremental vs recomputed",
+                    c.id(),
+                    self.clock
+                );
+                assert_eq!(
+                    inc,
+                    c.full_scan_load_for_model(m, &self.pool),
+                    "client {} model {m} load drifted at {}: incremental vs full scan",
+                    c.id(),
+                    self.clock
+                );
+            }
         }
     }
 
@@ -183,9 +210,9 @@ impl Coordinator {
     /// which `advance_stage()` side effects (RAG context folding) are
     /// applied.
     fn transfer_bytes(req: &Request, from: Option<Stage>) -> f64 {
-        let kv_per_tok = hardware::model(req.model)
-            .map(|m| m.kv_bytes_per_token())
-            .unwrap_or(0.0);
+        // O(1) registry index — the old per-transfer name lookup+clone
+        // is gone with the interned ModelId
+        let kv_per_tok = req.model.spec().kv_bytes_per_token();
         match from {
             // disaggregated hand-off: the prefix KV moves
             Some(Stage::Prefill) => (req.past_tokens + req.prompt_tokens) as f64 * kv_per_tok,
@@ -212,6 +239,11 @@ impl Coordinator {
                 // fresh arrival: route (ingress pays no inter-client link)
                 self.stats.inflight += 1;
                 self.stats.peak_inflight = self.stats.peak_inflight.max(self.stats.inflight);
+                // dynamic model selection happens before any client sees
+                // the request (a leading ModelRoute stage, if present)
+                if self.resolve_model_route(req) {
+                    return;
+                }
                 if let Some(c) = self.route(req, None, 0.0) {
                     self.pool.get_mut(&req).unwrap().stage_accept = self.clock;
                     self.clients[c].accept(self.clock, req, &mut self.pool);
@@ -256,10 +288,13 @@ impl Coordinator {
             (!more, bytes)
         };
         if done {
-            let r = self.pool.get_mut(&id).unwrap();
-            r.finished = Some(self.clock);
-            self.serviced.push(id);
-            self.stats.inflight -= 1;
+            self.complete(id);
+            return;
+        }
+        // consume any ModelRoute stage reached here: the cascade's
+        // escalation point (finish with the small model's answer, or
+        // re-run prefill+decode on the large one)
+        if self.resolve_model_route(id) {
             return;
         }
         match self.route(id, Some(src), bytes) {
@@ -274,6 +309,77 @@ impl Coordinator {
                     .push(arrive, Event::RequestPush { req: id, dst: Some(dst) });
             }
             None => self.fail(id),
+        }
+    }
+
+    /// The request completed its final stage (or a model policy ended
+    /// its pipeline early): stamp it and retire it from flight.
+    fn complete(&mut self, id: ReqId) {
+        let r = self.pool.get_mut(&id).unwrap();
+        r.finished = Some(self.clock);
+        self.serviced.push(id);
+        self.stats.inflight -= 1;
+    }
+
+    /// Consume `ModelRoute` stages at the request's current position.
+    /// Resolution is inline and free: the stage never routes to a
+    /// client, adds no events and records no stage span. With no
+    /// configured policy the stage is the identity (the request keeps
+    /// its initial model), so routed pipelines degrade gracefully to
+    /// their plain equivalents. A later route that re-assigns a
+    /// *different* model is an escalation: prefill/decode progress is
+    /// reset and the following stages re-run on the new model. TTFT
+    /// keeps the first pass's first-token timestamp (the user already
+    /// saw the small model's answer begin — `first_response_time`);
+    /// TPOT measures only the pass that produced the final answer (the
+    /// per-pass token timestamps reset); and the superseded pass's
+    /// tokens move to `prior_decoded`, so throughput/energy still
+    /// count the work performed. Returns true when the request
+    /// finished here.
+    fn resolve_model_route(&mut self, id: ReqId) -> bool {
+        loop {
+            let policy = &self.model_policy;
+            let r = self.pool.get_mut(&id).unwrap();
+            if r.stage() != Stage::ModelRoute {
+                return false;
+            }
+            let ordinal = r.model_route_ordinal();
+            let decision = match policy {
+                Some(p) => p.decide(r, ordinal, self.model_seed),
+                None => RouteDecision::Assign(r.model),
+            };
+            match decision {
+                RouteDecision::Finish => {
+                    self.complete(id);
+                    return true;
+                }
+                RouteDecision::Assign(m) => {
+                    if ordinal > 0 {
+                        if m == r.model {
+                            // re-assigning the same model is a no-op
+                            // escalation: the pipeline ends here
+                            self.complete(id);
+                            return true;
+                        }
+                        // escalation: bank the superseded pass's work
+                        // and restart progress + per-pass latency marks
+                        r.prior_decoded += r.decoded * r.branches;
+                        if r.first_response_time.is_none() {
+                            r.first_response_time = r.first_token_time;
+                        }
+                        r.first_token_time = None;
+                        r.last_token_time = None;
+                        r.prefilled = 0;
+                        r.decoded = 0;
+                    }
+                    r.model = m;
+                    if !r.advance_stage() {
+                        // a trailing ModelRoute (no stages after it)
+                        self.complete(id);
+                        return true;
+                    }
+                }
+            }
         }
     }
 
@@ -301,9 +407,13 @@ impl Coordinator {
             let transfer_cost = src
                 .map(|s| self.network.estimate(s, c.id(), bytes, self.granularity))
                 .unwrap_or(0.0);
+            // candidate load *for this request's model*: on a
+            // co-resident client a drained lane looks idle even while
+            // another model's lane is saturated (single-model clients:
+            // identical to the aggregate load)
             let load = match self.load_mode {
-                LoadMode::Incremental => c.load(),
-                LoadMode::FullScan => c.full_scan_load(&self.pool),
+                LoadMode::Incremental => c.load_for_model(r.model),
+                LoadMode::FullScan => c.full_scan_load_for_model(r.model, &self.pool),
             };
             self.route_buf.push(Candidate {
                 client: c.id(),
@@ -509,11 +619,150 @@ mod tests {
         // router still places it; the scheduler simply never admits it.
         // Instead test the un-servable stage: wrong model.
         let mut reqs = workload(1, 1.0);
-        reqs[0].model = "mistral-7b";
+        reqs[0].model = "mistral-7b".into();
         coord.inject(reqs);
         coord.run();
         assert_eq!(coord.failed.len(), 1);
         assert!(coord.all_serviced());
+    }
+
+    #[test]
+    fn routed_pipeline_without_policy_keeps_model() {
+        // a ModelRoute stage with no policy is the identity: same
+        // serviced set, no client ever sees the stage
+        let clients = vec![llm_client(0, BatchingKind::Continuous)];
+        let mut coord = Coordinator::new(
+            clients,
+            Router::new(RoutePolicy::RoundRobin),
+            Network::single_platform(1),
+        );
+        let reqs = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 10, 4.0)
+            .with_seed(13)
+            .with_pipeline(crate::workload::trace::Pipeline::Routed)
+            .generate(0);
+        coord.inject(reqs);
+        coord.run();
+        assert!(coord.all_serviced());
+        assert_eq!(coord.serviced.len(), 10);
+        for id in &coord.serviced {
+            assert_eq!(coord.pool[id].model, crate::model::ModelId::named("llama3-70b"));
+            assert!(coord.pool[id].decode_complete());
+        }
+    }
+
+    #[test]
+    fn cascade_escalation_reruns_on_large_model() {
+        use crate::model::ModelId;
+        use crate::model::policy::ModelPolicy;
+
+        // two single-model pools: one 8B client, one 70B client; the
+        // cascade sends everything through 8B and escalates a fraction
+        let mk = |id: usize, spec: crate::hardware::ModelSpec| -> Box<dyn Client> {
+            let cluster = LlmCluster::new(spec, H100, 8);
+            Box::new(LlmClient::new(
+                id,
+                cluster.clone(),
+                LlmSched::new(BatchingKind::Continuous, Packing::Fcfs, SchedConfig::default()),
+                Box::new(RooflinePerfModel::new(cluster)),
+            ))
+        };
+        let clients = vec![
+            mk(0, crate::hardware::models::LLAMA3_8B),
+            mk(1, LLAMA3_70B),
+        ];
+        let mut coord = Coordinator::new(
+            clients,
+            Router::new(RoutePolicy::LoadBased(LoadMetric::TokensLeft)),
+            Network::single_platform(2),
+        );
+        let small = ModelId::named("llama3-8b");
+        let large = ModelId::named("llama3-70b");
+        coord.model_policy = Some(ModelPolicy::Cascade { small, large, escalate: 0.5 });
+        coord.model_seed = 17;
+        let n = 30;
+        let reqs = WorkloadSpec::new("llama3-8b", TraceKind::AzureConv, n, 4.0)
+            .with_seed(19)
+            .with_pipeline(crate::workload::trace::Pipeline::Cascade)
+            .generate(0);
+        coord.inject(reqs);
+        coord.run();
+        assert!(coord.all_serviced(), "serviced {}", coord.serviced.len());
+        assert_eq!(coord.serviced.len(), n);
+        let escalated = coord
+            .serviced
+            .iter()
+            .filter(|id| coord.pool[*id].model == large)
+            .count();
+        assert!(
+            escalated > 0 && escalated < n,
+            "escalation fraction 0.5 must split the population, got {escalated}/{n}"
+        );
+        // both pools did real work
+        assert!(coord.clients[0].stats().decode_tokens > 0, "small model decodes");
+        assert!(coord.clients[1].stats().decode_tokens > 0, "large model decodes");
+        // escalated requests re-ran: their decode completed on the large
+        // model and the finish stamp is after the first token
+        for id in &coord.serviced {
+            let r = &coord.pool[id];
+            assert!(r.decode_complete());
+            assert!(r.finished.unwrap() >= r.first_token_time.unwrap());
+            if r.model == large {
+                // the superseded small-model pass is banked for
+                // throughput, TTFT is frozen at its first token, and
+                // TPOT spans only the final pass
+                assert!(r.prior_decoded > 0, "escalation banks draft tokens");
+                let first_seen = r.first_response_time.expect("frozen TTFT mark");
+                assert!(first_seen <= r.first_token_time.unwrap());
+                assert_eq!(r.ttft().unwrap(), (first_seen - r.arrival).as_secs());
+                assert_eq!(
+                    r.generated_tokens(),
+                    r.prior_decoded + r.decoded * r.branches
+                );
+            } else {
+                assert_eq!(r.prior_decoded, 0);
+                assert!(r.first_response_time.is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn static_policy_splits_traffic_across_model_pools() {
+        use crate::model::ModelId;
+        use crate::model::policy::ModelPolicy;
+
+        let mk = |id: usize, spec: crate::hardware::ModelSpec| -> Box<dyn Client> {
+            let cluster = LlmCluster::new(spec, H100, 8);
+            Box::new(LlmClient::new(
+                id,
+                cluster.clone(),
+                LlmSched::new(BatchingKind::Continuous, Packing::Fcfs, SchedConfig::default()),
+                Box::new(RooflinePerfModel::new(cluster)),
+            ))
+        };
+        let clients = vec![
+            mk(0, crate::hardware::models::LLAMA3_8B),
+            mk(1, LLAMA3_70B),
+        ];
+        let mut coord = Coordinator::new(
+            clients,
+            Router::new(RoutePolicy::LoadBased(LoadMetric::TokensLeft)),
+            Network::single_platform(2),
+        );
+        coord.model_policy = Some(ModelPolicy::Static {
+            choices: vec![
+                (ModelId::named("llama3-8b"), 0.5),
+                (ModelId::named("llama3-70b"), 0.5),
+            ],
+        });
+        let reqs = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 40, 4.0)
+            .with_seed(23)
+            .with_pipeline(crate::workload::trace::Pipeline::Routed)
+            .generate(0);
+        coord.inject(reqs);
+        coord.run();
+        assert!(coord.all_serviced());
+        assert!(coord.clients[0].stats().requests_served > 0);
+        assert!(coord.clients[1].stats().requests_served > 0);
     }
 
     #[test]

@@ -14,6 +14,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig8;
 pub mod fig9;
+pub mod multimodel;
 pub mod table3;
 
 use anyhow::{bail, Result};
@@ -67,6 +68,10 @@ pub fn run_by_name(name: &str, fast: bool) -> Result<()> {
             banner("Ablations — routing / granularity / packing design choices");
             ablations::run(fast)?;
         }
+        "multimodel" => {
+            banner("Multi-model case study — cascade escalation vs static routing");
+            multimodel::run(fast)?;
+        }
         "all" => {
             for n in [
                 "fig5", "fig6", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig15",
@@ -75,7 +80,7 @@ pub fn run_by_name(name: &str, fast: bool) -> Result<()> {
                 run_by_name(n, fast)?;
             }
         }
-        other => bail!("unknown experiment '{other}' (fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|ablations|all)"),
+        other => bail!("unknown experiment '{other}' (fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|ablations|multimodel|all)"),
     }
     Ok(())
 }

@@ -1,0 +1,162 @@
+//! Multi-model cascade case study (`hermes experiment multimodel`).
+//!
+//! Sweeps the cascade escalation fraction on `scenarios/multi_model.json`
+//! — co-resident small + large models on every LLM client — and compares
+//! against big-model-only static routing. The expected trade-off (the
+//! reason serving stacks deploy cascades): small-model-first wins TTFT
+//! and tokens/joule across the board; escalations pay a second
+//! prefill+decode, so E2E tail latency and total energy grow with the
+//! escalation fraction until, at fraction 1.0, the cascade is strictly
+//! worse than sending everything to the big model directly.
+
+use anyhow::{Context, Result};
+
+use crate::config::slo::SloLadder;
+use crate::metrics::RunMetrics;
+use crate::model::ModelId;
+use crate::model::policy::ModelPolicy;
+use crate::scenario::Scenario;
+use crate::sim::driver;
+use crate::util::bench::Table;
+use crate::workload::trace::WorkloadMix;
+
+/// One policy point of the sweep.
+#[derive(Debug, Clone)]
+pub struct CascadeRow {
+    pub label: String,
+    /// escalation fraction (cascade rows; NaN for the static reference)
+    pub escalate: f64,
+    pub metrics: RunMetrics,
+}
+
+fn run_policy(
+    sc: &Scenario,
+    clients: usize,
+    mix: &WorkloadMix,
+    slo: &SloLadder,
+    rate: f64,
+    policy: ModelPolicy,
+) -> Result<RunMetrics> {
+    let mut spec = sc.serving(&sc.roster[0], clients)?;
+    spec.model_policy = Some(policy);
+    let points = driver::sweep_rates_mix(&spec, mix, slo, &[rate])?;
+    Ok(points.into_iter().next().expect("one swept rate").metrics)
+}
+
+pub fn run(fast: bool) -> Result<Vec<CascadeRow>> {
+    let sc = Scenario::load("multi_model")?;
+    let scale = sc.scale(fast).clone();
+    let ex = sc.extras();
+    let small = ModelId::lookup(ex.str_or("cascade_small", "llama3-8b"))?;
+    let large = ModelId::lookup(ex.str_or("cascade_large", "llama3-70b"))?;
+    let fracs = sc.extra_f64_list("escalation_fracs")?;
+    let rate = *scale.rates.first().context("multi_model needs a rate")?;
+    let n = scale.clients * scale.requests_per_client;
+    let mix = sc.workload(None, n)?;
+    let slo = sc.slo(None, &mix)?;
+
+    let mut rows = Vec::new();
+    for &f in &fracs {
+        let m = run_policy(
+            &sc,
+            scale.clients,
+            &mix,
+            &slo,
+            rate,
+            ModelPolicy::Cascade { small, large, escalate: f },
+        )?;
+        rows.push(CascadeRow {
+            label: format!("cascade f={f:.2}"),
+            escalate: f,
+            metrics: m,
+        });
+    }
+    // reference: every request straight to the big model (the cascade
+    // pipeline's second route stage finishes under a static policy)
+    let m = run_policy(
+        &sc,
+        scale.clients,
+        &mix,
+        &slo,
+        rate,
+        ModelPolicy::Static { choices: vec![(large, 1.0)] },
+    )?;
+    rows.push(CascadeRow {
+        label: format!("static {}-only", large.name()),
+        escalate: f64::NAN,
+        metrics: m,
+    });
+
+    let mut t = Table::new(&[
+        "policy",
+        "ttft_p50(ms)",
+        "ttft_p99(ms)",
+        "e2e_p50(s)",
+        "e2e_p99(s)",
+        "tok/s",
+        "goodput%",
+        "tok/J",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.label.clone(),
+            format!("{:.1}", r.metrics.ttft.p50 * 1e3),
+            format!("{:.1}", r.metrics.ttft.p99 * 1e3),
+            format!("{:.2}", r.metrics.e2e.p50),
+            format!("{:.2}", r.metrics.e2e.p99),
+            format!("{:.0}", r.metrics.throughput_tok_s),
+            format!("{:.0}", r.metrics.goodput_frac * 100.0),
+            format!("{:.2}", r.metrics.tok_per_joule),
+        ]);
+    }
+    t.print();
+    println!(
+        "small-first cascade: TTFT comes from {} for every request; an escalated \
+         request re-runs prefill+decode on {}, trading E2E tail latency and energy \
+         for answer quality",
+        small.name(),
+        large.name()
+    );
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cascade_tradeoff_holds_at_fast_scale() {
+        if std::env::var("HERMES_FULL").is_ok() {
+            return; // keep this a smoke test
+        }
+        let rows = run(true).unwrap();
+        assert!(rows.len() >= 3, "sweep + static reference");
+        for r in &rows {
+            assert_eq!(
+                r.metrics.n_serviced, r.metrics.n_requests,
+                "{}: all requests serviced",
+                r.label
+            );
+        }
+        let cascade0 = rows
+            .iter()
+            .find(|r| r.escalate == 0.0)
+            .expect("fraction 0.0 in the sweep");
+        let big_only = rows.last().expect("static reference last");
+        // the latency/goodput trade-off: small-model-first beats
+        // big-only on median TTFT ...
+        assert!(
+            cascade0.metrics.ttft.p50 < big_only.metrics.ttft.p50,
+            "small-first TTFT {} must beat big-only {}",
+            cascade0.metrics.ttft.p50,
+            big_only.metrics.ttft.p50
+        );
+        // ... while full escalation does strictly more work than either
+        if let Some(cascade1) = rows.iter().find(|r| r.escalate == 1.0) {
+            assert!(
+                cascade1.metrics.e2e.p50 > cascade0.metrics.e2e.p50,
+                "always-escalate must pay a higher median E2E than never-escalate"
+            );
+        }
+    }
+}

@@ -6,6 +6,6 @@ pub mod npu;
 pub mod power;
 pub mod roofline;
 
-pub use models::{model, ModelSpec};
+pub use models::{lookup as model_lookup, model, ModelSpec};
 pub use npu::{npu, NpuSpec};
 pub use roofline::{LlmCluster, PrefillItem, StepWork};

@@ -54,20 +54,34 @@ impl ModelSpec {
     }
 }
 
+/// The shipped model roster with its alias table, seeded into the
+/// interning registry ([`crate::model`]) on first use. Names and aliases
+/// are matched after normalization (case-insensitive, `.`/`_` → `-`), so
+/// an alias need only be listed in one spelling. This table is the
+/// single source of aliases — `model()` below and every `ModelId` lookup
+/// resolve through the registry, and scenario `model_catalog` entries
+/// extend the same namespace at runtime.
+pub const BUILTIN_MODELS: &[(&ModelSpec, &[&str])] = &[
+    (&LLAMA2_70B, &["llama-2-70b"]),
+    (&LLAMA3_70B, &["llama-3-70b", "llama3.1-70b", "llama-3.1-70b"]),
+    (&LLAMA3_8B, &["llama-3.1-8b", "llama3-8b"]),
+    (&BLOOM_176B, &[]),
+    (&MISTRAL_7B, &[]),
+    (&E5_BASE, &[]),
+    (&GUARD_2B, &[]),
+];
+
 /// Registry lookup by name (case-insensitive, dashes/dots normalized).
+/// Delegates to the interning registry, so runtime-registered catalog
+/// models resolve here too.
 pub fn model(name: &str) -> Option<ModelSpec> {
-    let key = name.to_ascii_lowercase().replace(['.', '_'], "-");
-    let m = match key.as_str() {
-        "llama2-70b" | "llama-2-70b" => LLAMA2_70B,
-        "llama3-70b" | "llama-3-70b" | "llama3-1-70b" | "llama-3-1-70b" => LLAMA3_70B,
-        "llama3-1-8b" | "llama-3-1-8b" | "llama3-8b" => LLAMA3_8B,
-        "bloom-176b" => BLOOM_176B,
-        "mistral-7b" => MISTRAL_7B,
-        "e5-base" => E5_BASE,
-        "guard-2b" => GUARD_2B,
-        _ => return None,
-    };
-    Some(m)
+    crate::model::ModelId::resolve(name).map(|id| id.spec().clone())
+}
+
+/// Like [`model`], but an unknown name is an error that lists every
+/// known model name — config/scenario typos are self-explanatory.
+pub fn lookup(name: &str) -> anyhow::Result<ModelSpec> {
+    crate::model::ModelId::lookup(name).map(|id| id.spec().clone())
 }
 
 pub const LLAMA2_70B: ModelSpec = ModelSpec {
@@ -186,6 +200,15 @@ mod tests {
         assert_eq!(model("llama_2_70b").unwrap().name, "llama2-70b");
         assert_eq!(model("E5-Base").unwrap().name, "e5-base");
         assert!(model("gpt-99t").is_none());
+    }
+
+    #[test]
+    fn unknown_model_error_names_the_roster() {
+        let err = lookup("gpt-99t").unwrap_err().to_string();
+        assert!(err.contains("unknown model 'gpt-99t'"), "{err}");
+        for known in ["llama2-70b", "llama3-70b", "mistral-7b", "guard-2b"] {
+            assert!(err.contains(known), "error must list {known}: {err}");
+        }
     }
 
     #[test]

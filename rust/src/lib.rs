@@ -21,6 +21,9 @@
 //!   (§III-C).
 //! * [`scheduler`] — pluggable batching policies + packing + admission
 //!   (§III-D).
+//! * [`model`] — interned `ModelId` registry and dynamic model-routing
+//!   policies (static mix / length threshold / cascade) behind the
+//!   `Stage::ModelRoute` pipeline stage (docs/models.md).
 //! * [`perfmodel`] / [`hardware`] — step-time prediction: roofline
 //!   analytical model, fitted polynomial, AOT Pallas via PJRT (§III-E).
 //! * [`workload`] / [`rag`] / [`memory`] / [`network`] — request
@@ -35,6 +38,7 @@
 
 pub mod util;
 pub mod hardware;
+pub mod model;
 pub mod perfmodel;
 pub mod runtime;
 pub mod sim;

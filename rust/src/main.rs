@@ -57,8 +57,9 @@ fn print_usage() {
     println!("  hermes simulate --config cfg.json [--out m.json] [--trace t.json]");
     println!("  hermes sweep --config cfg.json --rates 1,2,4 [--out sweep.json]");
     println!("  hermes scenario <name|path.json> [--fast] [--out sweep.json]   (--list to enumerate)");
+    println!("  hermes scenario check             # resolve every scenario's model/policy/npu refs");
     println!("  hermes bench [name...] [--fast] [--baseline auto|on|off] [--out BENCH_core.json]");
-    println!("  hermes experiment <fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|ablations|all> [--fast]");
+    println!("  hermes experiment <fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|ablations|multimodel|all> [--fast]");
     println!("  hermes artifacts");
 }
 
@@ -206,6 +207,10 @@ fn scenario(args: &Args) -> Result<()> {
         .first()
         .cloned()
         .context("scenario name or path required (see `hermes scenario --list`)")?;
+    if which == "check" {
+        args.finish().map_err(|e| anyhow::anyhow!(e))?;
+        return scenario_check();
+    }
     let fast = args.bool_or("fast", false);
     let out = args.opt_str("out");
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
@@ -240,6 +245,34 @@ fn scenario(args: &Args) -> Result<()> {
         std::fs::write(&path, hermes::util::json::Json::Arr(doc_rows).to_pretty())?;
         println!("sweep -> {path}");
     }
+    Ok(())
+}
+
+/// `hermes scenario check`: parse every file under `scenarios/` and
+/// resolve all model / model-policy / NPU / storage references down to
+/// constructed clients at both scales. Exits non-zero on the first
+/// pass if any scenario has a dangling reference — wired into CI so a
+/// renamed model or policy can't break a scenario silently.
+fn scenario_check() -> Result<()> {
+    let names = Scenario::list();
+    if names.is_empty() {
+        bail!("no scenarios found under {}", Scenario::dir().display());
+    }
+    let mut failures = 0usize;
+    for name in &names {
+        let outcome = Scenario::load(name).and_then(|sc| sc.check());
+        match outcome {
+            Ok(()) => println!("  {name:<24} OK"),
+            Err(e) => {
+                failures += 1;
+                println!("  {name:<24} FAILED: {e:#}");
+            }
+        }
+    }
+    if failures > 0 {
+        bail!("{failures}/{} scenarios failed the reference check", names.len());
+    }
+    println!("all {} scenarios resolve cleanly", names.len());
     Ok(())
 }
 

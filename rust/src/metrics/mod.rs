@@ -62,7 +62,9 @@ impl RunMetrics {
                 tpot.push(tp);
             }
             e2e.push(te);
-            tokens += (r.decoded * r.branches) as f64;
+            // includes superseded cascade-pass tokens: escalations did
+            // that work (and paid its energy), so throughput counts it
+            tokens += r.generated_tokens() as f64;
             if slo.request_ok(t1, tp) {
                 slo_ok += 1;
             }

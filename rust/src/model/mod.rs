@@ -1,0 +1,235 @@
+//! Model identity: an interning registry mapping model names (and their
+//! aliases) to dense [`ModelId`]s, plus the dynamic model-routing
+//! policies ([`policy`]).
+//!
+//! The serving layers thread `ModelId` — a `Copy` integer — through
+//! requests, clients and the router, so the "can this client serve this
+//! request's model?" check on the routing hot path is an integer
+//! compare instead of a string compare, and the model catalog is
+//! extensible at runtime: scenario files can register new architectures
+//! through `model_catalog` (see [`crate::config`]) without touching the
+//! hardcoded roster in [`crate::hardware::models`].
+//!
+//! The registry is process-global and append-only: built-in specs (and
+//! the alias table that used to live in `hardware::model`'s match
+//! statement) are seeded on first use; `register` interns additional
+//! specs. Identity is by *canonical name* — two `ModelId`s are equal iff
+//! they name the same registered model — so ids are stable within a
+//! process but their numeric values are an implementation detail;
+//! nothing may depend on their ordering.
+
+pub mod policy;
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{bail, Result};
+
+use crate::hardware::models::{BUILTIN_MODELS, ModelSpec};
+
+/// Interned model identity: a dense index into the process-global model
+/// registry. `Copy` + integer equality — the routing hot path compares
+/// these, never names.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ModelId(u32);
+
+struct Registry {
+    /// leaked so [`ModelId::spec`] can hand out `&'static` references
+    specs: Vec<&'static ModelSpec>,
+    /// normalized name / alias → index into `specs`
+    by_name: HashMap<String, u32>,
+}
+
+/// Case-insensitive, `.`/`_` → `-` (the normalization `hardware::model`
+/// has always applied).
+fn normalize(name: &str) -> String {
+    name.to_ascii_lowercase().replace(['.', '_'], "-")
+}
+
+fn registry() -> &'static Mutex<Registry> {
+    static REGISTRY: OnceLock<Mutex<Registry>> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        let mut reg = Registry {
+            specs: Vec::new(),
+            by_name: HashMap::new(),
+        };
+        for (spec, aliases) in BUILTIN_MODELS {
+            let id = reg.specs.len() as u32;
+            reg.specs.push(*spec);
+            reg.by_name.insert(normalize(spec.name), id);
+            for alias in *aliases {
+                reg.by_name.insert(normalize(alias), id);
+            }
+        }
+        Mutex::new(reg)
+    })
+}
+
+impl ModelId {
+    /// Look up a name or alias; `None` if unregistered.
+    pub fn resolve(name: &str) -> Option<ModelId> {
+        registry()
+            .lock()
+            .unwrap()
+            .by_name
+            .get(&normalize(name))
+            .map(|&i| ModelId(i))
+    }
+
+    /// Look up a name; the error lists every known model name so config
+    /// typos are self-explanatory.
+    pub fn lookup(name: &str) -> Result<ModelId> {
+        match ModelId::resolve(name) {
+            Some(id) => Ok(id),
+            None => bail!(
+                "unknown model '{name}' (known models: {})",
+                known_models().join(", ")
+            ),
+        }
+    }
+
+    /// Infallible lookup for names that are known by construction
+    /// (panics otherwise — tests and internal defaults).
+    pub fn named(name: &str) -> ModelId {
+        ModelId::lookup(name).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Id for a spec in hand: resolves by canonical name, registering
+    /// the spec when the name is new. Name-based identity — a spec whose
+    /// name is already registered resolves to the existing entry.
+    pub fn of_spec(spec: &ModelSpec) -> ModelId {
+        let mut reg = registry().lock().unwrap();
+        let key = normalize(spec.name);
+        if let Some(&i) = reg.by_name.get(&key) {
+            return ModelId(i);
+        }
+        let id = reg.specs.len() as u32;
+        reg.specs.push(Box::leak(Box::new(spec.clone())));
+        reg.by_name.insert(key, id);
+        ModelId(id)
+    }
+
+    /// Register a new architecture (scenario `model_catalog` entries).
+    /// Idempotent for an identical re-registration; redefining a known
+    /// name with different parameters is an error.
+    pub fn register(spec: ModelSpec) -> Result<ModelId> {
+        let mut reg = registry().lock().unwrap();
+        let key = normalize(spec.name);
+        if let Some(&i) = reg.by_name.get(&key) {
+            if *reg.specs[i as usize] == spec {
+                return Ok(ModelId(i));
+            }
+            bail!(
+                "model catalog redefines '{}' with different parameters",
+                spec.name
+            );
+        }
+        let id = reg.specs.len() as u32;
+        reg.specs.push(Box::leak(Box::new(spec)));
+        reg.by_name.insert(key, id);
+        Ok(ModelId(id))
+    }
+
+    /// The interned architecture spec. O(1) index into the registry.
+    pub fn spec(self) -> &'static ModelSpec {
+        registry().lock().unwrap().specs[self.0 as usize]
+    }
+
+    /// Canonical model name.
+    pub fn name(self) -> &'static str {
+        self.spec().name
+    }
+
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+
+    /// Is this one of the models shipped in
+    /// [`BUILTIN_MODELS`](crate::hardware::models::BUILTIN_MODELS)
+    /// (as opposed to a runtime `model_catalog` registration)? Builtins
+    /// are seeded first, so their ids occupy the low range.
+    pub fn is_builtin(self) -> bool {
+        (self.0 as usize) < BUILTIN_MODELS.len()
+    }
+}
+
+impl From<&str> for ModelId {
+    fn from(name: &str) -> ModelId {
+        ModelId::named(name)
+    }
+}
+
+impl fmt::Debug for ModelId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ModelId({})", self.name())
+    }
+}
+
+impl fmt::Display for ModelId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Sorted canonical names of every registered model (error messages,
+/// `hermes scenario check` reporting).
+pub fn known_models() -> Vec<&'static str> {
+    let reg = registry().lock().unwrap();
+    let mut names: Vec<&'static str> = reg.specs.iter().map(|s| s.name).collect();
+    names.sort_unstable();
+    names
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::models::{LLAMA3_70B, LLAMA3_8B};
+
+    #[test]
+    fn interning_is_alias_stable() {
+        let a = ModelId::named("llama3-70b");
+        let b = ModelId::named("Llama-3.1-70B");
+        assert_eq!(a, b, "aliases intern to one id");
+        assert_eq!(a.name(), "llama3-70b");
+        assert_eq!(a.spec(), &LLAMA3_70B);
+        assert_ne!(a, ModelId::named("llama3-8b"));
+        assert_eq!(ModelId::named("llama3-8b").spec(), &LLAMA3_8B);
+    }
+
+    #[test]
+    fn lookup_error_lists_known_models() {
+        let err = ModelId::lookup("gpt-99t").unwrap_err().to_string();
+        assert!(err.contains("unknown model 'gpt-99t'"), "{err}");
+        assert!(err.contains("llama3-70b"), "{err}");
+        assert!(err.contains("bloom-176b"), "{err}");
+    }
+
+    #[test]
+    fn register_custom_spec_is_idempotent() {
+        let spec = ModelSpec {
+            name: "test-custom-13b",
+            params: 13e9,
+            layers: 40,
+            hidden: 5120,
+            heads: 40,
+            kv_heads: 40,
+            d_head: 128,
+            bytes_per_param: 1.0,
+            decoder: true,
+        };
+        let a = ModelId::register(spec.clone()).unwrap();
+        let b = ModelId::register(spec.clone()).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(ModelId::resolve("Test_Custom.13B"), Some(a));
+        assert!(known_models().contains(&"test-custom-13b"));
+        // conflicting redefinition is rejected
+        let conflict = ModelSpec { params: 14e9, ..spec };
+        assert!(ModelId::register(conflict).is_err());
+    }
+
+    #[test]
+    fn of_spec_resolves_by_name() {
+        assert_eq!(ModelId::of_spec(&LLAMA3_70B), ModelId::named("llama3-70b"));
+    }
+}

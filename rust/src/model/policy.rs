@@ -1,0 +1,330 @@
+//! Dynamic model-selection policies behind the `Stage::ModelRoute`
+//! pipeline stage.
+//!
+//! MIST models model routing as a first-class pipeline stage: before a
+//! request reaches prefill, a policy decides *which* model serves it —
+//! and a cascade may revisit that decision after the small model's
+//! answer. The coordinator resolves `ModelRoute` stages inline (they
+//! cost zero simulated time and never occupy a client); the policy's
+//! decision is a pure, deterministic function of the request, the
+//! route ordinal and the run seed, so runs stay reproducible.
+//!
+//! Three built-in policies:
+//!
+//! * [`ModelPolicy::Static`] — a fixed traffic mix: each request is
+//!   assigned a model by deterministic weighted draw (per-request PCG
+//!   stream keyed on the request id).
+//! * [`ModelPolicy::Threshold`] — length-based: prompts at or above the
+//!   threshold go to the large model, the rest to the small one (an
+//!   SLO-tiering proxy: long prompts get the quality model).
+//! * [`ModelPolicy::Cascade`] — small-model-first with an escalation
+//!   fraction: every request runs the small model; at the second
+//!   `ModelRoute` stage a fraction `escalate` re-runs prefill+decode on
+//!   the large model (the "answer was not good enough" path), the rest
+//!   finish with the small model's answer.
+
+use anyhow::{bail, Context, Result};
+
+use super::ModelId;
+use crate::util::rng::Pcg;
+use crate::workload::request::Request;
+
+/// A model-selection policy, applied at every `Stage::ModelRoute` of a
+/// request's pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ModelPolicy {
+    /// fixed weighted mix across models (weights need not sum to 1)
+    Static { choices: Vec<(ModelId, f64)> },
+    /// prompts `>= threshold_tokens` → `large`, else `small`
+    Threshold {
+        threshold_tokens: usize,
+        small: ModelId,
+        large: ModelId,
+    },
+    /// small-model-first; an `escalate` fraction re-runs on `large`
+    Cascade {
+        small: ModelId,
+        large: ModelId,
+        escalate: f64,
+    },
+}
+
+/// Outcome of one `ModelRoute` resolution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteDecision {
+    /// serve the following stages with this model (at a later route
+    /// ordinal, a *different* model means escalation: prefill/decode
+    /// progress is reset and re-run)
+    Assign(ModelId),
+    /// the pipeline ends here (cascade declined to escalate)
+    Finish,
+}
+
+/// Per-request decision stream: independent of event order, so routing
+/// decisions are identical across load modes, pool backends and sweeps.
+fn route_rng(seed: u64, req: u64) -> Pcg {
+    Pcg::new(seed ^ req.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x4D52_4F55_5445)
+}
+
+impl ModelPolicy {
+    /// Decide the `ordinal`-th `ModelRoute` stage (0-based) of `r`.
+    pub fn decide(&self, r: &Request, ordinal: usize, seed: u64) -> RouteDecision {
+        match self {
+            ModelPolicy::Static { choices } => {
+                if ordinal > 0 {
+                    // a static mix never escalates; trailing route
+                    // stages (cascade-shaped pipelines) just finish
+                    return RouteDecision::Finish;
+                }
+                let total: f64 = choices.iter().map(|(_, w)| w).sum();
+                let mut x = route_rng(seed, r.id).f64() * total;
+                for (m, w) in choices {
+                    x -= w;
+                    if x <= 0.0 {
+                        return RouteDecision::Assign(*m);
+                    }
+                }
+                RouteDecision::Assign(choices.last().expect("static policy has choices").0)
+            }
+            ModelPolicy::Threshold {
+                threshold_tokens,
+                small,
+                large,
+            } => {
+                if ordinal > 0 {
+                    return RouteDecision::Finish;
+                }
+                RouteDecision::Assign(if r.prompt_tokens >= *threshold_tokens {
+                    *large
+                } else {
+                    *small
+                })
+            }
+            ModelPolicy::Cascade {
+                small,
+                large,
+                escalate,
+            } => match ordinal {
+                0 => RouteDecision::Assign(*small),
+                1 => {
+                    if route_rng(seed, r.id).chance(*escalate) {
+                        RouteDecision::Assign(*large)
+                    } else {
+                        RouteDecision::Finish
+                    }
+                }
+                _ => RouteDecision::Finish,
+            },
+        }
+    }
+
+    /// Every model this policy can assign (deduped) — used to validate
+    /// that the client pool actually hosts them.
+    pub fn models(&self) -> Vec<ModelId> {
+        let all: Vec<ModelId> = match self {
+            ModelPolicy::Static { choices } => choices.iter().map(|(m, _)| *m).collect(),
+            ModelPolicy::Threshold { small, large, .. }
+            | ModelPolicy::Cascade { small, large, .. } => vec![*small, *large],
+        };
+        let mut seen = Vec::with_capacity(all.len());
+        for m in all {
+            if !seen.contains(&m) {
+                seen.push(m);
+            }
+        }
+        seen
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelPolicy::Static { .. } => "static",
+            ModelPolicy::Threshold { .. } => "threshold",
+            ModelPolicy::Cascade { .. } => "cascade",
+        }
+    }
+
+    /// Parse the config-string grammar:
+    ///
+    /// * `static:<model>[=<weight>][,<model>[=<weight>]...]`
+    /// * `threshold:<tokens>:<small-model>:<large-model>`
+    /// * `cascade:<small-model>-><large-model>:<escalation-fraction>`
+    pub fn parse(s: &str) -> Result<ModelPolicy> {
+        if let Some(rest) = s.strip_prefix("static:") {
+            let mut choices = Vec::new();
+            for part in rest.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                let (name, weight) = match part.split_once('=') {
+                    Some((n, w)) => (
+                        n.trim(),
+                        w.trim()
+                            .parse::<f64>()
+                            .with_context(|| format!("bad model weight in '{part}'"))?,
+                    ),
+                    None => (part, 1.0),
+                };
+                if !(weight > 0.0) {
+                    bail!("model weight must be positive in '{part}'");
+                }
+                choices.push((ModelId::lookup(name)?, weight));
+            }
+            if choices.is_empty() {
+                bail!("static model policy needs at least one model: '{s}'");
+            }
+            Ok(ModelPolicy::Static { choices })
+        } else if let Some(rest) = s.strip_prefix("threshold:") {
+            let mut it = rest.splitn(3, ':');
+            let (t, small, large) = (it.next(), it.next(), it.next());
+            let (Some(t), Some(small), Some(large)) = (t, small, large) else {
+                bail!("threshold policy is 'threshold:<tokens>:<small>:<large>', got '{s}'");
+            };
+            let threshold_tokens: usize = t
+                .parse()
+                .with_context(|| format!("bad token threshold in '{s}'"))?;
+            Ok(ModelPolicy::Threshold {
+                threshold_tokens,
+                small: ModelId::lookup(small.trim())?,
+                large: ModelId::lookup(large.trim())?,
+            })
+        } else if let Some(rest) = s.strip_prefix("cascade:") {
+            let (pair, frac) = rest.rsplit_once(':').with_context(|| {
+                format!("cascade policy is 'cascade:<small>-><large>:<fraction>', got '{s}'")
+            })?;
+            let (small, large) = pair
+                .split_once("->")
+                .with_context(|| format!("cascade models are '<small>-><large>' in '{s}'"))?;
+            let escalate: f64 = frac
+                .trim()
+                .parse()
+                .with_context(|| format!("bad escalation fraction in '{s}'"))?;
+            if !(0.0..=1.0).contains(&escalate) {
+                bail!("escalation fraction must be in [0, 1], got {escalate}");
+            }
+            let small = ModelId::lookup(small.trim())?;
+            let large = ModelId::lookup(large.trim())?;
+            if small == large {
+                bail!("cascade needs two distinct models, got '{s}'");
+            }
+            Ok(ModelPolicy::Cascade {
+                small,
+                large,
+                escalate,
+            })
+        } else {
+            bail!("unknown model policy '{s}' (static:…, threshold:…, cascade:…)")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimTime;
+    use crate::workload::request::Stage;
+
+    fn req(id: u64, prompt: usize) -> Request {
+        Request::new(
+            id,
+            "llama3-70b",
+            SimTime::ZERO,
+            vec![Stage::ModelRoute, Stage::Prefill, Stage::Decode],
+            prompt,
+            10,
+        )
+    }
+
+    #[test]
+    fn parse_grammar_round_trips() {
+        let p = ModelPolicy::parse("static:llama3-8b=0.7,llama3-70b=0.3").unwrap();
+        assert_eq!(p.name(), "static");
+        assert_eq!(p.models().len(), 2);
+        let p = ModelPolicy::parse("threshold:2048:llama3-8b:llama3-70b").unwrap();
+        assert_eq!(
+            p,
+            ModelPolicy::Threshold {
+                threshold_tokens: 2048,
+                small: ModelId::named("llama3-8b"),
+                large: ModelId::named("llama3-70b"),
+            }
+        );
+        let p = ModelPolicy::parse("cascade:llama3-8b->llama3-70b:0.25").unwrap();
+        assert_eq!(p.name(), "cascade");
+        for bad in [
+            "psychic:foo",
+            "static:",
+            "static:gpt-99t",
+            "threshold:abc:llama3-8b:llama3-70b",
+            "threshold:100:llama3-8b",
+            "cascade:llama3-8b->llama3-8b:0.2",
+            "cascade:llama3-8b->llama3-70b:1.5",
+        ] {
+            assert!(ModelPolicy::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn static_mix_is_deterministic_and_weighted() {
+        let p = ModelPolicy::parse("static:llama3-8b=0.75,llama3-70b=0.25").unwrap();
+        let small = ModelId::named("llama3-8b");
+        let n = 4000;
+        let mut small_n = 0;
+        for id in 0..n {
+            let d = p.decide(&req(id, 100), 0, 7);
+            assert_eq!(d, p.decide(&req(id, 100), 0, 7), "deterministic");
+            if d == RouteDecision::Assign(small) {
+                small_n += 1;
+            }
+        }
+        let frac = small_n as f64 / n as f64;
+        assert!((frac - 0.75).abs() < 0.05, "small fraction {frac}");
+        // trailing route stages finish
+        assert_eq!(p.decide(&req(1, 100), 1, 7), RouteDecision::Finish);
+    }
+
+    #[test]
+    fn threshold_splits_by_prompt_length() {
+        let p = ModelPolicy::parse("threshold:1000:llama3-8b:llama3-70b").unwrap();
+        assert_eq!(
+            p.decide(&req(1, 999), 0, 0),
+            RouteDecision::Assign(ModelId::named("llama3-8b"))
+        );
+        assert_eq!(
+            p.decide(&req(1, 1000), 0, 0),
+            RouteDecision::Assign(ModelId::named("llama3-70b"))
+        );
+    }
+
+    #[test]
+    fn cascade_escalates_a_fraction() {
+        let p = ModelPolicy::parse("cascade:llama3-8b->llama3-70b:0.3").unwrap();
+        let small = ModelId::named("llama3-8b");
+        let large = ModelId::named("llama3-70b");
+        let n = 4000;
+        let mut escalated = 0;
+        for id in 0..n {
+            assert_eq!(p.decide(&req(id, 100), 0, 3), RouteDecision::Assign(small));
+            match p.decide(&req(id, 100), 1, 3) {
+                RouteDecision::Assign(m) => {
+                    assert_eq!(m, large);
+                    escalated += 1;
+                }
+                RouteDecision::Finish => {}
+            }
+            assert_eq!(p.decide(&req(id, 100), 2, 3), RouteDecision::Finish);
+        }
+        let frac = escalated as f64 / n as f64;
+        assert!((frac - 0.3).abs() < 0.05, "escalation fraction {frac}");
+        // edge fractions are exact
+        let never = ModelPolicy::parse("cascade:llama3-8b->llama3-70b:0").unwrap();
+        let always = ModelPolicy::parse("cascade:llama3-8b->llama3-70b:1").unwrap();
+        for id in 0..64 {
+            assert_eq!(never.decide(&req(id, 1), 1, 3), RouteDecision::Finish);
+            assert_eq!(
+                always.decide(&req(id, 1), 1, 3),
+                RouteDecision::Assign(large)
+            );
+        }
+    }
+}

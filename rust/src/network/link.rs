@@ -107,4 +107,33 @@ mod tests {
         assert!((l.utilization(SimTime::from_secs(1.0)) - 0.5).abs() < 1e-9);
         assert_eq!(l.utilization(SimTime::ZERO), 0.0);
     }
+
+    #[test]
+    fn utilization_window_accumulates_and_saturates() {
+        let mut l = Link::new(gbps(2.0));
+        // three transfers totalling 3 GB on a 2 GB/s link
+        l.transfer(SimTime::ZERO, 1e9);
+        l.transfer(SimTime::ZERO, 1e9);
+        l.transfer(SimTime::from_secs(5.0), 1e9);
+        assert_eq!(l.bytes_total, 3e9);
+        assert_eq!(l.transfers, 3);
+        // 1.5 s of serialization over a 2 s window
+        assert!((l.utilization(SimTime::from_secs(2.0)) - 0.75).abs() < 1e-9);
+        // a 6 s window dilutes it to 0.25
+        assert!((l.utilization(SimTime::from_secs(6.0)) - 0.25).abs() < 1e-9);
+        // a window shorter than the carried volume clamps at 1.0 (the
+        // link cannot be more than fully busy)
+        assert_eq!(l.utilization(SimTime::from_secs(1.0)), 1.0);
+    }
+
+    #[test]
+    fn busy_until_tracks_queue_tail_not_latency() {
+        let mut l = Link::new(gbps(1.0));
+        let fin = l.transfer(SimTime::ZERO, 2e9);
+        // the α latency is pipelined: finish = busy_until + lat
+        assert_eq!(l.busy_until(), SimTime::from_secs(2.0));
+        assert!((fin.as_secs() - 2.00001).abs() < 1e-9);
+        // an idle link's busy_until does not advance on its own
+        assert_eq!(l.busy_until(), SimTime::from_secs(2.0));
+    }
 }

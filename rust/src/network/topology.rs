@@ -168,6 +168,22 @@ impl Network {
     pub fn bytes_on_dcn(&self) -> f64 {
         self.dcn_link.bytes_total
     }
+
+    /// Bytes carried by one rack's switch (0 for unknown racks).
+    pub fn bytes_on_rack(&self, rack: usize) -> f64 {
+        self.rack_links
+            .get(&rack)
+            .map(|l| l.bytes_total)
+            .unwrap_or(0.0)
+    }
+
+    /// Utilization of one rack's switch over `[0, horizon]`.
+    pub fn rack_utilization(&self, rack: usize, horizon: SimTime) -> f64 {
+        self.rack_links
+            .get(&rack)
+            .map(|l| l.utilization(horizon))
+            .unwrap_or(0.0)
+    }
 }
 
 #[cfg(test)]
@@ -233,6 +249,73 @@ mod tests {
             n.transfer(SimTime::from_secs(3.0), 2, 2, 1e12, Granularity::Full),
             SimTime::from_secs(3.0)
         );
+    }
+
+    #[test]
+    fn path_selection_routes_bytes_to_exactly_one_level() {
+        // 8 clients, platforms of 2, racks of 4:
+        //   0↔1 same platform (NVLink), 0↔2 same rack (switch),
+        //   0↔7 cross-rack (DCN spine)
+        let gb = 1e9;
+        // same platform: only the intra-platform counter moves
+        let mut n = two_rack_net();
+        n.transfer(SimTime::ZERO, 0, 1, gb, Granularity::Full);
+        assert_eq!(n.bytes_intra_platform, gb);
+        assert_eq!(n.bytes_on_rack(0), 0.0);
+        assert_eq!(n.bytes_on_dcn(), 0.0);
+        // same rack, different platform: only rack 0's switch moves
+        let mut n = two_rack_net();
+        n.transfer(SimTime::ZERO, 0, 2, gb, Granularity::Full);
+        assert_eq!(n.bytes_intra_platform, 0.0);
+        assert_eq!(n.bytes_on_rack(0), gb);
+        assert_eq!(n.bytes_on_rack(1), 0.0, "rack 1 uninvolved");
+        assert_eq!(n.bytes_on_dcn(), 0.0);
+        // cross-rack: only the DCN spine moves
+        let mut n = two_rack_net();
+        n.transfer(SimTime::ZERO, 0, 7, gb, Granularity::Full);
+        assert_eq!(n.bytes_intra_platform, 0.0);
+        assert_eq!(n.bytes_on_rack(0), 0.0);
+        assert_eq!(n.bytes_on_rack(1), 0.0);
+        assert_eq!(n.bytes_on_dcn(), gb);
+        // unknown rack reads as idle instead of panicking
+        assert_eq!(n.bytes_on_rack(99), 0.0);
+    }
+
+    #[test]
+    fn estimate_is_side_effect_free_at_every_level() {
+        let n = two_rack_net();
+        for (src, dst, level_spec) in
+            [(0usize, 1usize, NVLINK), (0, 2, RACK_SWITCH), (0, 7, DCN)]
+        {
+            let est = n.estimate(src, dst, 1e9, Granularity::Full);
+            assert!(
+                (est - level_spec.duration(1e9)).abs() < 1e-12,
+                "{src}->{dst}: {est}"
+            );
+        }
+        // no contention state was mutated by estimates
+        assert_eq!(n.bytes_intra_platform, 0.0);
+        assert_eq!(n.bytes_on_rack(0), 0.0);
+        assert_eq!(n.bytes_on_dcn(), 0.0);
+    }
+
+    #[test]
+    fn rack_utilization_windows_account_carried_bytes() {
+        let mut n = two_rack_net();
+        // 50 GB/s rack switch: 25 GB occupies it for 0.5 s
+        n.transfer(SimTime::ZERO, 0, 2, 25e9, Granularity::Full);
+        let u1 = n.rack_utilization(0, SimTime::from_secs(1.0));
+        assert!((u1 - 0.5).abs() < 1e-9, "u1={u1}");
+        // a second transfer doubles the carried bytes in the window
+        n.transfer(SimTime::ZERO, 1, 3, 25e9, Granularity::Full);
+        let u2 = n.rack_utilization(0, SimTime::from_secs(1.0));
+        assert!((u2 - 1.0).abs() < 1e-9, "u2={u2}");
+        // a wider window dilutes utilization proportionally
+        let u4 = n.rack_utilization(0, SimTime::from_secs(4.0));
+        assert!((u4 - 0.25).abs() < 1e-9, "u4={u4}");
+        // idle racks and unknown racks read zero
+        assert_eq!(n.rack_utilization(1, SimTime::from_secs(1.0)), 0.0);
+        assert_eq!(n.rack_utilization(9, SimTime::from_secs(1.0)), 0.0);
     }
 
     #[test]

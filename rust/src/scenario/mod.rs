@@ -35,6 +35,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::slo::SloLadder;
 use crate::config::{self, parse_batching_kind};
+use crate::model::ModelId;
 use crate::scheduler::BatchingKind;
 use crate::sim::builder::{PoolSpec, ServingSpec};
 use crate::util::json::Json;
@@ -194,6 +195,11 @@ pub struct Scenario {
     pub doc: Json,
     pub roster: Vec<RosterEntry>,
     pub panels: Vec<Panel>,
+    /// models THIS file's `model_catalog` declares (the registry is
+    /// process-global and append-only, so [`Scenario::check`] uses this
+    /// to reject references that only resolve because some *other*
+    /// scenario registered the name earlier in the same process)
+    pub catalog_models: Vec<ModelId>,
     full: ScenarioScale,
     fast: ScenarioScale,
 }
@@ -270,6 +276,21 @@ impl Scenario {
         let title = doc.str_or("title", &name).to_string();
         let figure = doc.get("figure").and_then(Json::as_str).map(str::to_string);
 
+        // register catalog models up front: `workload()` can be called
+        // before `serving()` (the runner does), and both may reference
+        // catalog-only names
+        let mut catalog_models = Vec::new();
+        if let Some(cat) = doc.get("model_catalog") {
+            config::parse_model_catalog(cat)
+                .with_context(|| format!("scenario '{name}': model_catalog"))?;
+            for entry in cat.as_arr().unwrap_or(&[]) {
+                if let Some(n) = entry.get("name").and_then(Json::as_str) {
+                    // just registered above, so resolution cannot fail
+                    catalog_models.push(ModelId::named(n));
+                }
+            }
+        }
+
         // roster: "batching" entries, else the config-style "pool" object
         let roster: Vec<RosterEntry> = match doc.get("batching") {
             Some(Json::Arr(entries)) => entries
@@ -322,6 +343,7 @@ impl Scenario {
             doc,
             roster,
             panels,
+            catalog_models,
             full,
             fast,
         };
@@ -395,10 +417,21 @@ impl Scenario {
     /// Build the workload mix for `n_requests` total, with an optional
     /// panel patch applied to every class.
     pub fn workload(&self, panel: Option<&Panel>, n_requests: usize) -> Result<WorkloadMix> {
-        let name = self.doc.str_or("model", "llama3-70b");
-        let model: &'static str = crate::hardware::model(name)
-            .with_context(|| format!("unknown model {name}"))?
-            .name;
+        // primary model: 'model', else the first 'models' entry (the
+        // same precedence the serving side applies)
+        let model = match self.doc.get("model").and_then(Json::as_str) {
+            Some(n) => ModelId::lookup(n)?,
+            None => match self
+                .doc
+                .get("models")
+                .and_then(Json::as_arr)
+                .and_then(|a| a.first())
+                .and_then(Json::as_str)
+            {
+                Some(n) => ModelId::lookup(n)?,
+                None => ModelId::named("llama3-70b"),
+            },
+        };
         let seed = self.doc.f64_or("seed", 0.0) as u64;
         let w = self
             .doc
@@ -499,6 +532,61 @@ impl Scenario {
             .into_iter()
             .map(|v| v as usize)
             .collect())
+    }
+
+    /// Exhaustive reference resolution for `hermes scenario check`:
+    /// every roster entry's serving spec must *build* (resolving model,
+    /// co-model, model-policy and NPU references down to constructed
+    /// clients) at both scales, and every panel's serving overrides,
+    /// workload patch and SLO name must parse. A dangling reference
+    /// anywhere in the file is an error here rather than a mid-sweep
+    /// surprise.
+    pub fn check(&self) -> Result<()> {
+        // a scenario file must be self-contained: every model it names
+        // must be built-in or declared in ITS OWN model_catalog. The
+        // registry is process-global, so without this a dangling name
+        // would "resolve" whenever another scenario parsed earlier in
+        // the same process happened to register it.
+        {
+            let spec = self.serving(&self.roster[0], self.full.clients)?;
+            let mut refs = vec![ModelId::lookup(spec.model)?];
+            refs.extend(spec.co_models.iter().copied());
+            if let Some(p) = &spec.model_policy {
+                refs.extend(p.models());
+            }
+            for m in refs {
+                if !m.is_builtin() && !self.catalog_models.contains(&m) {
+                    bail!(
+                        "scenario '{}' references model '{m}', which is neither \
+                         built-in nor declared in this file's model_catalog \
+                         (it only resolves via another scenario's catalog)",
+                        self.name
+                    );
+                }
+            }
+        }
+        for (label, scale) in [("full", &self.full), ("fast", &self.fast)] {
+            if scale.rates.is_empty() {
+                bail!("scale '{label}' has no rates");
+            }
+            for (ei, entry) in self.roster.iter().enumerate() {
+                for panel in self.panels_or_default() {
+                    let ctx = || {
+                        format!(
+                            "scenario '{}': roster[{ei}], panel '{}', {label} scale",
+                            self.name, panel.label
+                        )
+                    };
+                    let spec = self
+                        .serving_panel(entry, scale.clients, Some(&panel))
+                        .with_context(ctx)?;
+                    spec.build().map(drop).with_context(ctx)?;
+                    let mix = self.workload(Some(&panel), 8).with_context(ctx)?;
+                    self.slo(Some(&panel), &mix).with_context(ctx)?;
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Panels, or a single unlabeled panel when the scenario has none —
@@ -633,6 +721,50 @@ mod tests {
         // default: auto → standard for the regular-dominated mix
         let slo = sc.slo(None, &mix).unwrap();
         assert_eq!(slo.ttft_base, 0.25);
+    }
+
+    #[test]
+    fn check_rejects_cross_scenario_catalog_leakage() {
+        use crate::model::ModelId;
+
+        // simulate another scenario's catalog having registered a model
+        // earlier in this process
+        ModelId::register(crate::hardware::ModelSpec {
+            name: "leaktest-9b",
+            params: 9e9,
+            layers: 30,
+            hidden: 4096,
+            heads: 32,
+            kv_heads: 8,
+            d_head: 128,
+            bytes_per_param: 1.0,
+            decoder: true,
+        })
+        .unwrap();
+        let body = r#""npu": "h100", "tp": 8, "batching": ["continuous"],
+            "perf_model": "roofline", "workload": { "trace": "azure-conv" },
+            "sweep": { "clients": 1, "requests_per_client": 4, "rates": [1.0] }"#;
+        // the name resolves globally, so parsing succeeds…
+        let sc = Scenario::from_json(
+            "leaky",
+            doc(&format!(r#"{{ "model": "leaktest-9b", {body} }}"#)),
+        )
+        .unwrap();
+        // …but the file is not self-contained, and check says so
+        let err = sc.check().unwrap_err().to_string();
+        assert!(err.contains("leaktest-9b"), "{err}");
+        // declaring the same model in the file's own catalog passes
+        let sc = Scenario::from_json(
+            "selfcontained",
+            doc(&format!(
+                r#"{{ "model": "leaktest-9b",
+                      "model_catalog": [{{ "name": "leaktest-9b", "params": 9e9,
+                        "layers": 30, "hidden": 4096, "heads": 32, "kv_heads": 8 }}],
+                      {body} }}"#
+            )),
+        )
+        .unwrap();
+        sc.check().unwrap();
     }
 
     #[test]

@@ -10,6 +10,18 @@
 //! [`policy`](super::policy); custom policies plug in through
 //! [`LlmSched::with_policy`].
 //!
+//! **Model lanes.** A scheduler hosts one *lane* per co-resident model
+//! (multi-model serving, docs/models.md): each lane keeps its own
+//! waiting/running queues, KV reservations and `BatchPolicy` instance,
+//! because an engine step executes exactly one model's weights — lanes
+//! are never co-batched. Steps are granted round-robin across lanes
+//! with work. All lanes draw admissions from the *shared* per-client
+//! [`KvManager`]: a lane's `kv_scale` converts its token reservations
+//! into the manager's units (1.0 for a single-model client whose
+//! manager counts tokens; bytes/token for co-resident models sharing an
+//! HBM byte budget). The single-lane case is the exact pre-lane
+//! scheduler: one lane, cursor pinned at 0, `kv_scale = 1.0`.
+//!
 //! Hot-loop design (docs/performance.md): the waiting queue supports
 //! O(1) logical removal — a membership set plus tombstones that the
 //! next admission pass compacts away — instead of the old O(queue)
@@ -27,6 +39,7 @@ use super::policy::{
 };
 use super::{RequestPool, StepPlan};
 use crate::memory::hierarchy::KvManager;
+use crate::model::ModelId;
 use crate::workload::request::ReqId;
 
 /// Declarative name for one of the built-in batching policies; the
@@ -86,19 +99,25 @@ impl Default for SchedConfig {
     }
 }
 
-/// Per-admission bookkeeping: the KV tokens reserved for the request
-/// and its decode-sequence contribution to the batch-size cap.
+/// Per-admission bookkeeping: the reservation charged to the shared
+/// [`KvManager`] (in manager units), the same reservation in tokens
+/// (per-model load reporting), and the request's decode-sequence
+/// contribution to the batch-size cap.
 #[derive(Debug, Clone, Copy)]
 struct Reservation {
-    kv: f64,
+    kv_units: f64,
+    tokens: f64,
     seqs: usize,
 }
 
-/// vLLM-like scheduler state for one LLM client.
-pub struct LlmSched {
+/// One model's scheduling state inside an [`LlmSched`].
+struct Lane {
+    /// `None` = the model-agnostic single lane of a classic scheduler
+    model: Option<ModelId>,
     policy: Box<dyn BatchPolicy>,
-    pub packing: Packing,
-    pub cfg: SchedConfig,
+    /// KvManager units per reserved token (1.0 single-model; the
+    /// model's KV bytes/token on a shared-byte-budget client)
+    kv_scale: f64,
     /// arrived but not yet admitted, in arrival order; may contain
     /// tombstoned ids (see `gone`) that the next admission compacts out
     waiting: VecDeque<ReqId>,
@@ -118,9 +137,48 @@ pub struct LlmSched {
     reserved: HashMap<ReqId, Reservation>,
     /// reusable candidate buffer for the admission pass
     cand: Vec<ReqId>,
+    /// Σ reserved tokens — the per-model `kv_tokens` the router sees
+    kv_held_tokens: f64,
+}
+
+impl Lane {
+    fn new(model: Option<ModelId>, policy: Box<dyn BatchPolicy>, kv_scale: f64) -> Lane {
+        Lane {
+            model,
+            policy,
+            kv_scale,
+            waiting: VecDeque::new(),
+            waiting_set: HashSet::new(),
+            gone: HashMap::new(),
+            running: Vec::new(),
+            running_seqs: 0,
+            reserved: HashMap::new(),
+            cand: Vec::new(),
+            kv_held_tokens: 0.0,
+        }
+    }
+}
+
+/// One lane of a multi-model scheduler, as built by the simulation
+/// assembler: the model it serves, its batching policy, and the token →
+/// KvManager-unit scale for shared-budget admission.
+pub struct LaneSpec {
+    pub model: ModelId,
+    pub policy: Box<dyn BatchPolicy>,
+    pub kv_scale: f64,
+}
+
+/// vLLM-like scheduler state for one LLM client.
+pub struct LlmSched {
+    lanes: Vec<Lane>,
+    pub packing: Packing,
+    pub cfg: SchedConfig,
     /// reusable prefiller buffer lent to policies via [`PlanCtx`]
     scratch: Vec<ReqId>,
-    /// queue-length samples for scheduler metrics
+    /// round-robin start lane for the next planning pass
+    cursor: usize,
+    /// lane of the most recently composed plan
+    planned: usize,
     pub admissions: u64,
 }
 
@@ -130,104 +188,175 @@ impl LlmSched {
         LlmSched::with_policy(kind.policy(), packing, cfg)
     }
 
-    /// Scheduler running a custom [`BatchPolicy`].
+    /// Scheduler running a custom [`BatchPolicy`] (single model lane).
     pub fn with_policy(
         policy: Box<dyn BatchPolicy>,
         packing: Packing,
         cfg: SchedConfig,
     ) -> LlmSched {
         LlmSched {
-            policy,
+            lanes: vec![Lane::new(None, policy, 1.0)],
             packing,
             cfg,
-            waiting: VecDeque::new(),
-            waiting_set: HashSet::new(),
-            gone: HashMap::new(),
-            running: Vec::new(),
-            running_seqs: 0,
-            reserved: HashMap::new(),
-            cand: Vec::new(),
             scratch: Vec::new(),
+            cursor: 0,
+            planned: 0,
+            admissions: 0,
+        }
+    }
+
+    /// Scheduler with one lane per co-resident model.
+    pub fn multi_model(lanes: Vec<LaneSpec>, packing: Packing, cfg: SchedConfig) -> LlmSched {
+        assert!(!lanes.is_empty(), "scheduler needs at least one lane");
+        LlmSched {
+            lanes: lanes
+                .into_iter()
+                .map(|l| Lane::new(Some(l.model), l.policy, l.kv_scale))
+                .collect(),
+            packing,
+            cfg,
+            scratch: Vec::new(),
+            cursor: 0,
+            planned: 0,
             admissions: 0,
         }
     }
 
     pub fn policy(&self) -> &dyn BatchPolicy {
-        &*self.policy
+        &*self.lanes[0].policy
     }
 
-    /// Can this scheduler's policy execute prompt processing?
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Model of lane `i` (`None` for the model-agnostic single lane).
+    pub fn lane_model(&self, i: usize) -> Option<ModelId> {
+        self.lanes[i].model
+    }
+
+    /// Can any lane's policy execute prompt processing?
     pub fn serves_prefill(&self) -> bool {
-        self.policy.serves_prefill()
+        self.lanes.iter().any(|l| l.policy.serves_prefill())
     }
 
-    /// Can this scheduler's policy execute token generation?
+    /// Can any lane's policy execute token generation?
     pub fn serves_decode(&self) -> bool {
-        self.policy.serves_decode()
+        self.lanes.iter().any(|l| l.policy.serves_decode())
+    }
+
+    pub fn lane_serves_prefill(&self, i: usize) -> bool {
+        self.lanes[i].policy.serves_prefill()
+    }
+
+    pub fn lane_serves_decode(&self, i: usize) -> bool {
+        self.lanes[i].policy.serves_decode()
     }
 
     pub fn enqueue(&mut self, id: ReqId) {
-        let fresh = self.waiting_set.insert(id);
+        self.enqueue_lane(0, id);
+    }
+
+    pub fn enqueue_lane(&mut self, lane: usize, id: ReqId) {
+        let l = &mut self.lanes[lane];
+        let fresh = l.waiting_set.insert(id);
         debug_assert!(fresh, "request {id} enqueued twice");
-        self.waiting.push_back(id);
+        l.waiting.push_back(id);
     }
 
     pub fn queue_len(&self) -> usize {
-        self.waiting_set.len()
+        self.lanes.iter().map(|l| l.waiting_set.len()).sum()
     }
 
     pub fn running_len(&self) -> usize {
-        self.running.len()
+        self.lanes.iter().map(|l| l.running.len()).sum()
+    }
+
+    pub fn lane_queue_len(&self, i: usize) -> usize {
+        self.lanes[i].waiting_set.len()
+    }
+
+    pub fn lane_running_len(&self, i: usize) -> usize {
+        self.lanes[i].running.len()
+    }
+
+    /// Σ reserved KV tokens of lane `i` — the per-model `kv_tokens`
+    /// feeding `Client::load_for_model`. O(1) incremental counter.
+    pub fn lane_kv_held(&self, i: usize) -> f64 {
+        self.lanes[i].kv_held_tokens
+    }
+
+    /// Recompute lane `i`'s reserved KV tokens from the reservation map
+    /// — ground truth for [`LlmSched::lane_kv_held`] in the per-model
+    /// drift invariant and the full-scan baseline. O(running); exact
+    /// regardless of iteration order because reservations are
+    /// integer-valued token counts.
+    pub fn lane_kv_recompute(&self, i: usize) -> f64 {
+        self.lanes[i].reserved.values().map(|r| r.tokens).sum()
     }
 
     pub fn is_idle(&self) -> bool {
-        self.waiting_set.is_empty() && self.running.is_empty()
+        self.lanes
+            .iter()
+            .all(|l| l.waiting_set.is_empty() && l.running.is_empty())
     }
 
     /// Remove a completed / transferred-out request. Returns the KV
-    /// tokens that were reserved for it (the caller releases them from
-    /// the KvManager), or `None` if it was never admitted. O(1) for
-    /// waiting requests (tombstoned, compacted lazily); O(running) for
-    /// admitted ones (bounded by the seq cap).
+    /// reservation (in shared-KvManager units) the caller must release,
+    /// or `None` if it was never admitted. O(1) for waiting requests
+    /// (tombstoned, compacted lazily); O(running) for admitted ones
+    /// (bounded by the seq cap). Searches lanes in order — a request
+    /// lives in exactly one lane.
     pub fn remove(&mut self, id: ReqId) -> Option<f64> {
-        if let Some(i) = self.running.iter().position(|r| *r == id) {
-            self.running.swap_remove(i);
-            let rsv = self
-                .reserved
-                .remove(&id)
-                .expect("running request without a reservation");
-            self.running_seqs -= rsv.seqs;
-            Some(rsv.kv)
-        } else {
-            if self.waiting_set.remove(&id) {
-                *self.gone.entry(id).or_insert(0) += 1;
+        for l in &mut self.lanes {
+            if let Some(i) = l.running.iter().position(|r| *r == id) {
+                l.running.swap_remove(i);
+                let rsv = l
+                    .reserved
+                    .remove(&id)
+                    .expect("running request without a reservation");
+                l.running_seqs -= rsv.seqs;
+                l.kv_held_tokens -= rsv.tokens;
+                return Some(rsv.kv_units);
             }
-            None
+            if l.waiting_set.remove(&id) {
+                *l.gone.entry(id).or_insert(0) += 1;
+                return None;
+            }
         }
+        None
     }
 
-    /// Admit from `waiting` in packing order while KV + seq caps allow.
-    /// Compacts tombstones out of the deque as a side effect.
-    fn admit(&mut self, pool: &RequestPool, kv: &mut KvManager) {
-        if self.waiting_set.is_empty() {
-            if !self.waiting.is_empty() {
+    /// Admit from a lane's `waiting` in packing order while the shared
+    /// KV pool and the per-lane seq cap allow. Compacts tombstones out
+    /// of the deque as a side effect.
+    fn admit(
+        lane: &mut Lane,
+        packing: Packing,
+        cfg: &SchedConfig,
+        pool: &RequestPool,
+        kv: &mut KvManager,
+        admissions: &mut u64,
+    ) {
+        if lane.waiting_set.is_empty() {
+            if !lane.waiting.is_empty() {
                 // only tombstones left — drop them
-                self.waiting.clear();
-                self.gone.clear();
+                lane.waiting.clear();
+                lane.gone.clear();
             }
             return;
         }
-        let mut cand = std::mem::take(&mut self.cand);
+        let mut cand = std::mem::take(&mut lane.cand);
         cand.clear();
-        if self.gone.is_empty() {
-            cand.extend(self.waiting.iter().copied());
+        if lane.gone.is_empty() {
+            cand.extend(lane.waiting.iter().copied());
         } else {
             // drop stale entries while collecting the live ones; a
             // re-enqueued id keeps its fresh entry because its stale
             // copies sit earlier in the FIFO and each consumes one
             // tombstone count
-            let gone = &mut self.gone;
-            let waiting = &mut self.waiting;
+            let gone = &mut lane.gone;
+            let waiting = &mut lane.waiting;
             waiting.retain(|id| {
                 if let Some(n) = gone.get_mut(id) {
                     *n -= 1;
@@ -242,33 +371,44 @@ impl LlmSched {
                 }
             });
         }
-        self.packing.order(&mut cand, pool);
+        packing.order(&mut cand, pool);
         for id in cand.iter().copied() {
             let seqs = pool[&id].decode_seqs();
-            if self.running_seqs + seqs > self.cfg.max_batch_seqs {
+            if lane.running_seqs + seqs > cfg.max_batch_seqs {
                 break;
             }
-            let tokens = self.policy.admit_tokens(&pool[&id]);
-            if kv.admit(tokens) {
-                self.waiting_set.remove(&id);
+            let tokens = lane.policy.admit_tokens(&pool[&id]);
+            if kv.admit(tokens * lane.kv_scale) {
+                lane.waiting_set.remove(&id);
                 // tombstone the (single, live) deque entry
-                *self.gone.entry(id).or_insert(0) += 1;
-                self.running.push(id);
-                self.running_seqs += seqs;
-                self.reserved.insert(id, Reservation { kv: tokens, seqs });
-                self.admissions += 1;
+                *lane.gone.entry(id).or_insert(0) += 1;
+                lane.running.push(id);
+                lane.running_seqs += seqs;
+                lane.reserved.insert(
+                    id,
+                    Reservation {
+                        kv_units: tokens * lane.kv_scale,
+                        tokens,
+                        seqs,
+                    },
+                );
+                lane.kv_held_tokens += tokens;
+                *admissions += 1;
             } else {
                 // FCFS head-of-line blocking: stop at the first request
                 // that does not fit (vLLM semantics)
                 break;
             }
         }
-        self.cand = cand;
+        lane.cand = cand;
     }
 
     /// Fill `plan` with the next step; returns `false` (and leaves the
-    /// plan empty) when there is nothing to run. The plan is a reusable
-    /// caller-owned buffer — no allocations in steady state.
+    /// plan empty) when there is nothing to run. Lanes are visited
+    /// round-robin starting at the cursor; the first lane that composes
+    /// a non-empty step wins it and the cursor moves past it (fairness
+    /// across co-resident models). The plan is a reusable caller-owned
+    /// buffer — no allocations in steady state.
     pub fn plan_into(
         &mut self,
         pool: &RequestPool,
@@ -276,17 +416,34 @@ impl LlmSched {
         plan: &mut StepPlan,
     ) -> bool {
         plan.clear();
-        if self.policy.admits_mid_batch() || self.running.is_empty() {
-            self.admit(pool, kv);
+        let n = self.lanes.len();
+        for k in 0..n {
+            let i = (self.cursor + k) % n;
+            let lane = &mut self.lanes[i];
+            if lane.policy.admits_mid_batch() || lane.running.is_empty() {
+                Self::admit(lane, self.packing, &self.cfg, pool, kv, &mut self.admissions);
+            }
+            let mut ctx = PlanCtx {
+                running: &lane.running,
+                cfg: &self.cfg,
+                packing: self.packing,
+                scratch: &mut self.scratch,
+            };
+            lane.policy.compose(&mut ctx, pool, plan);
+            if !plan.is_empty() {
+                self.planned = i;
+                self.cursor = (i + 1) % n;
+                return true;
+            }
         }
-        let mut ctx = PlanCtx {
-            running: &self.running,
-            cfg: &self.cfg,
-            packing: self.packing,
-            scratch: &mut self.scratch,
-        };
-        self.policy.compose(&mut ctx, pool, plan);
-        !plan.is_empty()
+        false
+    }
+
+    /// Lane of the plan most recently composed by
+    /// [`LlmSched::plan_into`] — the client prices and accounts the
+    /// step against this lane's model.
+    pub fn planned_lane(&self) -> usize {
+        self.planned
     }
 
     /// Allocating convenience wrapper around [`LlmSched::plan_into`]
@@ -551,5 +708,121 @@ mod tests {
         }
         let s = LlmSched::new(BatchingKind::PrefillOnly, Packing::Fcfs, SchedConfig::default());
         assert!(s.serves_prefill() && !s.serves_decode());
+    }
+
+    // ---- multi-model lanes -------------------------------------------------
+
+    use crate::model::ModelId;
+
+    fn mk_model(id: u64, model: &str, prompt: usize, out: usize) -> Request {
+        Request::new(
+            id,
+            model,
+            SimTime::from_secs(id as f64 * 0.01),
+            vec![Stage::Prefill, Stage::Decode],
+            prompt,
+            out,
+        )
+    }
+
+    fn two_lane() -> LlmSched {
+        LlmSched::multi_model(
+            vec![
+                LaneSpec {
+                    model: ModelId::named("llama3-8b"),
+                    policy: BatchingKind::Continuous.policy(),
+                    kv_scale: 1.0,
+                },
+                LaneSpec {
+                    model: ModelId::named("llama3-70b"),
+                    policy: BatchingKind::Continuous.policy(),
+                    kv_scale: 2.0,
+                },
+            ],
+            Packing::Fcfs,
+            SchedConfig::default(),
+        )
+    }
+
+    #[test]
+    fn lanes_round_robin_and_never_cobatch() {
+        let mut s = two_lane();
+        let mut pool = RequestPool::new();
+        let mut kv = KvManager::new(1e9);
+        pool.insert(1, mk_model(1, "llama3-8b", 100, 3));
+        pool.insert(2, mk_model(2, "llama3-70b", 200, 3));
+        s.enqueue_lane(0, 1);
+        s.enqueue_lane(1, 2);
+        assert_eq!(s.queue_len(), 2);
+        assert_eq!(s.lane_queue_len(0), 1);
+        // first step: lane 0 (cursor start); only the 8B request
+        let p1 = s.plan(&pool, &mut kv).unwrap();
+        assert_eq!(s.planned_lane(), 0);
+        assert_eq!(p1.prefill, vec![(1, 100)]);
+        apply(&p1, &mut pool);
+        // next step goes to lane 1 even though lane 0 still has work
+        let p2 = s.plan(&pool, &mut kv).unwrap();
+        assert_eq!(s.planned_lane(), 1);
+        assert_eq!(p2.prefill, vec![(2, 200)]);
+        apply(&p2, &mut pool);
+        // back to lane 0 for its decode
+        let p3 = s.plan(&pool, &mut kv).unwrap();
+        assert_eq!(s.planned_lane(), 0);
+        assert_eq!(p3.decode, vec![1]);
+    }
+
+    #[test]
+    fn shared_kv_pool_admits_across_lanes_by_scale() {
+        let mut s = two_lane();
+        let mut pool = RequestPool::new();
+        // pool of 500 units: lane0 peak = 110 units (scale 1), lane1
+        // peak = 2*(200+10) = 420 units — together they exceed capacity
+        let mut kv = KvManager::new(500.0);
+        pool.insert(1, mk_model(1, "llama3-8b", 100, 10));
+        pool.insert(2, mk_model(2, "llama3-70b", 200, 10));
+        s.enqueue_lane(0, 1);
+        s.enqueue_lane(1, 2);
+        let p = s.plan(&pool, &mut kv).unwrap();
+        assert_eq!(p.prefill, vec![(1, 100)]);
+        assert_eq!(kv.used_tokens, 110.0);
+        // per-lane held tokens are reported unscaled
+        assert_eq!(s.lane_kv_held(0), 110.0);
+        assert_eq!(s.lane_kv_held(1), 0.0);
+        apply(&p, &mut pool);
+        // next pass visits lane 1 first: its scaled reservation does not
+        // fit the shared pool, so the step falls back to lane 0's decode
+        let p2 = s.plan(&pool, &mut kv).unwrap();
+        assert_eq!(s.planned_lane(), 0);
+        assert_eq!(p2.decode, vec![1]);
+        assert_eq!(kv.rejections, 1, "lane 1 blocked by the shared budget");
+        assert_eq!(s.lane_running_len(1), 0);
+        assert_eq!(s.lane_queue_len(1), 1);
+        // releasing lane 0 frees the shared pool for lane 1
+        kv.release(s.remove(1).unwrap());
+        let p3 = s.plan(&pool, &mut kv).unwrap();
+        assert_eq!(p3.prefill, vec![(2, 200)]);
+        assert_eq!(kv.used_tokens, 420.0, "scaled reservation");
+        assert_eq!(s.lane_kv_held(1), 210.0, "token-denominated");
+    }
+
+    #[test]
+    fn remove_finds_requests_across_lanes() {
+        let mut s = two_lane();
+        let mut pool = RequestPool::new();
+        let mut kv = KvManager::new(1e9);
+        pool.insert(1, mk_model(1, "llama3-8b", 100, 3));
+        pool.insert(2, mk_model(2, "llama3-70b", 200, 3));
+        s.enqueue_lane(0, 1);
+        s.enqueue_lane(1, 2);
+        // two planning passes: one step (and admission) per lane
+        let p1 = s.plan(&pool, &mut kv).unwrap();
+        apply(&p1, &mut pool);
+        let p2 = s.plan(&pool, &mut kv).unwrap();
+        apply(&p2, &mut pool);
+        assert_eq!(s.running_len(), 2);
+        let released = s.remove(2).expect("admitted in lane 1");
+        assert_eq!(released, 2.0 * (200.0 + 3.0), "scaled units returned");
+        assert_eq!(s.running_len(), 1);
+        assert!(s.remove(99).is_none(), "unknown id is a no-op");
     }
 }

@@ -19,7 +19,7 @@ pub mod simple;
 
 use crate::workload::request::ReqId;
 
-pub use llm::{BatchingKind, LlmSched, SchedConfig};
+pub use llm::{BatchingKind, LaneSpec, LlmSched, SchedConfig};
 pub use packing::Packing;
 pub use policy::BatchPolicy;
 pub use pool::{PoolBackend, PoolOps, RequestPool};

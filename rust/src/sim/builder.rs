@@ -3,13 +3,17 @@
 //! goes through this builder, so serving topologies are described in one
 //! place.
 
+use std::collections::HashMap;
+
 use anyhow::{bail, Context, Result};
 
 use crate::client::{Client, KvRetrievalClient, LlmClient, PrePostClient, RagClient};
 use crate::coordinator::{Coordinator, RoutePolicy, Router};
 use crate::hardware::roofline::LlmCluster;
-use crate::hardware::{model, npu, ModelSpec, NpuSpec};
+use crate::hardware::{model_lookup, npu, ModelSpec, NpuSpec};
 use crate::memory::storage::{KvScenario, KvStore, StorageConfig};
+use crate::model::ModelId;
+use crate::model::policy::ModelPolicy;
 use crate::network::link::LinkSpec;
 use crate::network::{Granularity, Location, Network, NetworkKind};
 use crate::perfmodel::memo::Memoized;
@@ -121,6 +125,7 @@ pub enum NetSpec {
 /// Declarative serving-system specification.
 #[derive(Debug, Clone)]
 pub struct ServingSpec {
+    /// primary model (and the single model when `co_models` is empty)
     pub model: &'static str,
     pub npu: NpuSpec,
     pub tp: usize,
@@ -129,6 +134,12 @@ pub struct ServingSpec {
     pub packing: Packing,
     pub perf: PerfBackend,
     pub route: RoutePolicy,
+    /// additional models co-resident on EVERY LLM client (multi-model
+    /// serving, docs/models.md); the primary is always hosted and
+    /// duplicates are ignored
+    pub co_models: Vec<ModelId>,
+    /// dynamic model-selection policy for `Stage::ModelRoute` pipelines
+    pub model_policy: Option<ModelPolicy>,
     pub rag: Option<RagSpec>,
     pub kv_retrieval: Option<KvRetrievalSpec>,
     pub prepost: Option<PrePostSpec>,
@@ -149,6 +160,8 @@ impl ServingSpec {
             packing: Packing::Fcfs,
             perf: PerfBackend::Roofline,
             route: RoutePolicy::LoadBased(crate::coordinator::LoadMetric::TokensLeft),
+            co_models: Vec::new(),
+            model_policy: None,
             rag: None,
             kv_retrieval: None,
             prepost: None,
@@ -188,6 +201,18 @@ impl ServingSpec {
         self
     }
 
+    /// Co-host additional models on every LLM client.
+    pub fn with_co_models(mut self, models: Vec<ModelId>) -> ServingSpec {
+        self.co_models = models;
+        self
+    }
+
+    /// Set the dynamic model-selection policy.
+    pub fn with_model_policy(mut self, p: ModelPolicy) -> ServingSpec {
+        self.model_policy = Some(p);
+        self
+    }
+
     pub fn with_sched(mut self, s: SchedConfig) -> ServingSpec {
         self.sched = s;
         self
@@ -215,7 +240,7 @@ impl ServingSpec {
     fn make_perf(
         &self,
         cluster: &LlmCluster,
-        shared_exe: &mut Option<std::rc::Rc<crate::runtime::PredictorExe>>,
+        shared_exe: &mut HashMap<String, std::rc::Rc<crate::runtime::PredictorExe>>,
     ) -> Result<Box<dyn PerfModel>> {
         fn warn_fallback(reason: &str) {
             static ONCE: std::sync::Once = std::sync::Once::new();
@@ -262,8 +287,10 @@ impl ServingSpec {
                     warn_fallback(&format!("no AOT variant for {key}"));
                     return Ok(roofline());
                 }
-                // compile the variant once, share across the pool
-                if shared_exe.is_none() {
+                // compile each (model, npu, tp) variant once, share the
+                // executable across the pool — co-resident models get
+                // their own entries in the per-key map
+                if !shared_exe.contains_key(&key) {
                     let rt = match Runtime::cpu() {
                         Ok(rt) => rt,
                         Err(e) => {
@@ -273,14 +300,16 @@ impl ServingSpec {
                         }
                     };
                     match bundle.load_predictor(&rt, &key) {
-                        Ok(exe) => *shared_exe = Some(std::rc::Rc::new(exe)),
+                        Ok(exe) => {
+                            shared_exe.insert(key.clone(), std::rc::Rc::new(exe));
+                        }
                         Err(e) => {
                             warn_fallback(&format!("loading AOT predictor failed ({e})"));
                             return Ok(roofline());
                         }
                     }
                 }
-                let exe = shared_exe.as_ref().unwrap().clone();
+                let exe = shared_exe[&key].clone();
                 if self.perf == PerfBackend::Pjrt {
                     Box::new(PjrtPerfModel::new(exe))
                 } else {
@@ -290,13 +319,56 @@ impl ServingSpec {
         })
     }
 
+    /// One LLM client hosting the full co-resident model set (a single
+    /// entry degenerates to the classic single-model client).
+    fn make_llm_client(
+        &self,
+        id: usize,
+        kind: BatchingKind,
+        model_ids: &[ModelId],
+        shared_exe: &mut HashMap<String, std::rc::Rc<crate::runtime::PredictorExe>>,
+    ) -> Result<LlmClient> {
+        let mut entries = Vec::with_capacity(model_ids.len());
+        for m in model_ids {
+            let cluster = LlmCluster::new(m.spec().clone(), self.npu.clone(), self.tp);
+            let perf = self.make_perf(&cluster, shared_exe)?;
+            entries.push((cluster, perf, kind));
+        }
+        Ok(LlmClient::with_models(id, entries, self.packing, self.sched))
+    }
+
     /// Wire everything into a ready-to-inject coordinator.
     pub fn build(&self) -> Result<Coordinator> {
-        let model_spec = model(self.model).with_context(|| format!("unknown model {}", self.model))?;
-        let cluster = LlmCluster::new(model_spec.clone(), self.npu.clone(), self.tp);
+        let model_spec = model_lookup(self.model)?;
+
+        // co-resident model set hosted by every LLM client: primary
+        // first, then the deduped co_models
+        let mut model_ids = vec![ModelId::of_spec(&model_spec)];
+        for m in &self.co_models {
+            if !model_ids.contains(m) {
+                model_ids.push(*m);
+            }
+        }
+        // a model policy may only name hosted models — catch dangling
+        // references at build time, not mid-simulation
+        if let Some(p) = &self.model_policy {
+            for m in p.models() {
+                if !model_ids.contains(&m) {
+                    bail!(
+                        "model policy references '{m}' but the pool hosts only [{}]",
+                        model_ids
+                            .iter()
+                            .map(|m| m.name())
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    );
+                }
+            }
+        }
 
         let mut clients: Vec<Box<dyn Client>> = Vec::new();
-        let mut shared_exe: Option<std::rc::Rc<crate::runtime::PredictorExe>> = None;
+        let mut shared_exe: HashMap<String, std::rc::Rc<crate::runtime::PredictorExe>> =
+            HashMap::new();
         match &self.pool {
             PoolSpec::Combined { kind, n } => {
                 let (kind, n) = (*kind, *n);
@@ -305,13 +377,8 @@ impl ServingSpec {
                 }
                 for i in 0..n {
                     clients.push(Box::new(
-                        LlmClient::new(
-                            i,
-                            cluster.clone(),
-                            LlmSched::new(kind, self.packing, self.sched),
-                            self.make_perf(&cluster, &mut shared_exe)?,
-                        )
-                        .with_group(i),
+                        self.make_llm_client(i, kind, &model_ids, &mut shared_exe)?
+                            .with_group(i),
                     ));
                 }
             }
@@ -321,13 +388,8 @@ impl ServingSpec {
                 }
                 for (i, kind) in kinds.iter().enumerate() {
                     clients.push(Box::new(
-                        LlmClient::new(
-                            i,
-                            cluster.clone(),
-                            LlmSched::new(*kind, self.packing, self.sched),
-                            self.make_perf(&cluster, &mut shared_exe)?,
-                        )
-                        .with_group(i),
+                        self.make_llm_client(i, *kind, &model_ids, &mut shared_exe)?
+                            .with_group(i),
                     ));
                 }
             }
@@ -340,24 +402,24 @@ impl ServingSpec {
                 let groups = prefill.min(decode);
                 for i in 0..prefill {
                     clients.push(Box::new(
-                        LlmClient::new(
+                        self.make_llm_client(
                             i,
-                            cluster.clone(),
-                            LlmSched::new(BatchingKind::PrefillOnly, self.packing, self.sched),
-                            self.make_perf(&cluster, &mut shared_exe)?,
-                        )
+                            BatchingKind::PrefillOnly,
+                            &model_ids,
+                            &mut shared_exe,
+                        )?
                         .with_group(if local { i % groups } else { 0 }),
                     ));
                 }
                 for j in 0..decode {
                     let id = prefill + j;
                     clients.push(Box::new(
-                        LlmClient::new(
+                        self.make_llm_client(
                             id,
-                            cluster.clone(),
-                            LlmSched::new(BatchingKind::DecodeOnly, self.packing, self.sched),
-                            self.make_perf(&cluster, &mut shared_exe)?,
-                        )
+                            BatchingKind::DecodeOnly,
+                            &model_ids,
+                            &mut shared_exe,
+                        )?
                         .with_group(if local { j % groups } else { 0 }),
                     ));
                 }
@@ -418,6 +480,8 @@ impl ServingSpec {
 
         let mut coord = Coordinator::new(clients, Router::new(self.route), network);
         coord.granularity = self.granularity;
+        coord.model_policy = self.model_policy.clone();
+        coord.model_seed = self.seed;
         if matches!(self.pool, PoolSpec::Disaggregated { local: true, .. }) {
             coord.local_disagg = true;
         }
@@ -493,6 +557,76 @@ mod tests {
         )
         .build()
         .is_err());
+    }
+
+    #[test]
+    fn builds_multi_model_pool_and_validates_policy() {
+        use crate::model::ModelId;
+        use crate::model::policy::ModelPolicy;
+
+        let small = ModelId::named("llama3-8b");
+        let large = ModelId::named("llama3-70b");
+        let spec = ServingSpec::new(
+            "llama3-70b",
+            H100,
+            8,
+            PoolSpec::Combined { kind: BatchingKind::Continuous, n: 2 },
+        )
+        .with_co_models(vec![small]);
+        let coord = spec
+            .clone()
+            .with_model_policy(ModelPolicy::Cascade { small, large, escalate: 0.3 })
+            .build()
+            .unwrap();
+        // every LLM client hosts both models
+        for c in &coord.clients {
+            assert_eq!(c.served_models(), &[large, small]);
+        }
+        // dangling policy reference is a build error
+        let err = spec
+            .with_model_policy(ModelPolicy::Static {
+                choices: vec![(ModelId::named("bloom-176b"), 1.0)],
+            })
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("bloom-176b"), "{err}");
+    }
+
+    #[test]
+    fn multi_model_cascade_build_runs_end_to_end() {
+        use crate::model::ModelId;
+        use crate::model::policy::ModelPolicy;
+        use crate::workload::trace::Pipeline;
+
+        let small = ModelId::named("llama3-8b");
+        let large = ModelId::named("llama3-70b");
+        let spec = ServingSpec::new(
+            "llama3-70b",
+            H100,
+            8,
+            PoolSpec::Combined { kind: BatchingKind::Continuous, n: 2 },
+        )
+        .with_co_models(vec![small])
+        .with_model_policy(ModelPolicy::Cascade { small, large, escalate: 0.4 })
+        .with_seed(31);
+        let mut coord = spec.build().unwrap();
+        let reqs = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 24, 3.0)
+            .with_seed(31)
+            .with_pipeline(Pipeline::Cascade)
+            .generate(0);
+        coord.inject(reqs);
+        coord.run();
+        assert!(coord.all_serviced(), "serviced {}", coord.serviced.len());
+        // the cascade touched both models on the shared clients
+        let finished_large = coord
+            .serviced
+            .iter()
+            .filter(|id| coord.pool[*id].model == large)
+            .count();
+        let finished_small = coord.serviced.len() - finished_large;
+        assert!(finished_large > 0, "some requests must escalate");
+        assert!(finished_small > 0, "some requests must finish small");
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! depend on these *shapes*, not on individual trace rows (DESIGN.md §3).
 
 use super::request::{KvParams, RagParams, Request, Stage};
+use crate::model::ModelId;
 use crate::sim::SimTime;
 use crate::util::rng::{Arrival, Pcg};
 
@@ -73,6 +74,14 @@ pub enum Pipeline {
     /// preprocess → prefill → decode → postprocess (hallucination/
     /// safeguard verification, Fig 1a)
     Guarded,
+    /// model-route → prefill → decode: the serving model is chosen per
+    /// request by the run's model policy (MIST's "dynamic model routing"
+    /// as a first-class stage)
+    Routed,
+    /// model-route → prefill → decode → model-route → prefill → decode:
+    /// small-model-first with an escalation point after the first answer
+    /// (the cascade policy finishes or re-runs on the large model)
+    Cascade,
 }
 
 impl Pipeline {
@@ -88,6 +97,15 @@ impl Pipeline {
                 Stage::Prefill,
                 Stage::Decode,
                 Stage::Postprocess,
+            ],
+            Pipeline::Routed => vec![Stage::ModelRoute, Stage::Prefill, Stage::Decode],
+            Pipeline::Cascade => vec![
+                Stage::ModelRoute,
+                Stage::Prefill,
+                Stage::Decode,
+                Stage::ModelRoute,
+                Stage::Prefill,
+                Stage::Decode,
             ],
         }
     }
@@ -106,7 +124,9 @@ pub enum Reasoning {
 /// Full workload specification — one entry per request class.
 #[derive(Debug, Clone)]
 pub struct WorkloadSpec {
-    pub model: &'static str,
+    /// the initial serving model (routed pipelines may rewrite a
+    /// request's model at its `ModelRoute` stages)
+    pub model: ModelId,
     pub trace: TraceKind,
     pub pipeline: Pipeline,
     pub reasoning: Reasoning,
@@ -116,9 +136,9 @@ pub struct WorkloadSpec {
 }
 
 impl WorkloadSpec {
-    pub fn new(model: &'static str, trace: TraceKind, n: usize, rate: f64) -> WorkloadSpec {
+    pub fn new(model: impl Into<ModelId>, trace: TraceKind, n: usize, rate: f64) -> WorkloadSpec {
         WorkloadSpec {
-            model,
+            model: model.into(),
             trace,
             pipeline: Pipeline::Regular,
             reasoning: Reasoning::None,
@@ -355,6 +375,13 @@ mod tests {
             Stage::KvRetrieval(KvParams { cached_tokens: 3000 })
         );
         assert_eq!(Pipeline::Guarded.stages().len(), 4);
+        assert_eq!(
+            Pipeline::Routed.stages(),
+            vec![Stage::ModelRoute, Stage::Prefill, Stage::Decode]
+        );
+        let cascade = Pipeline::Cascade.stages();
+        assert_eq!(cascade.len(), 6);
+        assert_eq!(cascade[3], Stage::ModelRoute, "escalation point after decode");
     }
 
     #[test]

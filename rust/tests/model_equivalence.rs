@@ -1,0 +1,183 @@
+//! Multi-model machinery acceptance (same style as
+//! `pool_equivalence.rs`): the degenerate single-model path through the
+//! new multi-model serving layer must be bit-identical to the plain
+//! path it replaced.
+//!
+//! * identity routing: a `ModelRoute`-bearing pipeline under an
+//!   identity policy (static 100% one model — or no policy at all)
+//!   reproduces the plain pipeline's serviced order, clock and every
+//!   latency/energy sample exactly;
+//! * inert policy: configuring a model policy on a pipeline with no
+//!   `ModelRoute` stages changes nothing;
+//! * co-model dedup: listing the primary model as a co-model builds the
+//!   same single-model clients;
+//! * per-model loads: for single-model clients, `load_for_model` ==
+//!   `load` after every event of a full mixed run (checked via the
+//!   coordinator's extended load invariant).
+
+use hermes::client::Client;
+use hermes::config::slo::SloLadder;
+use hermes::coordinator::Coordinator;
+use hermes::hardware::npu::H100;
+use hermes::metrics::RunMetrics;
+use hermes::model::ModelId;
+use hermes::model::policy::ModelPolicy;
+use hermes::sim::builder::{PoolSpec, ServingSpec};
+use hermes::workload::trace::{Pipeline, TraceKind, WorkloadSpec};
+
+fn disagg_spec() -> ServingSpec {
+    ServingSpec::new(
+        "llama3-70b",
+        H100,
+        4,
+        PoolSpec::Disaggregated { prefill: 2, decode: 2, local: false },
+    )
+    .with_seed(37)
+}
+
+fn workload(n: usize, pipeline: Pipeline) -> Vec<hermes::workload::request::Request> {
+    WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, n, 5.0)
+        .with_seed(41)
+        .with_pipeline(pipeline)
+        .generate(0)
+}
+
+fn run(spec: &ServingSpec, pipeline: Pipeline) -> (Coordinator, RunMetrics) {
+    let mut coord = spec.build().unwrap();
+    coord.inject(workload(60, pipeline));
+    coord.run();
+    let m = RunMetrics::collect(&coord, &SloLadder::standard());
+    (coord, m)
+}
+
+fn assert_bit_identical(a: &(Coordinator, RunMetrics), b: &(Coordinator, RunMetrics)) {
+    let ((ca, ma), (cb, mb)) = (a, b);
+    assert!(ca.all_serviced(), "serviced {}", ca.serviced.len());
+    assert_eq!(ca.serviced, cb.serviced, "completion order diverged");
+    assert_eq!(ca.clock, cb.clock);
+    assert_eq!(ma.events, mb.events);
+    assert_eq!(ma.makespan, mb.makespan);
+    assert_eq!(ma.n_serviced, mb.n_serviced);
+    assert_eq!(ma.n_failed, mb.n_failed);
+    assert_eq!(ma.ttft_samples, mb.ttft_samples);
+    assert_eq!(ma.tpot_samples, mb.tpot_samples);
+    assert_eq!(ma.e2e_samples, mb.e2e_samples);
+    assert_eq!(ma.transfer_bytes, mb.transfer_bytes);
+    assert_eq!(ma.energy_joules, mb.energy_joules);
+    assert_eq!(ma.goodput_frac, mb.goodput_frac);
+}
+
+#[test]
+fn routed_pipeline_with_identity_policy_matches_plain_run() {
+    let plain = run(&disagg_spec(), Pipeline::Regular);
+    // same requests, but each one passes a ModelRoute stage resolved by
+    // a static 100%-same-model policy before prefill
+    let spec = disagg_spec().with_model_policy(ModelPolicy::Static {
+        choices: vec![(ModelId::named("llama3-70b"), 1.0)],
+    });
+    let routed = run(&spec, Pipeline::Routed);
+    assert_bit_identical(&plain, &routed);
+}
+
+#[test]
+fn routed_pipeline_without_policy_matches_plain_run() {
+    // no policy configured: ModelRoute is the identity stage
+    let plain = run(&disagg_spec(), Pipeline::Regular);
+    let routed = run(&disagg_spec(), Pipeline::Routed);
+    assert_bit_identical(&plain, &routed);
+}
+
+#[test]
+fn policy_on_plain_pipeline_is_inert() {
+    let plain = run(&disagg_spec(), Pipeline::Regular);
+    let with_policy = disagg_spec().with_model_policy(ModelPolicy::Threshold {
+        threshold_tokens: 1024,
+        small: ModelId::named("llama3-70b"),
+        large: ModelId::named("llama3-70b"),
+    });
+    let run_b = run(&with_policy, Pipeline::Regular);
+    assert_bit_identical(&plain, &run_b);
+}
+
+#[test]
+fn primary_listed_as_co_model_dedupes_to_single_model_clients() {
+    let plain = run(&disagg_spec(), Pipeline::Regular);
+    let spec = disagg_spec().with_co_models(vec![ModelId::named("llama3-70b")]);
+    {
+        let coord = spec.build().unwrap();
+        for c in &coord.clients {
+            assert_eq!(
+                c.served_models(),
+                &[ModelId::named("llama3-70b")],
+                "duplicate co-model must dedupe away"
+            );
+        }
+    }
+    let deduped = run(&spec, Pipeline::Regular);
+    assert_bit_identical(&plain, &deduped);
+}
+
+/// Multi-model runs must be routing-identical across load modes too:
+/// the per-model incremental counters and the per-model whole-pool
+/// scan are two computations of the same candidate loads.
+#[test]
+fn multi_model_cascade_identical_across_load_modes() {
+    use hermes::coordinator::LoadMode;
+
+    let small = ModelId::named("llama3-8b");
+    let large = ModelId::named("llama3-70b");
+    let spec = ServingSpec::new(
+        "llama3-70b",
+        H100,
+        8,
+        PoolSpec::Combined {
+            kind: hermes::scheduler::BatchingKind::Continuous,
+            n: 2,
+        },
+    )
+    .with_co_models(vec![small])
+    .with_model_policy(ModelPolicy::Cascade { small, large, escalate: 0.35 })
+    .with_seed(43);
+    let run_mode = |mode: LoadMode| {
+        let mut coord = spec.build().unwrap();
+        coord.load_mode = mode;
+        coord.inject(workload(50, Pipeline::Cascade));
+        coord.run();
+        let m = RunMetrics::collect(&coord, &SloLadder::standard());
+        (coord, m)
+    };
+    let inc = run_mode(LoadMode::Incremental);
+    let full = run_mode(LoadMode::FullScan);
+    assert_bit_identical(&inc, &full);
+    // and the run actually exercised both models
+    let escalated = inc
+        .0
+        .serviced
+        .iter()
+        .filter(|id| inc.0.pool[*id].model == large)
+        .count();
+    assert!(escalated > 0 && escalated < inc.0.serviced.len());
+}
+
+/// Drive a run event-by-event, asserting the full load invariant —
+/// including the per-(client, model) half — after every event, and
+/// that single-model clients report identical aggregate and per-model
+/// loads throughout.
+#[test]
+fn per_model_loads_match_aggregate_for_single_model_clients() {
+    let m70 = ModelId::named("llama3-70b");
+    let mut coord = disagg_spec().build().unwrap();
+    coord.inject(workload(40, Pipeline::Regular));
+    let mut events = 0u64;
+    while coord.step_event() {
+        events += 1;
+        coord.assert_load_invariant();
+        for c in &coord.clients {
+            if c.served_models() == [m70] {
+                assert_eq!(c.load_for_model(m70), c.load(), "event {events}");
+            }
+        }
+    }
+    assert!(events > 0);
+    assert!(coord.all_serviced());
+}

@@ -45,6 +45,50 @@ fn every_shipped_scenario_parses_builds_and_generates() {
     }
 }
 
+/// The `hermes scenario check` contract: every shipped file resolves
+/// all model / model-policy / npu references at both scales.
+#[test]
+fn every_shipped_scenario_passes_reference_check() {
+    let names = Scenario::list();
+    for must in ["multi_model", "bench_multimodel_100k"] {
+        assert!(names.iter().any(|n| n == must), "missing scenario {must}");
+    }
+    for name in names {
+        let sc = Scenario::load(&name).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        sc.check().unwrap_or_else(|e| panic!("{name}: check: {e:#}"));
+    }
+}
+
+/// The multi-model scenario runs end-to-end: co-resident clients, a
+/// cascade policy, and a two-route pipeline, with some requests
+/// finishing on each model.
+#[test]
+fn multi_model_scenario_runs_end_to_end() {
+    use hermes::model::ModelId;
+
+    let sc = Scenario::load("multi_model").unwrap();
+    let scale = sc.scale(true).clone();
+    let spec = sc.serving(&sc.roster[0], scale.clients).unwrap();
+    assert!(spec.co_models.contains(&ModelId::named("llama3-8b")));
+    assert!(spec.model_policy.is_some());
+    let mut coord = spec.build().unwrap();
+    let n = scale.clients * scale.requests_per_client;
+    coord.inject(sc.workload(None, n).unwrap().generate());
+    coord.run();
+    assert!(coord.all_serviced(), "serviced {}", coord.serviced.len());
+    let large = ModelId::named("llama3-70b");
+    let escalated = coord
+        .serviced
+        .iter()
+        .filter(|id| coord.pool[*id].model == large)
+        .count();
+    assert!(
+        escalated > 0 && escalated < coord.serviced.len(),
+        "escalation fraction must split the population: {escalated}/{}",
+        coord.serviced.len()
+    );
+}
+
 #[test]
 fn scenario_document_roundtrips_through_disk() {
     let sc = Scenario::load("fig10").unwrap();
