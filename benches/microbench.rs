@@ -1,7 +1,10 @@
 //! Microbenchmarks of the simulator hot path (§III-E.1's "20–50×
 //! simulation speedup" claim, plus the L3 perf-pass metrics tracked in
 //! EXPERIMENTS.md §Perf):
-//!   * event-queue throughput
+//!   * event-queue throughput (bulk and steady-state push/pop)
+//!   * request-pool hot loop: insert, indexed access, and the
+//!     insert/retire/reuse cycle behind streaming arrivals + request
+//!     retirement — committed baselines for future queue/pool changes
 //!   * perf-model backends: roofline vs native poly vs PJRT vs memoized
 //!   * end-to-end simulated-seconds-per-wall-second
 
@@ -15,10 +18,11 @@ use hermes::perfmodel::pjrt::PjrtPerfModel;
 use hermes::perfmodel::poly::PolyPerfModel;
 use hermes::perfmodel::{PerfModel, RooflinePerfModel, StepFeatures};
 use hermes::runtime::ArtifactBundle;
-use hermes::scheduler::BatchingKind;
+use hermes::scheduler::{BatchingKind, RequestPool};
 use hermes::sim::builder::{PerfBackend, PoolSpec, ServingSpec};
 use hermes::sim::{driver, SimTime};
 use hermes::util::bench::{banner, black_box, time_fn};
+use hermes::workload::request::{Request, Stage};
 use hermes::workload::trace::{TraceKind, WorkloadSpec};
 
 const KEY: &str = "llama3-70b@h100/tp8";
@@ -36,6 +40,74 @@ fn bench_event_queue() {
         while let Some(e) = q.pop() {
             black_box(e);
         }
+    });
+    // the event loop's actual access pattern: a small queue cycling
+    // push/pop in steady state (streaming arrivals keep it this small)
+    time_fn("steady-state push/pop, 256-deep, 100k cycles", 1, 10, || {
+        let mut q = EventQueue::new();
+        for i in 0..256u64 {
+            q.push(SimTime::from_nanos(i * 977), Event::EngineStep { client: 0 });
+        }
+        for i in 0..100_000u64 {
+            let (t, e) = q.pop().unwrap();
+            black_box(e);
+            q.push(
+                t + SimTime::from_nanos(1 + i % 997),
+                Event::EngineStep {
+                    client: (i % 64) as usize,
+                },
+            );
+        }
+    });
+}
+
+fn pool_request(id: u64) -> Request {
+    Request::new(
+        id,
+        "llama3-70b",
+        SimTime::ZERO,
+        vec![Stage::Prefill, Stage::Decode],
+        1024,
+        128,
+    )
+}
+
+/// Commit a baseline for the pool hot loop: raw insert throughput, the
+/// get/get_mut access path, and the streaming+retirement steady state
+/// (insert + retire through the freelist with a bounded live window).
+fn bench_request_pool() {
+    banner("request pool (arena)");
+    time_fn("insert 100k (no retirement)", 1, 10, || {
+        let mut pool = RequestPool::new();
+        for id in 0..100_000u64 {
+            pool.insert(id, pool_request(id));
+        }
+        black_box(pool.ops());
+    });
+    let mut pool = RequestPool::new();
+    for id in 0..100_000u64 {
+        pool.insert(id, pool_request(id));
+    }
+    time_fn("1M random-ish get/get_mut over 100k ids", 1, 10, || {
+        let mut acc = 0usize;
+        for i in 0..1_000_000u64 {
+            let id = (i * 48_271) % 100_000;
+            acc += pool[&id].prompt_tokens;
+            pool.get_mut(&id).unwrap().decoded = (i % 7) as usize;
+        }
+        black_box(acc);
+    });
+    time_fn("insert+retire+reuse, 1k live window, 100k ids", 1, 10, || {
+        let mut pool = RequestPool::new();
+        for id in 0..100_000u64 {
+            pool.insert(id, pool_request(id));
+            if id >= 1000 {
+                pool.remove(id - 1000);
+            }
+        }
+        let ops = pool.ops();
+        assert!(ops.slots <= 1001 + 1, "freelist must bound slots: {}", ops.slots);
+        black_box(ops);
     });
 }
 
@@ -119,6 +191,7 @@ fn bench_end_to_end() {
 
 fn main() {
     bench_event_queue();
+    bench_request_pool();
     bench_perf_models();
     bench_end_to_end();
 }

@@ -5,25 +5,32 @@
 //! traffic "as fast as the hardware allows"; peers treat simulation
 //! speed as a first-class deliverable (LLMServingSim, Frontier). This
 //! harness runs the `scenarios/bench_*.json` scenarios — parameterized
-//! large-scale single runs of 50k–200k requests across LLM / RAG /
+//! large-scale single runs of 50k–1M requests across LLM / RAG /
 //! KV-retrieval pools — and reports wall-clock, events/second, peak
-//! pool sizes and request-pool operation counters, writing
-//! `BENCH_core.json` so every subsequent PR has a perf trajectory to
-//! defend.
+//! pool sizes, request-pool operation counters and the O(in-flight)
+//! memory columns (`peak_resident_slots` / `resident_bytes_est` /
+//! `retired`), writing `BENCH_core.json` so every subsequent PR has a
+//! perf trajectory to defend.
 //!
 //! Every scenario runs in the shipping configuration first: the dense
 //! arena-backed [`RequestPool`] with incremental O(1) load accounting
-//! ([`LoadMode::Incremental`]). Two baselines quantify the two hot-path
-//! refactors:
+//! ([`LoadMode::Incremental`]), in the scenario's [`ExecMode`]
+//! (`extras.stream` / `extras.retire`). Three baselines quantify the
+//! hot-path refactors:
 //!
 //! * **hashmap pool** ([`PoolBackend::Map`], incremental routing) — the
 //!   pre-arena pool; runs whenever the baseline setting is not `off`
-//!   (it costs about as much as the main run). Reported as
+//!   and the scenario doesn't set `extras.map_pool: false` (it costs
+//!   about as much as the main run). Reported as
 //!   `speedup_vs_hashmap_pool`.
 //! * **full scan** ([`LoadMode::FullScan`], hashmap pool) — the
 //!   pre-incremental-routing path, O(pool × clients) per routing
 //!   decision; opt-in via `extras.baseline` or `--baseline on` (hours
 //!   at 100k+ scale). Reported as `speedup_vs_full_scan`.
+//! * **retirement off** (eager injection, nothing retired) — the
+//!   pre-streaming memory behavior, run only for scenarios whose
+//!   shipping mode streams or retires; its `peak_resident_slots` is
+//!   the whole trace. Reported as `resident_slots_reduction`.
 //!
 //! See `docs/performance.md`.
 
@@ -38,10 +45,25 @@ use crate::scenario::Scenario;
 use crate::scheduler::{PoolBackend, RequestPool};
 use crate::util::json::Json;
 
+/// How the run feeds and drains its requests: eager/retained (the
+/// pre-streaming default) vs streaming arrivals and/or request
+/// retirement. Scenario files opt in via `extras.stream` /
+/// `extras.retire` (see `scenarios/bench_llm_1m.json`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ExecMode {
+    /// lazy arrival source (`Coordinator::stream`) instead of upfront
+    /// injection — the queue and pool never hold the whole trace
+    pub stream: bool,
+    /// retire finished requests (`Coordinator::retire`) — pool slots
+    /// recycle, resident memory tracks peak in-flight
+    pub retire: bool,
+}
+
 /// Timing and scale counters from one benchmark run.
 #[derive(Debug, Clone)]
 pub struct BenchRun {
-    /// wall-clock seconds spent draining the event queue
+    /// wall-clock seconds spent draining the event queue (streamed
+    /// runs: request generation happens inside the loop and is included)
     pub wall_s: f64,
     pub events: u64,
     pub events_per_s: f64,
@@ -65,6 +87,13 @@ pub struct BenchRun {
     pub pool_slots: usize,
     /// high-water mark of client-resident requests (arena occupancy)
     pub pool_peak_resident: usize,
+    /// high-water mark of simultaneously stored requests — the
+    /// O(in-flight) memory claim as a number (`peak_resident_slots`)
+    pub peak_resident_slots: usize,
+    /// peak estimated bytes of stored requests (struct + pipeline array)
+    pub resident_bytes_est: usize,
+    /// requests whose pool slot was freed for reuse during the run
+    pub retired: u64,
 }
 
 /// One scenario's outcome: the shipping run plus the enabled baselines.
@@ -72,12 +101,20 @@ pub struct BenchRun {
 pub struct BenchResult {
     pub name: String,
     pub title: String,
+    /// the scenario's execution mode (applied to the shipping run and
+    /// the pool/routing baselines alike, so their ratios compare pools,
+    /// not modes)
+    pub exec: ExecMode,
     /// arena pool + incremental load accounting (the shipping config)
     pub incremental: BenchRun,
     /// `LoadMode::FullScan` + hashmap pool (pre-incremental routing)
     pub baseline: Option<BenchRun>,
     /// hashmap pool + incremental routing (pre-arena pool)
     pub map_pool: Option<BenchRun>,
+    /// eager injection + no retirement (the pre-streaming memory
+    /// behavior) — only run for scenarios whose shipping mode streams
+    /// or retires, so the O(in-flight) claim has an O(total) reference
+    pub retained: Option<BenchRun>,
 }
 
 impl BenchResult {
@@ -93,6 +130,14 @@ impl BenchResult {
         self.map_pool
             .as_ref()
             .map(|b| b.wall_s / self.incremental.wall_s.max(1e-12))
+    }
+
+    /// Retained-baseline peak slots / shipping-run peak slots
+    /// (>1 = streaming+retirement holds fewer requests resident).
+    pub fn residency_reduction(&self) -> Option<f64> {
+        self.retained.as_ref().map(|b| {
+            b.peak_resident_slots as f64 / self.incremental.peak_resident_slots.max(1) as f64
+        })
     }
 }
 
@@ -115,16 +160,21 @@ pub fn bench_scenarios() -> Vec<String> {
         .collect()
 }
 
-/// Run `sc` once under `mode`/`backend` and time the event loop.
-/// Workload generation and pool construction happen outside the timed
-/// section; the wall clock covers exactly what `Coordinator::run` does,
-/// and the pool counters are reset after injection so they cover the
-/// same window.
+/// Run `sc` once under `mode`/`backend`/`exec` and time the event
+/// loop. Pool construction happens outside the timed section and the
+/// pool counters are reset after injection. Eager runs generate the
+/// whole workload outside the clock; streamed runs sample each request
+/// lazily *inside* the event loop (that cost is included in the wall
+/// clock), while the source's one-time O(n) timestamp pre-advance —
+/// replaying the arrival draws to position each class's token rng —
+/// happens in `Coordinator::stream`, outside the timed section like
+/// eager generation.
 pub fn run_once(
     sc: &Scenario,
     fast: bool,
     mode: LoadMode,
     backend: PoolBackend,
+    exec: ExecMode,
 ) -> Result<BenchRun> {
     let scale = sc.scale(fast);
     let entry = sc
@@ -140,13 +190,17 @@ pub fn run_once(
     let mix = sc
         .workload(None, n_requests)?
         .scaled(n_requests, rate * spec.pool.n_clients() as f64);
-    let requests = mix.generate();
-    let n_requests = requests.len();
+    let n_requests = mix.n_total();
 
     let mut coord = spec.build()?;
     coord.load_mode = mode;
     coord.pool = RequestPool::with_backend(backend);
-    coord.inject(requests);
+    coord.retire = exec.retire;
+    if exec.stream {
+        coord.stream(&mix);
+    } else {
+        coord.inject(mix.generate());
+    }
     coord.pool.reset_ops();
     let t0 = Instant::now();
     coord.run();
@@ -170,36 +224,66 @@ pub fn run_once(
         pool_writes: ops.writes,
         pool_slots: ops.slots,
         pool_peak_resident: ops.peak_resident,
+        peak_resident_slots: ops.peak_live,
+        resident_bytes_est: ops.peak_bytes_est,
+        retired: ops.retired,
     })
 }
 
 /// Benchmark one scenario by registry name or path.
 pub fn run_scenario(name: &str, fast: bool, baseline: Baseline) -> Result<BenchResult> {
     let sc = Scenario::load(name)?;
-    let incremental = run_once(&sc, fast, LoadMode::Incremental, PoolBackend::Arena)?;
-    // pre-arena pool: same asymptotics as the shipping run, so it is
-    // cheap enough to run by default
-    let map_pool = if baseline == Baseline::Off {
+    let extras = sc.extras();
+    let exec = ExecMode {
+        stream: extras.bool_or("stream", false),
+        retire: extras.bool_or("retire", false),
+    };
+    let incremental = run_once(&sc, fast, LoadMode::Incremental, PoolBackend::Arena, exec)?;
+    // pre-arena pool: same asymptotics as the shipping run, so it runs
+    // by default. Scenarios whose full-scale run is long enough that a
+    // doubled wall clock hurts (the 1M tier) opt out via
+    // `extras.map_pool: false` — but only at full scale (the stated
+    // cost does not exist at fast scale), and never over an explicit
+    // `--baseline on`
+    let skip_map = !extras.bool_or("map_pool", true)
+        && baseline != Baseline::On
+        && !sc.use_fast(fast);
+    let map_pool = if baseline == Baseline::Off || skip_map {
         None
     } else {
-        Some(run_once(&sc, fast, LoadMode::Incremental, PoolBackend::Map)?)
+        Some(run_once(&sc, fast, LoadMode::Incremental, PoolBackend::Map, exec)?)
     };
     let want_full_scan = match baseline {
         Baseline::On => true,
         Baseline::Off => false,
-        Baseline::Auto => sc.extras().bool_or("baseline", false) || sc.use_fast(fast),
+        Baseline::Auto => extras.bool_or("baseline", false) || sc.use_fast(fast),
     };
-    let baseline = if want_full_scan {
-        Some(run_once(&sc, fast, LoadMode::FullScan, PoolBackend::Map)?)
+    let baseline_run = if want_full_scan {
+        Some(run_once(&sc, fast, LoadMode::FullScan, PoolBackend::Map, exec)?)
+    } else {
+        None
+    };
+    // the O(in-flight) reference: eager injection, nothing retired —
+    // its peak_resident_slots is the whole trace
+    let retained = if (exec.stream || exec.retire) && baseline != Baseline::Off {
+        Some(run_once(
+            &sc,
+            fast,
+            LoadMode::Incremental,
+            PoolBackend::Arena,
+            ExecMode::default(),
+        )?)
     } else {
         None
     };
     Ok(BenchResult {
         name: sc.name.clone(),
         title: sc.title.clone(),
+        exec,
         incremental,
-        baseline,
+        baseline: baseline_run,
         map_pool,
+        retained,
     })
 }
 
@@ -219,7 +303,10 @@ fn run_to_json(b: &BenchRun) -> Json {
         .set("pool_reads", b.pool_reads)
         .set("pool_writes", b.pool_writes)
         .set("pool_slots", b.pool_slots)
-        .set("pool_peak_resident", b.pool_peak_resident);
+        .set("pool_peak_resident", b.pool_peak_resident)
+        .set("peak_resident_slots", b.peak_resident_slots)
+        .set("resident_bytes_est", b.resident_bytes_est)
+        .set("retired", b.retired);
     j
 }
 
@@ -231,6 +318,8 @@ pub fn to_json(results: &[BenchResult]) -> Json {
             let mut j = Json::obj();
             j.set("name", r.name.clone())
                 .set("title", r.title.clone())
+                .set("stream", r.exec.stream)
+                .set("retire", r.exec.retire)
                 .set("incremental", run_to_json(&r.incremental));
             if let Some(b) = &r.baseline {
                 j.set("full_scan_baseline", run_to_json(b));
@@ -243,6 +332,12 @@ pub fn to_json(results: &[BenchResult]) -> Json {
             }
             if let Some(s) = r.pool_speedup() {
                 j.set("speedup_vs_hashmap_pool", s);
+            }
+            if let Some(b) = &r.retained {
+                j.set("retirement_off_baseline", run_to_json(b));
+            }
+            if let Some(x) = r.residency_reduction() {
+                j.set("resident_slots_reduction", x);
             }
             j
         })
@@ -277,6 +372,25 @@ pub fn run_and_report(
             "  pool: {} reads  {} writes  {} slots  peak resident {}",
             inc.pool_reads, inc.pool_writes, inc.pool_slots, inc.pool_peak_resident
         );
+        println!(
+            "  memory: peak {} resident slots (~{:.1} MiB est){}{}",
+            inc.peak_resident_slots,
+            inc.resident_bytes_est as f64 / (1024.0 * 1024.0),
+            if r.exec.stream { "  [streamed]" } else { "" },
+            if r.exec.retire {
+                format!("  [{} retired]", inc.retired)
+            } else {
+                String::new()
+            }
+        );
+        if let Some(b) = &r.retained {
+            println!(
+                "  retirement-off baseline: peak {} resident slots (~{:.1} MiB est) -> {:.0}x residency reduction",
+                b.peak_resident_slots,
+                b.resident_bytes_est as f64 / (1024.0 * 1024.0),
+                r.residency_reduction().unwrap_or(0.0)
+            );
+        }
         if let Some(b) = &r.map_pool {
             println!(
                 "  hashmap-pool baseline: {:.3}s wall ({:.0} events/s) -> {:.2}x arena speedup",
@@ -298,7 +412,7 @@ pub fn run_and_report(
 
     let mut table = crate::util::bench::Table::new(&[
         "scenario", "requests", "clients", "wall(s)", "events/s", "sim-s/wall-s", "peak queue",
-        "pool r/w", "vs hashmap", "vs full-scan",
+        "peak slots", "retired", "vs hashmap", "vs full-scan",
     ]);
     for r in &results {
         table.row(&[
@@ -309,7 +423,8 @@ pub fn run_and_report(
             format!("{:.0}", r.incremental.events_per_s),
             format!("{:.1}", r.incremental.sim_rate),
             r.incremental.peak_queue.to_string(),
-            format!("{}/{}", r.incremental.pool_reads, r.incremental.pool_writes),
+            r.incremental.peak_resident_slots.to_string(),
+            r.incremental.retired.to_string(),
             r.pool_speedup()
                 .map(|s| format!("{s:.2}x"))
                 .unwrap_or_else(|| "-".to_string()),
@@ -337,6 +452,40 @@ mod tests {
         );
         assert!(names.iter().any(|n| n == "bench_mixed_100k"));
         assert!(names.iter().any(|n| n == "bench_kv_200k"));
+        assert!(names.iter().any(|n| n == "bench_llm_1m"));
+    }
+
+    #[test]
+    fn million_request_tier_stays_o_inflight_at_fast_scale() {
+        if std::env::var("HERMES_FULL").is_ok() {
+            return;
+        }
+        // fast scale of the 1M tier: same shape, 10k requests. The
+        // acceptance bound — peak resident slots ≤ 5% of the trace —
+        // must hold here; the full-scale number lands in BENCH_core.json
+        let r = run_scenario("bench_llm_1m", true, Baseline::Auto).unwrap();
+        assert!(r.exec.stream && r.exec.retire, "1m tier ships streamed+retired");
+        let inc = &r.incremental;
+        assert_eq!(inc.n_serviced, inc.n_requests);
+        assert_eq!(inc.retired as usize, inc.n_requests, "every request retired");
+        assert!(
+            inc.peak_resident_slots * 20 <= inc.n_requests,
+            "peak resident slots {} exceeds 5% of {} requests",
+            inc.peak_resident_slots,
+            inc.n_requests
+        );
+        // the event queue never held the trace either
+        assert!(inc.peak_queue < inc.n_requests / 2, "queue held the trace");
+        // the retained baseline materializes everything — the contrast
+        // the O(in-flight) claim is measured against
+        let retained = r.retained.as_ref().expect("retirement-off baseline runs");
+        assert_eq!(retained.peak_resident_slots, retained.n_requests);
+        assert_eq!(retained.retired, 0);
+        assert!(r.residency_reduction().unwrap() >= 20.0);
+        // and the simulation itself is identical in both modes
+        assert_eq!(retained.events, inc.events);
+        assert_eq!(retained.n_serviced, inc.n_serviced);
+        assert_eq!(retained.makespan_s, inc.makespan_s);
     }
 
     #[test]

@@ -76,6 +76,13 @@ impl EventQueue {
         self.heap.pop().map(|Reverse((t, _, s))| (t, decode(s)))
     }
 
+    /// Timestamp of the next event without popping it — the coordinator
+    /// arbitrates between the queue head and the lazy arrival source's
+    /// pending request.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|Reverse((t, _, _))| *t)
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -119,6 +126,18 @@ mod tests {
                 Event::EngineStep { client: 30 }
             ]
         );
+    }
+
+    #[test]
+    fn peek_reports_head_time_without_popping() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek_time(), None);
+        q.push(SimTime::from_secs(2.0), Event::EngineStep { client: 1 });
+        q.push(SimTime::from_secs(1.0), Event::EngineStep { client: 2 });
+        assert_eq!(q.peek_time(), Some(SimTime::from_secs(1.0)));
+        assert_eq!(q.len(), 2, "peek must not consume");
+        let _ = q.pop();
+        assert_eq!(q.peek_time(), Some(SimTime::from_secs(2.0)));
     }
 
     #[test]

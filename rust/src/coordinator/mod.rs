@@ -12,7 +12,9 @@ use crate::model::policy::{ModelPolicy, RouteDecision};
 use crate::network::{Granularity, Network};
 use crate::scheduler::RequestPool;
 use crate::sim::SimTime;
-use crate::workload::request::{ReqId, Request, Stage};
+use crate::workload::request::{CompletionRecord, ReqId, Request, Stage};
+use crate::workload::stream::StreamingMix;
+use crate::workload::trace::WorkloadMix;
 
 pub use event::{Event, EventQueue};
 pub use router::{Candidate, LoadMetric, RoutePolicy, Router};
@@ -26,12 +28,55 @@ pub struct CoordStats {
     pub transfer_seconds: f64,
     pub recomputes: u64,
     pub failed: u64,
+    /// requests that entered the system (eagerly injected or emitted by
+    /// the streaming arrival source) — the run-total denominator now
+    /// that the pool only holds live requests under retirement
+    pub injected: u64,
     /// largest event-queue length observed after any event
     pub peak_queue: usize,
     /// requests currently arrived but not yet finished/failed
     pub inflight: usize,
     /// high-water mark of `inflight` (the bench harness's "peak pool")
     pub peak_inflight: usize,
+}
+
+/// Where the coordinator's requests come from.
+///
+/// The eager path materializes the whole trace upfront
+/// ([`Coordinator::inject`]): every request sits in the pool and every
+/// arrival event sits in the queue at t=0 — O(total requests) memory
+/// before the first event fires. [`ArrivalSource::Streaming`] instead
+/// holds a lazy generator ([`StreamingMix`]) that keeps **at most one
+/// pending arrival per workload-class stream**; the coordinator pulls
+/// the next request at its arrival instant, so queue and pool stay
+/// O(in-flight). The two paths are bit-identical
+/// (`rust/tests/retirement_equivalence.rs`): the lazy source draws the
+/// same PCG streams in the same order, and arrivals win ties against
+/// same-time queued events exactly as the eager path's upfront pushes
+/// (smallest sequence numbers) do.
+pub enum ArrivalSource {
+    /// all requests were injected eagerly (or none at all)
+    Materialized,
+    /// lazy deterministic generator; one pending request per class
+    Streaming(StreamingMix),
+}
+
+impl ArrivalSource {
+    /// Arrival time of the next pending request, if any.
+    fn peek(&self) -> Option<SimTime> {
+        match self {
+            ArrivalSource::Materialized => None,
+            ArrivalSource::Streaming(s) => s.peek_arrival(),
+        }
+    }
+
+    /// No more arrivals will ever be emitted.
+    pub fn drained(&self) -> bool {
+        match self {
+            ArrivalSource::Materialized => true,
+            ArrivalSource::Streaming(s) => s.remaining() == 0,
+        }
+    }
 }
 
 /// How the router obtains candidate loads.
@@ -56,6 +101,19 @@ pub struct Coordinator {
     pub pool: RequestPool,
     pub queue: EventQueue,
     pub clock: SimTime,
+    /// where arrivals come from: eager injection (default) or the lazy
+    /// streaming generator ([`Coordinator::stream`])
+    pub source: ArrivalSource,
+    /// retire finished/failed requests: fold each into a
+    /// [`CompletionRecord`] and free its pool slot, so resident pool
+    /// memory tracks peak in-flight instead of total injected. Off by
+    /// default — the retained pool keeps post-run inspection
+    /// (`coord.pool[id]`, trace export) working.
+    pub retire: bool,
+    /// one compact record per finished/failed request, in completion
+    /// order — what `RunMetrics::collect` consumes (identical with
+    /// retirement on or off)
+    pub records: Vec<CompletionRecord>,
     /// completed requests, in completion order
     pub serviced: Vec<ReqId>,
     /// requests that can never be placed (exceed every client's memory)
@@ -94,6 +152,9 @@ impl Coordinator {
             pool: RequestPool::new(),
             queue: EventQueue::new(),
             clock: SimTime::ZERO,
+            source: ArrivalSource::Materialized,
+            retire: false,
+            records: Vec::new(),
             serviced: Vec::new(),
             failed: Vec::new(),
             granularity: Granularity::Layerwise { layers: 80 },
@@ -107,7 +168,10 @@ impl Coordinator {
         }
     }
 
-    /// Inject a workload (requests enter at their arrival timestamps).
+    /// Inject a workload eagerly (requests enter at their arrival
+    /// timestamps; the pool and queue hold the whole trace upfront).
+    /// Duplicate request ids are rejected by the pool — identically on
+    /// both backends.
     pub fn inject(&mut self, requests: Vec<Request>) {
         for r in requests {
             self.queue.push(
@@ -117,21 +181,60 @@ impl Coordinator {
                     dst: None,
                 },
             );
+            self.stats.injected += 1;
             self.pool.insert(r.id, r);
         }
     }
 
-    /// Algorithm 1: drain the event queue.
+    /// Attach a lazy arrival source instead of eager injection: requests
+    /// are generated at their arrival instants from the same PCG streams
+    /// `mix.generate()` would consume, so the run is bit-identical to
+    /// the materialized path while the event queue and pool stay
+    /// O(in-flight). Combine with [`Coordinator::retire`] for whole-run
+    /// O(peak in-flight) memory. Do not mix with [`Coordinator::inject`]
+    /// in the same run unless the id ranges are disjoint.
+    pub fn stream(&mut self, mix: &WorkloadMix) {
+        self.source = ArrivalSource::Streaming(StreamingMix::new(mix));
+    }
+
+    /// Algorithm 1: drain the arrival source and the event queue.
     pub fn run(&mut self) {
         while self.step_event() {}
     }
 
-    /// Pop and process a single event; returns `false` once the queue
-    /// is drained. Exposed so tests can interleave per-event checks
-    /// (the load-invariant differential test) with the event loop.
+    /// Process a single event — the next pending arrival from the lazy
+    /// source or the head of the event queue, whichever is earlier —
+    /// and return `false` once both are drained. Exposed so tests can
+    /// interleave per-event checks (the load-invariant differential
+    /// test) with the event loop.
+    ///
+    /// Arrivals win ties against same-time queued events: in the eager
+    /// path every arrival event is pushed before the run starts, so it
+    /// carries a smaller sequence number than any event generated
+    /// during the run — the streaming path must preserve that order to
+    /// stay bit-identical. Ties among pending arrivals are broken by
+    /// request id inside the source, matching the eager path's
+    /// `(arrival, id)` injection order.
     pub fn step_event(&mut self) -> bool {
-        let Some((t, e)) = self.queue.pop() else {
-            return false;
+        let arrival_next = match (self.source.peek(), self.queue.peek_time()) {
+            (Some(ta), Some(te)) => ta <= te,
+            (Some(_), None) => true,
+            (None, _) => false,
+        };
+        let (t, e) = if arrival_next {
+            let ArrivalSource::Streaming(s) = &mut self.source else {
+                unreachable!("arrival_next implies a streaming source")
+            };
+            let r = s.next().expect("peeked arrival must exist");
+            let (t, id) = (r.arrival, r.id);
+            self.stats.injected += 1;
+            self.pool.insert(id, r);
+            (t, Event::RequestPush { req: id, dst: None })
+        } else {
+            let Some((t, e)) = self.queue.pop() else {
+                return false;
+            };
+            (t, e)
         };
         debug_assert!(t >= self.clock, "time went backwards");
         self.clock = t;
@@ -313,12 +416,18 @@ impl Coordinator {
     }
 
     /// The request completed its final stage (or a model policy ended
-    /// its pipeline early): stamp it and retire it from flight.
+    /// its pipeline early): stamp it, fold it into a
+    /// [`CompletionRecord`], and — under retirement — free its pool
+    /// slot for reuse.
     fn complete(&mut self, id: ReqId) {
         let r = self.pool.get_mut(&id).unwrap();
         r.finished = Some(self.clock);
+        self.records.push(CompletionRecord::of(r, false));
         self.serviced.push(id);
         self.stats.inflight -= 1;
+        if self.retire {
+            self.pool.remove(id);
+        }
     }
 
     /// Consume `ModelRoute` stages at the request's current position.
@@ -431,7 +540,12 @@ impl Coordinator {
         self.stats.failed += 1;
         self.failed.push(id);
         self.stats.inflight -= 1;
-        self.pool.get_mut(&id).unwrap().finished = None;
+        let r = self.pool.get_mut(&id).unwrap();
+        r.finished = None;
+        self.records.push(CompletionRecord::of(r, true));
+        if self.retire {
+            self.pool.remove(id);
+        }
     }
 
     fn activate(&mut self, c: usize) {
@@ -440,9 +554,12 @@ impl Coordinator {
         }
     }
 
-    /// All injected requests that completed every stage.
+    /// Every request that entered (or will enter) the system completed
+    /// or failed. Counter-based — the pool only holds *live* requests
+    /// under retirement, so `pool.len()` is no longer the run total.
     pub fn all_serviced(&self) -> bool {
-        self.serviced.len() + self.failed.len() == self.pool.len()
+        self.source.drained()
+            && (self.serviced.len() + self.failed.len()) as u64 == self.stats.injected
     }
 }
 
@@ -763,6 +880,92 @@ mod tests {
         assert!(coord.all_serviced());
         assert!(coord.clients[0].stats().requests_served > 0);
         assert!(coord.clients[1].stats().requests_served > 0);
+    }
+
+    #[test]
+    fn inject_rejects_duplicate_ids_on_both_backends() {
+        // both pool backends must reject a duplicate id with the same
+        // error — the arena would corrupt its resident index and the
+        // map would silently overwrite
+        for backend in [
+            crate::scheduler::PoolBackend::Arena,
+            crate::scheduler::PoolBackend::Map,
+        ] {
+            let mut coord = Coordinator::new(
+                vec![llm_client(0, BatchingKind::Continuous)],
+                Router::new(RoutePolicy::RoundRobin),
+                Network::single_platform(1),
+            );
+            coord.pool = RequestPool::with_backend(backend);
+            let mut reqs = workload(2, 4.0);
+            reqs[1].id = reqs[0].id;
+            let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                coord.inject(reqs);
+            }))
+            .expect_err("duplicate id must be rejected");
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_default();
+            assert!(
+                msg.contains("duplicate request id"),
+                "{backend:?}: unexpected panic message: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_source_with_retirement_drains_and_bounds_pool() {
+        use crate::workload::trace::WorkloadMix;
+
+        let mk = || {
+            let clients = vec![
+                llm_client(0, BatchingKind::Continuous),
+                llm_client(1, BatchingKind::Continuous),
+            ];
+            Coordinator::new(
+                clients,
+                Router::new(RoutePolicy::LoadBased(LoadMetric::TokensLeft)),
+                Network::single_platform(2),
+            )
+        };
+        let mix = WorkloadMix::single(
+            WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 40, 4.0).with_seed(11),
+        );
+        // baseline: eager + retained
+        let mut eager = mk();
+        eager.inject(mix.generate());
+        eager.run();
+        // streaming + retirement
+        let mut lazy = mk();
+        lazy.stream(&mix);
+        lazy.retire = true;
+        lazy.run();
+        assert!(lazy.all_serviced(), "serviced {}", lazy.serviced.len());
+        assert_eq!(lazy.serviced, eager.serviced, "completion order diverged");
+        assert_eq!(lazy.clock, eager.clock);
+        assert_eq!(lazy.stats.events, eager.stats.events);
+        assert_eq!(lazy.stats.injected, 40);
+        // every slot was freed; the pool never held the whole trace
+        let ops = lazy.pool.ops();
+        assert_eq!(ops.len, 0, "all requests retired");
+        assert_eq!(ops.retired, 40);
+        assert!(
+            ops.peak_live < 40,
+            "peak live {} must stay below the trace length",
+            ops.peak_live
+        );
+        assert_eq!(
+            ops.peak_live, lazy.stats.peak_inflight,
+            "pool occupancy must track in-flight exactly"
+        );
+        // records survive retirement, in completion order
+        assert_eq!(lazy.records.len(), 40);
+        for (rec, id) in lazy.records.iter().zip(&lazy.serviced) {
+            assert_eq!(rec.id, *id);
+            assert!(!rec.failed);
+        }
     }
 
     #[test]

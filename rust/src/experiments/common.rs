@@ -54,22 +54,41 @@ pub fn print_normalized(results: &[StrategyResult], caption: &str) {
     t.print();
 }
 
-/// Winner summary across objectives (feeds Table III).
+/// Winner summary across objectives (feeds Table III). Total
+/// comparisons throughout — the per-strategy bests can legitimately
+/// carry NaN metrics (e.g. a zero-makespan degenerate point), and a
+/// NaN must lose the cross-strategy ranking instead of panicking the
+/// way `partial_cmp().unwrap()` did (the same convention as
+/// `driver::best_under_slo`).
 pub fn winners(results: &[StrategyResult]) -> (Option<String>, Option<String>, Option<String>) {
+    fn nan_loses_min(x: f64) -> f64 {
+        if x.is_nan() {
+            f64::INFINITY
+        } else {
+            x
+        }
+    }
+    fn nan_loses_max(x: f64) -> f64 {
+        if x.is_nan() {
+            f64::NEG_INFINITY
+        } else {
+            x
+        }
+    }
     let ttft = results
         .iter()
         .filter_map(|r| r.best_ttft().map(|t| (r.label.clone(), t)))
-        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .min_by(|a, b| nan_loses_min(a.1).total_cmp(&nan_loses_min(b.1)))
         .map(|(l, _)| l);
     let thr = results
         .iter()
         .filter_map(|r| r.best().map(|p| (r.label.clone(), p.metrics.throughput_tok_s)))
-        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .max_by(|a, b| nan_loses_max(a.1).total_cmp(&nan_loses_max(b.1)))
         .map(|(l, _)| l);
     let energy = results
         .iter()
         .filter_map(|r| r.best_energy().map(|p| (r.label.clone(), p.metrics.tok_per_joule)))
-        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .max_by(|a, b| nan_loses_max(a.1).total_cmp(&nan_loses_max(b.1)))
         .map(|(l, _)| l);
     (ttft, thr, energy)
 }
@@ -106,5 +125,50 @@ mod tests {
         assert_eq!(results[3].label, "disagg-1P/1D");
         let (_, thr, _) = winners(&results);
         let _ = thr; // may be None if nothing passes SLO at this scale
+    }
+
+    #[test]
+    fn winners_tolerate_nan_metrics_without_panicking_or_crowning_them() {
+        use crate::metrics::RunMetrics;
+        use crate::sim::driver::SweepPoint;
+        use crate::util::stats::Summary;
+
+        let point = |thr: f64, tpj: f64, ttft_p50: f64| SweepPoint {
+            rate: 1.0,
+            metrics: RunMetrics {
+                throughput_tok_s: thr,
+                tok_per_joule: tpj,
+                ttft: Summary {
+                    p50: ttft_p50,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            slo_ok: true,
+        };
+        // a strategy whose only SLO-passing point has NaN metrics (a
+        // zero-makespan degenerate) ranked against a healthy one: the
+        // pre-fix partial_cmp().unwrap() panicked here
+        let results = vec![
+            StrategyResult {
+                label: "nan".into(),
+                points: vec![point(f64::NAN, f64::NAN, f64::NAN)],
+            },
+            StrategyResult {
+                label: "healthy".into(),
+                points: vec![point(100.0, 5.0, 0.2)],
+            },
+        ];
+        let (ttft, thr, energy) = winners(&results);
+        assert_eq!(ttft.as_deref(), Some("healthy"), "NaN TTFT must lose");
+        assert_eq!(thr.as_deref(), Some("healthy"), "NaN throughput must lose");
+        assert_eq!(energy.as_deref(), Some("healthy"), "NaN tok/J must lose");
+        // all-NaN input: no panic, some winner is reported
+        let all_nan = vec![StrategyResult {
+            label: "only".into(),
+            points: vec![point(f64::NAN, f64::NAN, f64::NAN)],
+        }];
+        let (t, h, e) = winners(&all_nan);
+        assert!(t.is_some() && h.is_some() && e.is_some());
     }
 }

@@ -42,15 +42,24 @@ pub struct RunMetrics {
 }
 
 impl RunMetrics {
-    /// Collect from a drained coordinator.
+    /// Collect from a drained coordinator, consuming the
+    /// [`CompletionRecord`](crate::workload::request::CompletionRecord)s
+    /// the coordinator folded each finished request into. Works
+    /// identically with request retirement on or off — the records (not
+    /// the possibly-recycled pool) carry every sample, in serviced
+    /// order, so the output is bit-identical to the legacy
+    /// retained-pool scan ([`RunMetrics::collect_from_pool`], pinned by
+    /// `rust/tests/retirement_equivalence.rs`).
     pub fn collect(coord: &Coordinator, slo: &SloLadder) -> RunMetrics {
         let mut ttft = Vec::new();
         let mut tpot = Vec::new();
         let mut e2e = Vec::new();
         let mut tokens = 0f64;
         let mut slo_ok = 0usize;
-        for id in &coord.serviced {
-            let r = &coord.pool[id];
+        // non-failed records are pushed at the same instant a request
+        // joins `serviced`, so this iterates in serviced order — f64
+        // accumulation order matches the pool-scan path exactly
+        for r in coord.records.iter().filter(|r| !r.failed) {
             let t1 = r.ttft().unwrap_or(f64::INFINITY);
             let tp = r.tpot();
             let te = r.e2e_latency().unwrap_or(f64::INFINITY);
@@ -69,11 +78,52 @@ impl RunMetrics {
                 slo_ok += 1;
             }
         }
+        Self::assemble(coord, coord.stats.injected as usize, ttft, tpot, e2e, tokens, slo_ok)
+    }
+
+    /// Legacy collection path: scan the retained request pool via the
+    /// serviced list. Requires a run with retirement off (the default);
+    /// kept verbatim as the ground truth the record-based
+    /// [`RunMetrics::collect`] is differentially tested against.
+    pub fn collect_from_pool(coord: &Coordinator, slo: &SloLadder) -> RunMetrics {
+        let mut ttft = Vec::new();
+        let mut tpot = Vec::new();
+        let mut e2e = Vec::new();
+        let mut tokens = 0f64;
+        let mut slo_ok = 0usize;
+        for id in &coord.serviced {
+            let r = &coord.pool[id];
+            let t1 = r.ttft().unwrap_or(f64::INFINITY);
+            let tp = r.tpot();
+            let te = r.e2e_latency().unwrap_or(f64::INFINITY);
+            ttft.push(t1);
+            if let Some(tp) = tp {
+                tpot.push(tp);
+            }
+            e2e.push(te);
+            tokens += r.generated_tokens() as f64;
+            if slo.request_ok(t1, tp) {
+                slo_ok += 1;
+            }
+        }
+        Self::assemble(coord, coord.pool.len(), ttft, tpot, e2e, tokens, slo_ok)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn assemble(
+        coord: &Coordinator,
+        n_requests: usize,
+        ttft: Vec<f64>,
+        tpot: Vec<f64>,
+        e2e: Vec<f64>,
+        tokens: f64,
+        slo_ok: usize,
+    ) -> RunMetrics {
         let makespan = coord.clock.as_secs();
         let energy: f64 = coord.clients.iter().map(|c| c.stats().energy_joules).sum();
         let n = coord.serviced.len();
         RunMetrics {
-            n_requests: coord.pool.len(),
+            n_requests,
             n_serviced: n,
             n_failed: coord.failed.len(),
             makespan,
@@ -219,6 +269,14 @@ mod tests {
         r2.first_token_time = Some(SimTime::from_secs(0.1));
         r2.last_token_time = Some(SimTime::from_secs(0.1));
         r2.finished = Some(SimTime::from_secs(0.1));
+        // collect() consumes completion records, as the coordinator's
+        // complete() would have produced them
+        coord
+            .records
+            .push(crate::workload::request::CompletionRecord::of(&r1, false));
+        coord
+            .records
+            .push(crate::workload::request::CompletionRecord::of(&r2, false));
         coord.pool.insert(1, r1);
         coord.pool.insert(2, r2);
         coord.serviced = vec![1, 2];
@@ -230,6 +288,25 @@ mod tests {
         assert!((m.tpot.p50 - 0.01).abs() < 1e-9, "p50={}", m.tpot.p50);
         // ...and it passes the per-request SLO check (TTFT ok, no TPOT)
         assert_eq!(m.goodput_frac, 1.0);
+    }
+
+    #[test]
+    fn record_collection_matches_pool_scan() {
+        // the record-based path must reproduce the legacy retained-pool
+        // scan bit for bit (the full differential lives in
+        // rust/tests/retirement_equivalence.rs)
+        let coord = run_small();
+        let slo = SloLadder::standard();
+        let a = RunMetrics::collect(&coord, &slo);
+        let b = RunMetrics::collect_from_pool(&coord, &slo);
+        assert_eq!(a.n_requests, b.n_requests);
+        assert_eq!(a.n_serviced, b.n_serviced);
+        assert_eq!(a.ttft_samples, b.ttft_samples);
+        assert_eq!(a.tpot_samples, b.tpot_samples);
+        assert_eq!(a.e2e_samples, b.e2e_samples);
+        assert_eq!(a.throughput_tok_s, b.throughput_tok_s);
+        assert_eq!(a.goodput_frac, b.goodput_frac);
+        assert_eq!(a.tok_per_joule, b.tok_per_joule);
     }
 
     #[test]

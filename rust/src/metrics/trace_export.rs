@@ -9,7 +9,10 @@
 use crate::coordinator::Coordinator;
 use crate::util::json::Json;
 
-/// Build the Chrome-trace document for a drained coordinator.
+/// Build the Chrome-trace document for a drained coordinator. Scans
+/// the retained request pool, so it requires a run with request
+/// retirement off (the default) — retired runs keep only compact
+/// completion records, which carry no per-stage spans.
 pub fn chrome_trace(coord: &Coordinator) -> Json {
     let mut events: Vec<Json> = Vec::new();
     for (id, r) in &coord.pool {

@@ -663,6 +663,9 @@ mod tests {
             setup(BatchingKind::Continuous, vec![mk(1, 10, 2), mk(2, 10, 2)]);
         assert!(s.remove(1).is_none());
         assert_eq!(s.queue_len(), 1);
+        // the pool rejects duplicate ids, so retire the old payload
+        // before storing the fresh request under the same id
+        pool.remove(1);
         pool.insert(1, mk(1, 30, 2));
         s.enqueue(1);
         assert_eq!(s.queue_len(), 2);
@@ -682,6 +685,7 @@ mod tests {
         let (mut s, mut pool, mut kv) =
             setup(BatchingKind::Continuous, vec![mk(1, 10, 2), mk(2, 10, 2)]);
         assert!(s.remove(1).is_none()); // deque [1s, 2]
+        pool.remove(1); // duplicate ids are rejected: retire, then re-insert
         pool.insert(1, mk(1, 30, 2));
         s.enqueue(1); // deque [1s, 2, 1]
         assert!(s.remove(1).is_none()); // deque [1s, 2, 1s]

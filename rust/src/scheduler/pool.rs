@@ -1,43 +1,55 @@
-//! Arena-backed request pool.
+//! Arena-backed request pool with slot recycling.
 //!
-//! The coordinator owns every request for the lifetime of a run and the
-//! hot loop touches the pool on every event: scheduler admission, step
-//! planning, token progress, load release, routing. The seed kept the
-//! pool as a `HashMap<ReqId, Request>`, which pays a hash per access and
+//! The coordinator owns every live request and the hot loop touches the
+//! pool on every event: scheduler admission, step planning, token
+//! progress, load release, routing. The seed kept the pool as a
+//! `HashMap<ReqId, Request>`, which pays a hash per access and
 //! pointer-chases on iteration; worse, `recompute_load` (the full-scan
 //! baseline and the debug-mode drift invariant) scanned the *entire*
 //! pool per client.
 //!
-//! [`RequestPool`] replaces it with a dense arena: request ids are
-//! assigned sequentially by the workload generators
-//! (`WorkloadSpec::generate` / `WorkloadMix::generate` hand out dense id
-//! ranges from 0), so a `Vec<Option<Request>>` indexed directly by
-//! `ReqId` gives O(1) hash-free access and cache-friendly linear
-//! iteration. A per-client *resident index* (`by_client` + per-slot
+//! [`RequestPool`] replaces it with a dense arena plus a slot
+//! indirection layer: request ids are assigned sequentially by the
+//! workload generators (`WorkloadSpec::generate` / `WorkloadMix::
+//! generate` / the streaming source hand out dense id ranges from 0),
+//! so an `index: Vec<u32>` maps each id to its payload slot in O(1)
+//! with no hashing. Retiring a request ([`RequestPool::remove`]) frees
+//! its slot through a LIFO freelist, so under request retirement the
+//! payload storage — the `Request` structs with their heap-allocated
+//! `stages`/`records` — is **O(peak in-flight)**, not O(total
+//! injected); only the 4-byte indirection entry per id ever seen
+//! remains. A per-client *resident index* (`by_client` + per-slot
 //! position) is maintained by [`RequestPool::assign`] /
 //! [`RequestPool::unassign`] in O(1), so per-client recomputation
-//! ([`RequestPool::iter_client`]) is O(resident on that client) instead
-//! of O(total pool).
+//! ([`RequestPool::iter_client`]) is O(resident on that client).
+//!
+//! Both backends reject duplicate ids with the same panic — the
+//! coordinator's injection paths rely on ids being unique, and the
+//! arena would otherwise corrupt its resident index where the map
+//! would silently overwrite.
 //!
 //! The old map representation survives as [`PoolBackend::Map`] — a
 //! reference implementation behind the same API, used by the
-//! differential tests (`rust/tests/pool_equivalence.rs`) and the
-//! `hermes bench` hashmap baseline to prove the arena is behaviorally
-//! invisible and measurably faster.
+//! differential tests (`rust/tests/pool_equivalence.rs`,
+//! `rust/tests/retirement_equivalence.rs`) and the `hermes bench`
+//! hashmap baseline to prove the arena is behaviorally invisible and
+//! measurably faster.
 //!
 //! Every access is counted (reads via a `Cell`, so `Index` can count
-//! too); `hermes bench` reports the totals and the arena high-water
-//! marks (see [`PoolOps`]).
+//! too); `hermes bench` reports the totals, the live/resident
+//! high-water marks and a resident-bytes estimate (see [`PoolOps`]).
 
 use std::cell::Cell;
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 
-use crate::workload::request::{ReqId, Request};
+use crate::workload::request::{ReqId, Request, Stage};
 
 /// Which storage backs the pool.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PoolBackend {
-    /// dense `Vec` slots indexed by `ReqId` — the shipping configuration
+    /// dense `Vec` slots behind an id→slot indirection — the shipping
+    /// configuration
     Arena,
     /// `HashMap` reference implementation — differential tests and the
     /// `hermes bench` pre-arena baseline only
@@ -53,13 +65,25 @@ impl PoolBackend {
     }
 }
 
+/// `index` sentinel: the id has no payload slot (never inserted, or
+/// retired).
+const NO_SLOT: u32 = u32::MAX;
+
 enum Backend {
     Arena {
-        /// slot i holds the request with id i (ids are dense)
+        /// payload slots; capacity grows only when the freelist is
+        /// empty, so `slots.len()` is the high-water mark of
+        /// simultaneously live requests
         slots: Vec<Option<Request>>,
-        /// position of each assigned id inside its client's resident
-        /// list (`u32::MAX` = unassigned); parallel to `slots`
+        /// position of each *slot* inside its client's resident list
+        /// (`u32::MAX` = unassigned); parallel to `slots`
         pos: Vec<u32>,
+        /// id → slot indirection (`NO_SLOT` = not stored); 4 bytes per
+        /// id ever seen
+        index: Vec<u32>,
+        /// vacated slots awaiting reuse (LIFO — deterministic, and the
+        /// warmest slot is reused first)
+        free: Vec<u32>,
         len: usize,
     },
     Map {
@@ -72,13 +96,23 @@ enum Backend {
 pub struct PoolOps {
     pub reads: u64,
     pub writes: u64,
-    /// allocated arena slots (map backend: live entries)
+    /// allocated payload slots (map backend: live entries) — under
+    /// retirement this tracks peak in-flight, not total injected
     pub slots: usize,
     /// requests currently stored
     pub len: usize,
+    /// high-water mark of `len` — `peak_resident_slots` in BENCH_core
+    pub peak_live: usize,
+    /// requests retired via [`RequestPool::remove`]
+    pub retired: u64,
+    /// estimated bytes of currently stored requests (struct + pipeline
+    /// array; see `request_bytes_est`)
+    pub bytes_est: usize,
+    /// high-water mark of `bytes_est` — `resident_bytes_est` in BENCH_core
+    pub peak_bytes_est: usize,
     /// requests currently resident on some client
     pub resident: usize,
-    /// high-water mark of `resident` — the arena occupancy peak
+    /// high-water mark of `resident` — the client-occupancy peak
     pub peak_resident: usize,
 }
 
@@ -89,9 +123,22 @@ pub struct RequestPool {
     by_client: Vec<Vec<ReqId>>,
     resident: usize,
     peak_resident: usize,
+    peak_live: usize,
+    retired: u64,
+    live_bytes: usize,
+    peak_bytes: usize,
     /// `Cell` so `Index`/`get` (shared-ref paths) can count too
     reads: Cell<u64>,
     writes: Cell<u64>,
+}
+
+/// Rough resident footprint of one request: the struct itself plus its
+/// pipeline array. `records` is excluded — it grows *during* residence,
+/// and using the same formula at insert and remove keeps the running
+/// total drift-free. An estimate for the bench columns, not an
+/// allocator measurement.
+fn request_bytes_est(r: &Request) -> usize {
+    std::mem::size_of::<Request>() + r.stages.capacity() * std::mem::size_of::<Stage>()
 }
 
 impl Default for RequestPool {
@@ -116,6 +163,8 @@ impl RequestPool {
             PoolBackend::Arena => Backend::Arena {
                 slots: Vec::new(),
                 pos: Vec::new(),
+                index: Vec::new(),
+                free: Vec::new(),
                 len: 0,
             },
             PoolBackend::Map => Backend::Map {
@@ -127,6 +176,10 @@ impl RequestPool {
             by_client: Vec::new(),
             resident: 0,
             peak_resident: 0,
+            peak_live: 0,
+            retired: 0,
+            live_bytes: 0,
+            peak_bytes: 0,
             reads: Cell::new(0),
             writes: Cell::new(0),
         }
@@ -139,44 +192,113 @@ impl RequestPool {
         }
     }
 
-    /// Store `r` under `id` (replacing any previous occupant, HashMap
-    /// semantics). Ids must be dense-ish: the arena allocates slots up
-    /// to the largest id seen.
+    /// Store `r` under `id`. Ids must be dense-ish (the arena's
+    /// indirection grows to the largest id seen) and unique among
+    /// stored requests: inserting an id that is currently present
+    /// panics — identically on both backends — while re-inserting an
+    /// id whose previous payload was [`RequestPool::remove`]d is fine.
     pub fn insert(&mut self, id: ReqId, r: Request) {
         debug_assert_eq!(id, r.id, "pool key must equal the request id");
         self.writes.set(self.writes.get() + 1);
+        self.live_bytes += request_bytes_est(&r);
         match &mut self.backend {
-            Backend::Arena { slots, pos, len } => {
+            Backend::Arena {
+                slots,
+                pos,
+                index,
+                free,
+                len,
+            } => {
                 let i = id as usize;
-                if i >= slots.len() {
-                    slots.resize_with(i + 1, || None);
-                    pos.resize(i + 1, u32::MAX);
+                if i >= index.len() {
+                    index.resize(i + 1, NO_SLOT);
                 }
-                match slots[i].replace(r) {
-                    None => *len += 1,
-                    Some(old) => debug_assert!(
-                        old.client.is_none(),
-                        "insert replaced a client-resident request"
-                    ),
-                }
+                assert!(index[i] == NO_SLOT, "pool: duplicate request id {id}");
+                let slot = match free.pop() {
+                    Some(s) => {
+                        slots[s as usize] = Some(r);
+                        s
+                    }
+                    None => {
+                        slots.push(Some(r));
+                        pos.push(u32::MAX);
+                        (slots.len() - 1) as u32
+                    }
+                };
+                index[i] = slot;
+                *len += 1;
             }
-            Backend::Map { map } => {
-                if let Some(old) = map.insert(id, r) {
-                    debug_assert!(
-                        old.client.is_none(),
-                        "insert replaced a client-resident request"
-                    );
+            Backend::Map { map } => match map.entry(id) {
+                Entry::Occupied(_) => panic!("pool: duplicate request id {id}"),
+                Entry::Vacant(v) => {
+                    v.insert(r);
                 }
+            },
+        }
+        self.peak_live = self.peak_live.max(self.len());
+        self.peak_bytes = self.peak_bytes.max(self.live_bytes);
+    }
+
+    /// Retire `id`: take its payload out and (arena) recycle the slot
+    /// through the freelist; the id's indirection entry is cleared, so
+    /// later `get(id)` returns `None`. Panics on an unknown id; the
+    /// request must not be client-resident.
+    pub fn remove(&mut self, id: ReqId) -> Request {
+        self.writes.set(self.writes.get() + 1);
+        let r = match &mut self.backend {
+            Backend::Arena {
+                slots,
+                pos,
+                index,
+                free,
+                len,
+            } => {
+                let i = id as usize;
+                let slot = index.get(i).copied().unwrap_or(NO_SLOT);
+                assert!(slot != NO_SLOT, "pool: remove of unknown request id {id}");
+                index[i] = NO_SLOT;
+                debug_assert_eq!(
+                    pos[slot as usize],
+                    u32::MAX,
+                    "pool: removed a client-resident request"
+                );
+                let r = slots[slot as usize].take().expect("pool: index/slot drift");
+                free.push(slot);
+                *len -= 1;
+                r
             }
+            Backend::Map { map } => map
+                .remove(&id)
+                .unwrap_or_else(|| panic!("pool: remove of unknown request id {id}")),
+        };
+        debug_assert!(r.client.is_none(), "pool: removed a client-resident request");
+        self.retired += 1;
+        self.live_bytes = self.live_bytes.saturating_sub(request_bytes_est(&r));
+        r
+    }
+
+    /// Arena slot currently backing `id` (`None`: map backend, or not
+    /// stored). Exposed so the freelist-reuse determinism tests can pin
+    /// slot assignment across identical runs.
+    pub fn slot_of(&self, id: ReqId) -> Option<usize> {
+        match &self.backend {
+            Backend::Arena { index, .. } => index
+                .get(id as usize)
+                .copied()
+                .filter(|s| *s != NO_SLOT)
+                .map(|s| s as usize),
+            Backend::Map { .. } => None,
         }
     }
 
     #[inline]
     fn request(&self, id: ReqId) -> &Request {
         match &self.backend {
-            Backend::Arena { slots, .. } => slots[id as usize]
-                .as_ref()
-                .expect("pool: unknown request id"),
+            Backend::Arena { slots, index, .. } => {
+                let slot = index.get(id as usize).copied().unwrap_or(NO_SLOT);
+                assert!(slot != NO_SLOT, "pool: unknown request id");
+                slots[slot as usize].as_ref().expect("pool: index/slot drift")
+            }
             Backend::Map { map } => map.get(&id).expect("pool: unknown request id"),
         }
     }
@@ -185,9 +307,11 @@ impl RequestPool {
     pub fn get(&self, id: &ReqId) -> Option<&Request> {
         self.reads.set(self.reads.get() + 1);
         match &self.backend {
-            Backend::Arena { slots, .. } => {
-                slots.get(*id as usize).and_then(|s| s.as_ref())
-            }
+            Backend::Arena { slots, index, .. } => index
+                .get(*id as usize)
+                .copied()
+                .filter(|s| *s != NO_SLOT)
+                .and_then(|s| slots[s as usize].as_ref()),
             Backend::Map { map } => map.get(id),
         }
     }
@@ -196,13 +320,17 @@ impl RequestPool {
     pub fn get_mut(&mut self, id: &ReqId) -> Option<&mut Request> {
         self.writes.set(self.writes.get() + 1);
         match &mut self.backend {
-            Backend::Arena { slots, .. } => {
-                slots.get_mut(*id as usize).and_then(|s| s.as_mut())
+            Backend::Arena { slots, index, .. } => {
+                match index.get(*id as usize).copied() {
+                    Some(s) if s != NO_SLOT => slots[s as usize].as_mut(),
+                    _ => None,
+                }
             }
             Backend::Map { map } => map.get_mut(id),
         }
     }
 
+    /// Requests currently stored (live, not retired).
     pub fn len(&self) -> usize {
         match &self.backend {
             Backend::Arena { len, .. } => *len,
@@ -214,7 +342,11 @@ impl RequestPool {
         self.len() == 0
     }
 
-    /// Iterate `(id, request)` pairs (arena: id order; map: unordered).
+    /// Iterate `(id, request)` pairs over the *live* requests (arena:
+    /// slot order — id order until the first retirement recycles a
+    /// slot; map: unordered). Callers must not depend on the order:
+    /// every in-tree consumer either sums order-independent
+    /// integer-valued loads or sorts afterwards.
     pub fn iter(&self) -> PoolIter<'_> {
         let inner = match &self.backend {
             Backend::Arena { slots, .. } => PoolIterInner::Arena(slots.iter()),
@@ -244,13 +376,17 @@ impl RequestPool {
         }
         let p = self.by_client[client].len() as u32;
         match &mut self.backend {
-            Backend::Arena { slots, pos, .. } => {
-                let r = slots[id as usize]
+            Backend::Arena {
+                slots, pos, index, ..
+            } => {
+                let slot = index.get(id as usize).copied().unwrap_or(NO_SLOT);
+                assert!(slot != NO_SLOT, "assign: unknown request id {id}");
+                let r = slots[slot as usize]
                     .as_mut()
                     .expect("assign: unknown request id");
                 debug_assert!(r.client.is_none(), "assign over a live assignment");
                 r.client = Some(client);
-                pos[id as usize] = p;
+                pos[slot as usize] = p;
             }
             Backend::Map { map } => {
                 let r = map.get_mut(&id).expect("assign: unknown request id");
@@ -269,18 +405,24 @@ impl RequestPool {
     pub fn unassign(&mut self, id: ReqId) {
         self.writes.set(self.writes.get() + 1);
         match &mut self.backend {
-            Backend::Arena { slots, pos, .. } => {
-                let r = slots[id as usize]
+            Backend::Arena {
+                slots, pos, index, ..
+            } => {
+                let slot = index.get(id as usize).copied().unwrap_or(NO_SLOT);
+                assert!(slot != NO_SLOT, "unassign: unknown request id {id}");
+                let r = slots[slot as usize]
                     .as_mut()
                     .expect("unassign: unknown request id");
                 let Some(c) = r.client.take() else { return };
-                let p = pos[id as usize] as usize;
-                pos[id as usize] = u32::MAX;
+                let p = pos[slot as usize] as usize;
+                pos[slot as usize] = u32::MAX;
                 let list = &mut self.by_client[c];
                 debug_assert_eq!(list[p], id, "resident index corrupted");
                 list.swap_remove(p);
                 if p < list.len() {
-                    pos[list[p] as usize] = p as u32;
+                    let moved_slot = index[list[p] as usize];
+                    debug_assert!(moved_slot != NO_SLOT, "resident index corrupted");
+                    pos[moved_slot as usize] = p as u32;
                 }
             }
             Backend::Map { map } => {
@@ -364,6 +506,10 @@ impl RequestPool {
                 Backend::Map { map } => map.len(),
             },
             len: self.len(),
+            peak_live: self.peak_live,
+            retired: self.retired,
+            bytes_est: self.live_bytes,
+            peak_bytes_est: self.peak_bytes,
             resident: self.resident,
             peak_resident: self.peak_resident,
         }
@@ -472,10 +618,23 @@ mod tests {
             assert!(pool.get(&2).is_none());
             pool.get_mut(&0).unwrap().prefilled = 7;
             assert_eq!(pool[&0].prefilled, 7);
-            // replacement keeps the length (HashMap semantics)
-            pool.insert(3, req(3));
-            assert_eq!(pool.len(), 3);
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate request id")]
+    fn arena_rejects_duplicate_ids() {
+        let mut pool = RequestPool::new();
+        pool.insert(3, req(3));
+        pool.insert(3, req(3));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate request id")]
+    fn map_rejects_duplicate_ids() {
+        let mut pool = RequestPool::map_backed();
+        pool.insert(3, req(3));
+        pool.insert(3, req(3));
     }
 
     #[test]
@@ -496,6 +655,72 @@ mod tests {
             }
             assert_eq!(n, 5);
         }
+    }
+
+    #[test]
+    fn remove_retires_and_freelist_recycles_slots() {
+        for mut pool in both() {
+            for id in 0..4u64 {
+                pool.insert(id, req(id));
+            }
+            let slot1 = pool.slot_of(1);
+            let r = pool.remove(1);
+            assert_eq!(r.id, 1);
+            assert_eq!(pool.len(), 3);
+            assert!(pool.get(&1).is_none(), "retired id must not resolve");
+            assert!(pool.slot_of(1).is_none());
+            // a later insert reuses the vacated slot (arena: LIFO freelist)
+            pool.insert(9, req(9));
+            assert_eq!(pool.len(), 4);
+            if pool.backend() == PoolBackend::Arena {
+                assert_eq!(pool.slot_of(9), slot1, "freed slot must be recycled");
+                assert_eq!(pool.ops().slots, 4, "no new slot allocated");
+            }
+            let ops = pool.ops();
+            assert_eq!(ops.retired, 1);
+            assert_eq!(ops.peak_live, 4);
+            assert!(ops.bytes_est > 0);
+            assert!(ops.peak_bytes_est >= ops.bytes_est);
+            // iteration covers exactly the live set
+            let mut ids: Vec<u64> = pool.iter().map(|(id, _)| *id).collect();
+            ids.sort_unstable();
+            assert_eq!(ids, vec![0, 2, 3, 9]);
+        }
+    }
+
+    #[test]
+    fn retire_all_returns_bytes_to_zero() {
+        for mut pool in both() {
+            for id in 0..8u64 {
+                pool.insert(id, req(id));
+            }
+            for id in 0..8u64 {
+                pool.remove(id);
+            }
+            let ops = pool.ops();
+            assert_eq!(ops.len, 0);
+            assert_eq!(ops.bytes_est, 0, "symmetric estimate must drain to zero");
+            assert_eq!(ops.retired, 8);
+            assert_eq!(ops.peak_live, 8);
+        }
+    }
+
+    #[test]
+    fn retirement_bounds_slots_to_peak_live() {
+        // a 1000-id stream with a 10-request live window must allocate
+        // ~10 slots, not 1000 — the O(in-flight) arena property
+        let mut pool = RequestPool::new();
+        for id in 0..1000u64 {
+            pool.insert(id, req(id));
+            if id >= 10 {
+                pool.remove(id - 10);
+            }
+        }
+        let ops = pool.ops();
+        assert_eq!(ops.peak_live, 11);
+        assert_eq!(ops.slots, 11, "slots must track peak live, not total ids");
+        assert_eq!(ops.retired, 990);
+        assert_eq!(ops.len, 10);
     }
 
     #[test]
@@ -539,6 +764,28 @@ mod tests {
     }
 
     #[test]
+    fn residency_survives_slot_recycling() {
+        // the resident position array is slot-indexed: retire a request,
+        // recycle its slot for a new id, assign both old and new ids —
+        // positions must not cross-talk
+        let mut pool = RequestPool::new();
+        for id in 0..3u64 {
+            pool.insert(id, req(id));
+        }
+        pool.remove(1);
+        pool.insert(5, req(5)); // reuses slot of id 1
+        pool.assign(0, 0);
+        pool.assign(5, 0);
+        pool.assign(2, 0);
+        pool.validate_residency();
+        pool.unassign(5);
+        pool.validate_residency();
+        assert_eq!(pool.resident_on(0), 2);
+        let left: Vec<u64> = pool.iter_client(0).map(|r| r.id).collect();
+        assert!(left.contains(&0) && left.contains(&2));
+    }
+
+    #[test]
     fn op_counters_count_and_reset() {
         let mut pool = RequestPool::new();
         pool.insert(0, req(0));
@@ -563,9 +810,11 @@ mod tests {
         let mut pool = RequestPool::new();
         pool.insert(10, req(10));
         assert_eq!(pool.len(), 1);
-        assert_eq!(pool.ops().slots, 11, "slots allocated up to max id");
+        // the indirection grows to the max id; payload slots do not
+        assert_eq!(pool.ops().slots, 1, "payload slots track live requests");
         assert!(pool.get(&4).is_none());
         assert_eq!(pool.iter().count(), 1);
+        assert_eq!(pool.slot_of(10), Some(0));
     }
 
     #[test]

@@ -250,6 +250,75 @@ impl Arrival {
     }
 }
 
+/// Incremental arrival-timestamp generator: yields exactly the sequence
+/// [`Arrival::timestamps`] would produce, one timestamp at a time,
+/// consuming the rng draw-for-draw in the same order. The streaming
+/// workload source (`workload::stream`) relies on this equivalence to
+/// make lazy generation bit-identical to upfront materialization while
+/// holding O(1) state instead of the whole timestamp vector.
+#[derive(Debug, Clone)]
+pub struct ArrivalTimes {
+    arrival: Arrival,
+    rng: Pcg,
+    t: f64,
+    /// Bursty phase state (unused by the memoryless processes)
+    in_burst: bool,
+    phase_end: f64,
+}
+
+impl ArrivalTimes {
+    pub fn new(arrival: Arrival, mut rng: Pcg) -> ArrivalTimes {
+        // Bursty draws its first phase boundary before any arrival —
+        // mirror `timestamps`, which draws it ahead of the loop
+        let (in_burst, phase_end) = match arrival {
+            Arrival::Bursty { calm_s, .. } => (false, rng.exp(1.0 / calm_s)),
+            _ => (false, 0.0),
+        };
+        ArrivalTimes {
+            arrival,
+            rng,
+            t: 0.0,
+            in_burst,
+            phase_end,
+        }
+    }
+
+    /// Next arrival timestamp (seconds; non-decreasing).
+    pub fn next_time(&mut self) -> f64 {
+        match self.arrival.clone() {
+            Arrival::Uniform { rate } => self.t += 1.0 / rate,
+            Arrival::Normal { rate, cv } => {
+                let mean = 1.0 / rate;
+                self.t += self.rng.normal_mu_sigma(mean, cv * mean).max(0.0);
+            }
+            Arrival::Poisson { rate } => self.t += self.rng.exp(rate),
+            Arrival::Bursty {
+                rate,
+                burst_mult,
+                calm_s,
+                burst_s,
+            } => {
+                let r = if self.in_burst { rate * burst_mult } else { rate };
+                self.t += self.rng.exp(r);
+                while self.t > self.phase_end {
+                    self.in_burst = !self.in_burst;
+                    self.phase_end +=
+                        self.rng.exp(1.0 / if self.in_burst { burst_s } else { calm_s });
+                }
+            }
+        }
+        self.t
+    }
+
+    /// Give back the rng after the draws made so far — how the
+    /// streaming generator positions its token-sampling stream exactly
+    /// where [`Arrival::timestamps`] would have left it (including the
+    /// Box–Muller spare).
+    pub fn into_rng(self) -> Pcg {
+        self.rng
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -346,6 +415,34 @@ mod tests {
         let mut b = root.fork(2);
         let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
         assert!(same < 4);
+    }
+
+    #[test]
+    fn arrival_times_match_upfront_timestamps_draw_for_draw() {
+        for arr in [
+            Arrival::Uniform { rate: 7.0 },
+            Arrival::Normal { rate: 7.0, cv: 0.4 },
+            Arrival::Poisson { rate: 7.0 },
+            Arrival::Bursty {
+                rate: 7.0,
+                burst_mult: 5.0,
+                calm_s: 3.0,
+                burst_s: 0.5,
+            },
+        ] {
+            let mut eager_rng = Pcg::new(77);
+            let eager = arr.timestamps(2_000, &mut eager_rng);
+            let mut lazy = ArrivalTimes::new(arr.clone(), Pcg::new(77));
+            for (i, t) in eager.iter().enumerate() {
+                assert_eq!(*t, lazy.next_time(), "{arr:?} diverged at {i}");
+            }
+            // the rngs must end in the same state (spare included), so a
+            // downstream sampling stream continues identically
+            let mut lazy_rng = lazy.into_rng();
+            for _ in 0..16 {
+                assert_eq!(eager_rng.normal(), lazy_rng.normal(), "{arr:?}");
+            }
+        }
     }
 
     #[test]

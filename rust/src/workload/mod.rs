@@ -3,7 +3,9 @@
 //! arrival distributions themselves live in `util::rng::Arrival`).
 
 pub mod request;
+pub mod stream;
 pub mod trace;
 
-pub use request::{KvParams, RagParams, ReqId, Request, Stage};
+pub use request::{CompletionRecord, KvParams, RagParams, ReqId, Request, Stage};
+pub use stream::{ClassStream, StreamingMix};
 pub use trace::{Pipeline, Reasoning, TraceKind, WorkloadMix, WorkloadSpec};

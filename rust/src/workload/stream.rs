@@ -1,0 +1,225 @@
+//! Streaming (lazy) workload generation — the O(in-flight) arrival path.
+//!
+//! `WorkloadSpec::generate` / `WorkloadMix::generate` materialize the
+//! whole request stream upfront, so the event queue and the request
+//! pool hold the entire trace at t=0 — memory O(total requests) before
+//! the first event fires. [`StreamingMix`] generates the same stream
+//! lazily: each workload class keeps an O(1) incremental arrival
+//! generator ([`ArrivalTimes`](crate::util::rng::ArrivalTimes)) plus a
+//! token-sampling rng pre-advanced past the class's timestamp draws,
+//! and the mix holds **at most one pending request per class stream**,
+//! merged by `(arrival, id)` — exactly the sort order of
+//! `WorkloadMix::generate`.
+//!
+//! The laziness is behaviorally invisible: both paths consume the same
+//! PCG streams draw-for-draw, so the emitted requests are bit-identical
+//! to eager generation (pinned by the differential tests below and by
+//! `rust/tests/retirement_equivalence.rs` end to end). The coordinator
+//! drives this through
+//! [`Coordinator::stream`](crate::coordinator::Coordinator::stream);
+//! see docs/performance.md ("Memory model").
+
+use super::request::Request;
+use super::trace::{WorkloadMix, WorkloadSpec};
+use crate::sim::SimTime;
+use crate::util::rng::{ArrivalTimes, Pcg};
+
+/// Lazily generates one workload class's requests in id (= arrival)
+/// order, bit-identical to `spec.generate(id_base)`.
+pub struct ClassStream {
+    spec: WorkloadSpec,
+    times: ArrivalTimes,
+    /// token-sampling stream, pre-advanced past the class's `n`
+    /// timestamp draws (where `generate`'s single rng would sit when it
+    /// starts sampling)
+    rng: Pcg,
+    next_idx: usize,
+    id_base: u64,
+}
+
+impl ClassStream {
+    pub fn new(spec: WorkloadSpec, id_base: u64) -> ClassStream {
+        let rng = Pcg::new(spec.rng_seed());
+        // advance a clone through the exact timestamp draw sequence —
+        // O(n) time once, O(1) memory (no timestamp vector is kept)
+        let mut sampler = ArrivalTimes::new(spec.arrival.clone(), rng.clone());
+        for _ in 0..spec.n_requests {
+            sampler.next_time();
+        }
+        ClassStream {
+            times: ArrivalTimes::new(spec.arrival.clone(), rng),
+            rng: sampler.into_rng(),
+            next_idx: 0,
+            id_base,
+            spec,
+        }
+    }
+}
+
+impl Iterator for ClassStream {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        if self.next_idx >= self.spec.n_requests {
+            return None;
+        }
+        let i = self.next_idx;
+        self.next_idx += 1;
+        let t = self.times.next_time();
+        Some(self.spec.sample_request(i, t, self.id_base, &mut self.rng))
+    }
+}
+
+/// Lazy equivalent of `WorkloadMix::generate`: a k-way merge over the
+/// class streams holding one pending request per class. Memory is
+/// O(classes) regardless of trace length.
+pub struct StreamingMix {
+    streams: Vec<ClassStream>,
+    /// at most one generated-but-unconsumed request per class
+    pending: Vec<Option<Request>>,
+    total: usize,
+    emitted: usize,
+}
+
+impl StreamingMix {
+    pub fn new(mix: &WorkloadMix) -> StreamingMix {
+        let mut streams = Vec::with_capacity(mix.classes.len());
+        let mut id_base = 0u64;
+        for i in 0..mix.classes.len() {
+            let spec = mix.class_spec(i);
+            let n = spec.n_requests;
+            streams.push(ClassStream::new(spec, id_base));
+            id_base += n as u64;
+        }
+        let pending = streams.iter_mut().map(|s| s.next()).collect();
+        StreamingMix {
+            streams,
+            pending,
+            total: mix.n_total(),
+            emitted: 0,
+        }
+    }
+
+    /// Total requests this source will emit over its lifetime.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Requests not yet emitted.
+    pub fn remaining(&self) -> usize {
+        self.total - self.emitted
+    }
+
+    /// Index of the pending request with the smallest `(arrival, id)` —
+    /// per-class streams are sorted, so the merge reproduces
+    /// `WorkloadMix::generate`'s global sort order exactly (ids are
+    /// globally unique, so ties in arrival time are fully ordered).
+    fn min_idx(&self) -> Option<usize> {
+        self.pending
+            .iter()
+            .enumerate()
+            .filter_map(|(i, p)| p.as_ref().map(|r| (i, (r.arrival, r.id))))
+            .min_by_key(|(_, key)| *key)
+            .map(|(i, _)| i)
+    }
+
+    /// Arrival time of the next request, without consuming it.
+    pub fn peek_arrival(&self) -> Option<SimTime> {
+        self.min_idx()
+            .map(|i| self.pending[i].as_ref().unwrap().arrival)
+    }
+}
+
+impl Iterator for StreamingMix {
+    type Item = Request;
+
+    /// Emit the next request (globally sorted by `(arrival, id)`) and
+    /// refill that class's pending slot.
+    fn next(&mut self) -> Option<Request> {
+        let i = self.min_idx()?;
+        let r = self.pending[i].take();
+        self.pending[i] = self.streams[i].next();
+        self.emitted += 1;
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Arrival;
+    use crate::workload::request::{KvParams, RagParams};
+    use crate::workload::trace::{Pipeline, Reasoning, TraceKind};
+
+    fn assert_same_requests(eager: &[Request], mut lazy: impl FnMut() -> Option<Request>) {
+        for (i, e) in eager.iter().enumerate() {
+            let l = lazy().unwrap_or_else(|| panic!("stream ended early at {i}"));
+            assert_eq!(e.id, l.id, "id at {i}");
+            assert_eq!(e.arrival, l.arrival, "arrival of {}", e.id);
+            assert_eq!(e.model, l.model, "model of {}", e.id);
+            assert_eq!(e.prompt_tokens, l.prompt_tokens, "prompt of {}", e.id);
+            assert_eq!(e.output_tokens, l.output_tokens, "output of {}", e.id);
+            assert_eq!(e.branches, l.branches, "branches of {}", e.id);
+            assert_eq!(e.stages, l.stages, "stages of {}", e.id);
+        }
+        assert!(lazy().is_none(), "stream emitted extra requests");
+    }
+
+    #[test]
+    fn class_stream_matches_eager_generation() {
+        for arrival in [
+            Arrival::Poisson { rate: 5.0 },
+            Arrival::Uniform { rate: 5.0 },
+            Arrival::Normal { rate: 5.0, cv: 0.3 },
+            Arrival::Bursty { rate: 5.0, burst_mult: 4.0, calm_s: 2.0, burst_s: 0.5 },
+        ] {
+            let spec = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 400, 5.0)
+                .with_seed(13)
+                .with_arrival(arrival)
+                .with_reasoning(Reasoning::MultiPath { scale: 2.0, branches: 4 });
+            let eager = spec.generate(100);
+            let mut stream = ClassStream::new(spec, 100);
+            assert_same_requests(&eager, || stream.next());
+        }
+    }
+
+    #[test]
+    fn streaming_mix_matches_eager_merge() {
+        let base = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 0, 1.0).with_seed(19);
+        let rag = base.clone().with_pipeline(Pipeline::Rag(RagParams {
+            docs: 4,
+            doc_tokens: 256,
+            ..Default::default()
+        }));
+        let kv = base
+            .clone()
+            .with_pipeline(Pipeline::KvRetrieval(KvParams { cached_tokens: 2048 }));
+        let mix = WorkloadMix::new(vec![(0.5, base), (0.3, rag), (0.2, kv)]).scaled(300, 6.0);
+        let eager = mix.generate();
+        let mut stream = StreamingMix::new(&mix);
+        assert_eq!(stream.total(), eager.len());
+        assert_eq!(stream.peek_arrival(), Some(eager[0].arrival));
+        assert_same_requests(&eager, || stream.next());
+        assert_eq!(stream.remaining(), 0);
+        assert_eq!(stream.peek_arrival(), None);
+    }
+
+    #[test]
+    fn streaming_mix_breaks_exact_arrival_ties_by_id() {
+        // two classes on identical Uniform clocks produce *exactly* equal
+        // arrival timestamps — the merge must fall back to id order, the
+        // same tie-break `WorkloadMix::generate`'s sort applies
+        let a = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 50, 4.0)
+            .with_seed(7)
+            .with_arrival(Arrival::Uniform { rate: 4.0 });
+        let b = a.clone();
+        let mix = WorkloadMix::new(vec![(1.0, a), (1.0, b)]);
+        let eager = mix.generate();
+        assert!(
+            eager.windows(2).any(|w| w[0].arrival == w[1].arrival),
+            "test setup must produce arrival ties"
+        );
+        let mut stream = StreamingMix::new(&mix);
+        assert_same_requests(&eager, || stream.next());
+    }
+}

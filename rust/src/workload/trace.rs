@@ -168,38 +168,50 @@ impl WorkloadSpec {
         self
     }
 
+    /// The seed every generation path derives its rng from —
+    /// `generate` and the lazy [`ClassStream`](super::stream::ClassStream)
+    /// must start from the same stream to stay bit-identical.
+    pub(crate) fn rng_seed(&self) -> u64 {
+        self.seed ^ 0x48455253
+    }
+
+    /// Sample the `i`-th request of this class given its arrival time.
+    /// Shared by eager generation and the streaming source; the rng must
+    /// be positioned exactly past the class's timestamp draws.
+    pub(crate) fn sample_request(&self, i: usize, t: f64, id_base: u64, rng: &mut Pcg) -> Request {
+        let (prompt, mut output) = self.trace.sample(rng);
+        let mut branches = 1usize;
+        match self.reasoning {
+            Reasoning::None => {}
+            Reasoning::SinglePath { scale } => {
+                output = ((output as f64) * scale).round() as usize;
+            }
+            Reasoning::MultiPath { scale, branches: b } => {
+                output = ((output as f64) * scale).round() as usize;
+                branches = b.max(1);
+            }
+        }
+        let mut r = Request::new(
+            id_base + i as u64,
+            self.model,
+            SimTime::from_secs(t),
+            self.pipeline.stages(),
+            prompt,
+            output.clamp(1, 65536),
+        );
+        r.branches = branches;
+        r
+    }
+
     /// Generate the request stream (sorted by arrival, ids dense from
     /// `id_base`).
     pub fn generate(&self, id_base: u64) -> Vec<Request> {
-        let mut rng = Pcg::new(self.seed ^ 0x48455253);
+        let mut rng = Pcg::new(self.rng_seed());
         let times = self.arrival.timestamps(self.n_requests, &mut rng);
         times
             .iter()
             .enumerate()
-            .map(|(i, &t)| {
-                let (prompt, mut output) = self.trace.sample(&mut rng);
-                let mut branches = 1usize;
-                match self.reasoning {
-                    Reasoning::None => {}
-                    Reasoning::SinglePath { scale } => {
-                        output = ((output as f64) * scale).round() as usize;
-                    }
-                    Reasoning::MultiPath { scale, branches: b } => {
-                        output = ((output as f64) * scale).round() as usize;
-                        branches = b.max(1);
-                    }
-                }
-                let mut r = Request::new(
-                    id_base + i as u64,
-                    self.model,
-                    SimTime::from_secs(t),
-                    self.pipeline.stages(),
-                    prompt,
-                    output.clamp(1, 65536),
-                );
-                r.branches = branches;
-                r
-            })
+            .map(|(i, &t)| self.sample_request(i, t, id_base, &mut rng))
             .collect()
     }
 }
@@ -273,15 +285,23 @@ impl WorkloadMix {
         WorkloadMix { classes }
     }
 
+    /// Class `i`'s spec with the per-class seed decorrelation applied
+    /// (class streams sharing a scenario seed must not correlate) —
+    /// shared by [`WorkloadMix::generate`] and the streaming source so
+    /// the two paths draw from identical PCG streams.
+    pub(crate) fn class_spec(&self, i: usize) -> WorkloadSpec {
+        let mut spec = self.classes[i].1.clone();
+        spec.seed = spec.seed.wrapping_add(i as u64 * 0x9E37_79B9);
+        spec
+    }
+
     /// Generate the merged request stream: per-class streams with
     /// disjoint dense id ranges, interleaved by arrival time.
     pub fn generate(&self) -> Vec<Request> {
         let mut all = Vec::with_capacity(self.n_total());
         let mut id_base = 0u64;
-        for (i, (_, spec)) in self.classes.iter().enumerate() {
-            let mut spec = spec.clone();
-            // decorrelate class streams that share a scenario seed
-            spec.seed = spec.seed.wrapping_add(i as u64 * 0x9E37_79B9);
+        for i in 0..self.classes.len() {
+            let spec = self.class_spec(i);
             all.extend(spec.generate(id_base));
             id_base += spec.n_requests as u64;
         }

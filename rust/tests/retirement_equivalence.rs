@@ -1,0 +1,322 @@
+//! O(in-flight) memory acceptance (the streaming-arrivals + request-
+//! retirement refactor's differential suite, same style as
+//! `pool_equivalence.rs`):
+//!
+//! * equivalence: a run fed by the lazy arrival source with retirement
+//!   on — the O(peak in-flight) configuration — is bit-identical to
+//!   the materialized/retained baseline (serviced order, clock, event
+//!   count, every latency/energy sample) on plain-LLM, mixed
+//!   RAG/KV-retrieval, and multi-model cascade scenarios, in both
+//!   `LoadMode`s;
+//! * metrics: record-based `RunMetrics::collect` reproduces the legacy
+//!   retained-pool scan (`collect_from_pool`) bit for bit;
+//! * memory: under streaming + retirement the pool's live high-water
+//!   mark equals `CoordStats::peak_inflight` and stays far below the
+//!   trace length, and every slot is freed by the end;
+//! * determinism: freelist slot reuse is deterministic — two identical
+//!   runs produce identical serviced order AND identical per-event
+//!   slot assignments.
+
+use hermes::config::slo::SloLadder;
+use hermes::coordinator::{Coordinator, LoadMode};
+use hermes::hardware::npu::H100;
+use hermes::memory::storage::{KvScenario, StorageConfig};
+use hermes::metrics::RunMetrics;
+use hermes::model::policy::ModelPolicy;
+use hermes::model::ModelId;
+use hermes::scheduler::{PoolBackend, RequestPool};
+use hermes::sim::builder::{KvRetrievalSpec, PoolSpec, RagSpec, ServingSpec};
+use hermes::util::rng::Arrival;
+use hermes::workload::request::{KvParams, RagParams};
+use hermes::workload::trace::{Pipeline, TraceKind, WorkloadMix, WorkloadSpec};
+
+/// One run configuration along the two new axes.
+#[derive(Clone, Copy)]
+struct Exec {
+    stream: bool,
+    retire: bool,
+    mode: LoadMode,
+    backend: PoolBackend,
+}
+
+const RETAINED: Exec = Exec {
+    stream: false,
+    retire: false,
+    mode: LoadMode::Incremental,
+    backend: PoolBackend::Arena,
+};
+
+const STREAMED: Exec = Exec {
+    stream: true,
+    retire: true,
+    mode: LoadMode::Incremental,
+    backend: PoolBackend::Arena,
+};
+
+fn run(spec: &ServingSpec, mix: &WorkloadMix, exec: Exec) -> (Coordinator, RunMetrics) {
+    let mut coord = spec.build().unwrap();
+    coord.load_mode = exec.mode;
+    coord.pool = RequestPool::with_backend(exec.backend);
+    coord.retire = exec.retire;
+    if exec.stream {
+        coord.stream(mix);
+    } else {
+        coord.inject(mix.generate());
+    }
+    coord.run();
+    let m = RunMetrics::collect(&coord, &SloLadder::retrieval());
+    (coord, m)
+}
+
+fn assert_bit_identical(a: &(Coordinator, RunMetrics), b: &(Coordinator, RunMetrics)) {
+    let ((ca, ma), (cb, mb)) = (a, b);
+    assert!(ca.all_serviced(), "serviced {}", ca.serviced.len());
+    assert!(cb.all_serviced(), "serviced {}", cb.serviced.len());
+    assert_eq!(ca.serviced, cb.serviced, "completion order diverged");
+    assert_eq!(ca.failed, cb.failed, "failure set diverged");
+    assert_eq!(ca.clock, cb.clock);
+    assert_eq!(ma.events, mb.events);
+    assert_eq!(ma.n_requests, mb.n_requests);
+    assert_eq!(ma.makespan, mb.makespan);
+    assert_eq!(ma.n_serviced, mb.n_serviced);
+    assert_eq!(ma.n_failed, mb.n_failed);
+    assert_eq!(ma.ttft_samples, mb.ttft_samples);
+    assert_eq!(ma.tpot_samples, mb.tpot_samples);
+    assert_eq!(ma.e2e_samples, mb.e2e_samples);
+    assert_eq!(ma.transfer_bytes, mb.transfer_bytes);
+    assert_eq!(ma.energy_joules, mb.energy_joules);
+    assert_eq!(ma.goodput_frac, mb.goodput_frac);
+    assert_eq!(ma.throughput_tok_s, mb.throughput_tok_s);
+}
+
+// ---- scenario shapes -------------------------------------------------------
+
+fn llm_spec() -> ServingSpec {
+    ServingSpec::new(
+        "llama3-70b",
+        H100,
+        8,
+        PoolSpec::Combined {
+            kind: hermes::scheduler::BatchingKind::Continuous,
+            n: 2,
+        },
+    )
+    .with_seed(47)
+}
+
+fn llm_mix(n: usize) -> WorkloadMix {
+    WorkloadMix::single(
+        WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, n, 4.0).with_seed(53),
+    )
+}
+
+/// Disaggregated LLM + RAG tier + KV-retrieval tier (every client kind,
+/// every transfer path) — the same shape as the load-invariant suite.
+fn mixed_spec() -> ServingSpec {
+    ServingSpec::new(
+        "llama3-70b",
+        H100,
+        4,
+        PoolSpec::Disaggregated { prefill: 2, decode: 2, local: false },
+    )
+    .with_rag(RagSpec {
+        count: 1,
+        embed_model: hermes::hardware::models::E5_BASE,
+        embed_npu: hermes::hardware::npu::A100,
+        retrieval_npu: hermes::hardware::npu::GRACE_CPU,
+        ivf: Default::default(),
+        max_batch: 8,
+    })
+    .with_kv_retrieval(KvRetrievalSpec {
+        count: 1,
+        storage: StorageConfig::PlatformShared,
+        scenario: KvScenario::Shared,
+        max_batch: 8,
+        ports: 4,
+    })
+    .with_seed(59)
+}
+
+fn mixed_mix(n: usize) -> WorkloadMix {
+    let base = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 0, 1.0).with_seed(61);
+    let rag = base.clone().with_pipeline(Pipeline::Rag(RagParams {
+        docs: 4,
+        doc_tokens: 256,
+        ..Default::default()
+    }));
+    let kv = base
+        .clone()
+        .with_pipeline(Pipeline::KvRetrieval(KvParams { cached_tokens: 2048 }));
+    WorkloadMix::new(vec![(0.5, base), (0.3, rag), (0.2, kv)]).scaled(n, 6.0)
+}
+
+fn multimodel_spec() -> ServingSpec {
+    let small = ModelId::named("llama3-8b");
+    let large = ModelId::named("llama3-70b");
+    ServingSpec::new(
+        "llama3-70b",
+        H100,
+        8,
+        PoolSpec::Combined {
+            kind: hermes::scheduler::BatchingKind::Continuous,
+            n: 2,
+        },
+    )
+    .with_co_models(vec![small])
+    .with_model_policy(ModelPolicy::Cascade { small, large, escalate: 0.35 })
+    .with_seed(67)
+}
+
+fn multimodel_mix(n: usize) -> WorkloadMix {
+    WorkloadMix::single(
+        WorkloadSpec::new("llama3-8b", TraceKind::AzureConv, n, 5.0)
+            .with_seed(71)
+            .with_pipeline(Pipeline::Cascade),
+    )
+}
+
+// ---- equivalence -----------------------------------------------------------
+
+#[test]
+fn llm_streaming_retirement_matches_materialized_both_load_modes() {
+    let mix = llm_mix(60);
+    for mode in [LoadMode::Incremental, LoadMode::FullScan] {
+        let retained = run(&llm_spec(), &mix, Exec { mode, ..RETAINED });
+        let streamed = run(&llm_spec(), &mix, Exec { mode, ..STREAMED });
+        assert_bit_identical(&retained, &streamed);
+    }
+}
+
+#[test]
+fn mixed_pipelines_identical_across_all_four_exec_combinations() {
+    let mix = mixed_mix(80);
+    let baseline = run(&mixed_spec(), &mix, RETAINED);
+    for stream in [false, true] {
+        for retire in [false, true] {
+            let other = run(&mixed_spec(), &mix, Exec { stream, retire, ..RETAINED });
+            assert_bit_identical(&baseline, &other);
+        }
+    }
+    // and the map backend retires identically (freelist is arena-only,
+    // but the API contract is shared)
+    let map = run(&mixed_spec(), &mix, Exec { backend: PoolBackend::Map, ..STREAMED });
+    assert_bit_identical(&baseline, &map);
+}
+
+#[test]
+fn multimodel_cascade_streaming_retirement_matches_materialized() {
+    let mix = multimodel_mix(50);
+    let retained = run(&multimodel_spec(), &mix, RETAINED);
+    let streamed = run(&multimodel_spec(), &mix, STREAMED);
+    assert_bit_identical(&retained, &streamed);
+    // the cascade actually escalated (records carry the final model)
+    let escalated = retained
+        .0
+        .records
+        .iter()
+        .filter(|r| r.model == ModelId::named("llama3-70b"))
+        .count();
+    assert!(
+        escalated > 0 && escalated < retained.0.records.len(),
+        "cascade must split the population: {escalated}"
+    );
+}
+
+#[test]
+fn exact_arrival_ties_across_streams_keep_runs_identical() {
+    // two classes on identical Uniform clocks force exact arrival-time
+    // ties between class streams — the streaming merge and the eager
+    // sort must break them identically (by id)
+    let a = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 40, 3.0)
+        .with_seed(73)
+        .with_arrival(Arrival::Uniform { rate: 3.0 });
+    let mix = WorkloadMix::new(vec![(1.0, a.clone()), (1.0, a)]);
+    let eager = mix.generate();
+    assert!(
+        eager.windows(2).any(|w| w[0].arrival == w[1].arrival),
+        "setup must produce ties"
+    );
+    let retained = run(&llm_spec(), &mix, RETAINED);
+    let streamed = run(&llm_spec(), &mix, STREAMED);
+    assert_bit_identical(&retained, &streamed);
+}
+
+// ---- metrics path ----------------------------------------------------------
+
+#[test]
+fn record_metrics_match_retained_pool_scan_bit_for_bit() {
+    let mix = mixed_mix(80);
+    let (coord, _) = run(&mixed_spec(), &mix, RETAINED);
+    let slo = SloLadder::retrieval();
+    let records = RunMetrics::collect(&coord, &slo);
+    let pool_scan = RunMetrics::collect_from_pool(&coord, &slo);
+    assert_eq!(records.n_requests, pool_scan.n_requests);
+    assert_eq!(records.n_serviced, pool_scan.n_serviced);
+    assert_eq!(records.n_failed, pool_scan.n_failed);
+    assert_eq!(records.ttft_samples, pool_scan.ttft_samples);
+    assert_eq!(records.tpot_samples, pool_scan.tpot_samples);
+    assert_eq!(records.e2e_samples, pool_scan.e2e_samples);
+    assert_eq!(records.throughput_tok_s, pool_scan.throughput_tok_s);
+    assert_eq!(records.goodput_frac, pool_scan.goodput_frac);
+    assert_eq!(records.goodput_req_s, pool_scan.goodput_req_s);
+    assert_eq!(records.tok_per_joule, pool_scan.tok_per_joule);
+    assert_eq!(records.ttft, pool_scan.ttft);
+    assert_eq!(records.tpot, pool_scan.tpot);
+    assert_eq!(records.e2e, pool_scan.e2e);
+}
+
+// ---- memory + determinism --------------------------------------------------
+
+#[test]
+fn peak_inflight_equals_pool_peak_under_retirement() {
+    let mix = mixed_mix(80);
+    let (coord, _) = run(&mixed_spec(), &mix, STREAMED);
+    let ops = coord.pool.ops();
+    assert_eq!(
+        ops.peak_live, coord.stats.peak_inflight,
+        "pool occupancy must track in-flight exactly under streaming+retirement"
+    );
+    assert!(
+        ops.peak_live < 80,
+        "peak live {} must stay below the 80-request trace",
+        ops.peak_live
+    );
+    assert_eq!(ops.slots, ops.peak_live, "arena allocates only the peak");
+    assert_eq!(ops.len, 0, "every request retired by the end");
+    assert_eq!(ops.retired as usize, coord.serviced.len() + coord.failed.len());
+    assert_eq!(ops.resident, 0);
+    // the queue never held the trace either: streaming keeps at most
+    // one pending arrival per class outside the queue
+    assert!(coord.stats.peak_queue < 80);
+}
+
+#[test]
+fn freelist_reuse_is_deterministic_across_identical_runs() {
+    let observe = || {
+        let mix = mixed_mix(60);
+        let mut coord = mixed_spec().build().unwrap();
+        coord.retire = true;
+        coord.stream(&mix);
+        // per-event digest of the (id → slot) assignment of every live
+        // request: identical runs must recycle identical slots in
+        // identical order
+        let mut digests = Vec::new();
+        while coord.step_event() {
+            let mut d = 0u64;
+            for (id, _) in &coord.pool {
+                let slot = coord.pool.slot_of(*id).unwrap() as u64;
+                d = d
+                    .wrapping_mul(0x100000001B3)
+                    .wrapping_add(id.wrapping_mul(65_521).wrapping_add(slot));
+            }
+            digests.push(d);
+        }
+        assert!(coord.all_serviced());
+        (coord.serviced.clone(), coord.clock, digests)
+    };
+    let (s1, c1, d1) = observe();
+    let (s2, c2, d2) = observe();
+    assert_eq!(s1, s2, "serviced order must be reproducible");
+    assert_eq!(c1, c2);
+    assert_eq!(d1, d2, "slot assignment must be reproducible event-for-event");
+}

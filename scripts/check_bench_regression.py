@@ -1,10 +1,11 @@
 #!/usr/bin/env python3
-"""Warn-only events/s diff between a fresh bench run and the committed
-baseline (docs/performance.md).
+"""Warn-only events/s and memory diff between a fresh bench run and the
+committed baseline (docs/performance.md).
 
 Usage:
     python3 scripts/check_bench_regression.py FRESH.json [BASELINE.json]
         [--threshold NAME=RATIO ...] [--default-threshold RATIO]
+        [--mem-threshold NAME=RATIO ...] [--default-mem-threshold RATIO]
 
 The baseline must come from runs at the SAME scale as the fresh
 document: CI diffs its --fast smoke (BENCH_smoke.json) against the
@@ -14,18 +15,27 @@ toolchain env via `hermes bench bench_llm_50k --fast --baseline on
 is for humans and would be skipped row-by-row here as a scale
 mismatch.
 
-Compares the `incremental.events_per_s` of every scenario present in
-both documents *at the same scale* (rows whose `n_requests` differ —
-e.g. a --fast smoke vs a committed full-scale run — are skipped, since
-that ratio measures scale, not regression) and prints a WARNING when
-the fresh run falls below the scenario's threshold x baseline. The
-default threshold applies to every scenario; `--threshold NAME=RATIO`
-overrides it per scenario (e.g. a noisier multi-model row can run with
-a looser tripwire than the steady single-pool rows). Always exits 0:
-CI runners differ wildly in per-core speed, so this is a tripwire for
-humans reading the log, not a gate. (A missing baseline — e.g. before
-the first release-mode `hermes bench` run is committed — is reported
-and tolerated.)
+Two comparisons run per scenario present in both documents *at the
+same scale* (rows whose `n_requests` differ — e.g. a --fast smoke vs a
+committed full-scale run — are skipped, since that ratio measures
+scale, not regression):
+
+* **speed**: WARN when fresh `incremental.events_per_s` falls below
+  the scenario's threshold x baseline (default 60% — generous, CI
+  hardware is heterogeneous). `--threshold NAME=RATIO` overrides per
+  scenario.
+* **memory**: WARN when fresh `incremental.peak_resident_slots` or
+  `incremental.resident_bytes_est` *grows* beyond the scenario's
+  memory threshold x baseline (default 1.25x). Deterministic
+  simulations make these counters machine-independent, so growth here
+  is a real regression of the O(in-flight) guarantee — e.g. a leak of
+  retired slots — not noise. `--mem-threshold NAME=RATIO` overrides
+  per scenario (rows without the fields, i.e. pre-retirement
+  baselines, are skipped).
+
+Always exits 0: this is a tripwire for humans reading the log, not a
+gate. (A missing baseline — e.g. before the first release-mode
+`hermes bench` run is committed — is reported and tolerated.)
 """
 
 import json
@@ -35,6 +45,13 @@ import sys
 # generous because CI hardware is heterogeneous and the committed
 # baseline comes from a release-mode run on a developer machine
 DEFAULT_THRESHOLD = 0.60
+
+# peak_resident_slots / resident_bytes_est above 125% of the committed
+# baseline triggers a warning; these are deterministic counters, so the
+# slack only covers intentional workload-shape tweaks
+DEFAULT_MEM_THRESHOLD = 1.25
+
+MEM_FIELDS = ("peak_resident_slots", "resident_bytes_est")
 
 
 def load(path):
@@ -57,27 +74,47 @@ def rows_by_name(doc):
         inc = row.get("incremental", {})
         eps = inc.get("events_per_s")
         if name and isinstance(eps, (int, float)):
-            out[name] = (eps, inc.get("n_requests"))
+            mem = {
+                k: inc[k]
+                for k in MEM_FIELDS
+                if isinstance(inc.get(k), (int, float))
+            }
+            out[name] = (eps, inc.get("n_requests"), mem)
     return out
 
 
+def parse_kv(flag, arg, store):
+    if "=" not in arg:
+        raise ValueError(f"{flag} needs NAME=RATIO")
+    name, ratio = arg.split("=", 1)
+    store[name] = float(ratio)
+
+
 def parse_args(argv):
-    """Returns (fresh_path, base_path, default_threshold, per_scenario)."""
+    """Returns (fresh, base, default_thr, per_scenario, default_mem,
+    per_scenario_mem)."""
     positional = []
     per_scenario = {}
+    per_scenario_mem = {}
     default_threshold = DEFAULT_THRESHOLD
+    default_mem = DEFAULT_MEM_THRESHOLD
     i = 1
     while i < len(argv):
         arg = argv[i]
         if arg == "--threshold":
             i += 1
-            if i >= len(argv) or "=" not in argv[i]:
+            if i >= len(argv):
                 raise ValueError("--threshold needs NAME=RATIO")
-            name, ratio = argv[i].split("=", 1)
-            per_scenario[name] = float(ratio)
+            parse_kv("--threshold", argv[i], per_scenario)
         elif arg.startswith("--threshold="):
-            name, ratio = arg[len("--threshold="):].split("=", 1)
-            per_scenario[name] = float(ratio)
+            parse_kv("--threshold", arg[len("--threshold="):], per_scenario)
+        elif arg == "--mem-threshold":
+            i += 1
+            if i >= len(argv):
+                raise ValueError("--mem-threshold needs NAME=RATIO")
+            parse_kv("--mem-threshold", argv[i], per_scenario_mem)
+        elif arg.startswith("--mem-threshold="):
+            parse_kv("--mem-threshold", arg[len("--mem-threshold="):], per_scenario_mem)
         elif arg == "--default-threshold":
             i += 1
             if i >= len(argv):
@@ -85,6 +122,13 @@ def parse_args(argv):
             default_threshold = float(argv[i])
         elif arg.startswith("--default-threshold="):
             default_threshold = float(arg[len("--default-threshold="):])
+        elif arg == "--default-mem-threshold":
+            i += 1
+            if i >= len(argv):
+                raise ValueError("--default-mem-threshold needs a RATIO")
+            default_mem = float(argv[i])
+        elif arg.startswith("--default-mem-threshold="):
+            default_mem = float(arg[len("--default-mem-threshold="):])
         elif arg.startswith("--"):
             raise ValueError(f"unknown flag {arg}")
         else:
@@ -94,7 +138,7 @@ def parse_args(argv):
         raise ValueError("FRESH.json required")
     fresh = positional[0]
     base = positional[1] if len(positional) > 1 else "BENCH_ci_fast.json"
-    return fresh, base, default_threshold, per_scenario
+    return fresh, base, default_threshold, per_scenario, default_mem, per_scenario_mem
 
 
 def main(argv):
@@ -102,7 +146,14 @@ def main(argv):
         print(__doc__)
         return 0
     try:
-        fresh_path, base_path, default_threshold, per_scenario = parse_args(argv)
+        (
+            fresh_path,
+            base_path,
+            default_threshold,
+            per_scenario,
+            default_mem,
+            per_scenario_mem,
+        ) = parse_args(argv)
     except ValueError as e:
         print(f"bench-diff: {e}")
         print(__doc__)
@@ -123,12 +174,12 @@ def main(argv):
         return 0
 
     warned = False
-    for name, (eps, n) in sorted(fresh.items()):
+    for name, (eps, n, mem) in sorted(fresh.items()):
         ref_entry = base.get(name)
         if ref_entry is None or ref_entry[0] <= 0:
             print(f"bench-diff: {name}: no baseline entry — skipped")
             continue
-        ref, ref_n = ref_entry
+        ref, ref_n, ref_mem = ref_entry
         if n != ref_n:
             # a fast-scale smoke vs a full-scale committed run measures
             # scale, not regression — only same-sized runs are comparable
@@ -145,6 +196,25 @@ def main(argv):
             warned = True
         else:
             print(line)
+        # memory growth: only rows that carry the retirement-era fields
+        # on both sides are comparable
+        mem_threshold = per_scenario_mem.get(name, default_mem)
+        for field in MEM_FIELDS:
+            if field not in mem or ref_mem.get(field, 0) <= 0:
+                continue
+            mratio = mem[field] / ref_mem[field]
+            mline = (
+                f"bench-diff: {name}: {field} {mem[field]:,.0f} vs baseline "
+                f"{ref_mem[field]:,.0f} ({mratio:.2f}x)"
+            )
+            if mratio > mem_threshold:
+                print(
+                    f"WARNING {mline} — above the {mem_threshold:.2f}x growth "
+                    "threshold (O(in-flight) regression?)"
+                )
+                warned = True
+            else:
+                print(mline)
     if warned:
         print("bench-diff: WARN-ONLY — not failing the build (see docs/performance.md)")
     return 0
