@@ -2,7 +2,8 @@
 //! `hermes bench` (docs/performance.md).
 //!
 //! Runs every `scenarios/bench_*.json` scenario at CI scale by default
-//! (`HERMES_FULL=1` for the 50k–200k-request paper scale), prints
+//! (`HERMES_FULL=1` for the 50k–200k-request paper scale,
+//! `HERMES_JOBS=N` to fan independent runs across N workers), prints
 //! wall-clock / events-per-second / peak-pool / pool-op numbers, and
 //! writes `BENCH_core.json` so the repo carries a perf trajectory
 //! across PRs. Every scenario also runs against the hashmap-pool
@@ -18,6 +19,13 @@ use hermes::util::bench::banner;
 fn main() {
     // mirror the fig* regenerators: fast scale unless HERMES_FULL=1
     let fast = std::env::var("HERMES_FULL").is_err();
+    // HERMES_JOBS=N fans the independent runs across N workers (the
+    // `hermes bench --jobs N` knob; results are bit-identical to serial)
+    let jobs = std::env::var("HERMES_JOBS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1);
     let names = bench::bench_scenarios();
     if names.is_empty() {
         eprintln!("no bench_* scenarios found under scenarios/");
@@ -25,7 +33,7 @@ fn main() {
     }
 
     banner("core simulator speed (BENCH_core.json)");
-    if let Err(e) = bench::run_and_report(&names, fast, Baseline::Auto, "BENCH_core.json") {
+    if let Err(e) = bench::run_and_report(&names, fast, Baseline::Auto, jobs, "BENCH_core.json") {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }

@@ -43,6 +43,7 @@ use crate::coordinator::LoadMode;
 use crate::metrics::RunMetrics;
 use crate::scenario::Scenario;
 use crate::scheduler::{PoolBackend, RequestPool};
+use crate::sim::parallel;
 use crate::util::json::Json;
 
 /// How the run feeds and drains its requests: eager/retained (the
@@ -230,15 +231,40 @@ pub fn run_once(
     })
 }
 
-/// Benchmark one scenario by registry name or path.
-pub fn run_scenario(name: &str, fast: bool, baseline: Baseline) -> Result<BenchResult> {
+/// One independent benchmark run of a planned scenario: the shipping
+/// configuration or one of its baselines. The unit of work the `--jobs`
+/// pool dispatches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum UnitKind {
+    /// arena pool + incremental routing in the scenario's exec mode
+    Incremental,
+    /// hashmap pool + incremental routing (pre-arena baseline)
+    MapPool,
+    /// hashmap pool + full-scan routing (pre-incremental baseline)
+    FullScan,
+    /// eager injection, nothing retired (pre-streaming memory baseline)
+    Retained,
+}
+
+/// A loaded scenario plus the configurations it will run — the
+/// what-to-run decisions (`extras`, `--baseline`, scale) made up front
+/// so execution is a pure fan-out of independent units.
+struct ScenarioPlan {
+    sc: Scenario,
+    fast: bool,
+    exec: ExecMode,
+    /// submission order; `Incremental` always first
+    units: Vec<UnitKind>,
+}
+
+fn plan_scenario(name: &str, fast: bool, baseline: Baseline) -> Result<ScenarioPlan> {
     let sc = Scenario::load(name)?;
     let extras = sc.extras();
     let exec = ExecMode {
         stream: extras.bool_or("stream", false),
         retire: extras.bool_or("retire", false),
     };
-    let incremental = run_once(&sc, fast, LoadMode::Incremental, PoolBackend::Arena, exec)?;
+    let mut units = vec![UnitKind::Incremental];
     // pre-arena pool: same asymptotics as the shipping run, so it runs
     // by default. Scenarios whose full-scale run is long enough that a
     // doubled wall clock hurts (the 1M tier) opt out via
@@ -248,43 +274,99 @@ pub fn run_scenario(name: &str, fast: bool, baseline: Baseline) -> Result<BenchR
     let skip_map = !extras.bool_or("map_pool", true)
         && baseline != Baseline::On
         && !sc.use_fast(fast);
-    let map_pool = if baseline == Baseline::Off || skip_map {
-        None
-    } else {
-        Some(run_once(&sc, fast, LoadMode::Incremental, PoolBackend::Map, exec)?)
-    };
+    if baseline != Baseline::Off && !skip_map {
+        units.push(UnitKind::MapPool);
+    }
     let want_full_scan = match baseline {
         Baseline::On => true,
         Baseline::Off => false,
         Baseline::Auto => extras.bool_or("baseline", false) || sc.use_fast(fast),
     };
-    let baseline_run = if want_full_scan {
-        Some(run_once(&sc, fast, LoadMode::FullScan, PoolBackend::Map, exec)?)
-    } else {
-        None
-    };
+    if want_full_scan {
+        units.push(UnitKind::FullScan);
+    }
     // the O(in-flight) reference: eager injection, nothing retired —
     // its peak_resident_slots is the whole trace
-    let retained = if (exec.stream || exec.retire) && baseline != Baseline::Off {
-        Some(run_once(
-            &sc,
-            fast,
-            LoadMode::Incremental,
-            PoolBackend::Arena,
-            ExecMode::default(),
-        )?)
-    } else {
-        None
+    if (exec.stream || exec.retire) && baseline != Baseline::Off {
+        units.push(UnitKind::Retained);
+    }
+    Ok(ScenarioPlan { sc, fast, exec, units })
+}
+
+fn run_unit(plan: &ScenarioPlan, kind: UnitKind) -> Result<BenchRun> {
+    let (mode, backend, exec) = match kind {
+        UnitKind::Incremental => (LoadMode::Incremental, PoolBackend::Arena, plan.exec),
+        UnitKind::MapPool => (LoadMode::Incremental, PoolBackend::Map, plan.exec),
+        UnitKind::FullScan => (LoadMode::FullScan, PoolBackend::Map, plan.exec),
+        UnitKind::Retained => (LoadMode::Incremental, PoolBackend::Arena, ExecMode::default()),
     };
-    Ok(BenchResult {
-        name: sc.name.clone(),
-        title: sc.title.clone(),
-        exec,
-        incremental,
-        baseline: baseline_run,
-        map_pool,
-        retained,
-    })
+    run_once(&plan.sc, plan.fast, mode, backend, exec)
+}
+
+/// Benchmark one scenario by registry name or path, serially (the
+/// `--jobs 1` oracle path of [`run_scenarios`]).
+pub fn run_scenario(name: &str, fast: bool, baseline: Baseline) -> Result<BenchResult> {
+    let mut results = run_scenarios(&[name.to_string()], fast, baseline, 1)?;
+    Ok(results.pop().expect("one scenario in, one result out"))
+}
+
+/// Benchmark every scenario in `names`: plan each scenario's runs
+/// (shipping config + enabled baselines), flatten them into one unit
+/// list, dispatch on a `jobs`-wide worker pool
+/// ([`parallel::run`] — `jobs <= 1` executes inline, serially, in
+/// submission order), and reassemble per-scenario results in input
+/// order. Every unit is an independent simulation, so the assembled
+/// results are bit-identical across job counts (wall-clock timing
+/// fields aside) — `rust/tests/parallel_equivalence.rs` pins this.
+pub fn run_scenarios(
+    names: &[String],
+    fast: bool,
+    baseline: Baseline,
+    jobs: usize,
+) -> Result<Vec<BenchResult>> {
+    let plans = names
+        .iter()
+        .map(|name| plan_scenario(name, fast, baseline))
+        .collect::<Result<Vec<_>>>()?;
+    let units: Vec<(usize, UnitKind)> = plans
+        .iter()
+        .enumerate()
+        .flat_map(|(i, p)| p.units.iter().map(move |&k| (i, k)))
+        .collect();
+    let runs = parallel::run(jobs, units.len(), |u| {
+        let (i, kind) = units[u];
+        run_unit(&plans[i], kind)
+    });
+
+    let mut per_plan: Vec<Vec<(UnitKind, BenchRun)>> = plans.iter().map(|_| Vec::new()).collect();
+    for (&(i, kind), run) in units.iter().zip(runs) {
+        per_plan[i].push((kind, run?));
+    }
+    let mut out = Vec::with_capacity(plans.len());
+    for (plan, runs) in plans.into_iter().zip(per_plan) {
+        let mut incremental = None;
+        let mut map_pool = None;
+        let mut full_scan = None;
+        let mut retained = None;
+        for (kind, run) in runs {
+            match kind {
+                UnitKind::Incremental => incremental = Some(run),
+                UnitKind::MapPool => map_pool = Some(run),
+                UnitKind::FullScan => full_scan = Some(run),
+                UnitKind::Retained => retained = Some(run),
+            }
+        }
+        out.push(BenchResult {
+            name: plan.sc.name.clone(),
+            title: plan.sc.title.clone(),
+            exec: plan.exec,
+            incremental: incremental.expect("every plan runs the shipping config"),
+            baseline: full_scan,
+            map_pool,
+            retained,
+        });
+    }
+    Ok(out)
 }
 
 fn run_to_json(b: &BenchRun) -> Json {
@@ -310,9 +392,42 @@ fn run_to_json(b: &BenchRun) -> Json {
     j
 }
 
-/// The `BENCH_core.json` document.
-pub fn to_json(results: &[BenchResult]) -> Json {
-    let rows = results
+/// Total simulated events across every run in `results` (the shipping
+/// configuration and all baselines) — the numerator of the harness's
+/// aggregate events/s.
+pub fn total_events(results: &[BenchResult]) -> u64 {
+    results
+        .iter()
+        .map(|r| {
+            r.incremental.events
+                + r.baseline.as_ref().map_or(0, |b| b.events)
+                + r.map_pool.as_ref().map_or(0, |b| b.events)
+                + r.retained.as_ref().map_or(0, |b| b.events)
+        })
+        .sum()
+}
+
+fn n_runs(results: &[BenchResult]) -> usize {
+    results
+        .iter()
+        .map(|r| {
+            1 + r.baseline.is_some() as usize
+                + r.map_pool.is_some() as usize
+                + r.retained.is_some() as usize
+        })
+        .sum()
+}
+
+/// The `BENCH_core.json` document: one row per scenario (each carrying
+/// the `jobs` the harness ran with and the per-run wall clocks), plus a
+/// trailing `aggregate` entry — total events across every run divided
+/// by the harness's elapsed wall clock (`wall_s`). Per-run events/s is
+/// flat in job count (each simulation is single-threaded); the
+/// aggregate column is where the multicore win shows.
+/// `scripts/check_bench_regression.py` keys rows by `name`, so the
+/// nameless aggregate entry is invisible to the regression tripwire.
+pub fn to_json(results: &[BenchResult], jobs: usize, wall_s: f64) -> Json {
+    let mut rows: Vec<Json> = results
         .iter()
         .map(|r| {
             let mut j = Json::obj();
@@ -320,6 +435,7 @@ pub fn to_json(results: &[BenchResult]) -> Json {
                 .set("title", r.title.clone())
                 .set("stream", r.exec.stream)
                 .set("retire", r.exec.retire)
+                .set("jobs", jobs)
                 .set("incremental", run_to_json(&r.incremental));
             if let Some(b) = &r.baseline {
                 j.set("full_scan_baseline", run_to_json(b));
@@ -342,24 +458,44 @@ pub fn to_json(results: &[BenchResult]) -> Json {
             j
         })
         .collect();
+    let events = total_events(results);
+    let mut agg = Json::obj();
+    agg.set("jobs", jobs)
+        .set("runs", n_runs(results))
+        .set("events", events)
+        .set("wall_s", wall_s)
+        .set("aggregate_events_per_s", events as f64 / wall_s.max(1e-9));
+    let mut summary = Json::obj();
+    summary.set("aggregate", agg);
+    rows.push(summary);
     Json::Arr(rows)
 }
 
-/// Run every scenario in `names` (printing per-scenario progress),
-/// print the summary table, and write the JSON document to `out_path`.
-/// Shared by `hermes bench` and `cargo bench --bench core_speed` so the
-/// two faces of the harness cannot drift apart.
+/// Run every scenario in `names` on a `jobs`-wide worker pool, print
+/// the per-scenario detail, the summary table and the aggregate
+/// events/s line, and write the JSON document to `out_path`. Shared by
+/// `hermes bench` and `cargo bench --bench core_speed` so the two faces
+/// of the harness cannot drift apart.
 pub fn run_and_report(
     names: &[String],
     fast: bool,
     baseline: Baseline,
+    jobs: usize,
     out_path: &str,
 ) -> Result<Vec<BenchResult>> {
-    let mut results = Vec::new();
     for name in names {
-        println!("benchmarking '{name}'{} ...", if fast { " (fast scale)" } else { "" });
-        let r = run_scenario(name, fast, baseline)?;
+        println!(
+            "benchmarking '{name}'{}{} ...",
+            if fast { " (fast scale)" } else { "" },
+            if jobs > 1 { format!(" [jobs={jobs}]") } else { String::new() }
+        );
+    }
+    let t0 = Instant::now();
+    let results = run_scenarios(names, fast, baseline, jobs)?;
+    let batch_wall = t0.elapsed().as_secs_f64();
+    for r in &results {
         let inc = &r.incremental;
+        println!("'{}' — {}:", r.name, r.title);
         println!(
             "  {} requests on {} clients: {:.3}s wall, {} events ({:.0} events/s, {:.1} sim-s/wall-s)",
             inc.n_requests, inc.n_clients, inc.wall_s, inc.events, inc.events_per_s, inc.sim_rate
@@ -407,7 +543,6 @@ pub fn run_and_report(
                 r.speedup().unwrap_or(0.0)
             );
         }
-        results.push(r);
     }
 
     let mut table = crate::util::bench::Table::new(&[
@@ -433,7 +568,17 @@ pub fn run_and_report(
     }
     table.print();
 
-    std::fs::write(out_path, to_json(&results).to_pretty())
+    let events = total_events(&results);
+    println!(
+        "aggregate: {} runs, {} events in {:.3}s wall ({:.0} events/s, jobs={})",
+        n_runs(&results),
+        events,
+        batch_wall,
+        events as f64 / batch_wall.max(1e-9),
+        jobs
+    );
+
+    std::fs::write(out_path, to_json(&results, jobs, batch_wall).to_pretty())
         .with_context(|| format!("writing {out_path}"))?;
     println!("bench results -> {out_path}");
     Ok(results)
@@ -515,17 +660,34 @@ mod tests {
         assert_eq!(m.events, r.incremental.events);
         assert_eq!(m.n_serviced, r.incremental.n_serviced);
         assert_eq!(m.makespan_s, r.incremental.makespan_s);
-        let j = to_json(&[r]);
+        let j = to_json(&[r], 2, 0.5);
         let parsed = Json::parse(&j.to_pretty()).unwrap();
-        let row = &parsed.as_arr().unwrap()[0];
+        let rows = parsed.as_arr().unwrap();
+        let row = &rows[0];
         assert!(row.get("incremental").is_some());
         assert!(row.get("hashmap_pool_baseline").is_some());
         assert!(row.get("speedup_vs_hashmap_pool").is_some());
+        assert_eq!(row.at(&["jobs"]).and_then(|j| j.as_f64()), Some(2.0));
         assert!(
             row.at(&["incremental", "pool_reads"])
                 .and_then(|j| j.as_f64())
                 .unwrap_or(0.0)
                 > 0.0
         );
+        // the trailing aggregate entry: nameless (so the regression
+        // script skips it), carrying the jobs + aggregate events/s
+        // columns the parallel harness commits to
+        let agg = rows.last().unwrap();
+        assert!(agg.get("name").is_none());
+        assert_eq!(agg.at(&["aggregate", "jobs"]).and_then(|j| j.as_f64()), Some(2.0));
+        assert!(
+            agg.at(&["aggregate", "aggregate_events_per_s"])
+                .and_then(|j| j.as_f64())
+                .unwrap_or(0.0)
+                > 0.0
+        );
+        // 50k tier: incremental + hashmap + full-scan (no retained —
+        // the scenario neither streams nor retires)
+        assert_eq!(agg.at(&["aggregate", "runs"]).and_then(|j| j.as_f64()), Some(3.0));
     }
 }

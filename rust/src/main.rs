@@ -2,16 +2,20 @@
 //!
 //!   hermes simulate --config cfg.json [--out metrics.json]
 //!                   [--trace trace.json] [--quiet]
-//!   hermes sweep    --config cfg.json --rates 1,2,4,8 [--out sweep.json]
-//!   hermes scenario <name|path.json> [--fast] [--out sweep.json]
+//!   hermes sweep    --config cfg.json --rates 1,2,4,8 [--jobs N]
+//!                   [--out sweep.json]
+//!   hermes scenario <name|path.json> [--fast] [--jobs N] [--out sweep.json]
 //!   hermes scenario --list                # registry under scenarios/
-//!   hermes bench    [name...] [--fast] [--baseline auto|on|off]
+//!   hermes bench    [name...] [--fast] [--baseline auto|on|off] [--jobs N]
 //!                   [--out BENCH_core.json]
 //!   hermes experiment <fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3>
-//!                   [--fast]
+//!                   [--fast] [--jobs N]
 //!   hermes artifacts                      # list AOT predictor variants
 //!
-//! Every run is deterministic given the config's seed.
+//! Every run is deterministic given the config's seed — including under
+//! `--jobs N`: independent runs fan across a bounded worker pool and
+//! come back in submission order, bit-identical to the `--jobs 1`
+//! serial oracle (docs/performance.md, "Parallel execution").
 
 use anyhow::{bail, Context, Result};
 
@@ -55,12 +59,28 @@ fn print_usage() {
     println!();
     println!("usage:");
     println!("  hermes simulate --config cfg.json [--out m.json] [--trace t.json]");
-    println!("  hermes sweep --config cfg.json --rates 1,2,4 [--out sweep.json]");
-    println!("  hermes scenario <name|path.json> [--fast] [--out sweep.json]   (--list to enumerate)");
+    println!("  hermes sweep --config cfg.json --rates 1,2,4 [--jobs N] [--out sweep.json]");
+    println!("  hermes scenario <name|path.json> [--fast] [--jobs N] [--out sweep.json]   (--list to enumerate)");
     println!("  hermes scenario check             # resolve every scenario's model/policy/npu refs");
-    println!("  hermes bench [name...] [--fast] [--baseline auto|on|off] [--out BENCH_core.json]");
-    println!("  hermes experiment <fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|ablations|multimodel|all> [--fast]");
+    println!("  hermes bench [name...] [--fast] [--baseline auto|on|off] [--jobs N] [--out BENCH_core.json]");
+    println!("  hermes experiment <fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|ablations|multimodel|all> [--fast] [--jobs N]");
     println!("  hermes artifacts");
+    println!();
+    println!("--jobs N fans independent runs across N worker threads; results are");
+    println!("bit-identical to the default serial run (--jobs 1).");
+}
+
+/// Parse `--jobs N` (default 1 — the serial bit-exactness oracle).
+/// Strict: a malformed or zero value is an error, not a silent
+/// fall-back to serial.
+fn jobs_arg(args: &Args) -> Result<usize> {
+    match args.opt_str("jobs") {
+        None => Ok(1),
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(n),
+            _ => bail!("--jobs needs a positive integer, got '{v}'"),
+        },
+    }
 }
 
 fn simulate(args: &Args) -> Result<()> {
@@ -150,6 +170,7 @@ fn sweep(args: &Args) -> Result<()> {
         .map(|s| s.trim().parse::<f64>().context("bad rate"))
         .collect::<Result<_>>()?;
     let out = args.opt_str("out");
+    hermes::sim::parallel::set_jobs(jobs_arg(args)?);
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
 
     let cfg = SimConfig::from_file(&cfg_path)?;
@@ -213,6 +234,7 @@ fn scenario(args: &Args) -> Result<()> {
     }
     let fast = args.bool_or("fast", false);
     let out = args.opt_str("out");
+    hermes::sim::parallel::set_jobs(jobs_arg(args)?);
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
 
     let sc = Scenario::load(&which)?;
@@ -302,6 +324,7 @@ fn bench_cmd(args: &Args) -> Result<()> {
         "off" | "false" | "0" | "no" => bench::Baseline::Off,
         other => bail!("--baseline must be auto|on|off, got '{other}'"),
     };
+    let jobs = jobs_arg(args)?;
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
 
     let names = if args.positional.is_empty() {
@@ -313,7 +336,7 @@ fn bench_cmd(args: &Args) -> Result<()> {
         bail!("no bench_* scenarios found under scenarios/");
     }
 
-    bench::run_and_report(&names, fast, baseline, &out)?;
+    bench::run_and_report(&names, fast, baseline, jobs, &out)?;
     Ok(())
 }
 
@@ -324,6 +347,10 @@ fn experiment(args: &Args) -> Result<()> {
         .cloned()
         .context("experiment name required (fig5..fig15, table3)")?;
     let fast = args.bool_or("fast", false);
+    // experiments reach their sweeps through deeply nested fig*
+    // wrappers, so the job count travels via the process-wide knob
+    // instead of a parameter on every signature
+    hermes::sim::parallel::set_jobs(jobs_arg(args)?);
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
     experiments::run_by_name(&which, fast)
 }

@@ -13,7 +13,11 @@
 //! The registry is process-global and append-only: built-in specs (and
 //! the alias table that used to live in `hardware::model`'s match
 //! statement) are seeded on first use; `register` interns additional
-//! specs. Identity is by *canonical name* — two `ModelId`s are equal iff
+//! specs. Interning is thread-safe (`OnceLock` + `RwLock`, read-locked
+//! on the hot `spec()` path) so parallel sweep workers
+//! ([`crate::sim::parallel`]) can resolve and register models
+//! concurrently — `rust/tests/registry_concurrency.rs` pins the
+//! guarantees. Identity is by *canonical name* — two `ModelId`s are equal iff
 //! they name the same registered model — so ids are stable within a
 //! process but their numeric values are an implementation detail;
 //! nothing may depend on their ordering.
@@ -22,7 +26,7 @@ pub mod policy;
 
 use std::collections::HashMap;
 use std::fmt;
-use std::sync::{Mutex, OnceLock};
+use std::sync::{OnceLock, RwLock};
 
 use anyhow::{bail, Result};
 
@@ -47,8 +51,14 @@ fn normalize(name: &str) -> String {
     name.to_ascii_lowercase().replace(['.', '_'], "-")
 }
 
-fn registry() -> &'static Mutex<Registry> {
-    static REGISTRY: OnceLock<Mutex<Registry>> = OnceLock::new();
+// `RwLock`, not `Mutex`: `spec()` sits on the routing/transfer hot path
+// (`Coordinator::transfer_bytes` resolves KV bytes-per-token through it)
+// and parallel sweeps (`sim::parallel`) read it from every worker, while
+// writes only happen when a new name is interned — read-mostly by
+// construction. Interning is append-only, so a reader between two
+// writes always sees a consistent prefix.
+fn registry() -> &'static RwLock<Registry> {
+    static REGISTRY: OnceLock<RwLock<Registry>> = OnceLock::new();
     REGISTRY.get_or_init(|| {
         let mut reg = Registry {
             specs: Vec::new(),
@@ -62,7 +72,7 @@ fn registry() -> &'static Mutex<Registry> {
                 reg.by_name.insert(normalize(alias), id);
             }
         }
-        Mutex::new(reg)
+        RwLock::new(reg)
     })
 }
 
@@ -70,7 +80,7 @@ impl ModelId {
     /// Look up a name or alias; `None` if unregistered.
     pub fn resolve(name: &str) -> Option<ModelId> {
         registry()
-            .lock()
+            .read()
             .unwrap()
             .by_name
             .get(&normalize(name))
@@ -99,7 +109,9 @@ impl ModelId {
     /// the spec when the name is new. Name-based identity — a spec whose
     /// name is already registered resolves to the existing entry.
     pub fn of_spec(spec: &ModelSpec) -> ModelId {
-        let mut reg = registry().lock().unwrap();
+        // take the write lock up front: re-checking under it makes the
+        // read-then-insert race-free when threads intern the same name
+        let mut reg = registry().write().unwrap();
         let key = normalize(spec.name);
         if let Some(&i) = reg.by_name.get(&key) {
             return ModelId(i);
@@ -114,7 +126,7 @@ impl ModelId {
     /// Idempotent for an identical re-registration; redefining a known
     /// name with different parameters is an error.
     pub fn register(spec: ModelSpec) -> Result<ModelId> {
-        let mut reg = registry().lock().unwrap();
+        let mut reg = registry().write().unwrap();
         let key = normalize(spec.name);
         if let Some(&i) = reg.by_name.get(&key) {
             if *reg.specs[i as usize] == spec {
@@ -133,7 +145,7 @@ impl ModelId {
 
     /// The interned architecture spec. O(1) index into the registry.
     pub fn spec(self) -> &'static ModelSpec {
-        registry().lock().unwrap().specs[self.0 as usize]
+        registry().read().unwrap().specs[self.0 as usize]
     }
 
     /// Canonical model name.
@@ -175,7 +187,7 @@ impl fmt::Display for ModelId {
 /// Sorted canonical names of every registered model (error messages,
 /// `hermes scenario check` reporting).
 pub fn known_models() -> Vec<&'static str> {
-    let reg = registry().lock().unwrap();
+    let reg = registry().read().unwrap();
     let mut names: Vec<&'static str> = reg.specs.iter().map(|s| s.name).collect();
     names.sort_unstable();
     names

@@ -13,7 +13,10 @@ use crate::runtime::{ArtifactBundle, PredictorExe, Runtime};
 pub struct PjrtPerfModel {
     /// shared across all clients of a build — PJRT client creation and
     /// HLO compilation happen once per variant, not once per client
-    /// (EXPERIMENTS.md §Perf)
+    /// (EXPERIMENTS.md §Perf). `Rc` keeps this model `!Send`, which is
+    /// correct: PJRT handles must not cross threads, so parallel sweeps
+    /// (`sim::parallel`) construct the coordinator — and this model —
+    /// inside the worker that runs it
     exe: Rc<PredictorExe>,
     name: String,
     /// reused input buffer (avoid per-call allocation on the hot path)

@@ -8,6 +8,7 @@ use anyhow::Result;
 
 use super::{Panel, Scenario};
 use crate::sim::driver::{self, SweepPoint};
+use crate::sim::parallel;
 
 /// One strategy's sweep outcome.
 #[derive(Debug, Clone)]
@@ -56,6 +57,14 @@ impl StrategySweep {
 
 /// Sweep every roster entry at an explicit scale (pool size, request
 /// count per client, per-client rates).
+///
+/// The roster × rates grid is flattened into one submission-ordered
+/// unit list and dispatched on the configured worker pool
+/// ([`parallel::jobs`], default 1 = inline serial), so a `--jobs N`
+/// run drains *strategies* concurrently, not just the rates within
+/// one strategy. Every unit is an independent simulation; results are
+/// regrouped by roster order, so the output is identical to the serial
+/// per-strategy loop.
 pub fn sweep_at(
     sc: &Scenario,
     panel: Option<&Panel>,
@@ -64,13 +73,27 @@ pub fn sweep_at(
     rates: &[f64],
 ) -> Result<Vec<StrategySweep>> {
     // the workload and SLO ladder are identical across strategies by
-    // construction — build them once, outside the roster loop
+    // construction — build them once, outside the fan-out
     let mix = sc.workload(panel, requests_per_client * clients)?;
     let slo = sc.slo(panel, &mix)?;
-    let mut out = Vec::with_capacity(sc.roster.len());
-    for entry in &sc.roster {
-        let spec = sc.serving_panel(entry, clients, panel)?;
-        let points = driver::sweep_rates_mix(&spec, &mix, &slo, rates)?;
+    // resolve every strategy's spec up front (cheap plain data; any
+    // model-catalog interning this triggers happens serially here)
+    let specs = sc
+        .roster
+        .iter()
+        .map(|entry| sc.serving_panel(entry, clients, panel))
+        .collect::<Result<Vec<_>>>()?;
+    let n_rates = rates.len();
+    let points = parallel::run(parallel::jobs(), specs.len() * n_rates, |u| {
+        driver::sweep_point_mix(&specs[u / n_rates], &mix, &slo, rates[u % n_rates])
+    });
+    let mut it = points.into_iter();
+    let mut out = Vec::with_capacity(specs.len());
+    for spec in &specs {
+        let points = it
+            .by_ref()
+            .take(n_rates)
+            .collect::<Result<Vec<SweepPoint>>>()?;
         out.push(StrategySweep {
             label: spec.pool.label(),
             points,

@@ -127,10 +127,23 @@ pub struct RequestPool {
     retired: u64,
     live_bytes: usize,
     peak_bytes: usize,
-    /// `Cell` so `Index`/`get` (shared-ref paths) can count too
+    /// `Cell` so `Index`/`get` (shared-ref paths) can count too.
+    /// Per-instance, not global: each coordinator owns its pool, so
+    /// parallel sweep workers (`sim::parallel`) count independently —
+    /// `Cell` is `Send` (the pool moves with its coordinator into a
+    /// worker) and the pool is never shared *between* threads
+    /// (`rust/tests/pool_counters.rs` pins the isolation).
     reads: Cell<u64>,
     writes: Cell<u64>,
 }
+
+// a coordinator (and thus its pool) is built inside one sweep worker
+// and stays there; this assertion keeps the pool from ever growing a
+// field (e.g. `Rc`) that would silently break that pattern
+const _: fn() = || {
+    fn assert_send<T: Send>() {}
+    assert_send::<RequestPool>();
+};
 
 /// Rough resident footprint of one request: the struct itself plus its
 /// pipeline array. `records` is excluded — it grows *during* residence,

@@ -367,6 +367,10 @@ impl ServingSpec {
         }
 
         let mut clients: Vec<Box<dyn Client>> = Vec::new();
+        // `Rc`, deliberately: the predictor cache is build-local and the
+        // built coordinator never crosses a thread boundary — parallel
+        // sweeps (`sim::parallel`) call `build()` *inside* each worker,
+        // so only this plain-data spec needs to be `Sync`
         let mut shared_exe: HashMap<String, std::rc::Rc<crate::runtime::PredictorExe>> =
             HashMap::new();
         match &self.pool {

@@ -1,10 +1,13 @@
 //! Run driver: spec + workload → metrics, with optional rate sweeps
 //! (the "gradually increase the per-client request rate" methodology of
-//! §V-A) run in parallel worker threads.
+//! §V-A) fanned across the [`parallel`](super::parallel) worker pool —
+//! serial by default (`--jobs 1`, the bit-exactness oracle), bounded by
+//! the configured job count otherwise.
 
 use anyhow::Result;
 
 use super::builder::ServingSpec;
+use super::parallel;
 use crate::config::slo::SloLadder;
 use crate::metrics::RunMetrics;
 use crate::workload::request::Request;
@@ -53,16 +56,54 @@ pub fn sweep_rates_mix(
     slo: &SloLadder,
     rates: &[f64],
 ) -> Result<Vec<SweepPoint>> {
+    let points = parallel::run(parallel::jobs(), rates.len(), |i| {
+        sweep_point_mix(spec, mix, slo, rates[i])
+    });
+    points.into_iter().collect()
+}
+
+/// One (spec, mix, rate) point of a sweep — the unit of work every
+/// sweep fan-out (rate ladders here, roster × rates in
+/// `scenario::runner::sweep_at`) dispatches, so the per-point
+/// computation cannot drift between the serial and parallel paths.
+pub fn sweep_point_mix(
+    spec: &ServingSpec,
+    mix: &WorkloadMix,
+    slo: &SloLadder,
+    rate: f64,
+) -> Result<SweepPoint> {
     let n = mix.n_total();
-    sweep_rates_with(spec, slo, rates, |rate| {
+    run_point(spec, slo, rate, &|rate: f64| {
         mix.scaled(n, rate * spec.pool.n_clients() as f64).generate()
     })
 }
 
-/// Generic rate sweep; each point is an independent simulation (own
-/// worker thread — coordinators are constructed inside the worker
-/// because PJRT handles are not Send). `make_requests` maps a per-client
-/// rate to the full request stream for that point.
+/// Build, inject, run, collect one sweep point. The coordinator is
+/// constructed *inside* the calling worker — PJRT handles and the
+/// builder's shared predictor cache are `Rc`-based and never cross a
+/// thread boundary; only the plain-data inputs do.
+fn run_point<F>(
+    spec: &ServingSpec,
+    slo: &SloLadder,
+    rate: f64,
+    make_requests: &F,
+) -> Result<SweepPoint>
+where
+    F: Fn(f64) -> Vec<Request>,
+{
+    let mut coord = spec.build()?;
+    coord.inject(make_requests(rate));
+    coord.run();
+    let metrics = RunMetrics::collect(&coord, slo);
+    let slo_ok = metrics.slo_satisfied(slo);
+    Ok(SweepPoint { rate, metrics, slo_ok })
+}
+
+/// Generic rate sweep; each point is an independent simulation,
+/// dispatched on the configured worker pool ([`parallel::jobs`],
+/// default 1 = inline serial) and collected in rate order.
+/// `make_requests` maps a per-client rate to the full request stream
+/// for that point.
 pub fn sweep_rates_with<F>(
     spec: &ServingSpec,
     slo: &SloLadder,
@@ -72,26 +113,10 @@ pub fn sweep_rates_with<F>(
 where
     F: Fn(f64) -> Vec<Request> + Sync,
 {
-    let results: Vec<Result<SweepPoint>> = std::thread::scope(|scope| {
-        let make_requests = &make_requests;
-        let handles: Vec<_> = rates
-            .iter()
-            .map(|&rate| {
-                let spec = spec.clone();
-                let slo = *slo;
-                scope.spawn(move || -> Result<SweepPoint> {
-                    let mut coord = spec.build()?;
-                    coord.inject(make_requests(rate));
-                    coord.run();
-                    let metrics = RunMetrics::collect(&coord, &slo);
-                    let slo_ok = metrics.slo_satisfied(&slo);
-                    Ok(SweepPoint { rate, metrics, slo_ok })
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    let points = parallel::run(parallel::jobs(), rates.len(), |i| {
+        run_point(spec, slo, rates[i], &make_requests)
     });
-    results.into_iter().collect()
+    points.into_iter().collect()
 }
 
 /// The paper's headline sweep statistic: among SLO-satisfying points,

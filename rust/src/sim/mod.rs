@@ -5,6 +5,7 @@
 
 pub mod builder;
 pub mod driver;
+pub mod parallel;
 pub mod time;
 
 pub use time::SimTime;

@@ -1,0 +1,141 @@
+//! Bounded parallel execution of independent simulation runs.
+//!
+//! Sweeps and benchmarks run many *independent* coordinator instances:
+//! every (spec, workload, rate) point is a self-contained simulation
+//! whose outcome is fully determined by its inputs. This module fans
+//! those runs across a `--jobs N` worker pool (std `thread::scope`, no
+//! dependencies) and collects the results back in **submission order**,
+//! so the output is identical regardless of which worker finished
+//! first.
+//!
+//! Two properties make parallel runs bit-identical to serial ones (the
+//! differential guarantee `rust/tests/parallel_equivalence.rs` pins):
+//!
+//! * **Runs share no mutable state.** Coordinators are constructed
+//!   *inside* the worker (PJRT handles and the builder's shared
+//!   predictor cache are `Rc`-based and deliberately never cross a
+//!   thread boundary); only plain-data inputs (`ServingSpec`,
+//!   `Scenario`, `WorkloadMix`, `SloLadder`) are shared by reference.
+//!   The one process-global touched on the hot path — the `ModelId`
+//!   interning registry — is append-only behind an `RwLock`, and ids
+//!   are name-identified, so interleaved interning cannot change any
+//!   run's behavior.
+//! * **Results are collected by submission index**, not completion
+//!   order, so scheduling nondeterminism never reaches the caller.
+//!
+//! `jobs <= 1` short-circuits to an inline loop on the calling thread —
+//! the literal serial path, spawning nothing. That is the bit-exactness
+//! oracle `--jobs 1` advertises: parallel output can always be checked
+//! against a run that never touched a thread.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Process-wide default worker count for sweep fan-out (`--jobs N`).
+/// Defaults to 1 (serial): parallelism is opt-in so every run stays
+/// comparable to the oracle unless the user asks for more cores.
+static JOBS: AtomicUsize = AtomicUsize::new(1);
+
+/// The configured default job count (≥ 1).
+pub fn jobs() -> usize {
+    JOBS.load(Ordering::Relaxed).max(1)
+}
+
+/// Set the process-wide default job count (clamped to ≥ 1). Called by
+/// the CLI (`--jobs N`) before dispatching a subcommand, so deeply
+/// nested sweep call sites need no threading of the parameter.
+pub fn set_jobs(n: usize) {
+    JOBS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Run `n` independent tasks on at most `jobs` worker threads and
+/// return their results indexed by submission order (`task(i)` lands at
+/// `out[i]`).
+///
+/// With `jobs <= 1` (or a single task) the tasks execute inline on the
+/// calling thread, in order — no threads are spawned. Otherwise workers
+/// pull the next unstarted index from an atomic cursor, so an expensive
+/// task never blocks the queue behind it. A panicking task propagates:
+/// `thread::scope` re-raises worker panics on join.
+pub fn run<T, F>(jobs: usize, n: usize, task: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if jobs <= 1 || n <= 1 {
+        return (0..n).map(task).collect();
+    }
+    let workers = jobs.min(n);
+    let next = AtomicUsize::new(0);
+    // one slot per task: workers write disjoint indices, so each slot's
+    // mutex is uncontended — it exists to make the write safe, not to
+    // serialize anything
+    let mut slots: Vec<Mutex<Option<T>>> = Vec::with_capacity(n);
+    slots.resize_with(n, || Mutex::new(None));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                *slots[i].lock().unwrap() = Some(task(i));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .unwrap()
+                .expect("scope joined every worker, so every slot is filled")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_submission_order() {
+        // make later-submitted tasks finish first so completion order
+        // and submission order disagree
+        let out = run(4, 8, |i| {
+            std::thread::sleep(std::time::Duration::from_millis((8 - i as u64) * 2));
+            i * 10
+        });
+        assert_eq!(out, (0..8).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_path_spawns_nothing_and_matches_parallel() {
+        let task = |i: usize| (i, i as u64 * i as u64);
+        let serial = run(1, 16, task);
+        let parallel = run(4, 16, task);
+        assert_eq!(serial, parallel);
+        // jobs larger than the task count is fine
+        assert_eq!(run(64, 3, task), run(1, 3, task));
+        // empty submission
+        assert_eq!(run(4, 0, task), vec![]);
+    }
+
+    #[test]
+    fn serial_path_runs_on_the_calling_thread() {
+        let caller = std::thread::current().id();
+        let ids = run(1, 4, |_| std::thread::current().id());
+        assert!(ids.iter().all(|&id| id == caller));
+    }
+
+    #[test]
+    fn default_jobs_knob_round_trips_and_clamps() {
+        // global knob: other tests read it concurrently, but any value
+        // yields bit-identical results, so the race is harmless
+        set_jobs(4);
+        assert_eq!(jobs(), 4);
+        set_jobs(0); // clamped: 0 workers would deadlock a sweep
+        assert_eq!(jobs(), 1);
+        set_jobs(1);
+        assert_eq!(jobs(), 1);
+    }
+}

@@ -11,7 +11,10 @@ pub struct Args {
     pub subcommand: Option<String>,
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
-    /// flags that were consumed by a typed getter — used by `finish()`
+    /// flags that were consumed by a typed getter — used by `finish()`.
+    /// `RefCell` makes `Args` `!Sync`, which is fine: arguments are
+    /// fully parsed and consumed on the main thread before any sweep
+    /// fan-out (`sim::parallel`) starts; nothing here reaches a worker
     seen: std::cell::RefCell<Vec<String>>,
 }
 

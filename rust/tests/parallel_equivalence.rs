@@ -1,0 +1,211 @@
+//! Differential suite for the parallel sweep executor
+//! (`sim::parallel`, the `--jobs N` worker pool): parallel dispatch is
+//! a scheduling decision, never a semantic one. Same style as
+//! `pool_equivalence` / `retirement_equivalence`:
+//!
+//! * bench: for jobs ∈ {1, 2, 4}, every deterministic `BenchRun` field
+//!   of every row (shipping config and all baselines) is identical to
+//!   the serial run — only the wall-clock timing fields
+//!   (`wall_s` / `events_per_s` / `sim_rate`) may differ, since they
+//!   measure the machine, not the simulation;
+//! * sweeps: a `compare_scenario` panel (roster × rates, the flattened
+//!   fan-out in `scenario::runner::sweep_at`) reproduces the serial
+//!   labels, rates, SLO verdicts, every metric sample, and the
+//!   cross-strategy winners at jobs ∈ {2, 4};
+//! * serviced order: identical coordinators run on concurrent workers
+//!   service requests in exactly the serial order;
+//! * determinism: repeated parallel runs are identical to each other.
+
+use hermes::bench::{self, Baseline, BenchResult, BenchRun};
+use hermes::experiments::common::{self, StrategyResult};
+use hermes::scenario::Scenario;
+use hermes::sim::parallel;
+use hermes::util::json::Json;
+
+/// Every deterministic field of a [`BenchRun`] — everything except the
+/// wall-clock-derived `wall_s` / `events_per_s` / `sim_rate`. Debug
+/// formatting of f64 is exact (shortest round-trip), so string equality
+/// here is bit equality.
+fn deterministic_fields(b: &BenchRun) -> String {
+    format!(
+        "events={} peak_queue={} peak_inflight={} n_requests={} n_serviced={} \
+         n_clients={} makespan_s={:?} throughput_tok_s={:?} pool_reads={} \
+         pool_writes={} pool_slots={} pool_peak_resident={} \
+         peak_resident_slots={} resident_bytes_est={} retired={}",
+        b.events,
+        b.peak_queue,
+        b.peak_inflight,
+        b.n_requests,
+        b.n_serviced,
+        b.n_clients,
+        b.makespan_s,
+        b.throughput_tok_s,
+        b.pool_reads,
+        b.pool_writes,
+        b.pool_slots,
+        b.pool_peak_resident,
+        b.peak_resident_slots,
+        b.resident_bytes_est,
+        b.retired,
+    )
+}
+
+fn assert_rows_identical(serial: &[BenchResult], other: &[BenchResult], jobs: usize) {
+    assert_eq!(serial.len(), other.len());
+    for (a, b) in serial.iter().zip(other) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.exec, b.exec, "{}: exec mode diverged at jobs={jobs}", a.name);
+        let pairs = [
+            (Some(&a.incremental), Some(&b.incremental), "incremental"),
+            (a.baseline.as_ref(), b.baseline.as_ref(), "full_scan"),
+            (a.map_pool.as_ref(), b.map_pool.as_ref(), "map_pool"),
+            (a.retained.as_ref(), b.retained.as_ref(), "retained"),
+        ];
+        for (ra, rb, which) in pairs {
+            assert_eq!(
+                ra.is_some(),
+                rb.is_some(),
+                "{}: {which} baseline presence diverged at jobs={jobs}",
+                a.name
+            );
+            if let (Some(ra), Some(rb)) = (ra, rb) {
+                assert_eq!(
+                    deterministic_fields(ra),
+                    deterministic_fields(rb),
+                    "{}: {which} run diverged at jobs={jobs}",
+                    a.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn bench_rows_are_bit_identical_across_job_counts() {
+    if std::env::var("HERMES_FULL").is_ok() {
+        return; // smoke test: don't inherit paper scale
+    }
+    // 50k tier exercises all three speed baselines at fast scale; the
+    // 1M tier adds the streamed/retired mode and its retained baseline
+    let names = vec!["bench_llm_50k".to_string(), "bench_llm_1m".to_string()];
+    let serial = bench::run_scenarios(&names, true, Baseline::Auto, 1).unwrap();
+    for jobs in [2, 4] {
+        let parallel = bench::run_scenarios(&names, true, Baseline::Auto, jobs).unwrap();
+        assert_rows_identical(&serial, &parallel, jobs);
+    }
+    // repeated parallel runs are identical to each other, not just to
+    // the oracle
+    let again = bench::run_scenarios(&names, true, Baseline::Auto, 4).unwrap();
+    assert_rows_identical(&serial, &again, 4);
+}
+
+#[test]
+fn bench_json_rows_carry_jobs_and_aggregate_columns() {
+    if std::env::var("HERMES_FULL").is_ok() {
+        return;
+    }
+    let names = vec!["bench_llm_50k".to_string()];
+    let results = bench::run_scenarios(&names, true, Baseline::Auto, 2).unwrap();
+    let doc = Json::parse(&bench::to_json(&results, 2, 1.25).to_pretty()).unwrap();
+    let rows = doc.as_arr().unwrap();
+    assert_eq!(rows[0].at(&["jobs"]).and_then(|j| j.as_f64()), Some(2.0));
+    let agg = rows.last().unwrap();
+    assert_eq!(agg.at(&["aggregate", "jobs"]).and_then(|j| j.as_f64()), Some(2.0));
+    let events = agg.at(&["aggregate", "events"]).and_then(|j| j.as_f64()).unwrap();
+    let eps = agg
+        .at(&["aggregate", "aggregate_events_per_s"])
+        .and_then(|j| j.as_f64())
+        .unwrap();
+    assert!(events > 0.0);
+    assert!((eps - events / 1.25).abs() < 1e-6 * events);
+}
+
+fn mini_scenario() -> Scenario {
+    Scenario::from_json(
+        "parallel-mini",
+        Json::parse(
+            r#"{
+            "model": "llama3-70b", "npu": "h100", "tp": 8,
+            "batching": ["static", "continuous", "chunked:512"],
+            "perf_model": "roofline",
+            "workload": { "trace": "azure-conv" },
+            "sweep": { "clients": 2, "requests_per_client": 5, "rates": [1.0, 4.0] }
+        }"#,
+        )
+        .unwrap(),
+    )
+    .unwrap()
+}
+
+/// Full-fidelity view of a panel sweep: label, rate, SLO verdict and
+/// every metric field (Debug formatting of f64 is exact — shortest
+/// round-trip — so this is a bit-level comparison of every latency and
+/// energy sample summary).
+fn sweep_fingerprint(results: &[StrategyResult]) -> Vec<String> {
+    results
+        .iter()
+        .map(|r| {
+            let points: Vec<String> = r
+                .points
+                .iter()
+                .map(|p| format!("rate={:?} slo_ok={:?} metrics={:?}", p.rate, p.slo_ok, p.metrics))
+                .collect();
+            format!("{}: {}", r.label, points.join(" | "))
+        })
+        .collect()
+}
+
+#[test]
+fn compare_scenario_panel_is_bit_identical_across_job_counts() {
+    let sc = mini_scenario();
+    parallel::set_jobs(1);
+    let serial = common::compare_scenario(&sc, None, true).unwrap();
+    let serial_fp = sweep_fingerprint(&serial);
+    let serial_winners = common::winners(&serial);
+    // the roster × rates grid (3 × 2) exercises the flattened fan-out
+    assert_eq!(serial.len(), 3);
+    assert!(serial.iter().all(|r| r.points.len() == 2));
+    for jobs in [2, 4] {
+        parallel::set_jobs(jobs);
+        let par = common::compare_scenario(&sc, None, true).unwrap();
+        assert_eq!(sweep_fingerprint(&par), serial_fp, "diverged at jobs={jobs}");
+        assert_eq!(common::winners(&par), serial_winners, "winners diverged at jobs={jobs}");
+    }
+    // repeated parallel runs agree with each other
+    parallel::set_jobs(4);
+    let again = common::compare_scenario(&sc, None, true).unwrap();
+    assert_eq!(sweep_fingerprint(&again), serial_fp);
+    parallel::set_jobs(1);
+}
+
+#[test]
+fn parallel_workers_reproduce_serial_serviced_order() {
+    use hermes::config::slo::SloLadder;
+    use hermes::hardware::npu::H100;
+    use hermes::scheduler::BatchingKind;
+    use hermes::sim::builder::{PoolSpec, ServingSpec};
+    use hermes::workload::trace::{TraceKind, WorkloadSpec};
+
+    let spec = ServingSpec::new(
+        "llama3-70b",
+        H100,
+        8,
+        PoolSpec::Combined { kind: BatchingKind::Continuous, n: 2 },
+    );
+    let w = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 40, 2.0).with_seed(7);
+    let slo = SloLadder::standard();
+    let run = |_: usize| {
+        let mut coord = spec.build().unwrap();
+        coord.inject(w.generate(0));
+        coord.run();
+        let m = hermes::metrics::RunMetrics::collect(&coord, &slo);
+        (coord.serviced.clone(), coord.failed.clone(), format!("{:?}", m))
+    };
+    let serial = run(0);
+    assert!(!serial.0.is_empty());
+    // four identical simulations racing on four workers: each must
+    // service in exactly the serial order, with identical metrics
+    for outcome in parallel::run(4, 4, run) {
+        assert_eq!(outcome, serial);
+    }
+}

@@ -1,0 +1,96 @@
+//! Per-instance pool-op accounting (`scheduler/pool.rs`): the
+//! read/write counters behind `hermes bench`'s `pool_*` columns are
+//! fields of each `RequestPool`, not process globals — so two
+//! coordinators running interleaved on one thread, or concurrently on
+//! the `--jobs` worker pool, each report exactly the counts they would
+//! report running alone. Regression guard for the accounting the
+//! parallel executor depends on: a shared counter would double-count
+//! under fan-out and silently corrupt the bench columns.
+
+use hermes::coordinator::Coordinator;
+use hermes::hardware::npu::H100;
+use hermes::scheduler::{BatchingKind, PoolOps};
+use hermes::sim::builder::{PoolSpec, ServingSpec};
+use hermes::sim::parallel;
+use hermes::workload::trace::{TraceKind, WorkloadSpec};
+
+/// Two deliberately different runs so their counter totals differ —
+/// equal totals must come from isolation, not coincidence.
+fn configs() -> [(ServingSpec, WorkloadSpec); 2] {
+    let spec_a = ServingSpec::new(
+        "llama3-70b",
+        H100,
+        8,
+        PoolSpec::Combined { kind: BatchingKind::Continuous, n: 2 },
+    );
+    let w_a = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 30, 2.0).with_seed(11);
+    let spec_b = ServingSpec::new(
+        "llama3-8b",
+        H100,
+        1,
+        PoolSpec::Combined { kind: BatchingKind::Chunked { chunk: 512 }, n: 3 },
+    );
+    let w_b = WorkloadSpec::new("llama3-8b", TraceKind::AzureCode, 45, 3.0).with_seed(23);
+    [(spec_a, w_a), (spec_b, w_b)]
+}
+
+/// Mirror the bench harness's measurement window: counters reset after
+/// injection, read after the run.
+fn prepared(spec: &ServingSpec, w: &WorkloadSpec) -> Coordinator {
+    let mut coord = spec.build().unwrap();
+    coord.inject(w.generate(0));
+    coord.pool.reset_ops();
+    coord
+}
+
+fn run_alone(spec: &ServingSpec, w: &WorkloadSpec) -> PoolOps {
+    let mut coord = prepared(spec, w);
+    coord.run();
+    coord.pool.ops()
+}
+
+#[test]
+fn interleaved_coordinators_count_pool_ops_as_if_alone() {
+    let [(spec_a, w_a), (spec_b, w_b)] = configs();
+    let alone_a = run_alone(&spec_a, &w_a);
+    let alone_b = run_alone(&spec_b, &w_b);
+    assert!(alone_a.reads > 0 && alone_a.writes > 0);
+    assert_ne!(
+        (alone_a.reads, alone_a.writes),
+        (alone_b.reads, alone_b.writes),
+        "runs must differ for the isolation check to mean anything"
+    );
+
+    // drive both simulations event-by-event on ONE thread, strictly
+    // alternating — shared/global counters would blend the tallies
+    let mut ca = prepared(&spec_a, &w_a);
+    let mut cb = prepared(&spec_b, &w_b);
+    let (mut more_a, mut more_b) = (true, true);
+    while more_a || more_b {
+        if more_a {
+            more_a = ca.step_event();
+        }
+        if more_b {
+            more_b = cb.step_event();
+        }
+    }
+    assert_eq!(ca.pool.ops(), alone_a, "interleaving changed A's pool accounting");
+    assert_eq!(cb.pool.ops(), alone_b, "interleaving changed B's pool accounting");
+}
+
+#[test]
+fn parallel_coordinators_count_pool_ops_as_if_alone() {
+    let [(spec_a, w_a), (spec_b, w_b)] = configs();
+    let alone = [run_alone(&spec_a, &w_a), run_alone(&spec_b, &w_b)];
+    // both runs concurrently on the worker pool, twice over, so the two
+    // pools' Cell counters tick at the same time on different threads
+    let pairs: [(&ServingSpec, &WorkloadSpec); 4] =
+        [(&spec_a, &w_a), (&spec_b, &w_b), (&spec_a, &w_a), (&spec_b, &w_b)];
+    let ops = parallel::run(4, 4, |i| {
+        let (spec, w) = pairs[i];
+        run_alone(spec, w)
+    });
+    for (i, got) in ops.into_iter().enumerate() {
+        assert_eq!(got, alone[i % 2], "concurrent run {i} diverged from its solo accounting");
+    }
+}

@@ -1,0 +1,127 @@
+//! Concurrency guarantees of the thread-safe `ModelId` interning
+//! registry (`model/mod.rs`, `OnceLock` + `RwLock`): parallel sweep
+//! workers (`sim::parallel`) resolve, intern and register models
+//! concurrently, so the registry must give every thread a consistent
+//! view — same name → same id, ids valid for O(1) `spec()` indexing
+//! forever after (the `Coordinator::transfer_bytes` hot path), and
+//! alias lookups agreeing with serial interning.
+
+use std::sync::Barrier;
+
+use hermes::hardware::models::ModelSpec;
+use hermes::model::{known_models, ModelId};
+
+fn custom_spec(name: &'static str, params: f64) -> ModelSpec {
+    ModelSpec {
+        name,
+        params,
+        layers: 32,
+        hidden: 4096,
+        heads: 32,
+        kv_heads: 8,
+        d_head: 128,
+        bytes_per_param: 2.0,
+        decoder: true,
+    }
+}
+
+#[test]
+fn concurrent_interning_is_consistent_and_ids_stay_valid() {
+    const THREADS: usize = 8;
+    let shared = custom_spec("conc-shared-13b", 13e9);
+    // one distinct spec per thread, leaked for the 'static name the
+    // registry requires
+    let per_thread: Vec<&'static str> = (0..THREADS)
+        .map(|i| &*Box::leak(format!("conc-thread-{i}-7b").into_boxed_str()))
+        .collect();
+
+    let barrier = Barrier::new(THREADS);
+    let outcomes: Vec<(ModelId, ModelId, ModelId, ModelId)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|i| {
+                let shared = shared.clone();
+                let own_name = per_thread[i];
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    // maximize interleaving: all threads hit the
+                    // registry at once
+                    barrier.wait();
+                    // same builtin through two aliases, racing readers
+                    let builtin = ModelId::named("llama3-70b");
+                    let alias = ModelId::named("Llama-3.1-70B");
+                    // all threads race to register the SAME new name
+                    // (register is idempotent for identical specs, and
+                    // of_spec resolves-or-interns)
+                    let shared_id = if i % 2 == 0 {
+                        ModelId::register(shared.clone()).unwrap()
+                    } else {
+                        ModelId::of_spec(&shared)
+                    };
+                    // ... and each thread registers its own distinct one
+                    let own = ModelId::of_spec(&custom_spec(own_name, 7e9));
+                    // interleaved reads stay coherent mid-registration
+                    assert_eq!(ModelId::resolve(own_name), Some(own));
+                    assert_eq!(own.name(), own_name);
+                    (builtin, alias, shared_id, own)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    // every thread agrees on the builtin, its alias, and the raced name
+    let (builtin0, _, shared0, _) = outcomes[0];
+    for &(builtin, alias, shared_id, _) in &outcomes {
+        assert_eq!(builtin, builtin0);
+        assert_eq!(alias, builtin, "alias must intern to the canonical id");
+        assert_eq!(shared_id, shared0, "raced registration split the id");
+    }
+    // distinct names got distinct ids
+    let mut own_ids: Vec<ModelId> = outcomes.iter().map(|o| o.3).collect();
+    own_ids.sort_unstable();
+    own_ids.dedup();
+    assert_eq!(own_ids.len(), THREADS, "distinct names must get distinct ids");
+
+    // alias lookups agree with serial interning after the dust settles
+    assert_eq!(ModelId::resolve("llama3-70b"), Some(builtin0));
+    assert_eq!(ModelId::resolve("Llama-3.1-70B"), Some(builtin0));
+    assert_eq!(ModelId::resolve("conc-shared-13b"), Some(shared0));
+    assert_eq!(ModelId::resolve("Conc_Shared.13B"), Some(shared0), "normalization applies");
+
+    // the O(1) spec() index (the transfer_bytes hot path) stays valid
+    // for every id handed out during the race
+    assert_eq!(shared0.spec().params, 13e9);
+    assert!(shared0.spec().kv_bytes_per_token() > 0.0);
+    for (i, &(_, _, _, own)) in outcomes.iter().enumerate() {
+        assert_eq!(own.name(), per_thread[i]);
+        assert_eq!(own.spec().params, 7e9);
+        assert!(own.spec().kv_bytes_per_token() > 0.0);
+    }
+    // and the registry's name list contains everything exactly once
+    let names = known_models();
+    assert!(names.contains(&"conc-shared-13b"));
+    assert_eq!(names.iter().filter(|&&n| n == "conc-shared-13b").count(), 1);
+    for name in &per_thread {
+        assert!(names.contains(name));
+    }
+}
+
+#[test]
+fn conflicting_redefinition_still_rejected_under_concurrency() {
+    // the error path must hold under the write lock too: N threads
+    // racing an identical registration all succeed with one id, then a
+    // conflicting respec fails no matter which thread won the race
+    let spec = custom_spec("conc-conflict-30b", 30e9);
+    let ids: Vec<ModelId> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let spec = spec.clone();
+                scope.spawn(move || ModelId::register(spec).unwrap())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert!(ids.windows(2).all(|w| w[0] == w[1]));
+    let conflict = ModelSpec { params: 31e9, ..spec };
+    assert!(ModelId::register(conflict).is_err());
+}
