@@ -95,6 +95,12 @@ pub struct BenchRun {
     pub resident_bytes_est: usize,
     /// requests whose pool slot was freed for reuse during the run
     pub retired: u64,
+    /// priced network hops (stage hand-offs / KV migrations) — one per
+    /// request on disaggregated pipelines
+    pub transfers: u64,
+    /// bytes carried by those hops (the migration volume on
+    /// `bench_disagg_100k`)
+    pub transfer_bytes: f64,
 }
 
 /// One scenario's outcome: the shipping run plus the enabled baselines.
@@ -228,6 +234,8 @@ pub fn run_once(
         peak_resident_slots: ops.peak_live,
         resident_bytes_est: ops.peak_bytes_est,
         retired: ops.retired,
+        transfers: coord.stats.transfers,
+        transfer_bytes: coord.stats.transfer_bytes,
     })
 }
 
@@ -388,7 +396,9 @@ fn run_to_json(b: &BenchRun) -> Json {
         .set("pool_peak_resident", b.pool_peak_resident)
         .set("peak_resident_slots", b.peak_resident_slots)
         .set("resident_bytes_est", b.resident_bytes_est)
-        .set("retired", b.retired);
+        .set("retired", b.retired)
+        .set("transfers", b.transfers)
+        .set("transfer_gb", b.transfer_bytes / 1e9);
     j
 }
 
@@ -598,6 +608,41 @@ mod tests {
         assert!(names.iter().any(|n| n == "bench_mixed_100k"));
         assert!(names.iter().any(|n| n == "bench_kv_200k"));
         assert!(names.iter().any(|n| n == "bench_llm_1m"));
+        assert!(names.iter().any(|n| n == "bench_disagg_100k"));
+    }
+
+    #[test]
+    fn disagg_bench_counts_migration_bytes() {
+        if std::env::var("HERMES_FULL").is_ok() {
+            return;
+        }
+        // fast scale of the disaggregation tier: 1 prefill + 1 decode
+        // client, every request crossing the network exactly once
+        let r = run_scenario("bench_disagg_100k", true, Baseline::Auto).unwrap();
+        let inc = r.incremental.clone();
+        assert_eq!(inc.n_serviced, inc.n_requests);
+        assert_eq!(inc.transfers as usize, inc.n_requests, "one migration per request");
+        assert!(inc.transfer_bytes > 0.0, "migrations carry the prefilled KV");
+        // routing modes and pool backends must not change the migration
+        // accounting
+        for b in [r.baseline.as_ref(), r.map_pool.as_ref()].into_iter().flatten() {
+            assert_eq!(b.transfers, inc.transfers);
+            assert_eq!(b.transfer_bytes, inc.transfer_bytes);
+        }
+        // the migration-byte columns land in the BENCH_core.json row
+        let j = to_json(&[r], 1, 0.5);
+        let parsed = Json::parse(&j.to_pretty()).unwrap();
+        let row = &parsed.as_arr().unwrap()[0];
+        assert_eq!(
+            row.at(&["incremental", "transfers"]).and_then(|j| j.as_f64()),
+            Some(inc.transfers as f64)
+        );
+        assert!(
+            row.at(&["incremental", "transfer_gb"])
+                .and_then(|j| j.as_f64())
+                .unwrap_or(0.0)
+                > 0.0
+        );
     }
 
     #[test]

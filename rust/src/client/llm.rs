@@ -35,6 +35,32 @@ use crate::workload::request::{ReqId, Stage};
 /// hardware view, its step-time predictor and its batching-policy kind.
 pub type ModelEntry = (LlmCluster, Box<dyn PerfModel>, BatchingKind);
 
+/// Cluster-level serving role (docs/disaggregation.md), derived from
+/// the batching policy's `serves_prefill`/`serves_decode` answers. A
+/// `Prefill` client releases its KV budget when a request hands off;
+/// the coordinator prices the migration to the `Decode` client over the
+/// network. A `Colocated` client consumes `Stage::KvMigration` in
+/// place at zero cost — the disaggregation serial oracle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterRole {
+    /// serves only `Stage::Prefill`; hands KV off after the first token
+    Prefill,
+    /// serves only `Stage::Decode`; target of KV migrations
+    Decode,
+    /// serves both stages on one client (no hand-off)
+    Colocated,
+}
+
+impl ClusterRole {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClusterRole::Prefill => "prefill",
+            ClusterRole::Decode => "decode",
+            ClusterRole::Colocated => "colocated",
+        }
+    }
+}
+
 /// One co-resident model on an LLM client: its interned id, the
 /// hardware shard view pricing its steps, the step-time predictor, and
 /// the per-(client, model) load counters behind the O(1) router reads.
@@ -195,6 +221,15 @@ impl LlmClient {
     fn lane_of(&self, model: ModelId) -> Option<usize> {
         self.instances.iter().position(|i| i.model == model)
     }
+
+    /// This client's cluster role, pinned by its batching policy.
+    pub fn role(&self) -> ClusterRole {
+        match (self.sched.serves_prefill(), self.sched.serves_decode()) {
+            (true, false) => ClusterRole::Prefill,
+            (false, true) => ClusterRole::Decode,
+            _ => ClusterRole::Colocated,
+        }
+    }
 }
 
 impl Client for LlmClient {
@@ -203,10 +238,10 @@ impl Client for LlmClient {
     }
 
     fn kind_name(&self) -> &'static str {
-        match (self.sched.serves_prefill(), self.sched.serves_decode()) {
-            (true, false) => "llm-prefill",
-            (false, true) => "llm-decode",
-            _ => "llm",
+        match self.role() {
+            ClusterRole::Prefill => "llm-prefill",
+            ClusterRole::Decode => "llm-decode",
+            ClusterRole::Colocated => "llm",
         }
     }
 
@@ -311,6 +346,13 @@ impl Client for LlmClient {
                     // combined client: Prefill stage → Decode stage in
                     // place (no coordinator round-trip)
                     if r.stage() == Stage::Prefill && !r.is_last_stage() {
+                        r.advance_stage();
+                    }
+                    // colocated hand-off: the KV never leaves this
+                    // client, so a KvMigration stage is consumed in
+                    // place at zero cost — the disaggregation serial
+                    // oracle (docs/disaggregation.md)
+                    if r.stage() == Stage::KvMigration && !r.is_last_stage() {
                         r.advance_stage();
                     }
                     if r.decode_complete() {
@@ -576,6 +618,39 @@ mod tests {
     }
 
     #[test]
+    fn cluster_roles_follow_batching_policy() {
+        assert_eq!(client(BatchingKind::PrefillOnly).role(), ClusterRole::Prefill);
+        assert_eq!(client(BatchingKind::DecodeOnly).role(), ClusterRole::Decode);
+        assert_eq!(client(BatchingKind::Continuous).role(), ClusterRole::Colocated);
+        assert_eq!(ClusterRole::Prefill.name(), "prefill");
+        assert_eq!(ClusterRole::Colocated.name(), "colocated");
+    }
+
+    #[test]
+    fn colocated_client_consumes_kv_migration_in_place() {
+        let mut c = client(BatchingKind::Continuous);
+        let mut pool = RequestPool::new();
+        pool.insert(
+            1,
+            Request::new(
+                1,
+                "llama3-70b",
+                SimTime::ZERO,
+                vec![Stage::Prefill, Stage::KvMigration, Stage::Decode],
+                1000,
+                50,
+            ),
+        );
+        c.accept(SimTime::ZERO, 1, &mut pool);
+        let (_, done) = drain(&mut c, &mut pool);
+        assert_eq!(done, vec![1]);
+        assert!(pool[&1].decode_complete());
+        assert_eq!(pool[&1].stage(), Stage::Decode, "migration consumed in place");
+        // exactly the Regular-pipeline step count: the hand-off is free
+        assert_eq!(c.stats().steps as usize, 1 + 49);
+    }
+
+    #[test]
     fn can_serve_respects_role_and_model() {
         let c = client(BatchingKind::PrefillOnly);
         let m70 = ModelId::named("llama3-70b");
@@ -585,6 +660,7 @@ mod tests {
         assert!(!c.can_serve(&Stage::Prefill, m7));
         assert!(!c.can_serve(&Stage::Rag(Default::default()), m70));
         assert!(!c.can_serve(&Stage::ModelRoute, m70));
+        assert!(!c.can_serve(&Stage::KvMigration, m70), "never routed to a client");
         let d = client(BatchingKind::DecodeOnly);
         assert!(!d.can_serve(&Stage::Prefill, m70));
         assert!(d.can_serve(&Stage::Decode, m70));

@@ -14,7 +14,7 @@ use crate::sim::SimTime;
 use crate::workload::request::{ReqId, Request, Stage};
 
 pub use kv::KvRetrievalClient;
-pub use llm::LlmClient;
+pub use llm::{ClusterRole, LlmClient};
 pub use prepost::PrePostClient;
 pub use rag::RagClient;
 

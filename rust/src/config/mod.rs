@@ -3,7 +3,8 @@
 //!
 //! The parsing helpers ([`parse_pool`], [`parse_serving`],
 //! [`parse_workload`], [`parse_router`], [`parse_storage`],
-//! [`parse_granularity`], [`parse_slo`]) are public because the scenario
+//! [`parse_granularity`], [`parse_migration`], [`parse_slo`]) are
+//! public because the scenario
 //! registry ([`crate::scenario`]) builds on the same schema: a scenario
 //! file is a config document plus a batching roster, a rate sweep and
 //! scale knobs (see `docs/scenarios.md`).
@@ -31,14 +32,15 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{LoadMetric, RoutePolicy};
 use crate::hardware::models::{self, ModelSpec};
+use crate::memory::hierarchy::tier_by_name;
 use crate::memory::storage::{KvScenario, StorageConfig};
 use crate::model::ModelId;
 use crate::model::policy::ModelPolicy;
 use crate::network::Granularity;
 use crate::scheduler::{BatchingKind, Packing, SchedConfig};
 use crate::sim::builder::{
-    npu_by_name, KvRetrievalSpec, NetSpec, PerfBackend, PoolSpec, PrePostSpec, RagSpec,
-    ServingSpec,
+    npu_by_name, KvRetrievalSpec, MigrationSpec, NetSpec, PerfBackend, PoolSpec, PrePostSpec,
+    RagSpec, ServingSpec,
 };
 use crate::util::json::Json;
 use crate::util::rng::Arrival;
@@ -211,8 +213,48 @@ pub fn parse_serving(doc: &Json, pool: PoolSpec) -> Result<ServingSpec> {
         });
     }
 
+    if let Some(m) = doc.get("migration") {
+        serving.migration = Some(parse_migration(m)?);
+    }
+    if let Some(w) = doc.get("transfer_weight").and_then(Json::as_f64) {
+        if !(0.0..=1.0).contains(&w) {
+            bail!("'transfer_weight' must be in [0, 1], got {w}");
+        }
+        serving.transfer_weight = w;
+    }
+
     serving.seed = doc.f64_or("seed", 0.0) as u64;
     Ok(serving)
+}
+
+/// Parse a `migration` object: how a disaggregated pipeline prices the
+/// prefill→decode KV hand-off (see `docs/disaggregation.md`).
+/// `granularity` (`full` / `layerwise:<n>`) overrides the network-wide
+/// hand-off granularity for migration hops only; `pool` names a tiered
+/// staging hierarchy (`hbm` / `cxl` / `dram` / `nvme`, fastest first)
+/// whose expected access latency is added to every migration. Unknown
+/// tier names are parse errors, so dangling pool references surface in
+/// `hermes scenario check` rather than at run time.
+pub fn parse_migration(j: &Json) -> Result<MigrationSpec> {
+    let mut spec = MigrationSpec::default();
+    if let Some(g) = j.get("granularity").and_then(Json::as_str) {
+        spec.granularity = Some(parse_granularity(g)?);
+    }
+    if let Some(pool) = j.get("pool") {
+        let arr = pool
+            .as_arr()
+            .context("'migration.pool' must be an array of tier names")?;
+        for (i, v) in arr.iter().enumerate() {
+            let name = v
+                .as_str()
+                .with_context(|| format!("'migration.pool[{i}]' must be a string"))?;
+            let tier = tier_by_name(name).with_context(|| {
+                format!("unknown migration pool tier '{name}' (expected hbm/cxl/dram/nvme)")
+            })?;
+            spec.pool.push(tier);
+        }
+    }
+    Ok(spec)
 }
 
 /// Auxiliary-client count: either a fixed `count` or `per_llm: N`
@@ -477,6 +519,7 @@ pub fn parse_workload(model: ModelId, j: &Json, seed: u64) -> Result<WorkloadSpe
         }),
         "routed" => Pipeline::Routed,
         "cascade" => Pipeline::Cascade,
+        "disagg" => Pipeline::Disagg,
         other => bail!("unknown pipeline '{other}'"),
     };
     let reasoning = match j.str_or("reasoning", "none") {
@@ -603,6 +646,38 @@ mod tests {
         );
         assert!(parse_granularity("halfwise").is_err());
         assert!(parse_granularity("layerwise:0").is_err());
+    }
+
+    #[test]
+    fn disagg_migration_keys_parse_and_validate() {
+        let cfg = SimConfig::from_json(
+            &Json::parse(
+                r#"{"pool": {"batching": "disaggregated", "prefill": 2, "decode": 2},
+                    "migration": {"granularity": "layerwise:40",
+                                  "pool": ["hbm", "dram", "nvme"]},
+                    "transfer_weight": 0.5,
+                    "workload": {"n": 10, "pipeline": "disagg"}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.workload.pipeline, Pipeline::Disagg);
+        let m = cfg.serving.migration.as_ref().unwrap();
+        assert_eq!(m.granularity, Some(Granularity::Layerwise { layers: 40 }));
+        assert_eq!(m.pool.len(), 3);
+        assert_eq!(cfg.serving.transfer_weight, 0.5);
+
+        // a dangling tier name is a parse error, not a run-time surprise
+        let err = parse_migration(&Json::parse(r#"{"pool": ["hbm", "tape"]}"#).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown migration pool tier 'tape'"), "{err}");
+        assert!(parse_migration(&Json::parse(r#"{"pool": "hbm"}"#).unwrap()).is_err());
+
+        // transfer_weight outside the blend range is rejected
+        let bad = r#"{"pool": {"batching": "continuous", "n": 1},
+                      "transfer_weight": 1.5, "workload": {"n": 5}}"#;
+        assert!(SimConfig::from_json(&Json::parse(bad).unwrap()).is_err());
     }
 
     #[test]

@@ -8,6 +8,7 @@ pub mod event;
 pub mod router;
 
 use crate::client::{Client, StepOutcome};
+use crate::memory::hierarchy::Hierarchy;
 use crate::model::policy::{ModelPolicy, RouteDecision};
 use crate::network::{Granularity, Network};
 use crate::scheduler::RequestPool;
@@ -120,6 +121,15 @@ pub struct Coordinator {
     pub failed: Vec<ReqId>,
     /// KV hand-off granularity for disaggregated transfers
     pub granularity: Granularity,
+    /// granularity override for explicit [`Stage::KvMigration`] hops
+    /// (None = use `granularity`): `Full` models a blocking hand-off,
+    /// `Layerwise` the overlapped migration (docs/disaggregation.md)
+    pub migration_granularity: Option<Granularity>,
+    /// tiered staging pool on the migration target (HBM → DRAM →
+    /// NVMe/CXL): its Eq. 1 expected latency delays the decode-side
+    /// arrival of every explicit migration. None = the KV streams
+    /// straight into the decode client's HBM at zero extra cost
+    pub migration_pool: Option<Hierarchy>,
     /// restrict prefill→decode hand-offs to the same placement group
     /// ("Local" disaggregation; default false = "Global", Splitwise-like)
     pub local_disagg: bool,
@@ -158,6 +168,8 @@ impl Coordinator {
             serviced: Vec::new(),
             failed: Vec::new(),
             granularity: Granularity::Layerwise { layers: 80 },
+            migration_granularity: None,
+            migration_pool: None,
             local_disagg: false,
             load_mode: LoadMode::Incremental,
             model_policy: None,
@@ -319,6 +331,11 @@ impl Coordinator {
         match from {
             // disaggregated hand-off: the prefix KV moves
             Some(Stage::Prefill) => (req.past_tokens + req.prompt_tokens) as f64 * kv_per_tok,
+            // explicit cluster-level migration: the full prefix KV
+            // moves, wherever the stage sits in the pipeline
+            Some(Stage::KvMigration) => {
+                (req.past_tokens + req.prompt_tokens) as f64 * kv_per_tok
+            }
             // retrieved past-context KV moves to the prefill client
             Some(Stage::KvRetrieval(_)) => req.past_tokens as f64 * kv_per_tok,
             // the prompt plus the retrieved documents move as text
@@ -347,7 +364,7 @@ impl Coordinator {
                 if self.resolve_model_route(req) {
                     return;
                 }
-                if let Some(c) = self.route(req, None, 0.0) {
+                if let Some(c) = self.route(req, None, 0.0, self.granularity) {
                     self.pool.get_mut(&req).unwrap().stage_accept = self.clock;
                     self.clients[c].accept(self.clock, req, &mut self.pool);
                     self.activate(c);
@@ -400,11 +417,17 @@ impl Coordinator {
         if self.resolve_model_route(id) {
             return;
         }
-        match self.route(id, Some(src), bytes) {
+        // consume any KvMigration stage reached here: the explicit
+        // prefill→decode hand-off of cluster disaggregation. Re-prices
+        // the hop as the full prefix KV and may switch its granularity
+        // and add a staging-pool delay.
+        let Some((bytes, gran, staging)) = self.resolve_kv_migration(id, src, bytes) else {
+            return;
+        };
+        match self.route(id, Some(src), bytes, gran) {
             Some(dst) => {
-                let arrive = self
-                    .network
-                    .transfer(self.clock, src, dst, bytes, self.granularity);
+                let arrive = self.network.transfer(self.clock, src, dst, bytes, gran)
+                    + SimTime::from_secs(staging);
                 self.stats.transfers += 1;
                 self.stats.transfer_bytes += bytes;
                 self.stats.transfer_seconds += (arrive - self.clock).as_secs();
@@ -492,12 +515,66 @@ impl Coordinator {
         }
     }
 
+    /// Consume `KvMigration` stages at the request's current position
+    /// (cluster-level disaggregation, docs/disaggregation.md). Like
+    /// `ModelRoute` the stage never occupies a client, but the hand-off
+    /// is real work: the outbound hop is re-priced as the full prefix
+    /// KV, switched to the migration granularity override (a `Full`
+    /// override models a blocking hand-off; `Layerwise` overlaps the
+    /// per-layer slices on the link), and — when a tiered staging pool
+    /// is configured — delayed by the pool's deterministic Eq. 1
+    /// expected latency (a full miss streams straight into HBM, so the
+    /// network hop itself is the only remaining cost). The stage span
+    /// is recorded so trace exports show the hand-off. Returns the
+    /// re-priced hop `(bytes, granularity, staging_seconds)`, or `None`
+    /// when the request completed here (a trailing migration stage).
+    fn resolve_kv_migration(
+        &mut self,
+        id: ReqId,
+        src: usize,
+        bytes: f64,
+    ) -> Option<(f64, Granularity, f64)> {
+        let mut bytes = bytes;
+        let mut gran = self.granularity;
+        let mut staging = 0.0;
+        loop {
+            let r = self.pool.get_mut(&id).unwrap();
+            if r.stage() != Stage::KvMigration {
+                return Some((bytes, gran, staging));
+            }
+            bytes = Self::transfer_bytes(r, Some(Stage::KvMigration));
+            gran = self.migration_granularity.unwrap_or(self.granularity);
+            let lat = match &self.migration_pool {
+                Some(pool) => pool.expected(bytes).0,
+                None => 0.0,
+            };
+            staging += lat;
+            r.records.push(crate::workload::request::StageRecord {
+                stage_idx: r.stage_idx,
+                client: src,
+                start: self.clock,
+                end: self.clock + SimTime::from_secs(lat),
+            });
+            if !r.advance_stage() {
+                self.complete(id);
+                return None;
+            }
+        }
+    }
+
     /// Candidates = clients that can serve the request's current stage;
     /// `bytes` is the outbound transfer size the caller priced on the
     /// pre-advance request state (0 for ingress, where no inter-client
-    /// link is paid). Cost: O(clients) — each candidate contributes an
-    /// O(1) cached load plus an O(1) transfer estimate.
-    fn route(&mut self, id: ReqId, src: Option<usize>, bytes: f64) -> Option<usize> {
+    /// link is paid) and `gran` the granularity its hop will use.
+    /// Cost: O(clients) — each candidate contributes an O(1) cached
+    /// load plus an O(1) transfer estimate.
+    fn route(
+        &mut self,
+        id: ReqId,
+        src: Option<usize>,
+        bytes: f64,
+        gran: Granularity,
+    ) -> Option<usize> {
         let r = &self.pool[&id];
         let stage = r.stage();
         let src_group = src.map(|s| self.clients[s].group());
@@ -514,7 +591,7 @@ impl Coordinator {
                 continue;
             }
             let transfer_cost = src
-                .map(|s| self.network.estimate(s, c.id(), bytes, self.granularity))
+                .map(|s| self.network.estimate(s, c.id(), bytes, gran))
                 .unwrap_or(0.0);
             // candidate load *for this request's model*: on a
             // co-resident client a drained lane looks idle even while
@@ -644,6 +721,112 @@ mod tests {
         // decode client generated all the tokens beyond the first
         assert!(coord.clients[1].stats().decode_tokens > 0);
         assert_eq!(coord.clients[0].stats().decode_tokens as usize, 20);
+    }
+
+    #[test]
+    fn disagg_pipeline_prices_explicit_migration() {
+        use crate::workload::trace::Pipeline;
+        let mk = || {
+            vec![
+                llm_client(0, BatchingKind::PrefillOnly),
+                llm_client(1, BatchingKind::DecodeOnly),
+            ]
+        };
+        let gen = || {
+            WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 12, 4.0)
+                .with_seed(29)
+                .with_pipeline(Pipeline::Disagg)
+                .generate(0)
+        };
+        let mut coord = Coordinator::new(
+            mk(),
+            Router::new(RoutePolicy::LoadBased(LoadMetric::TokensLeft)),
+            Network::single_platform(2),
+        );
+        coord.inject(gen());
+        coord.run();
+        assert!(coord.all_serviced());
+        assert_eq!(coord.serviced.len(), 12);
+        assert_eq!(coord.stats.transfers, 12, "one migration hop per request");
+        // the hop moves the full prefix KV of every request
+        let kv_per_tok = crate::model::ModelId::named("llama3-70b")
+            .spec()
+            .kv_bytes_per_token();
+        let expected: f64 = coord
+            .serviced
+            .iter()
+            .map(|id| {
+                let r = &coord.pool[id];
+                (r.past_tokens + r.prompt_tokens) as f64 * kv_per_tok
+            })
+            .sum();
+        assert!(
+            (coord.stats.transfer_bytes - expected).abs() < 1e-6 * expected,
+            "migrated {} vs expected {expected}",
+            coord.stats.transfer_bytes
+        );
+        // every request carries a kv_migration stage span
+        for id in &coord.serviced {
+            let r = &coord.pool[id];
+            assert!(r
+                .records
+                .iter()
+                .any(|rec| r.stages[rec.stage_idx] == Stage::KvMigration));
+        }
+
+        // a tiered staging pool delays completion deterministically
+        let mut staged = Coordinator::new(
+            mk(),
+            Router::new(RoutePolicy::LoadBased(LoadMetric::TokensLeft)),
+            Network::single_platform(2),
+        );
+        staged.migration_pool = Some(Hierarchy::new(vec![
+            crate::memory::hierarchy::TIER_DRAM,
+            crate::memory::hierarchy::TIER_NVME,
+        ]));
+        staged.migration_granularity = Some(Granularity::Full);
+        staged.inject(gen());
+        staged.run();
+        assert!(staged.all_serviced());
+        assert!(
+            staged.clock > coord.clock,
+            "staging latency must delay completion: {} vs {}",
+            staged.clock,
+            coord.clock
+        );
+    }
+
+    #[test]
+    fn colocated_disagg_pipeline_matches_regular() {
+        // the serial oracle, client-level: on a colocated pool the
+        // KvMigration stage is consumed in place at zero cost, so the
+        // Disagg pipeline is bit-identical to Pipeline::Regular
+        use crate::workload::trace::Pipeline;
+        let run = |p: Pipeline| {
+            let clients = vec![
+                llm_client(0, BatchingKind::Continuous),
+                llm_client(1, BatchingKind::Continuous),
+            ];
+            let mut coord = Coordinator::new(
+                clients,
+                Router::new(RoutePolicy::LoadBased(LoadMetric::TokensLeft)),
+                Network::single_platform(2),
+            );
+            let reqs = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 25, 5.0)
+                .with_seed(31)
+                .with_pipeline(p)
+                .generate(0);
+            coord.inject(reqs);
+            coord.run();
+            assert!(coord.all_serviced());
+            (
+                coord.serviced.clone(),
+                coord.clock,
+                coord.stats.events,
+                coord.stats.transfers,
+            )
+        };
+        assert_eq!(run(Pipeline::Disagg), run(Pipeline::Regular));
     }
 
     #[test]

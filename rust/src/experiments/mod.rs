@@ -5,6 +5,7 @@
 
 pub mod ablations;
 pub mod common;
+pub mod disagg;
 pub mod fig10;
 pub mod fig11;
 pub mod fig12;
@@ -72,6 +73,10 @@ pub fn run_by_name(name: &str, fast: bool) -> Result<()> {
             banner("Multi-model case study — cascade escalation vs static routing");
             multimodel::run(fast)?;
         }
+        "disagg" => {
+            banner("Disaggregation — prefill:decode split × interconnect vs colocated");
+            disagg::run(fast)?;
+        }
         "all" => {
             for n in [
                 "fig5", "fig6", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig15",
@@ -80,7 +85,7 @@ pub fn run_by_name(name: &str, fast: bool) -> Result<()> {
                 run_by_name(n, fast)?;
             }
         }
-        other => bail!("unknown experiment '{other}' (fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|ablations|multimodel|all)"),
+        other => bail!("unknown experiment '{other}' (fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|ablations|multimodel|disagg|all)"),
     }
     Ok(())
 }

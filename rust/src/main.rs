@@ -8,7 +8,7 @@
 //!   hermes scenario --list                # registry under scenarios/
 //!   hermes bench    [name...] [--fast] [--baseline auto|on|off] [--jobs N]
 //!                   [--out BENCH_core.json]
-//!   hermes experiment <fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3>
+//!   hermes experiment <fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|disagg>
 //!                   [--fast] [--jobs N]
 //!   hermes artifacts                      # list AOT predictor variants
 //!
@@ -63,7 +63,7 @@ fn print_usage() {
     println!("  hermes scenario <name|path.json> [--fast] [--jobs N] [--out sweep.json]   (--list to enumerate)");
     println!("  hermes scenario check             # resolve every scenario's model/policy/npu refs");
     println!("  hermes bench [name...] [--fast] [--baseline auto|on|off] [--jobs N] [--out BENCH_core.json]");
-    println!("  hermes experiment <fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|ablations|multimodel|all> [--fast] [--jobs N]");
+    println!("  hermes experiment <fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|ablations|multimodel|disagg|all> [--fast] [--jobs N]");
     println!("  hermes artifacts");
     println!();
     println!("--jobs N fans independent runs across N worker threads; results are");

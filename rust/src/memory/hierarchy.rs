@@ -31,6 +31,56 @@ impl CacheLevel {
     }
 }
 
+/// Named staging-tier presets for cluster-level KV migration
+/// (docs/disaggregation.md): where a migrated KV cache lands on the
+/// decode side before generation resumes. Hit rates are the probability
+/// the tier has room (misses spill to the next tier); a stack like
+/// `["hbm", "dram", "nvme"]` is the HBM → DRAM → NVMe waterfall of the
+/// paper's storage discussion, and `scenarios/remote_kv.json` becomes
+/// one point of this family.
+pub const TIER_HBM: CacheLevel = CacheLevel {
+    name: "hbm",
+    capacity: 1e12,
+    lookup_lat: 1e-6,
+    bw: 2e12,
+    hit_rate: 0.6,
+};
+pub const TIER_CXL: CacheLevel = CacheLevel {
+    name: "cxl",
+    capacity: 16e12,
+    lookup_lat: 1e-6,
+    bw: 64e9,
+    hit_rate: 0.95,
+};
+pub const TIER_DRAM: CacheLevel = CacheLevel {
+    name: "dram",
+    capacity: 4e12,
+    lookup_lat: 10e-6,
+    bw: 200e9,
+    hit_rate: 0.9,
+};
+pub const TIER_NVME: CacheLevel = CacheLevel {
+    name: "nvme",
+    capacity: 64e12,
+    lookup_lat: 100e-6,
+    bw: 12e9,
+    hit_rate: 0.99,
+};
+
+/// Resolve a staging-tier preset by name (the `migration.pool` config
+/// key). Unknown names are `None` — the config layer turns that into a
+/// parse error, so dangling tier refs fail at `hermes scenario check`
+/// time like dangling model refs do.
+pub fn tier_by_name(name: &str) -> Option<CacheLevel> {
+    match name {
+        "hbm" => Some(TIER_HBM),
+        "cxl" => Some(TIER_CXL),
+        "dram" => Some(TIER_DRAM),
+        "nvme" => Some(TIER_NVME),
+        _ => None,
+    }
+}
+
 /// What happened on a sampled retrieval.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Retrieval {
@@ -48,9 +98,20 @@ pub struct Hierarchy {
 
 impl Hierarchy {
     pub fn new(levels: Vec<CacheLevel>) -> Hierarchy {
+        let mut any_hit = levels.is_empty();
         for l in &levels {
             assert!((0.0..=1.0).contains(&l.hit_rate), "bad hit rate {l:?}");
+            assert!(l.bw > 0.0, "bad bandwidth {l:?}");
+            any_hit |= l.hit_rate > 0.0;
         }
+        // a stack whose rates are all exactly 0 never terminates in a
+        // hit — retrieval silently degenerates to certain recompute.
+        // The empty hierarchy stays legal: it *states* recompute-only.
+        assert!(
+            any_hit,
+            "hierarchy never hits (every level's hit rate is 0); \
+             use an empty hierarchy for recompute-only"
+        );
         Hierarchy { levels }
     }
 
@@ -254,5 +315,44 @@ mod tests {
             bw: 1.0,
             hit_rate: 1.5,
         }]);
+    }
+
+    #[test]
+    #[should_panic(expected = "never hits")]
+    fn all_zero_hit_rates_rejected() {
+        // a non-empty stack that can never hit is a silent
+        // recompute-certain config — reject it at construction
+        Hierarchy::new(vec![
+            CacheLevel { name: "a", capacity: 1.0, lookup_lat: 0.0, bw: 1.0, hit_rate: 0.0 },
+            CacheLevel { name: "b", capacity: 1.0, lookup_lat: 0.0, bw: 1.0, hit_rate: 0.0 },
+        ]);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad bandwidth")]
+    fn zero_bandwidth_rejected() {
+        Hierarchy::new(vec![CacheLevel {
+            name: "x",
+            capacity: 1.0,
+            lookup_lat: 0.0,
+            bw: 0.0,
+            hit_rate: 0.5,
+        }]);
+    }
+
+    #[test]
+    fn tier_presets_resolve_by_name() {
+        for name in ["hbm", "cxl", "dram", "nvme"] {
+            let t = tier_by_name(name).expect("preset tier");
+            assert_eq!(t.name, name);
+            assert!(t.bw > 0.0 && (0.0..=1.0).contains(&t.hit_rate));
+        }
+        assert!(tier_by_name("tape").is_none());
+        // a preset stack builds a valid hierarchy with a nonzero
+        // expected staging latency
+        let h = Hierarchy::new(vec![TIER_HBM, TIER_DRAM, TIER_NVME]);
+        let (exp, p_miss) = h.expected(1e9);
+        assert!(exp > 0.0);
+        assert!(p_miss < 0.01, "waterfall should almost always land");
     }
 }

@@ -319,6 +319,44 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_kv_migrations_serialize_on_shared_links() {
+        // two prefill→decode KV hand-offs of 10 GB each on rack 0's
+        // 50 GB/s switch, issued at the same instant: FIFO serialization
+        // means the second starts at the first's busy-until instead of
+        // overlapping
+        let mut n = two_rack_net();
+        let kv = 10e9;
+        let a = n.transfer(SimTime::ZERO, 0, 2, kv, Granularity::Full);
+        let b = n.transfer(SimTime::ZERO, 1, 3, kv, Granularity::Full);
+        let serialize = kv / RACK_SWITCH.bw;
+        assert!((a.as_secs() - (serialize + RACK_SWITCH.lat)).abs() < 1e-9, "{a}");
+        assert!((b.as_secs() - (2.0 * serialize + RACK_SWITCH.lat)).abs() < 1e-9, "{b}");
+        assert_eq!(n.bytes_on_rack(0), 2.0 * kv);
+        // the contended window is fully busy carrying both migrations
+        let horizon = SimTime::from_secs(2.0 * serialize);
+        assert!((n.rack_utilization(0, horizon) - 1.0).abs() < 1e-9);
+        // a cross-rack migration rides the DCN spine, not the rack
+        // switch, so it does not extend rack 0's queue
+        let c = n.transfer(SimTime::ZERO, 0, 7, kv, Granularity::Full);
+        assert!((c.as_secs() - (kv / DCN.bw + DCN.lat)).abs() < 1e-9, "{c}");
+        assert_eq!(n.bytes_on_rack(0), 2.0 * kv, "unchanged by the DCN hop");
+        assert_eq!(n.bytes_on_dcn(), kv);
+        // zero-byte hand-off (nothing prefilled): free and uncounted
+        let now = SimTime::from_secs(9.0);
+        assert_eq!(n.transfer(now, 0, 2, 0.0, Granularity::Full), now);
+        assert_eq!(n.bytes_on_rack(0), 2.0 * kv);
+    }
+
+    #[test]
+    fn layerwise_migration_charges_only_exposed_chunk() {
+        // layerwise-overlapped migration: compute hides all but the
+        // final layer's chunk, so the link carries bytes/layers
+        let mut n = two_rack_net();
+        n.transfer(SimTime::ZERO, 0, 2, 80e9, Granularity::Layerwise { layers: 80 });
+        assert_eq!(n.bytes_on_rack(0), 1e9);
+    }
+
+    #[test]
     fn estimate_matches_uncontended_transfer() {
         let mut n = two_rack_net();
         let est = n.estimate(0, 2, 5e9, Granularity::Full);

@@ -380,18 +380,27 @@ impl Scenario {
 
     /// Like [`Scenario::serving`], with a panel's serving-side overrides
     /// applied: a panel may set or replace `rag_clients`, `kv_clients`,
-    /// `prepost_clients`, `network` or `granularity`, and `null` removes
-    /// the key — so auxiliary tiers are provisioned only for the panels
-    /// whose pipeline uses them (energy accounting stays faithful to the
-    /// paper's per-request-type methodology).
+    /// `prepost_clients`, `network`, `granularity`, `migration` or
+    /// `transfer_weight`, and `null` removes the key — so auxiliary
+    /// tiers are provisioned only for the panels whose pipeline uses
+    /// them (energy accounting stays faithful to the paper's
+    /// per-request-type methodology), and a disaggregation family can
+    /// vary its KV hand-off pricing per panel.
     pub fn serving_panel(
         &self,
         entry: &RosterEntry,
         clients: usize,
         panel: Option<&Panel>,
     ) -> Result<ServingSpec> {
-        const OVERRIDABLE: [&str; 5] =
-            ["rag_clients", "kv_clients", "prepost_clients", "network", "granularity"];
+        const OVERRIDABLE: [&str; 7] = [
+            "rag_clients",
+            "kv_clients",
+            "prepost_clients",
+            "network",
+            "granularity",
+            "migration",
+            "transfer_weight",
+        ];
         let overrides: Vec<(&str, &Json)> = panel
             .map(|p| {
                 OVERRIDABLE
@@ -721,6 +730,45 @@ mod tests {
         // default: auto → standard for the regular-dominated mix
         let slo = sc.slo(None, &mix).unwrap();
         assert_eq!(slo.ttft_base, 0.25);
+    }
+
+    #[test]
+    fn panels_override_migration_pricing() {
+        let sc = Scenario::from_json(
+            "t",
+            doc(r#"{
+                "model": "llama3-70b",
+                "batching": ["disagg:0.5"],
+                "migration": { "granularity": "full", "pool": ["dram"] },
+                "workload": { "trace": "azure-conv", "pipeline": "disagg" },
+                "panels": [
+                    { "label": "layerwise",
+                      "migration": { "granularity": "layerwise:40",
+                                     "pool": ["dram", "nvme"] } },
+                    { "label": "no-staging", "migration": null }
+                ],
+                "sweep": { "clients": 2, "requests_per_client": 6, "rates": [1.0] }
+            }"#),
+        )
+        .unwrap();
+        sc.check().unwrap();
+        let base = sc.serving(&sc.roster[0], 2).unwrap();
+        assert_eq!(base.migration.as_ref().unwrap().pool.len(), 1);
+        let layerwise = sc
+            .serving_panel(&sc.roster[0], 2, Some(&sc.panels[0]))
+            .unwrap();
+        assert_eq!(layerwise.migration.as_ref().unwrap().pool.len(), 2);
+        let none = sc
+            .serving_panel(&sc.roster[0], 2, Some(&sc.panels[1]))
+            .unwrap();
+        assert!(none.migration.is_none(), "null removes the key");
+        // a dangling tier ref anywhere in the file fails the parse
+        let bad = r#"{
+            "model": "llama3-70b", "batching": ["disagg:0.5"],
+            "migration": { "pool": ["tape"] },
+            "workload": { "trace": "azure-conv", "pipeline": "disagg" }
+        }"#;
+        assert!(Scenario::from_json("bad", doc(bad)).is_err());
     }
 
     #[test]

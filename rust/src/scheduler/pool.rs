@@ -43,7 +43,7 @@ use std::cell::Cell;
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 
-use crate::workload::request::{ReqId, Request, Stage};
+use crate::workload::request::{ReqId, Request};
 
 /// Which storage backs the pool.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -145,13 +145,14 @@ const _: fn() = || {
     assert_send::<RequestPool>();
 };
 
-/// Rough resident footprint of one request: the struct itself plus its
-/// pipeline array. `records` is excluded — it grows *during* residence,
-/// and using the same formula at insert and remove keeps the running
-/// total drift-free. An estimate for the bench columns, not an
-/// allocator measurement.
-fn request_bytes_est(r: &Request) -> usize {
-    std::mem::size_of::<Request>() + r.stages.capacity() * std::mem::size_of::<Stage>()
+/// Rough resident footprint of one request. The pipeline array is a
+/// fixed-capacity [`StageList`](crate::workload::request::StageList)
+/// inline in the struct, so the struct size covers it. `records` is
+/// excluded — it grows *during* residence, and using the same formula
+/// at insert and remove keeps the running total drift-free. An estimate
+/// for the bench columns, not an allocator measurement.
+fn request_bytes_est(_r: &Request) -> usize {
+    std::mem::size_of::<Request>()
 }
 
 impl Default for RequestPool {

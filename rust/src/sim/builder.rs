@@ -11,6 +11,7 @@ use crate::client::{Client, KvRetrievalClient, LlmClient, PrePostClient, RagClie
 use crate::coordinator::{Coordinator, RoutePolicy, Router};
 use crate::hardware::roofline::LlmCluster;
 use crate::hardware::{model_lookup, npu, ModelSpec, NpuSpec};
+use crate::memory::hierarchy::{CacheLevel, Hierarchy};
 use crate::memory::storage::{KvScenario, KvStore, StorageConfig};
 use crate::model::ModelId;
 use crate::model::policy::ModelPolicy;
@@ -113,6 +114,21 @@ pub struct PrePostSpec {
     pub guard_npu: Option<NpuSpec>,
 }
 
+/// Explicit KV-migration pricing for `Pipeline::Disagg` hand-offs
+/// (docs/disaggregation.md): how the prefill→decode KV transfer is
+/// sliced on the link and where it lands on the decode side.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MigrationSpec {
+    /// granularity override for migration hops (None = the serving
+    /// default): `Full` models a blocking hand-off, `Layerwise` the
+    /// overlapped per-layer migration
+    pub granularity: Option<Granularity>,
+    /// staging-tier stack on the decode side, nearest first (resolved
+    /// from preset names — hbm / cxl / dram / nvme — at config parse
+    /// time; empty = the KV streams straight into HBM at no extra cost)
+    pub pool: Vec<CacheLevel>,
+}
+
 /// Network shape.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum NetSpec {
@@ -145,6 +161,12 @@ pub struct ServingSpec {
     pub prepost: Option<PrePostSpec>,
     pub net: NetSpec,
     pub granularity: Granularity,
+    /// explicit KV-migration pricing for `Pipeline::Disagg` pipelines
+    /// (None = migrations use the serving defaults at zero staging cost)
+    pub migration: Option<MigrationSpec>,
+    /// router bias toward cheap links: candidate key = load + weight ×
+    /// estimated transfer seconds ([`Router::with_transfer_weight`])
+    pub transfer_weight: f64,
     pub seed: u64,
 }
 
@@ -167,6 +189,8 @@ impl ServingSpec {
             prepost: None,
             net: NetSpec::SinglePlatform,
             granularity: Granularity::Layerwise { layers: 80 },
+            migration: None,
+            transfer_weight: 0.0,
             seed: 0,
         }
     }
@@ -198,6 +222,18 @@ impl ServingSpec {
 
     pub fn with_net(mut self, n: NetSpec) -> ServingSpec {
         self.net = n;
+        self
+    }
+
+    /// Configure explicit KV-migration pricing (`Pipeline::Disagg`).
+    pub fn with_migration(mut self, m: MigrationSpec) -> ServingSpec {
+        self.migration = Some(m);
+        self
+    }
+
+    /// Bias routing toward cheap links (0 = pure load balancing).
+    pub fn with_transfer_weight(mut self, w: f64) -> ServingSpec {
+        self.transfer_weight = w;
         self
     }
 
@@ -482,8 +518,18 @@ impl ServingSpec {
             ),
         };
 
-        let mut coord = Coordinator::new(clients, Router::new(self.route), network);
+        let mut coord = Coordinator::new(
+            clients,
+            Router::new(self.route).with_transfer_weight(self.transfer_weight),
+            network,
+        );
         coord.granularity = self.granularity;
+        if let Some(m) = &self.migration {
+            coord.migration_granularity = m.granularity;
+            if !m.pool.is_empty() {
+                coord.migration_pool = Some(Hierarchy::new(m.pool.clone()));
+            }
+        }
         coord.model_policy = self.model_policy.clone();
         coord.model_seed = self.seed;
         if matches!(self.pool, PoolSpec::Disaggregated { local: true, .. }) {
@@ -541,6 +587,36 @@ mod tests {
         coord.run();
         assert!(coord.all_serviced());
         assert!(coord.stats.transfers >= 12);
+    }
+
+    #[test]
+    fn builds_disagg_migration_spec() {
+        use crate::memory::hierarchy::{TIER_DRAM, TIER_HBM};
+        use crate::workload::trace::Pipeline;
+
+        let spec = ServingSpec::new(
+            "llama3-70b",
+            H100,
+            8,
+            PoolSpec::Disaggregated { prefill: 2, decode: 2, local: false },
+        )
+        .with_migration(MigrationSpec {
+            granularity: Some(Granularity::Full),
+            pool: vec![TIER_HBM, TIER_DRAM],
+        })
+        .with_transfer_weight(0.5);
+        let mut coord = spec.build().unwrap();
+        assert_eq!(coord.migration_granularity, Some(Granularity::Full));
+        assert!(coord.migration_pool.is_some());
+        assert_eq!(coord.router.transfer_weight, 0.5);
+        let reqs = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 10, 3.0)
+            .with_seed(5)
+            .with_pipeline(Pipeline::Disagg)
+            .generate(0);
+        coord.inject(reqs);
+        coord.run();
+        assert!(coord.all_serviced());
+        assert_eq!(coord.stats.transfers, 10, "one migration hop per request");
     }
 
     #[test]

@@ -67,6 +67,13 @@ pub enum Stage {
     ModelRoute,
     /// prompt processing on an LLM client (possibly chunked)
     Prefill,
+    /// hand the prefilled KV cache off to a decode-role client
+    /// (cluster-level disaggregation, docs/disaggregation.md). Like
+    /// `ModelRoute` the coordinator consumes it inline — it costs zero
+    /// client time and never occupies a client; the KV bytes it
+    /// represents are priced on the network hop to the decode client,
+    /// optionally through a tiered migration pool.
+    KvMigration,
     /// autoregressive generation on an LLM client
     Decode,
     /// detokenize + guard-model filtering on a postprocessing client
@@ -81,9 +88,77 @@ impl Stage {
             Stage::KvRetrieval(_) => "kv_retrieval",
             Stage::ModelRoute => "model_route",
             Stage::Prefill => "prefill",
+            Stage::KvMigration => "kv_migration",
             Stage::Decode => "decode",
             Stage::Postprocess => "postprocess",
         }
+    }
+}
+
+/// Longest pipeline the inline stage array can hold. The longest
+/// shipped pipeline ([`Cascade`](crate::workload::trace::Pipeline)) has
+/// 6 stages; 8 leaves headroom without growing [`Request`].
+pub const MAX_STAGES: usize = 8;
+
+/// Fixed-capacity inline pipeline. `Pipeline::stages` is evaluated once
+/// per *generated* request on the streaming-arrival hot path, so the
+/// stage array lives inline in the `Request` instead of behind a
+/// per-arrival heap allocation. Derefs to `&[Stage]`, so indexing,
+/// slicing and iteration read exactly like the `Vec<Stage>` it
+/// replaced.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageList {
+    len: u8,
+    stages: [Stage; MAX_STAGES],
+}
+
+impl StageList {
+    pub fn new(stages: &[Stage]) -> StageList {
+        assert!(
+            stages.len() <= MAX_STAGES,
+            "pipeline of {} stages exceeds MAX_STAGES = {MAX_STAGES}",
+            stages.len()
+        );
+        // unused slots hold an arbitrary filler (never read: every
+        // access goes through the `len`-bounded slice)
+        let mut list = StageList { len: stages.len() as u8, stages: [Stage::Prefill; MAX_STAGES] };
+        list.stages[..stages.len()].copy_from_slice(stages);
+        list
+    }
+
+    pub fn as_slice(&self) -> &[Stage] {
+        &self.stages[..self.len as usize]
+    }
+}
+
+impl std::ops::Deref for StageList {
+    type Target = [Stage];
+    fn deref(&self) -> &[Stage] {
+        self.as_slice()
+    }
+}
+
+impl From<&[Stage]> for StageList {
+    fn from(stages: &[Stage]) -> StageList {
+        StageList::new(stages)
+    }
+}
+
+impl<const N: usize> From<[Stage; N]> for StageList {
+    fn from(stages: [Stage; N]) -> StageList {
+        StageList::new(&stages)
+    }
+}
+
+impl From<Vec<Stage>> for StageList {
+    fn from(stages: Vec<Stage>) -> StageList {
+        StageList::new(&stages)
+    }
+}
+
+impl PartialEq<Vec<Stage>> for StageList {
+    fn eq(&self, other: &Vec<Stage>) -> bool {
+        self.as_slice() == other.as_slice()
     }
 }
 
@@ -104,8 +179,8 @@ pub struct Request {
     /// it (cascade escalation), so it is the *current* serving model
     pub model: ModelId,
     pub arrival: SimTime,
-    /// pipeline definition
-    pub stages: Vec<Stage>,
+    /// pipeline definition (inline — no per-request heap allocation)
+    pub stages: StageList,
     /// index of the stage currently executing / queued
     pub stage_idx: usize,
 
@@ -153,10 +228,11 @@ impl Request {
         id: ReqId,
         model: impl Into<ModelId>,
         arrival: SimTime,
-        stages: Vec<Stage>,
+        stages: impl Into<StageList>,
         prompt_tokens: usize,
         output_tokens: usize,
     ) -> Request {
+        let stages = stages.into();
         assert!(!stages.is_empty());
         assert!(prompt_tokens > 0 && output_tokens > 0);
         Request {
@@ -485,6 +561,23 @@ mod tests {
         assert_eq!(r.stage(), Stage::ModelRoute);
         assert_eq!(r.model_route_ordinal(), 1);
         assert_eq!(Stage::ModelRoute.name(), "model_route");
+    }
+
+    #[test]
+    fn stage_list_derefs_like_a_vec() {
+        let v = vec![Stage::Prefill, Stage::KvMigration, Stage::Decode];
+        let list = StageList::new(&v);
+        assert_eq!(list.len(), 3);
+        assert_eq!(list, v);
+        assert_eq!(list[1], Stage::KvMigration);
+        assert_eq!(Stage::KvMigration.name(), "kv_migration");
+        assert_eq!(&list[..2], &v[..2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds MAX_STAGES")]
+    fn stage_list_rejects_oversized_pipelines() {
+        StageList::new(&[Stage::Decode; MAX_STAGES + 1]);
     }
 
     #[test]

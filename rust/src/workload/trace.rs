@@ -9,7 +9,7 @@
 //! output ≈ 31 — long-input/short-output). The experiment conclusions
 //! depend on these *shapes*, not on individual trace rows (DESIGN.md §3).
 
-use super::request::{KvParams, RagParams, Request, Stage};
+use super::request::{KvParams, RagParams, Request, Stage, StageList};
 use crate::model::ModelId;
 use crate::sim::SimTime;
 use crate::util::rng::{Arrival, Pcg};
@@ -82,31 +82,42 @@ pub enum Pipeline {
     /// small-model-first with an escalation point after the first answer
     /// (the cascade policy finishes or re-runs on the large model)
     Cascade,
+    /// prefill → KV migration → decode: cluster-level disaggregation
+    /// with an explicit KV hand-off between the prefill-role and
+    /// decode-role clients (docs/disaggregation.md)
+    Disagg,
 }
 
 impl Pipeline {
-    pub fn stages(&self) -> Vec<Stage> {
+    /// The stage list, inline (no heap allocation — this runs once per
+    /// generated request on the streaming-arrival hot path).
+    pub fn stages(&self) -> StageList {
         match *self {
-            Pipeline::Regular => vec![Stage::Prefill, Stage::Decode],
-            Pipeline::Rag(p) => vec![Stage::Rag(p), Stage::Prefill, Stage::Decode],
+            Pipeline::Regular => StageList::new(&[Stage::Prefill, Stage::Decode]),
+            Pipeline::Rag(p) => StageList::new(&[Stage::Rag(p), Stage::Prefill, Stage::Decode]),
             Pipeline::KvRetrieval(p) => {
-                vec![Stage::KvRetrieval(p), Stage::Prefill, Stage::Decode]
+                StageList::new(&[Stage::KvRetrieval(p), Stage::Prefill, Stage::Decode])
             }
-            Pipeline::Guarded => vec![
+            Pipeline::Guarded => StageList::new(&[
                 Stage::Preprocess,
                 Stage::Prefill,
                 Stage::Decode,
                 Stage::Postprocess,
-            ],
-            Pipeline::Routed => vec![Stage::ModelRoute, Stage::Prefill, Stage::Decode],
-            Pipeline::Cascade => vec![
+            ]),
+            Pipeline::Routed => {
+                StageList::new(&[Stage::ModelRoute, Stage::Prefill, Stage::Decode])
+            }
+            Pipeline::Cascade => StageList::new(&[
                 Stage::ModelRoute,
                 Stage::Prefill,
                 Stage::Decode,
                 Stage::ModelRoute,
                 Stage::Prefill,
                 Stage::Decode,
-            ],
+            ]),
+            Pipeline::Disagg => {
+                StageList::new(&[Stage::Prefill, Stage::KvMigration, Stage::Decode])
+            }
         }
     }
 }
@@ -402,6 +413,10 @@ mod tests {
         let cascade = Pipeline::Cascade.stages();
         assert_eq!(cascade.len(), 6);
         assert_eq!(cascade[3], Stage::ModelRoute, "escalation point after decode");
+        assert_eq!(
+            Pipeline::Disagg.stages(),
+            vec![Stage::Prefill, Stage::KvMigration, Stage::Decode]
+        );
     }
 
     #[test]

@@ -1,0 +1,163 @@
+//! Serial oracle for cluster-level prefill/decode disaggregation (same
+//! style as `retirement_equivalence.rs`):
+//!
+//! * equivalence: the explicit three-stage disaggregated pipeline
+//!   (prefill → kv_migration → decode) on a colocated pool — where the
+//!   combined client consumes the hand-off in place at zero cost — is
+//!   bit-identical to the plain two-stage pipeline (serviced order,
+//!   clock, event count, every latency/energy sample), in both
+//!   `LoadMode`s, and stays bit-identical when an inert `MigrationSpec`
+//!   (granularity + tiered staging pool) is configured;
+//! * parallelism: the oracle holds under the `--jobs N` sweep executor —
+//!   rate sweeps of both pipelines fingerprint identically at jobs 1
+//!   and 2;
+//! * pricing: on a genuinely disaggregated pool every request pays
+//!   exactly one migration, and the migrated volume matches the regular
+//!   pipeline's implicit prefill→decode hand-off byte for byte (same
+//!   KV-size formula, same token draws).
+
+use hermes::config::slo::SloLadder;
+use hermes::coordinator::{Coordinator, LoadMode};
+use hermes::hardware::npu::H100;
+use hermes::memory::hierarchy::{TIER_DRAM, TIER_HBM};
+use hermes::metrics::RunMetrics;
+use hermes::network::Granularity;
+use hermes::scheduler::BatchingKind;
+use hermes::sim::builder::{MigrationSpec, PoolSpec, ServingSpec};
+use hermes::sim::{driver, parallel};
+use hermes::workload::trace::{Pipeline, TraceKind, WorkloadMix, WorkloadSpec};
+
+fn colocated_spec() -> ServingSpec {
+    ServingSpec::new(
+        "llama3-70b",
+        H100,
+        8,
+        PoolSpec::Combined { kind: BatchingKind::Continuous, n: 2 },
+    )
+    .with_seed(83)
+}
+
+fn mix(pipeline: Pipeline, n: usize) -> WorkloadMix {
+    WorkloadMix::single(
+        WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, n, 4.0)
+            .with_seed(89)
+            .with_pipeline(pipeline),
+    )
+}
+
+fn run(spec: &ServingSpec, mix: &WorkloadMix, mode: LoadMode) -> (Coordinator, RunMetrics) {
+    let mut coord = spec.build().unwrap();
+    coord.load_mode = mode;
+    coord.inject(mix.generate());
+    coord.run();
+    let m = RunMetrics::collect(&coord, &SloLadder::standard());
+    (coord, m)
+}
+
+fn assert_bit_identical(a: &(Coordinator, RunMetrics), b: &(Coordinator, RunMetrics)) {
+    let ((ca, ma), (cb, mb)) = (a, b);
+    assert!(ca.all_serviced(), "serviced {}", ca.serviced.len());
+    assert!(cb.all_serviced(), "serviced {}", cb.serviced.len());
+    assert_eq!(ca.serviced, cb.serviced, "completion order diverged");
+    assert_eq!(ca.failed, cb.failed, "failure set diverged");
+    assert_eq!(ca.clock, cb.clock);
+    assert_eq!(ma.events, mb.events);
+    assert_eq!(ma.n_requests, mb.n_requests);
+    assert_eq!(ma.makespan, mb.makespan);
+    assert_eq!(ma.n_serviced, mb.n_serviced);
+    assert_eq!(ma.n_failed, mb.n_failed);
+    assert_eq!(ma.ttft_samples, mb.ttft_samples);
+    assert_eq!(ma.tpot_samples, mb.tpot_samples);
+    assert_eq!(ma.e2e_samples, mb.e2e_samples);
+    assert_eq!(ma.transfer_bytes, mb.transfer_bytes);
+    assert_eq!(ma.energy_joules, mb.energy_joules);
+    assert_eq!(ma.goodput_frac, mb.goodput_frac);
+    assert_eq!(ma.throughput_tok_s, mb.throughput_tok_s);
+}
+
+/// An inert migration config: pricing knobs that must not change a
+/// colocated run, because the combined client consumes the hand-off
+/// before the coordinator's migration path ever sees it.
+fn inert_migration() -> MigrationSpec {
+    MigrationSpec {
+        granularity: Some(Granularity::Full),
+        pool: vec![TIER_HBM, TIER_DRAM],
+    }
+}
+
+#[test]
+fn colocated_disagg_is_bit_identical_to_regular_both_load_modes() {
+    let w_reg = mix(Pipeline::Regular, 60);
+    let w_dis = mix(Pipeline::Disagg, 60);
+    for mode in [LoadMode::Incremental, LoadMode::FullScan] {
+        let reg = run(&colocated_spec(), &w_reg, mode);
+        let dis = run(&colocated_spec(), &w_dis, mode);
+        assert_bit_identical(&reg, &dis);
+        // the hand-off stage never reaches the network on a colocated
+        // pool: both pipelines price the same (zero) migrations
+        assert_eq!(dis.0.stats.transfers, reg.0.stats.transfers);
+
+        // configuring migration pricing is inert here — the kv_migration
+        // stage is consumed inside the client, so granularity and the
+        // staging pool have nothing to price
+        let priced = run(&colocated_spec().with_migration(inert_migration()), &w_dis, mode);
+        assert_bit_identical(&reg, &priced);
+    }
+}
+
+#[test]
+fn disagg_oracle_holds_across_job_counts() {
+    let spec = colocated_spec();
+    let slo = SloLadder::standard();
+    let w_reg = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 30, 4.0).with_seed(89);
+    let w_dis = w_reg.clone().with_pipeline(Pipeline::Disagg);
+    let rates = [2.0, 4.0];
+    let fingerprint = |points: &[driver::SweepPoint]| -> Vec<String> {
+        points
+            .iter()
+            .map(|p| format!("rate={:?} slo_ok={:?} metrics={:?}", p.rate, p.slo_ok, p.metrics))
+            .collect()
+    };
+
+    parallel::set_jobs(1);
+    let reg_serial = fingerprint(&driver::sweep_rates(&spec, &w_reg, &slo, &rates).unwrap());
+    let dis_serial = fingerprint(&driver::sweep_rates(&spec, &w_dis, &slo, &rates).unwrap());
+    assert_eq!(reg_serial, dis_serial, "serial oracle broken at jobs=1");
+
+    parallel::set_jobs(2);
+    let reg_par = fingerprint(&driver::sweep_rates(&spec, &w_reg, &slo, &rates).unwrap());
+    let dis_par = fingerprint(&driver::sweep_rates(&spec, &w_dis, &slo, &rates).unwrap());
+    parallel::set_jobs(1);
+    assert_eq!(reg_par, reg_serial, "regular sweep diverged at jobs=2");
+    assert_eq!(dis_par, dis_serial, "disagg sweep diverged at jobs=2");
+}
+
+#[test]
+fn disaggregated_pool_prices_migrations_and_completes() {
+    let spec = ServingSpec::new(
+        "llama3-70b",
+        H100,
+        4,
+        PoolSpec::Disaggregated { prefill: 1, decode: 1, local: false },
+    )
+    .with_migration(MigrationSpec {
+        granularity: Some(Granularity::Layerwise { layers: 80 }),
+        pool: vec![TIER_DRAM],
+    })
+    .with_seed(97);
+
+    let dis = run(&spec, &mix(Pipeline::Disagg, 40), LoadMode::Incremental);
+    assert!(dis.0.all_serviced(), "serviced {}", dis.0.serviced.len());
+    assert_eq!(dis.0.stats.transfers, 40, "one explicit migration per request");
+    assert!(dis.0.stats.transfer_bytes > 0.0);
+    assert!(dis.0.stats.transfer_seconds > 0.0, "staged layerwise hand-off takes time");
+
+    // the regular pipeline on the same disaggregated pool pays the same
+    // implicit prefill→decode hand-off: identical count and — since both
+    // use the full-prefix KV-size formula on the same token draws —
+    // identical total bytes
+    let reg = run(&spec, &mix(Pipeline::Regular, 40), LoadMode::Incremental);
+    assert!(reg.0.all_serviced());
+    assert_eq!(reg.0.stats.transfers, 40);
+    assert_eq!(dis.0.stats.transfer_bytes, reg.0.stats.transfer_bytes);
+}

@@ -31,7 +31,8 @@ fn deterministic_fields(b: &BenchRun) -> String {
         "events={} peak_queue={} peak_inflight={} n_requests={} n_serviced={} \
          n_clients={} makespan_s={:?} throughput_tok_s={:?} pool_reads={} \
          pool_writes={} pool_slots={} pool_peak_resident={} \
-         peak_resident_slots={} resident_bytes_est={} retired={}",
+         peak_resident_slots={} resident_bytes_est={} retired={} \
+         transfers={} transfer_bytes={:?}",
         b.events,
         b.peak_queue,
         b.peak_inflight,
@@ -47,6 +48,8 @@ fn deterministic_fields(b: &BenchRun) -> String {
         b.peak_resident_slots,
         b.resident_bytes_est,
         b.retired,
+        b.transfers,
+        b.transfer_bytes,
     )
 }
 

@@ -22,8 +22,9 @@ scale, not regression):
 
 * **speed**: WARN when fresh `incremental.events_per_s` falls below
   the scenario's threshold x baseline (default 60% — generous, CI
-  hardware is heterogeneous). `--threshold NAME=RATIO` overrides per
-  scenario.
+  hardware is heterogeneous). Thresholds resolve CLI `--threshold
+  NAME=RATIO` first, then the built-in SCENARIO_THRESHOLDS table, then
+  `--default-threshold`.
 * **memory**: WARN when fresh `incremental.peak_resident_slots` or
   `incremental.resident_bytes_est` *grows* beyond the scenario's
   memory threshold x baseline (default 1.25x). Deterministic
@@ -45,6 +46,23 @@ import sys
 # generous because CI hardware is heterogeneous and the committed
 # baseline comes from a release-mode run on a developer machine
 DEFAULT_THRESHOLD = 0.60
+
+# built-in per-scenario speed thresholds, consulted after CLI
+# --threshold overrides and before --default-threshold: scenarios whose
+# fast-scale smoke is intrinsically noisier than the steady single-pool
+# rows carry their looser tripwire here instead of in every CI
+# invocation
+SCENARIO_THRESHOLDS = {
+    # small fast scale + cascade-escalation randomness
+    "bench_multimodel_100k": 0.50,
+    # migration-heavy: every request crosses the interconnect, so the
+    # event mix is transfer-dominated and more timer-sensitive
+    "bench_disagg_100k": 0.50,
+}
+
+# same idea for the memory-growth tripwire (none currently need one —
+# the deterministic counters are machine-independent at every scale)
+SCENARIO_MEM_THRESHOLDS = {}
 
 # peak_resident_slots / resident_bytes_est above 125% of the committed
 # baseline triggers a warning; these are deterministic counters, so the
@@ -188,7 +206,9 @@ def main(argv):
                 f"{ref_n} requests) — skipped"
             )
             continue
-        threshold = per_scenario.get(name, default_threshold)
+        threshold = per_scenario.get(
+            name, SCENARIO_THRESHOLDS.get(name, default_threshold)
+        )
         ratio = eps / ref
         line = f"bench-diff: {name}: {eps:,.0f} events/s vs baseline {ref:,.0f} ({ratio:.2f}x)"
         if ratio < threshold:
@@ -198,7 +218,9 @@ def main(argv):
             print(line)
         # memory growth: only rows that carry the retirement-era fields
         # on both sides are comparable
-        mem_threshold = per_scenario_mem.get(name, default_mem)
+        mem_threshold = per_scenario_mem.get(
+            name, SCENARIO_MEM_THRESHOLDS.get(name, default_mem)
+        )
         for field in MEM_FIELDS:
             if field not in mem or ref_mem.get(field, 0) <= 0:
                 continue
