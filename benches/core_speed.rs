@@ -26,6 +26,14 @@ fn main() {
         .and_then(|v| v.parse::<usize>().ok())
         .filter(|&n| n >= 1)
         .unwrap_or(1);
+    // HERMES_SHARDS=K runs every scenario's shipping config under K
+    // conservative time-window domains as well (the `--shards K` knob;
+    // default 1 still honors each scenario's own `extras.shards`)
+    let shards = std::env::var("HERMES_SHARDS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1);
     let names = bench::bench_scenarios();
     if names.is_empty() {
         eprintln!("no bench_* scenarios found under scenarios/");
@@ -33,7 +41,9 @@ fn main() {
     }
 
     banner("core simulator speed (BENCH_core.json)");
-    if let Err(e) = bench::run_and_report(&names, fast, Baseline::Auto, jobs, "BENCH_core.json") {
+    if let Err(e) =
+        bench::run_and_report(&names, fast, Baseline::Auto, jobs, shards, "BENCH_core.json")
+    {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }

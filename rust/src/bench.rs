@@ -32,6 +32,14 @@
 //!   shipping mode streams or retires; its `peak_resident_slots` is
 //!   the whole trace. Reported as `resident_slots_reduction`.
 //!
+//! One forward-looking configuration rides along: **sharded**
+//! (`--shards K`, or the scenario's own `extras.shards`) re-runs the
+//! shipping config on K conservative time-window domains
+//! ([`crate::coordinator::shard`]). The simulation is bit-identical to
+//! the serial shipping run, so the row's `sharded` block and
+//! `speedup_vs_serial_sharded` isolate the wall-clock effect of the
+//! parallel event loop.
+//!
 //! See `docs/performance.md`.
 
 use std::time::Instant;
@@ -39,6 +47,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::config::slo::SloLadder;
+use crate::coordinator::shard::{run_sharded, Arrivals};
 use crate::coordinator::LoadMode;
 use crate::metrics::RunMetrics;
 use crate::scenario::Scenario;
@@ -101,6 +110,10 @@ pub struct BenchRun {
     /// bytes carried by those hops (the migration volume on
     /// `bench_disagg_100k`)
     pub transfer_bytes: f64,
+    /// effective conservative-window domains the run executed on
+    /// (1 = the serial single-queue event loop; >1 only for the
+    /// sharded run, see [`crate::coordinator::shard`])
+    pub domains: usize,
 }
 
 /// One scenario's outcome: the shipping run plus the enabled baselines.
@@ -122,6 +135,14 @@ pub struct BenchResult {
     /// behavior) — only run for scenarios whose shipping mode streams
     /// or retires, so the O(in-flight) claim has an O(total) reference
     pub retained: Option<BenchRun>,
+    /// shard count the sharded run was requested with (1 = no sharded
+    /// run planned): `--shards K`, else the scenario's `extras.shards`
+    pub shards: usize,
+    /// the shipping configuration re-run under `--shards K`
+    /// (conservative time-window domains, docs/performance.md "Sharded
+    /// execution") — bit-identical events/serviced/makespan to
+    /// `incremental`, with its own wall clock
+    pub sharded: Option<BenchRun>,
 }
 
 impl BenchResult {
@@ -145,6 +166,13 @@ impl BenchResult {
         self.retained.as_ref().map(|b| {
             b.peak_resident_slots as f64 / self.incremental.peak_resident_slots.max(1) as f64
         })
+    }
+
+    /// Serial wall-clock / sharded wall-clock (>1 = sharding pays off).
+    pub fn shard_speedup(&self) -> Option<f64> {
+        self.sharded
+            .as_ref()
+            .map(|b| self.incremental.wall_s / b.wall_s.max(1e-12))
     }
 }
 
@@ -236,6 +264,89 @@ pub fn run_once(
         retired: ops.retired,
         transfers: coord.stats.transfers,
         transfer_bytes: coord.stats.transfer_bytes,
+        domains: 1,
+    })
+}
+
+/// Run the shipping configuration under `--shards K`: the single run is
+/// partitioned into conservative time-window domains
+/// ([`run_sharded`], docs/performance.md "Sharded execution") and the
+/// merged outcome is reported as a [`BenchRun`]. The simulation fields
+/// (events, serviced, makespan, transfers) are bit-identical to the
+/// serial shipping run; the wall clock is the sharded harness's own.
+/// Two measurement caveats vs [`run_once`]: domain coordinators are
+/// built inside the timed section (the serial path builds outside it),
+/// and the pool counters include injection (there is no post-injection
+/// reset hook inside the domain workers) — so pool reads/writes are
+/// comparable between sharded rows, not against serial rows.
+pub fn run_once_sharded(
+    sc: &Scenario,
+    fast: bool,
+    exec: ExecMode,
+    shards: usize,
+) -> Result<BenchRun> {
+    let scale = sc.scale(fast);
+    let entry = sc
+        .roster
+        .first()
+        .context("bench scenario needs a roster entry")?;
+    let spec = sc.serving(entry, scale.clients)?;
+    let rate = *scale
+        .rates
+        .first()
+        .context("bench scenario needs a rate")?;
+    let n_requests = scale.clients * scale.requests_per_client;
+    let mix = sc
+        .workload(None, n_requests)?
+        .scaled(n_requests, rate * spec.pool.n_clients() as f64);
+    let n_requests = mix.n_total();
+
+    // the shipping configuration, exactly as run_once sets it up
+    let build = || -> Result<_> {
+        let mut c = spec.build()?;
+        c.load_mode = LoadMode::Incremental;
+        c.pool = RequestPool::with_backend(PoolBackend::Arena);
+        c.retire = exec.retire;
+        Ok(c)
+    };
+    // eager generation stays outside the clock, like run_once; streamed
+    // runs sample lazily inside their domain workers
+    let arrivals = if exec.stream {
+        Arrivals::Stream(&mix)
+    } else {
+        Arrivals::Inject(mix.generate())
+    };
+    // auxiliary RAG/KV/pre-post tiers count toward n_clients exactly as
+    // in the serial row (which reads coord.clients.len())
+    let n_clients = build()?.clients.len();
+    let t0 = Instant::now();
+    let out = run_sharded(build, arrivals, shards)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let m = RunMetrics::collect_outcome(&out, &SloLadder::standard());
+    let ops = out.pool_ops;
+    Ok(BenchRun {
+        wall_s: wall,
+        events: out.stats.events,
+        events_per_s: out.stats.events as f64 / wall.max(1e-9),
+        peak_queue: out.stats.peak_queue,
+        peak_inflight: out.stats.peak_inflight,
+        n_requests,
+        n_serviced: m.n_serviced,
+        n_clients,
+        makespan_s: m.makespan,
+        sim_rate: m.makespan / wall.max(1e-9),
+        throughput_tok_s: m.throughput_tok_s,
+        pool_reads: ops.reads,
+        pool_writes: ops.writes,
+        pool_slots: ops.slots,
+        pool_peak_resident: ops.peak_resident,
+        peak_resident_slots: ops.peak_live,
+        resident_bytes_est: ops.peak_bytes_est,
+        retired: ops.retired,
+        transfers: out.stats.transfers,
+        transfer_bytes: out.stats.transfer_bytes,
+        domains: out.domains,
     })
 }
 
@@ -252,6 +363,9 @@ enum UnitKind {
     FullScan,
     /// eager injection, nothing retired (pre-streaming memory baseline)
     Retained,
+    /// the shipping config under `--shards K` (conservative time-window
+    /// domains) — bit-identical simulation, its own wall clock
+    Sharded,
 }
 
 /// A loaded scenario plus the configurations it will run — the
@@ -261,17 +375,24 @@ struct ScenarioPlan {
     sc: Scenario,
     fast: bool,
     exec: ExecMode,
+    /// shard count for the sharded unit (1 = none planned)
+    shards: usize,
     /// submission order; `Incremental` always first
     units: Vec<UnitKind>,
 }
 
-fn plan_scenario(name: &str, fast: bool, baseline: Baseline) -> Result<ScenarioPlan> {
+fn plan_scenario(name: &str, fast: bool, baseline: Baseline, shards: usize) -> Result<ScenarioPlan> {
     let sc = Scenario::load(name)?;
     let extras = sc.extras();
     let exec = ExecMode {
         stream: extras.bool_or("stream", false),
         retire: extras.bool_or("retire", false),
     };
+    // `--shards K` (K > 1) shards every scenario; otherwise a scenario
+    // can opt its own showcase in via `extras.shards` (bench_llm_1m
+    // ships with 4, so the default harness records the sharded speedup
+    // in BENCH_core.json alongside the serial trajectory)
+    let shards = if shards > 1 { shards } else { extras.usize_or("shards", 1) };
     let mut units = vec![UnitKind::Incremental];
     // pre-arena pool: same asymptotics as the shipping run, so it runs
     // by default. Scenarios whose full-scale run is long enough that a
@@ -298,7 +419,10 @@ fn plan_scenario(name: &str, fast: bool, baseline: Baseline) -> Result<ScenarioP
     if (exec.stream || exec.retire) && baseline != Baseline::Off {
         units.push(UnitKind::Retained);
     }
-    Ok(ScenarioPlan { sc, fast, exec, units })
+    if shards > 1 {
+        units.push(UnitKind::Sharded);
+    }
+    Ok(ScenarioPlan { sc, fast, exec, shards, units })
 }
 
 fn run_unit(plan: &ScenarioPlan, kind: UnitKind) -> Result<BenchRun> {
@@ -307,14 +431,18 @@ fn run_unit(plan: &ScenarioPlan, kind: UnitKind) -> Result<BenchRun> {
         UnitKind::MapPool => (LoadMode::Incremental, PoolBackend::Map, plan.exec),
         UnitKind::FullScan => (LoadMode::FullScan, PoolBackend::Map, plan.exec),
         UnitKind::Retained => (LoadMode::Incremental, PoolBackend::Arena, ExecMode::default()),
+        UnitKind::Sharded => {
+            return run_once_sharded(&plan.sc, plan.fast, plan.exec, plan.shards)
+        }
     };
     run_once(&plan.sc, plan.fast, mode, backend, exec)
 }
 
 /// Benchmark one scenario by registry name or path, serially (the
-/// `--jobs 1` oracle path of [`run_scenarios`]).
+/// `--jobs 1` oracle path of [`run_scenarios`]). A scenario with
+/// `extras.shards` still runs its sharded showcase unit.
 pub fn run_scenario(name: &str, fast: bool, baseline: Baseline) -> Result<BenchResult> {
-    let mut results = run_scenarios(&[name.to_string()], fast, baseline, 1)?;
+    let mut results = run_scenarios(&[name.to_string()], fast, baseline, 1, 1)?;
     Ok(results.pop().expect("one scenario in, one result out"))
 }
 
@@ -331,10 +459,11 @@ pub fn run_scenarios(
     fast: bool,
     baseline: Baseline,
     jobs: usize,
+    shards: usize,
 ) -> Result<Vec<BenchResult>> {
     let plans = names
         .iter()
-        .map(|name| plan_scenario(name, fast, baseline))
+        .map(|name| plan_scenario(name, fast, baseline, shards))
         .collect::<Result<Vec<_>>>()?;
     let units: Vec<(usize, UnitKind)> = plans
         .iter()
@@ -356,12 +485,14 @@ pub fn run_scenarios(
         let mut map_pool = None;
         let mut full_scan = None;
         let mut retained = None;
+        let mut sharded = None;
         for (kind, run) in runs {
             match kind {
                 UnitKind::Incremental => incremental = Some(run),
                 UnitKind::MapPool => map_pool = Some(run),
                 UnitKind::FullScan => full_scan = Some(run),
                 UnitKind::Retained => retained = Some(run),
+                UnitKind::Sharded => sharded = Some(run),
             }
         }
         out.push(BenchResult {
@@ -372,6 +503,8 @@ pub fn run_scenarios(
             baseline: full_scan,
             map_pool,
             retained,
+            shards: plan.shards,
+            sharded,
         });
     }
     Ok(out)
@@ -398,7 +531,8 @@ fn run_to_json(b: &BenchRun) -> Json {
         .set("resident_bytes_est", b.resident_bytes_est)
         .set("retired", b.retired)
         .set("transfers", b.transfers)
-        .set("transfer_gb", b.transfer_bytes / 1e9);
+        .set("transfer_gb", b.transfer_bytes / 1e9)
+        .set("domains", b.domains);
     j
 }
 
@@ -413,6 +547,7 @@ pub fn total_events(results: &[BenchResult]) -> u64 {
                 + r.baseline.as_ref().map_or(0, |b| b.events)
                 + r.map_pool.as_ref().map_or(0, |b| b.events)
                 + r.retained.as_ref().map_or(0, |b| b.events)
+                + r.sharded.as_ref().map_or(0, |b| b.events)
         })
         .sum()
 }
@@ -424,6 +559,7 @@ fn n_runs(results: &[BenchResult]) -> usize {
             1 + r.baseline.is_some() as usize
                 + r.map_pool.is_some() as usize
                 + r.retained.is_some() as usize
+                + r.sharded.is_some() as usize
         })
         .sum()
 }
@@ -446,7 +582,17 @@ pub fn to_json(results: &[BenchResult], jobs: usize, wall_s: f64) -> Json {
                 .set("stream", r.exec.stream)
                 .set("retire", r.exec.retire)
                 .set("jobs", jobs)
+                // requested shard count for the row's sharded run (1 =
+                // none ran). scripts/check_bench_regression.py matches
+                // rows by name only and deliberately ignores this column
+                .set("shards", r.shards)
                 .set("incremental", run_to_json(&r.incremental));
+            if let Some(b) = &r.sharded {
+                j.set("sharded", run_to_json(b));
+            }
+            if let Some(s) = r.shard_speedup() {
+                j.set("speedup_vs_serial_sharded", s);
+            }
             if let Some(b) = &r.baseline {
                 j.set("full_scan_baseline", run_to_json(b));
             }
@@ -491,17 +637,19 @@ pub fn run_and_report(
     fast: bool,
     baseline: Baseline,
     jobs: usize,
+    shards: usize,
     out_path: &str,
 ) -> Result<Vec<BenchResult>> {
     for name in names {
         println!(
-            "benchmarking '{name}'{}{} ...",
+            "benchmarking '{name}'{}{}{} ...",
             if fast { " (fast scale)" } else { "" },
-            if jobs > 1 { format!(" [jobs={jobs}]") } else { String::new() }
+            if jobs > 1 { format!(" [jobs={jobs}]") } else { String::new() },
+            if shards > 1 { format!(" [shards={shards}]") } else { String::new() }
         );
     }
     let t0 = Instant::now();
-    let results = run_scenarios(names, fast, baseline, jobs)?;
+    let results = run_scenarios(names, fast, baseline, jobs, shards)?;
     let batch_wall = t0.elapsed().as_secs_f64();
     for r in &results {
         let inc = &r.incremental;
@@ -553,11 +701,22 @@ pub fn run_and_report(
                 r.speedup().unwrap_or(0.0)
             );
         }
+        if let Some(b) = &r.sharded {
+            println!(
+                "  sharded ({} of {} requested domains): {:.3}s wall ({:.0} events/s) -> {:.2}x vs serial, peak {} resident slots",
+                b.domains,
+                r.shards,
+                b.wall_s,
+                b.events_per_s,
+                r.shard_speedup().unwrap_or(0.0),
+                b.peak_resident_slots
+            );
+        }
     }
 
     let mut table = crate::util::bench::Table::new(&[
         "scenario", "requests", "clients", "wall(s)", "events/s", "sim-s/wall-s", "peak queue",
-        "peak slots", "retired", "vs hashmap", "vs full-scan",
+        "peak slots", "retired", "shards", "vs hashmap", "vs full-scan",
     ]);
     for r in &results {
         table.row(&[
@@ -570,6 +729,12 @@ pub fn run_and_report(
             r.incremental.peak_queue.to_string(),
             r.incremental.peak_resident_slots.to_string(),
             r.incremental.retired.to_string(),
+            // the sharded run's effective domains and wall-clock ratio
+            // (the serial shipping row is always the columns to the left)
+            r.sharded
+                .as_ref()
+                .map(|b| format!("{} ({:.2}x)", b.domains, r.shard_speedup().unwrap_or(0.0)))
+                .unwrap_or_else(|| "-".to_string()),
             r.pool_speedup()
                 .map(|s| format!("{s:.2}x"))
                 .unwrap_or_else(|| "-".to_string()),
@@ -629,6 +794,18 @@ mod tests {
             assert_eq!(b.transfers, inc.transfers);
             assert_eq!(b.transfer_bytes, inc.transfer_bytes);
         }
+        // ... and neither may domain sharding: the scenario ships
+        // extras.shards=2, splitting the prefill and decode racks into
+        // two conservative-window domains whose cross-domain KV
+        // migrations are priced at the window barrier — bit-identically
+        assert_eq!(r.shards, 2);
+        let sh = r.sharded.as_ref().expect("disagg tier ships a sharded run");
+        assert_eq!(sh.domains, 2, "prefill/decode racks must split into two domains");
+        assert_eq!(sh.events, inc.events);
+        assert_eq!(sh.n_serviced, inc.n_serviced);
+        assert_eq!(sh.makespan_s, inc.makespan_s);
+        assert_eq!(sh.transfers, inc.transfers);
+        assert_eq!(sh.transfer_bytes, inc.transfer_bytes);
         // the migration-byte columns land in the BENCH_core.json row
         let j = to_json(&[r], 1, 0.5);
         let parsed = Json::parse(&j.to_pretty()).unwrap();
@@ -676,6 +853,23 @@ mod tests {
         assert_eq!(retained.events, inc.events);
         assert_eq!(retained.n_serviced, inc.n_serviced);
         assert_eq!(retained.makespan_s, inc.makespan_s);
+        // the sharded showcase (extras.shards=4): the multi-stage mix
+        // splits prefill / decode / KV-retrieval / pre-post clients into
+        // four conservative-window domains, bit-identical to serial,
+        // and the merged per-domain peaks keep the O(in-flight) claim
+        assert_eq!(r.shards, 4);
+        let sh = r.sharded.as_ref().expect("1m tier ships a sharded showcase");
+        assert_eq!(sh.domains, 4, "stage tiers must split into four domains");
+        assert_eq!(sh.events, inc.events);
+        assert_eq!(sh.n_serviced, inc.n_serviced);
+        assert_eq!(sh.makespan_s, inc.makespan_s);
+        assert_eq!(sh.retired as usize, inc.n_requests);
+        assert!(
+            sh.peak_resident_slots * 10 <= sh.n_requests,
+            "sharded peak resident slots {} exceeds 10% of {} requests",
+            sh.peak_resident_slots,
+            sh.n_requests
+        );
     }
 
     #[test]
@@ -713,6 +907,10 @@ mod tests {
         assert!(row.get("hashmap_pool_baseline").is_some());
         assert!(row.get("speedup_vs_hashmap_pool").is_some());
         assert_eq!(row.at(&["jobs"]).and_then(|j| j.as_f64()), Some(2.0));
+        // every row carries the shards column (1 = no sharded run); the
+        // regression script matches rows by name and ignores it
+        assert_eq!(row.at(&["shards"]).and_then(|j| j.as_f64()), Some(1.0));
+        assert!(row.get("sharded").is_none());
         assert!(
             row.at(&["incremental", "pool_reads"])
                 .and_then(|j| j.as_f64())

@@ -76,6 +76,19 @@ impl EventQueue {
         self.heap.pop().map(|Reverse((t, _, s))| (t, decode(s)))
     }
 
+    /// Fused peek+pop: pop the head only if it fires strictly before
+    /// `bound`. One heap access per drained event instead of a
+    /// peek-then-pop pair — both the serial loop (where `bound` is the
+    /// pending arrival's timestamp, so an arrival at exactly the head's
+    /// time still wins the tie) and the sharded window drain (where
+    /// `bound` is the window end, exclusive) sit on this.
+    pub fn pop_before(&mut self, bound: SimTime) -> Option<(SimTime, Event)> {
+        match self.heap.peek() {
+            Some(Reverse((t, _, _))) if *t < bound => self.pop(),
+            _ => None,
+        }
+    }
+
     /// Timestamp of the next event without popping it — the coordinator
     /// arbitrates between the queue head and the lazy arrival source's
     /// pending request.
@@ -138,6 +151,37 @@ mod tests {
         assert_eq!(q.len(), 2, "peek must not consume");
         let _ = q.pop();
         assert_eq!(q.peek_time(), Some(SimTime::from_secs(2.0)));
+    }
+
+    #[test]
+    fn pop_before_matches_separate_peek_then_pop() {
+        // tie-order pin: a head at exactly `bound` must NOT pop — the
+        // caller's same-time candidate (a streaming arrival, or the
+        // next window's events) wins the tie, exactly as the old
+        // peek-then-pop arbitration (`ta <= te` → arrival first) did.
+        let t = SimTime::from_secs(1.0);
+        let mut fused = EventQueue::new();
+        let mut classic = EventQueue::new();
+        for q in [&mut fused, &mut classic] {
+            q.push(t, Event::EngineStep { client: 1 });
+            q.push(t, Event::EngineStep { client: 2 });
+            q.push(SimTime::from_secs(2.0), Event::EngineStep { client: 3 });
+        }
+        for bound in [SimTime::from_secs(0.5), t, SimTime::from_secs(1.5), SimTime::from_secs(9.0)]
+        {
+            loop {
+                let expected = match classic.peek_time() {
+                    Some(te) if te < bound => classic.pop(),
+                    _ => None,
+                };
+                let got = fused.pop_before(bound);
+                assert_eq!(got, expected, "bound {bound}");
+                if got.is_none() {
+                    break;
+                }
+            }
+        }
+        assert!(fused.is_empty(), "every event drained by the last bound");
     }
 
     #[test]

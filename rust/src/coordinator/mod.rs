@@ -6,6 +6,7 @@
 
 pub mod event;
 pub mod router;
+pub mod shard;
 
 use crate::client::{Client, StepOutcome};
 use crate::memory::hierarchy::Hierarchy;
@@ -146,6 +147,11 @@ pub struct Coordinator {
     /// reusable candidate buffer for `route` (cleared per decision —
     /// routing runs on every stage transition, so no allocations)
     route_buf: Vec<Candidate>,
+    /// sharded-execution context (None in the serial oracle): this
+    /// coordinator is one conservative-window domain of a
+    /// [`shard::run_sharded`] run — cross-domain hops are deferred into
+    /// its egress buffer instead of being priced inline
+    pub(crate) shard: Option<Box<shard::ShardCtx>>,
 }
 
 impl Coordinator {
@@ -177,6 +183,7 @@ impl Coordinator {
             stats: CoordStats::default(),
             max_events: 500_000_000,
             route_buf: Vec::new(),
+            shard: None,
         }
     }
 
@@ -228,25 +235,47 @@ impl Coordinator {
     /// request id inside the source, matching the eager path's
     /// `(arrival, id)` injection order.
     pub fn step_event(&mut self) -> bool {
-        let arrival_next = match (self.source.peek(), self.queue.peek_time()) {
-            (Some(ta), Some(te)) => ta <= te,
-            (Some(_), None) => true,
-            (None, _) => false,
+        self.step_bounded(None)
+    }
+
+    /// [`Coordinator::step_event`] with an optional exclusive time
+    /// bound: process the next event/arrival only if it fires strictly
+    /// before `limit`, else leave it pending and return `false`. The
+    /// sharded loop ([`shard::run_sharded`]) drains each conservative
+    /// window with `limit = window end`; the serial loop passes `None`.
+    ///
+    /// The arbitration is a single fused [`EventQueue::pop_before`]
+    /// against the pending arrival's timestamp (or `limit`, whichever
+    /// is smaller): the queue head pops only when it fires *strictly*
+    /// before the arrival, which is exactly the old peek-then-pop
+    /// `ta <= te` tie rule.
+    pub fn step_bounded(&mut self, limit: Option<SimTime>) -> bool {
+        let arrival = self.source.peek();
+        let bound = match (arrival, limit) {
+            (Some(ta), Some(l)) => Some(ta.min(l)),
+            (Some(ta), None) => Some(ta),
+            (None, Some(l)) => Some(l),
+            (None, None) => None,
         };
-        let (t, e) = if arrival_next {
-            let ArrivalSource::Streaming(s) = &mut self.source else {
-                unreachable!("arrival_next implies a streaming source")
-            };
-            let r = s.next().expect("peeked arrival must exist");
-            let (t, id) = (r.arrival, r.id);
-            self.stats.injected += 1;
-            self.pool.insert(id, r);
-            (t, Event::RequestPush { req: id, dst: None })
-        } else {
-            let Some((t, e)) = self.queue.pop() else {
-                return false;
-            };
-            (t, e)
+        let popped = match bound {
+            Some(b) => self.queue.pop_before(b),
+            None => self.queue.pop(),
+        };
+        let (t, e) = match popped {
+            Some(te) => te,
+            None => match arrival {
+                Some(ta) if limit.is_none_or(|l| ta < l) => {
+                    let ArrivalSource::Streaming(s) = &mut self.source else {
+                        unreachable!("a pending arrival implies a streaming source")
+                    };
+                    let r = s.next().expect("peeked arrival must exist");
+                    let id = r.id;
+                    self.stats.injected += 1;
+                    self.pool.insert(id, r);
+                    (ta, Event::RequestPush { req: id, dst: None })
+                }
+                _ => return false,
+            },
         };
         debug_assert!(t >= self.clock, "time went backwards");
         self.clock = t;
@@ -354,6 +383,7 @@ impl Coordinator {
                 self.pool.get_mut(&req).unwrap().stage_accept = self.clock;
                 self.clients[c].accept(self.clock, req, &mut self.pool);
                 self.activate(c);
+                self.shard_note_load(c);
             }
             None => {
                 // fresh arrival: route (ingress pays no inter-client link)
@@ -368,6 +398,7 @@ impl Coordinator {
                     self.pool.get_mut(&req).unwrap().stage_accept = self.clock;
                     self.clients[c].accept(self.clock, req, &mut self.pool);
                     self.activate(c);
+                    self.shard_note_load(c);
                 } else {
                     self.fail(req);
                 }
@@ -383,6 +414,7 @@ impl Coordinator {
         }
         // the client may have more queued work
         self.activate(client);
+        self.shard_note_load(client);
     }
 
     /// Request finished its stage on `src`: advance the pipeline, route
@@ -424,18 +456,42 @@ impl Coordinator {
         let Some((bytes, gran, staging)) = self.resolve_kv_migration(id, src, bytes) else {
             return;
         };
+        // sharded execution: a hop whose candidates live in another
+        // domain — or one that would serialize on the shared DCN spine —
+        // is deferred into the window-barrier egress buffer instead of
+        // being routed/priced inline (coordinator/shard.rs)
+        if self.shard.is_some() && self.shard_defer(id, src, bytes, gran, staging) {
+            return;
+        }
         match self.route(id, Some(src), bytes, gran) {
-            Some(dst) => {
-                let arrive = self.network.transfer(self.clock, src, dst, bytes, gran)
-                    + SimTime::from_secs(staging);
-                self.stats.transfers += 1;
-                self.stats.transfer_bytes += bytes;
-                self.stats.transfer_seconds += (arrive - self.clock).as_secs();
-                self.queue
-                    .push(arrive, Event::RequestPush { req: id, dst: Some(dst) });
-            }
+            Some(dst) => self.dispatch(id, src, dst, bytes, gran, staging),
             None => self.fail(id),
         }
+    }
+
+    /// Price the routed hop on the network and enqueue the arrival at
+    /// the destination — the tail of [`Coordinator::advance`], shared
+    /// with the sharded loop's domain-local dispatch path.
+    fn dispatch(
+        &mut self,
+        id: ReqId,
+        src: usize,
+        dst: usize,
+        bytes: f64,
+        gran: Granularity,
+        staging: f64,
+    ) {
+        let arrive = self.network.transfer(self.clock, src, dst, bytes, gran)
+            + SimTime::from_secs(staging);
+        self.stats.transfers += 1;
+        self.stats.transfer_bytes += bytes;
+        self.stats.transfer_seconds += (arrive - self.clock).as_secs();
+        if let Some(ctx) = &mut self.shard {
+            ctx.transfer_log
+                .push((self.clock, bytes, (arrive - self.clock).as_secs()));
+        }
+        self.queue
+            .push(arrive, Event::RequestPush { req: id, dst: Some(dst) });
     }
 
     /// The request completed its final stage (or a model policy ended
@@ -448,6 +504,11 @@ impl Coordinator {
         self.records.push(CompletionRecord::of(r, false));
         self.serviced.push(id);
         self.stats.inflight -= 1;
+        if let Some(ctx) = &mut self.shard {
+            // merge key for cross-domain record interleaving: completion
+            // instant (records are pushed in clock order within a domain)
+            ctx.record_keys.push(self.clock);
+        }
         if self.retire {
             self.pool.remove(id);
         }
@@ -620,6 +681,9 @@ impl Coordinator {
         let r = self.pool.get_mut(&id).unwrap();
         r.finished = None;
         self.records.push(CompletionRecord::of(r, true));
+        if let Some(ctx) = &mut self.shard {
+            ctx.record_keys.push(self.clock);
+        }
         if self.retire {
             self.pool.remove(id);
         }

@@ -1,0 +1,1206 @@
+//! Sharded event loop: conservative time-window parallel simulation.
+//!
+//! A serial [`Coordinator`] run is strictly single-threaded — `--jobs N`
+//! only fans out *independent* sweep points. This module parallelizes a
+//! **single** run: clients are partitioned (by rack, via
+//! [`Network::rack_of`]) into K domains, each stepped by its own thread
+//! as a full per-domain `Coordinator` (own [`EventQueue`], own
+//! [`RequestPool`](crate::scheduler::RequestPool) slice — only this
+//! domain's requests are ever inserted — and own filtered arrival
+//! stream). Domains advance in lock-step windows of width
+//! [`Network::lookahead`]: every cross-domain interaction rides the DCN
+//! spine, whose one-way latency lower-bounds how fast one domain can
+//! affect another, so events inside a window are causally independent
+//! across domains — classic conservative (YAWNS-style) synchronization.
+//!
+//! # Why the result is bit-identical to the serial oracle
+//!
+//! Determinism needs more than a barrier; the serial run's *global*
+//! event order must be reproduced wherever state is shared:
+//!
+//! * **Routing domains.** The *closure* maps every reachable
+//!   `(stage kind, model)` pair to the set of clients that can serve it
+//!   ([`Client::can_serve`]). Racks whose clients co-occur in any one
+//!   closure set are unioned into a component, and components map to
+//!   domains — so a routing decision's candidate set always lives
+//!   entirely inside one domain, and the serial candidate scan (in
+//!   client-id order) is reproduced locally.
+//! * **Cross-domain hand-offs** ([`EgressOp::Handoff`]) leave the
+//!   source pool at the hop instant and are exchanged at the window
+//!   barrier. The orchestrator prices all deferred hops in global
+//!   `(time, source domain, emission seq)` order on the *one* DCN
+//!   [`Link`](crate::network::Link) it owns, so the spine's FIFO
+//!   busy-until state mutates exactly as the serial run's would. The
+//!   target domain routes the delivery against its [`LoadHistory`] "as
+//!   of" the hop instant — the loads the serial router would have read.
+//! * **Local hops that cross racks** ([`EgressOp::Priced`]) route
+//!   immediately (loads are live and domain-local) but defer only the
+//!   shared-spine pricing to the same global replay.
+//! * **f64 accumulator order.** `transfer_bytes`/`transfer_seconds` and
+//!   per-client energy are summed at merge time in the serial
+//!   accumulation order (global transfer order; ascending client id),
+//!   so even float rounding is reproduced bit for bit.
+//!
+//! Completion records merge by `(completion time, domain, emission
+//! index)`. The one caveat: two events in *different* domains at the
+//! exact same integer nanosecond are ordered by domain index here,
+//! while the serial run orders them by queue insertion sequence.
+//! Cross-domain same-nanosecond collisions do not occur in the physical
+//! scenarios the equivalence suite pins (arrival and step durations are
+//! full-precision f64 physics), but a pathological workload could
+//! construct one — the differential tests are the guard.
+//!
+//! # Serial fallback
+//!
+//! Configurations whose semantics are inherently global fall back to
+//! the serial loop (the run is still correct, just not parallel):
+//! `RoundRobin` routing (one global cursor), `DummyLink` networks (one
+//! global serializing link), `local_disagg` (group state crosses the
+//! closure partition), any `model_policy` (a request's model — and so
+//! its closure key — can change mid-flight), a closure set spanning
+//! more than one domain after component grouping, or fewer than two
+//! effective domains. `--shards 1` is the explicit oracle path.
+//!
+//! See docs/performance.md ("Sharded execution").
+
+use std::collections::HashMap;
+use std::mem::{discriminant, Discriminant};
+use std::sync::mpsc;
+
+use anyhow::Result;
+
+use super::{ArrivalSource, Candidate, Coordinator, CoordStats, Event, RoutePolicy};
+use crate::client::ClientLoad;
+use crate::model::ModelId;
+use crate::network::{Granularity, Network, NetworkKind};
+use crate::scheduler::PoolOps;
+use crate::sim::SimTime;
+use crate::workload::request::{CompletionRecord, ReqId, Request, Stage};
+use crate::workload::stream::StreamingMix;
+use crate::workload::trace::WorkloadMix;
+
+/// A routing-closure key: which *kind* of stage, for which model. Stage
+/// parameters (RAG doc counts, KV cache sizes) never affect
+/// [`Client::can_serve`] — the plan builder verifies this per key and
+/// falls back to serial if a workload violates it.
+type StageKey = (Discriminant<Stage>, ModelId);
+
+/// Per-domain sharding context, attached to a domain's `Coordinator`
+/// (`coord.shard`). `None` in the serial oracle.
+pub(crate) struct ShardCtx {
+    /// this domain's index
+    pub(crate) domain: u32,
+    /// `(stage kind, model)` → owning domain, for every reachable pair
+    pub(crate) closure: HashMap<StageKey, u32>,
+    /// cross-domain operations emitted during the current window, in
+    /// emission order (the `seq` of the global `(time, domain, seq)`
+    /// pricing order)
+    pub(crate) egress: Vec<EgressOp>,
+    /// completion instant of `records[i]` — the cross-domain merge key
+    pub(crate) record_keys: Vec<SimTime>,
+    /// (instant, bytes, exposed seconds) of every *locally priced*
+    /// transfer, in emission order — merged with the orchestrator's log
+    /// to replay the serial f64 accumulation order
+    pub(crate) transfer_log: Vec<(SimTime, f64, f64)>,
+    /// per-(client, model) load snapshots over the current window
+    pub(crate) history: LoadHistory,
+}
+
+/// Per-(client, model) load time series over one window: the target
+/// domain routes barrier deliveries against the loads "as of" the hop
+/// instant — exactly what the serial router would have read, because
+/// routing itself never changes loads (its effect lands with the
+/// delivery event, ≥ one lookahead later).
+#[derive(Default)]
+pub(crate) struct LoadHistory {
+    /// model key: `Some(m)` per served model; `None` for model-agnostic
+    /// clients (whose `load_for_model` is their aggregate load)
+    series: HashMap<(usize, Option<ModelId>), Vec<(SimTime, ClientLoad)>>,
+}
+
+impl LoadHistory {
+    pub(crate) fn record(
+        &mut self,
+        client: usize,
+        model: Option<ModelId>,
+        t: SimTime,
+        load: ClientLoad,
+    ) {
+        let s = self.series.entry((client, model)).or_default();
+        if let Some(last) = s.last_mut() {
+            if last.0 == t {
+                last.1 = load;
+                return;
+            }
+        }
+        s.push((t, load));
+    }
+
+    /// Last recorded load at or before `t` (idle-since-start clients
+    /// read as `ClientLoad::default()`, which is what their live
+    /// counters hold too).
+    pub(crate) fn load_at(&self, client: usize, model: Option<ModelId>, t: SimTime) -> ClientLoad {
+        self.series
+            .get(&(client, model))
+            .and_then(|s| s.iter().rev().find(|(ts, _)| *ts <= t))
+            .map(|&(_, l)| l)
+            .unwrap_or_default()
+    }
+
+    /// Drop everything but the latest snapshot per series. Called at
+    /// the barrier *after* the window's deliveries routed (they need
+    /// the previous window's history), so memory stays O(events per
+    /// window), not O(run).
+    pub(crate) fn prune(&mut self) {
+        for s in self.series.values_mut() {
+            if s.len() > 1 {
+                s.drain(..s.len() - 1);
+            }
+        }
+    }
+}
+
+/// A cross-domain operation deferred to the window barrier.
+pub(crate) enum EgressOp {
+    /// The request's next stage is served in another domain: the
+    /// request itself leaves this domain's pool at instant `t`; the
+    /// orchestrator prices the spine hop and the *target* domain routes
+    /// and re-hosts it.
+    Handoff {
+        t: SimTime,
+        req: Box<Request>,
+        src: usize,
+        bytes: f64,
+        gran: Granularity,
+        staging: f64,
+        target: u32,
+    },
+    /// The hop was routed locally (`src` → `dst`, both in this domain)
+    /// but crosses racks, so its pricing must replay on the shared DCN
+    /// spine in global order. The request stays in the local pool; the
+    /// arrival event is injected back at the barrier.
+    Priced {
+        t: SimTime,
+        req: ReqId,
+        src: usize,
+        dst: usize,
+        bytes: f64,
+        gran: Granularity,
+        staging: f64,
+    },
+}
+
+impl EgressOp {
+    fn time(&self) -> SimTime {
+        match self {
+            EgressOp::Handoff { t, .. } | EgressOp::Priced { t, .. } => *t,
+        }
+    }
+}
+
+/// A priced operation delivered to a domain at a window barrier.
+pub(crate) enum Delivery {
+    /// a hand-off from another domain: insert into the pool, route
+    /// against the window history as of `t`, arrive at `avail`
+    Route {
+        t: SimTime,
+        avail: SimTime,
+        req: Box<Request>,
+        src: usize,
+        bytes: f64,
+        gran: Granularity,
+    },
+    /// a locally routed hop whose spine pricing resolved to `avail`
+    Push { avail: SimTime, req: ReqId, dst: usize },
+}
+
+enum Cmd {
+    /// apply `deliveries` (in global order), then drain events strictly
+    /// before `end`
+    Window { deliveries: Vec<Delivery>, end: SimTime },
+    Finish,
+}
+
+enum Rsp {
+    Window {
+        egress: Vec<EgressOp>,
+        /// earliest pending local event/arrival, if any
+        next: Option<SimTime>,
+    },
+    Done(Box<DomainResult>),
+}
+
+/// What a domain hands back at shutdown.
+struct DomainResult {
+    records: Vec<CompletionRecord>,
+    record_keys: Vec<SimTime>,
+    transfer_log: Vec<(SimTime, f64, f64)>,
+    stats: CoordStats,
+    clock: SimTime,
+    /// (client id, joules) for the clients this domain *owns* — foreign
+    /// replicas sit idle at exactly 0 J and are skipped (adding their
+    /// 0.0 terms in id order at merge keeps the serial f64 sum)
+    energy: Vec<(usize, f64)>,
+    decisions: u64,
+    pool_ops: PoolOps,
+}
+
+/// Where a sharded run's requests come from — mirrors
+/// [`Coordinator::inject`] / [`Coordinator::stream`].
+pub enum Arrivals<'a> {
+    Stream(&'a WorkloadMix),
+    Inject(Vec<Request>),
+}
+
+/// Merged result of a sharded run — everything
+/// [`RunMetrics`](crate::metrics::RunMetrics) and the differential
+/// tests need, bit-identical to the serial coordinator's fields (peaks
+/// excepted: `peak_queue` is a max, `peak_inflight`/pool peaks are sums
+/// of per-domain peaks, so they bound rather than equal the serial
+/// values).
+pub struct ShardOutcome {
+    /// requested shard count (`--shards N`)
+    pub shards: usize,
+    /// effective domain count (1 = the serial oracle path ran)
+    pub domains: usize,
+    pub records: Vec<CompletionRecord>,
+    pub serviced: Vec<ReqId>,
+    pub failed: Vec<ReqId>,
+    pub clock: SimTime,
+    pub stats: CoordStats,
+    pub energy_joules: f64,
+    pub decisions: u64,
+    pub pool_ops: PoolOps,
+}
+
+impl ShardOutcome {
+    /// Wrap a finished serial run (the fallback / `--shards 1` path).
+    pub fn from_serial(mut coord: Coordinator, shards: usize) -> ShardOutcome {
+        ShardOutcome {
+            shards,
+            domains: 1,
+            records: std::mem::take(&mut coord.records),
+            serviced: std::mem::take(&mut coord.serviced),
+            failed: std::mem::take(&mut coord.failed),
+            clock: coord.clock,
+            stats: coord.stats.clone(),
+            energy_joules: coord
+                .clients
+                .iter()
+                .map(|c| c.stats().energy_joules)
+                .sum(),
+            decisions: coord.router.decisions,
+            pool_ops: coord.pool.ops(),
+        }
+    }
+
+    /// Every injected request completed or failed.
+    pub fn all_serviced(&self) -> bool {
+        (self.serviced.len() + self.failed.len()) as u64 == self.stats.injected
+    }
+}
+
+// ---------------------------------------------------------------------
+// Coordinator hooks (called from the event loop in mod.rs)
+// ---------------------------------------------------------------------
+
+impl Coordinator {
+    /// Snapshot client `c`'s per-model loads into the window history.
+    /// Called after every load-changing point (accept, step finish) —
+    /// one client per event, so this is O(models) per event.
+    pub(crate) fn shard_note_load(&mut self, c: usize) {
+        let Some(ctx) = self.shard.as_deref_mut() else {
+            return;
+        };
+        let t = self.clock;
+        let cl = &self.clients[c];
+        let models = cl.served_models();
+        if models.is_empty() {
+            ctx.history.record(c, None, t, cl.load());
+        } else {
+            for &m in models {
+                ctx.history.record(c, Some(m), t, cl.load_for_model(m));
+            }
+        }
+    }
+
+    /// Earliest pending local work: the next queued event or streaming
+    /// arrival, whichever is earlier.
+    fn shard_next_time(&self) -> Option<SimTime> {
+        match (self.source.peek(), self.queue.peek_time()) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    /// Handle a post-`advance` hop under sharding: ship it to its
+    /// owning domain, defer its spine pricing, or handle it entirely
+    /// locally. Always consumes the hop (returns `true`).
+    pub(crate) fn shard_defer(
+        &mut self,
+        id: ReqId,
+        src: usize,
+        bytes: f64,
+        gran: Granularity,
+        staging: f64,
+    ) -> bool {
+        let (target, own) = {
+            let r = &self.pool[&id];
+            let key = (discriminant(&r.stage()), r.model);
+            let ctx = self.shard.as_deref().expect("shard_defer without ctx");
+            (ctx.closure.get(&key).copied(), ctx.domain)
+        };
+        if let Some(tgt) = target {
+            if tgt != own {
+                // the next stage's candidates live in another domain:
+                // ship the request at the window barrier. Every hop
+                // moves at least the prompt text, so the spine latency
+                // (= the lookahead) genuinely separates the domains.
+                debug_assert!(bytes > 0.0, "cross-domain hand-off with no payload");
+                self.stats.inflight -= 1;
+                let req = self.pool.remove(id);
+                let t = self.clock;
+                let ctx = self.shard.as_deref_mut().expect("shard ctx");
+                ctx.egress.push(EgressOp::Handoff {
+                    t,
+                    req: Box::new(req),
+                    src,
+                    bytes,
+                    gran,
+                    staging,
+                    target: tgt,
+                });
+                return true;
+            }
+        }
+        // candidates (if any) are domain-local: route now, against live
+        // local loads. Only a non-empty cross-rack hop touches the
+        // shared DCN spine — defer just its pricing to the barrier. A
+        // zero-byte or intra-rack hop prices on domain-local state
+        // (NVLink / this domain's own rack switches), bit-identically
+        // to the serial path.
+        match self.route(id, Some(src), bytes, gran) {
+            Some(dst)
+                if bytes > 0.0 && self.network.rack_of(src) != self.network.rack_of(dst) =>
+            {
+                let t = self.clock;
+                let ctx = self.shard.as_deref_mut().expect("shard ctx");
+                ctx.egress.push(EgressOp::Priced {
+                    t,
+                    req: id,
+                    src,
+                    dst,
+                    bytes,
+                    gran,
+                    staging,
+                });
+            }
+            Some(dst) => self.dispatch(id, src, dst, bytes, gran, staging),
+            None => self.fail(id),
+        }
+        true
+    }
+
+    /// Apply one barrier delivery. Deliveries arrive in global
+    /// `(time, domain, seq)` order, so the pushes they enqueue tie-break
+    /// deterministically at any shard count.
+    fn shard_apply_delivery(&mut self, dlv: Delivery) {
+        match dlv {
+            Delivery::Push { avail, req, dst } => {
+                self.queue
+                    .push(avail, Event::RequestPush { req, dst: Some(dst) });
+            }
+            Delivery::Route {
+                t,
+                avail,
+                req,
+                src,
+                bytes,
+                gran,
+            } => {
+                let id = req.id;
+                let model = req.model;
+                let stage = req.stage();
+                self.stats.inflight += 1;
+                self.stats.peak_inflight = self.stats.peak_inflight.max(self.stats.inflight);
+                self.pool.insert(id, *req);
+                // mirror `route()` exactly: candidates in client-id
+                // order (HeavyLight splits the slice by order), loads
+                // read from the window history as of the hop instant
+                let ctx = self.shard.as_deref().expect("shard ctx");
+                let mut cands: Vec<Candidate> = Vec::new();
+                for c in &self.clients {
+                    if !c.can_serve(&stage, model) {
+                        continue;
+                    }
+                    let key_model = if c.served_models().is_empty() {
+                        None
+                    } else {
+                        Some(model)
+                    };
+                    let load = ctx.history.load_at(c.id(), key_model, t);
+                    let transfer_cost = self.network.estimate(src, c.id(), bytes, gran);
+                    cands.push(Candidate {
+                        client: c.id(),
+                        load,
+                        transfer_cost,
+                    });
+                }
+                if cands.is_empty() {
+                    // unreachable when the closure routed here (the
+                    // target domain owns this stage's candidates); kept
+                    // defensive, with the merge key fixed to the hop
+                    // instant
+                    self.fail(id);
+                    if let Some(ctx) = self.shard.as_deref_mut() {
+                        if let Some(k) = ctx.record_keys.last_mut() {
+                            *k = t;
+                        }
+                    }
+                    return;
+                }
+                let dst = {
+                    let r = &self.pool[&id];
+                    self.router.pick(r, &cands)
+                };
+                self.queue
+                    .push(avail, Event::RequestPush { req: id, dst: Some(dst) });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Plan: closure enumeration + rack components → domains
+// ---------------------------------------------------------------------
+
+/// The static sharding plan computed from a probe build + the workload.
+pub(crate) struct Plan {
+    /// effective domain count (≥ 2)
+    pub(crate) domains: usize,
+    /// conservative window width (the DCN one-way latency)
+    pub(crate) lookahead: SimTime,
+    /// `(stage kind, model)` → owning domain
+    pub(crate) closure: HashMap<StageKey, u32>,
+    /// rack → owning domain (candidate-free racks → 0)
+    domain_of_rack: Vec<u32>,
+    /// ingress domain per workload class (Stream runs; empty for Inject)
+    class_domain: Vec<u32>,
+}
+
+impl Plan {
+    fn domain_of_client(&self, net: &Network, c: usize) -> u32 {
+        self.domain_of_rack[net.rack_of(c)]
+    }
+
+    /// Domain that hosts a request's first routable stage. A request
+    /// with no servable ingress stage fails identically everywhere —
+    /// domain 0 hosts it so exactly one domain counts it.
+    fn ingress_domain(&self, stages: &[Stage], model: ModelId) -> u32 {
+        ingress_key(stages, model)
+            .and_then(|k| self.closure.get(&k).copied())
+            .unwrap_or(0)
+    }
+
+    fn partition(&self, reqs: Vec<Request>) -> Vec<Vec<Request>> {
+        let mut parts: Vec<Vec<Request>> = (0..self.domains).map(|_| Vec::new()).collect();
+        for r in reqs {
+            let d = self.ingress_domain(&r.stages[r.stage_idx..], r.model);
+            parts[d as usize].push(r);
+        }
+        parts
+    }
+}
+
+/// Key of the first stage the ingress router will see: leading
+/// `ModelRoute` stages resolve inline before routing (and `model` is
+/// static without a policy — a sharding precondition).
+fn ingress_key(stages: &[Stage], model: ModelId) -> Option<StageKey> {
+    stages
+        .iter()
+        .find(|s| !matches!(s, Stage::ModelRoute))
+        .map(|s| (discriminant(s), model))
+}
+
+#[derive(Default)]
+struct ClosureBuilder {
+    sets: HashMap<StageKey, Vec<usize>>,
+    reps: HashMap<StageKey, Stage>,
+    consistent: bool,
+}
+
+impl ClosureBuilder {
+    fn new() -> ClosureBuilder {
+        ClosureBuilder {
+            consistent: true,
+            ..Default::default()
+        }
+    }
+
+    fn candidate_set(probe: &Coordinator, stage: &Stage, model: ModelId) -> Vec<usize> {
+        probe
+            .clients
+            .iter()
+            .filter(|c| c.can_serve(stage, model))
+            .map(|c| c.id())
+            .collect()
+    }
+
+    fn visit(&mut self, probe: &Coordinator, stage: Stage, model: ModelId) {
+        // ModelRoute / KvMigration resolve inline and never route to a
+        // client — no closure entry (an un-consumed leading KvMigration
+        // fails at ingress in every domain alike)
+        if matches!(stage, Stage::ModelRoute | Stage::KvMigration) {
+            return;
+        }
+        let key = (discriminant(&stage), model);
+        match self.reps.get(&key) {
+            Some(rep) if *rep == stage => {}
+            Some(_) => {
+                // same stage kind, different parameters: the closure is
+                // only sound if can_serve ignores the parameters —
+                // verify, and fall back to serial if not
+                let set = Self::candidate_set(probe, &stage, model);
+                if self.sets.get(&key) != Some(&set) {
+                    self.consistent = false;
+                }
+            }
+            None => {
+                self.sets
+                    .insert(key, Self::candidate_set(probe, &stage, model));
+                self.reps.insert(key, stage);
+            }
+        }
+    }
+
+    fn visit_arrivals(&mut self, probe: &Coordinator, arrivals: &Arrivals<'_>) {
+        match arrivals {
+            Arrivals::Stream(mix) => {
+                for i in 0..mix.classes.len() {
+                    let spec = mix.class_spec(i);
+                    for &s in spec.pipeline.stages().as_slice() {
+                        self.visit(probe, s, spec.model);
+                    }
+                }
+            }
+            Arrivals::Inject(reqs) => {
+                for r in reqs {
+                    for &s in &r.stages[r.stage_idx..] {
+                        self.visit(probe, s, r.model);
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn uf_find(uf: &mut [usize], mut x: usize) -> usize {
+    while uf[x] != x {
+        uf[x] = uf[uf[x]];
+        x = uf[x];
+    }
+    x
+}
+
+/// Compute the sharding plan, or `None` for the serial fallback.
+pub(crate) fn shard_plan(
+    probe: &Coordinator,
+    arrivals: &Arrivals<'_>,
+    shards: usize,
+) -> Option<Plan> {
+    if shards < 2
+        || probe.model_policy.is_some()
+        || probe.local_disagg
+        || matches!(probe.network.kind, NetworkKind::DummyLink(_))
+        || matches!(probe.router.policy, RoutePolicy::RoundRobin)
+    {
+        return None;
+    }
+    let mut b = ClosureBuilder::new();
+    b.visit_arrivals(probe, arrivals);
+    if !b.consistent {
+        return None;
+    }
+    let n_racks = probe
+        .network
+        .locations
+        .iter()
+        .map(|l| l.rack)
+        .max()
+        .map_or(0, |m| m + 1);
+    if n_racks < 2 {
+        return None;
+    }
+    // union racks that co-occur in any candidate set: a routing
+    // decision must never span domains
+    let mut uf: Vec<usize> = (0..n_racks).collect();
+    for set in b.sets.values() {
+        let mut it = set.iter();
+        if let Some(&first) = it.next() {
+            let r0 = uf_find(&mut uf, probe.network.rack_of(first));
+            for &c in it {
+                let rc = uf_find(&mut uf, probe.network.rack_of(c));
+                uf[rc] = r0;
+            }
+        }
+    }
+    // candidate-hosting racks only: idle racks would dilute the domain
+    // mapping without contributing any work
+    let mut is_candidate_rack = vec![false; n_racks];
+    for set in b.sets.values() {
+        for &c in set {
+            is_candidate_rack[probe.network.rack_of(c)] = true;
+        }
+    }
+    // components ordered by their smallest rack index
+    let mut comp_of_root: HashMap<usize, usize> = HashMap::new();
+    for r in 0..n_racks {
+        if is_candidate_rack[r] {
+            let root = uf_find(&mut uf, r);
+            let next = comp_of_root.len();
+            comp_of_root.entry(root).or_insert(next);
+        }
+    }
+    let n_comp = comp_of_root.len();
+    let eff = shards.min(n_comp);
+    if eff < 2 {
+        return None;
+    }
+    // component j of n → domain j·eff/n (contiguous blocks)
+    let mut domain_of_rack = vec![0u32; n_racks];
+    for r in 0..n_racks {
+        if is_candidate_rack[r] {
+            let j = comp_of_root[&uf_find(&mut uf, r)];
+            domain_of_rack[r] = (j * eff / n_comp) as u32;
+        }
+    }
+    let closure: HashMap<StageKey, u32> = b
+        .sets
+        .iter()
+        .filter(|(_, s)| !s.is_empty())
+        .map(|(k, s)| (*k, domain_of_rack[probe.network.rack_of(s[0])]))
+        .collect();
+    // all candidates landing in one domain means nothing to parallelize
+    let mut used: Vec<u32> = closure.values().copied().collect();
+    used.sort_unstable();
+    used.dedup();
+    if used.len() < 2 {
+        return None;
+    }
+    let class_domain = match arrivals {
+        Arrivals::Stream(mix) => (0..mix.classes.len())
+            .map(|i| {
+                let spec = mix.class_spec(i);
+                ingress_key(spec.pipeline.stages().as_slice(), spec.model)
+                    .and_then(|k| closure.get(&k).copied())
+                    .unwrap_or(0)
+            })
+            .collect(),
+        Arrivals::Inject(_) => Vec::new(),
+    };
+    Some(Plan {
+        domains: eff,
+        lookahead: probe.network.lookahead(),
+        closure,
+        domain_of_rack,
+        class_domain,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Orchestrator
+// ---------------------------------------------------------------------
+
+enum DomainFeed<'a> {
+    Stream(&'a WorkloadMix),
+    Inject(Vec<Vec<Request>>),
+}
+
+enum DomainArrivals<'a> {
+    Stream(&'a WorkloadMix),
+    Inject(Vec<Request>),
+}
+
+/// Run one simulation across `shards` conservative-window domains.
+///
+/// `build` constructs a fresh coordinator (all clients, fully
+/// configured, no workload attached) — it runs once on the calling
+/// thread to probe the plan, then once inside each domain thread
+/// (clients are intentionally not `Send`; each domain's foreign client
+/// replicas stay idle at zero load and zero energy). Falls back to the
+/// serial loop — bit-identical by construction — when the configuration
+/// cannot be sharded; `ShardOutcome::domains` reports what actually ran.
+pub fn run_sharded<F>(build: F, arrivals: Arrivals<'_>, shards: usize) -> Result<ShardOutcome>
+where
+    F: Fn() -> Result<Coordinator> + Sync,
+{
+    let mut probe = build()?;
+    let Some(plan) = shard_plan(&probe, &arrivals, shards) else {
+        match arrivals {
+            Arrivals::Stream(mix) => probe.stream(mix),
+            Arrivals::Inject(reqs) => probe.inject(reqs),
+        }
+        probe.run();
+        return Ok(ShardOutcome::from_serial(probe, shards));
+    };
+    // the orchestrator prices every deferred cross-rack hop on the
+    // probe's network — the one shared DCN spine, mutated in global
+    // order exactly as the serial run would
+    let mut net = std::mem::replace(&mut probe.network, Network::single_platform(0));
+    let mut feed = match arrivals {
+        Arrivals::Stream(mix) => DomainFeed::Stream(mix),
+        Arrivals::Inject(reqs) => DomainFeed::Inject(plan.partition(reqs)),
+    };
+    drop(probe);
+
+    let n = plan.domains;
+    let plan_ref = &plan;
+    let build_ref: &(dyn Fn() -> Result<Coordinator> + Sync) = &build;
+    std::thread::scope(|scope| {
+        let mut cmds = Vec::with_capacity(n);
+        let mut rsps = Vec::with_capacity(n);
+        for d in 0..n {
+            let (ctx, crx) = mpsc::channel::<Cmd>();
+            let (rtx, rrx) = mpsc::channel::<Rsp>();
+            cmds.push(ctx);
+            rsps.push(rrx);
+            let arr = match &mut feed {
+                DomainFeed::Stream(mix) => DomainArrivals::Stream(*mix),
+                DomainFeed::Inject(parts) => {
+                    DomainArrivals::Inject(std::mem::take(&mut parts[d]))
+                }
+            };
+            scope.spawn(move || domain_worker(build_ref, plan_ref, d as u32, arr, crx, rtx));
+        }
+        let mut pending: Vec<Vec<Delivery>> = (0..n).map(|_| Vec::new()).collect();
+        let mut orch_log: Vec<(SimTime, f64, f64)> = Vec::new();
+        let mut orch_transfers: u64 = 0;
+        // bootstrap: an empty window ([?, 0)) collects every domain's
+        // first pending instant without processing anything
+        let mut end = SimTime::ZERO;
+        loop {
+            for d in 0..n {
+                cmds[d]
+                    .send(Cmd::Window {
+                        deliveries: std::mem::take(&mut pending[d]),
+                        end,
+                    })
+                    .expect("domain worker alive");
+            }
+            let mut ops: Vec<(u32, usize, EgressOp)> = Vec::new();
+            let mut next: Option<SimTime> = None;
+            for (d, rsp) in rsps.iter().enumerate() {
+                match rsp.recv().expect("domain worker alive") {
+                    Rsp::Window { egress, next: dn } => {
+                        for (i, op) in egress.into_iter().enumerate() {
+                            ops.push((d as u32, i, op));
+                        }
+                        next = opt_min(next, dn);
+                    }
+                    Rsp::Done(_) => unreachable!("no Finish sent yet"),
+                }
+            }
+            // global pricing order: (instant, source domain, emission seq)
+            ops.sort_by_key(|(d, i, op)| (op.time(), *d, *i));
+            for (d, _, op) in ops {
+                match op {
+                    EgressOp::Handoff {
+                        t,
+                        req,
+                        src,
+                        bytes,
+                        gran,
+                        staging,
+                        target,
+                    } => {
+                        let avail =
+                            net.dcn_transfer(t, bytes, gran) + SimTime::from_secs(staging);
+                        orch_transfers += 1;
+                        orch_log.push((t, bytes, (avail - t).as_secs()));
+                        next = opt_min(next, Some(avail));
+                        pending[target as usize].push(Delivery::Route {
+                            t,
+                            avail,
+                            req,
+                            src,
+                            bytes,
+                            gran,
+                        });
+                    }
+                    EgressOp::Priced {
+                        t,
+                        req,
+                        src: _,
+                        dst,
+                        bytes,
+                        gran,
+                        staging,
+                    } => {
+                        let avail =
+                            net.dcn_transfer(t, bytes, gran) + SimTime::from_secs(staging);
+                        orch_transfers += 1;
+                        orch_log.push((t, bytes, (avail - t).as_secs()));
+                        next = opt_min(next, Some(avail));
+                        pending[d as usize].push(Delivery::Push { avail, req, dst });
+                    }
+                }
+            }
+            match next {
+                // no pending events, arrivals or deliveries anywhere
+                None => break,
+                Some(start) => {
+                    debug_assert!(start >= end, "window start regressed");
+                    end = start + plan_ref.lookahead;
+                }
+            }
+        }
+        for cmd in &cmds {
+            cmd.send(Cmd::Finish).expect("domain worker alive");
+        }
+        let mut parts = Vec::with_capacity(n);
+        for rsp in &rsps {
+            match rsp.recv().expect("domain worker alive") {
+                Rsp::Done(r) => parts.push(*r),
+                Rsp::Window { .. } => unreachable!("Finish answered with a window"),
+            }
+        }
+        Ok(merge(parts, orch_log, orch_transfers, shards, n))
+    })
+}
+
+fn opt_min(a: Option<SimTime>, b: Option<SimTime>) -> Option<SimTime> {
+    match (a, b) {
+        (Some(x), Some(y)) => Some(x.min(y)),
+        (x, y) => x.or(y),
+    }
+}
+
+fn domain_worker(
+    build: &(dyn Fn() -> Result<Coordinator> + Sync),
+    plan: &Plan,
+    domain: u32,
+    feed: DomainArrivals<'_>,
+    rx: mpsc::Receiver<Cmd>,
+    tx: mpsc::Sender<Rsp>,
+) {
+    let mut coord = build().expect("domain build must succeed (the probe build already did)");
+    coord.shard = Some(Box::new(ShardCtx {
+        domain,
+        closure: plan.closure.clone(),
+        egress: Vec::new(),
+        record_keys: Vec::new(),
+        transfer_log: Vec::new(),
+        history: LoadHistory::default(),
+    }));
+    match feed {
+        DomainArrivals::Inject(reqs) => coord.inject(reqs),
+        DomainArrivals::Stream(mix) => {
+            coord.source = ArrivalSource::Streaming(StreamingMix::filtered(mix, |i| {
+                plan.class_domain[i] == domain
+            }));
+        }
+    }
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Window { deliveries, end } => {
+                // deliveries route against the *previous* window's
+                // history, so apply before pruning
+                for dlv in deliveries {
+                    coord.shard_apply_delivery(dlv);
+                }
+                coord.shard.as_deref_mut().expect("shard ctx").history.prune();
+                while coord.step_bounded(Some(end)) {}
+                // satellite fix: revalidate the whole-pool load
+                // invariant at every window barrier, not only per event
+                // — inbox replay is the one place drift could first
+                // appear
+                #[cfg(debug_assertions)]
+                coord.assert_load_invariant();
+                let ctx = coord.shard.as_deref_mut().expect("shard ctx");
+                let egress = std::mem::take(&mut ctx.egress);
+                let next = coord.shard_next_time();
+                tx.send(Rsp::Window { egress, next })
+                    .expect("orchestrator alive");
+            }
+            Cmd::Finish => {
+                tx.send(Rsp::Done(Box::new(DomainResult::extract(coord, plan))))
+                    .expect("orchestrator alive");
+                return;
+            }
+        }
+    }
+}
+
+impl DomainResult {
+    fn extract(mut coord: Coordinator, plan: &Plan) -> DomainResult {
+        let ctx = coord.shard.take().expect("shard ctx");
+        debug_assert!(ctx.egress.is_empty(), "undelivered egress at shutdown");
+        debug_assert_eq!(coord.records.len(), ctx.record_keys.len());
+        let energy = coord
+            .clients
+            .iter()
+            .filter(|c| plan.domain_of_client(&coord.network, c.id()) == ctx.domain)
+            .map(|c| (c.id(), c.stats().energy_joules))
+            .collect();
+        DomainResult {
+            records: std::mem::take(&mut coord.records),
+            record_keys: ctx.record_keys,
+            transfer_log: ctx.transfer_log,
+            stats: coord.stats.clone(),
+            clock: coord.clock,
+            energy,
+            decisions: coord.router.decisions,
+            pool_ops: coord.pool.ops(),
+        }
+    }
+}
+
+fn merge(
+    parts: Vec<DomainResult>,
+    orch_log: Vec<(SimTime, f64, f64)>,
+    orch_transfers: u64,
+    shards: usize,
+    domains: usize,
+) -> ShardOutcome {
+    // completion records in global (instant, domain, emission) order
+    let mut order: Vec<(SimTime, usize, usize)> = Vec::new();
+    for (d, p) in parts.iter().enumerate() {
+        for (i, &t) in p.record_keys.iter().enumerate() {
+            order.push((t, d, i));
+        }
+    }
+    order.sort_unstable();
+    let mut records = Vec::with_capacity(order.len());
+    let mut serviced = Vec::new();
+    let mut failed = Vec::new();
+    for (_, d, i) in order {
+        let rec = parts[d].records[i];
+        if rec.failed {
+            failed.push(rec.id);
+        } else {
+            serviced.push(rec.id);
+        }
+        records.push(rec);
+    }
+    let mut stats = CoordStats::default();
+    for p in &parts {
+        stats.events += p.stats.events;
+        stats.recomputes += p.stats.recomputes;
+        stats.failed += p.stats.failed;
+        stats.injected += p.stats.injected;
+        stats.inflight += p.stats.inflight;
+        stats.peak_queue = stats.peak_queue.max(p.stats.peak_queue);
+        stats.peak_inflight += p.stats.peak_inflight;
+        stats.transfers += p.stats.transfers;
+    }
+    stats.transfers += orch_transfers;
+    assert_eq!(
+        (serviced.len() + failed.len()) as u64,
+        stats.injected,
+        "sharded run lost requests in transit"
+    );
+    // f64 transfer accumulators replayed in global pricing order (the
+    // orchestrator's barrier pricing sorts after same-instant local
+    // pricing, matching the serial event sequence for distinct instants)
+    let mut log: Vec<(SimTime, usize, usize, f64, f64)> = Vec::new();
+    for (d, p) in parts.iter().enumerate() {
+        for (i, &(t, bytes, secs)) in p.transfer_log.iter().enumerate() {
+            log.push((t, d, i, bytes, secs));
+        }
+    }
+    for (i, &(t, bytes, secs)) in orch_log.iter().enumerate() {
+        log.push((t, usize::MAX, i, bytes, secs));
+    }
+    log.sort_unstable_by(|a, b| (a.0, a.1, a.2).cmp(&(b.0, b.1, b.2)));
+    for &(_, _, _, bytes, secs) in &log {
+        stats.transfer_bytes += bytes;
+        stats.transfer_seconds += secs;
+    }
+    // per-client energy summed in ascending client id — the serial
+    // iteration order (foreign replicas' 0.0 terms change no sum)
+    let mut energies: Vec<(usize, f64)> = parts
+        .iter()
+        .flat_map(|p| p.energy.iter().copied())
+        .collect();
+    energies.sort_unstable_by_key(|&(id, _)| id);
+    let energy_joules = energies.iter().map(|&(_, e)| e).sum();
+    let mut pool_ops = PoolOps::default();
+    for p in &parts {
+        pool_ops.absorb(&p.pool_ops);
+    }
+    ShardOutcome {
+        shards,
+        domains,
+        records,
+        serviced,
+        failed,
+        clock: parts.iter().map(|p| p.clock).max().unwrap_or(SimTime::ZERO),
+        stats,
+        energy_joules,
+        decisions: parts.iter().map(|p| p.decisions).sum(),
+        pool_ops,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::{Client, LlmClient};
+    use crate::coordinator::{LoadMetric, Router};
+    use crate::hardware::models::LLAMA3_70B;
+    use crate::hardware::npu::H100;
+    use crate::hardware::roofline::LlmCluster;
+    use crate::perfmodel::RooflinePerfModel;
+    use crate::scheduler::{BatchingKind, LlmSched, Packing, SchedConfig};
+    use crate::workload::trace::{TraceKind, WorkloadSpec};
+
+    fn llm_client(id: usize, kind: BatchingKind) -> Box<dyn Client> {
+        let cluster = LlmCluster::new(LLAMA3_70B, H100, 8);
+        Box::new(LlmClient::new(
+            id,
+            cluster.clone(),
+            LlmSched::new(kind, Packing::Fcfs, SchedConfig::default()),
+            Box::new(RooflinePerfModel::new(cluster)),
+        ))
+    }
+
+    /// 2 racks: prefill pool in rack 0, decode pool in rack 1.
+    fn disagg_coord() -> Result<Coordinator> {
+        let clients = vec![
+            llm_client(0, BatchingKind::PrefillOnly),
+            llm_client(1, BatchingKind::DecodeOnly),
+        ];
+        Ok(Coordinator::new(
+            clients,
+            Router::new(RoutePolicy::LoadBased(LoadMetric::TokensLeft)),
+            Network::hierarchy(2, 1, 1),
+        ))
+    }
+
+    fn workload(n: usize, rate: f64) -> Vec<Request> {
+        WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, n, rate)
+            .with_seed(11)
+            .generate(0)
+    }
+
+    #[test]
+    fn load_history_snapshots_and_prunes() {
+        let mut h = LoadHistory::default();
+        let l1 = ClientLoad {
+            tokens_left: 5.0,
+            ..Default::default()
+        };
+        let l2 = ClientLoad {
+            tokens_left: 9.0,
+            ..Default::default()
+        };
+        h.record(0, None, SimTime::from_secs(1.0), l1);
+        h.record(0, None, SimTime::from_secs(2.0), l2);
+        // unknown series and pre-history instants read as default
+        assert_eq!(h.load_at(1, None, SimTime::from_secs(5.0)), ClientLoad::default());
+        assert_eq!(h.load_at(0, None, SimTime::from_secs(0.5)), ClientLoad::default());
+        // "as of": latest snapshot at or before t
+        assert_eq!(h.load_at(0, None, SimTime::from_secs(1.0)), l1);
+        assert_eq!(h.load_at(0, None, SimTime::from_secs(1.5)), l1);
+        assert_eq!(h.load_at(0, None, SimTime::from_secs(2.0)), l2);
+        // same-instant re-record overwrites in place
+        h.record(0, None, SimTime::from_secs(2.0), l1);
+        assert_eq!(h.load_at(0, None, SimTime::from_secs(2.0)), l1);
+        // prune keeps only the latest snapshot
+        h.prune();
+        assert_eq!(h.load_at(0, None, SimTime::from_secs(9.0)), l1);
+        assert_eq!(h.series[&(0, None)].len(), 1);
+    }
+
+    #[test]
+    fn plan_splits_disagg_pools_into_two_domains() {
+        let probe = disagg_coord().unwrap();
+        let reqs = workload(4, 4.0);
+        let plan = shard_plan(&probe, &Arrivals::Inject(reqs.clone()), 2)
+            .expect("cross-rack disagg must shard");
+        assert_eq!(plan.domains, 2);
+        let prefill_key = (discriminant(&Stage::Prefill), reqs[0].model);
+        let decode_key = (discriminant(&Stage::Decode), reqs[0].model);
+        assert_eq!(plan.closure[&prefill_key], 0);
+        assert_eq!(plan.closure[&decode_key], 1);
+        // all requests enter at the prefill domain
+        let parts = plan.partition(reqs);
+        assert_eq!(parts[0].len(), 4);
+        assert_eq!(parts[1].len(), 0);
+    }
+
+    #[test]
+    fn plan_falls_back_when_unshardable() {
+        let probe = disagg_coord().unwrap();
+        let arr = Arrivals::Inject(workload(2, 4.0));
+        // shards < 2
+        assert!(shard_plan(&probe, &arr, 1).is_none());
+        // global round-robin cursor
+        let mut rr = disagg_coord().unwrap();
+        rr.router = Router::new(RoutePolicy::RoundRobin);
+        assert!(shard_plan(&rr, &arr, 2).is_none());
+        // local disaggregation groups span the closure partition
+        let mut local = disagg_coord().unwrap();
+        local.local_disagg = true;
+        assert!(shard_plan(&local, &arr, 2).is_none());
+        // single rack → single domain
+        let single = Coordinator::new(
+            vec![
+                llm_client(0, BatchingKind::PrefillOnly),
+                llm_client(1, BatchingKind::DecodeOnly),
+            ],
+            Router::new(RoutePolicy::LoadBased(LoadMetric::TokensLeft)),
+            Network::single_platform(2),
+        );
+        assert!(shard_plan(&single, &arr, 2).is_none());
+        // a load-balanced pool spanning both racks unions them into one
+        // component → one domain → fallback
+        let spanning = Coordinator::new(
+            vec![
+                llm_client(0, BatchingKind::Continuous),
+                llm_client(1, BatchingKind::Continuous),
+            ],
+            Router::new(RoutePolicy::LoadBased(LoadMetric::TokensLeft)),
+            Network::hierarchy(2, 1, 1),
+        );
+        assert!(shard_plan(&spanning, &arr, 2).is_none());
+    }
+
+    #[test]
+    fn sharded_disagg_matches_serial_bitwise() {
+        // the in-module smoke; the full matrix (scenarios × shard
+        // counts × load modes × --jobs) lives in
+        // rust/tests/shard_equivalence.rs
+        let mut serial = disagg_coord().unwrap();
+        serial.inject(workload(30, 6.0));
+        serial.run();
+        assert!(serial.all_serviced());
+
+        let out = run_sharded(disagg_coord, Arrivals::Inject(workload(30, 6.0)), 2).unwrap();
+        assert_eq!(out.domains, 2, "must actually shard");
+        assert!(out.all_serviced());
+        assert_eq!(out.serviced, serial.serviced, "completion order");
+        assert_eq!(out.failed, serial.failed);
+        assert_eq!(out.clock, serial.clock, "final clock");
+        assert_eq!(out.stats.events, serial.stats.events);
+        assert_eq!(out.stats.transfers, serial.stats.transfers);
+        assert_eq!(out.stats.transfer_bytes, serial.stats.transfer_bytes);
+        assert_eq!(out.stats.transfer_seconds, serial.stats.transfer_seconds);
+        assert_eq!(out.decisions, serial.router.decisions);
+        let serial_energy: f64 = serial.clients.iter().map(|c| c.stats().energy_joules).sum();
+        assert_eq!(out.energy_joules, serial_energy);
+        // per-request samples, bit for bit
+        assert_eq!(out.records.len(), serial.records.len());
+        for (a, b) in out.records.iter().zip(&serial.records) {
+            assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        }
+    }
+
+    #[test]
+    fn shards_one_reports_serial_oracle() {
+        let out = run_sharded(disagg_coord, Arrivals::Inject(workload(10, 4.0)), 1).unwrap();
+        assert_eq!(out.shards, 1);
+        assert_eq!(out.domains, 1, "--shards 1 is the serial oracle");
+        assert!(out.all_serviced());
+    }
+}

@@ -1,26 +1,29 @@
 //! HERMES command-line interface.
 //!
 //!   hermes simulate --config cfg.json [--out metrics.json]
-//!                   [--trace trace.json] [--quiet]
+//!                   [--trace trace.json] [--shards K] [--quiet]
 //!   hermes sweep    --config cfg.json --rates 1,2,4,8 [--jobs N]
 //!                   [--out sweep.json]
 //!   hermes scenario <name|path.json> [--fast] [--jobs N] [--out sweep.json]
 //!   hermes scenario --list                # registry under scenarios/
 //!   hermes bench    [name...] [--fast] [--baseline auto|on|off] [--jobs N]
-//!                   [--out BENCH_core.json]
+//!                   [--shards K] [--out BENCH_core.json]
 //!   hermes experiment <fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|disagg>
 //!                   [--fast] [--jobs N]
 //!   hermes artifacts                      # list AOT predictor variants
 //!
 //! Every run is deterministic given the config's seed — including under
-//! `--jobs N`: independent runs fan across a bounded worker pool and
-//! come back in submission order, bit-identical to the `--jobs 1`
-//! serial oracle (docs/performance.md, "Parallel execution").
+//! `--jobs N` (independent runs fan across a bounded worker pool and
+//! come back in submission order) and `--shards K` (one run is
+//! partitioned into conservative time-window domains): both are
+//! bit-identical to the serial `--jobs 1 --shards 1` oracle
+//! (docs/performance.md, "Parallel execution" / "Sharded execution").
 
 use anyhow::{bail, Context, Result};
 
 use hermes::bench;
 use hermes::config::SimConfig;
+use hermes::coordinator::shard::{run_sharded, Arrivals};
 use hermes::experiments;
 use hermes::metrics::{trace_export, RunMetrics};
 use hermes::runtime::ArtifactBundle;
@@ -58,29 +61,37 @@ fn print_usage() {
     println!("HERMES — heterogeneous multi-stage LLM inference execution simulator");
     println!();
     println!("usage:");
-    println!("  hermes simulate --config cfg.json [--out m.json] [--trace t.json]");
+    println!("  hermes simulate --config cfg.json [--out m.json] [--trace t.json] [--shards K]");
     println!("  hermes sweep --config cfg.json --rates 1,2,4 [--jobs N] [--out sweep.json]");
     println!("  hermes scenario <name|path.json> [--fast] [--jobs N] [--out sweep.json]   (--list to enumerate)");
     println!("  hermes scenario check             # resolve every scenario's model/policy/npu refs");
-    println!("  hermes bench [name...] [--fast] [--baseline auto|on|off] [--jobs N] [--out BENCH_core.json]");
+    println!("  hermes bench [name...] [--fast] [--baseline auto|on|off] [--jobs N] [--shards K] [--out BENCH_core.json]");
     println!("  hermes experiment <fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|ablations|multimodel|disagg|all> [--fast] [--jobs N]");
     println!("  hermes artifacts");
     println!();
-    println!("--jobs N fans independent runs across N worker threads; results are");
-    println!("bit-identical to the default serial run (--jobs 1).");
+    println!("--jobs N fans independent runs across N worker threads; --shards K");
+    println!("partitions one run into K conservative time-window domains. Both are");
+    println!("bit-identical to the default serial run (--jobs 1 --shards 1).");
 }
 
 /// Parse `--jobs N` (default 1 — the serial bit-exactness oracle).
 /// Strict: a malformed or zero value is an error, not a silent
 /// fall-back to serial.
 fn jobs_arg(args: &Args) -> Result<usize> {
-    match args.opt_str("jobs") {
-        None => Ok(1),
-        Some(v) => match v.parse::<usize>() {
-            Ok(n) if n >= 1 => Ok(n),
-            _ => bail!("--jobs needs a positive integer, got '{v}'"),
-        },
-    }
+    Ok(args
+        .positive_usize("jobs")
+        .map_err(|e| anyhow::anyhow!(e))?
+        .unwrap_or(1))
+}
+
+/// Parse `--shards K` (default 1 — the serial single-queue event loop).
+/// Same strictness as `--jobs`: a typo must not silently report serial
+/// numbers as sharded ones.
+fn shards_arg(args: &Args) -> Result<usize> {
+    Ok(args
+        .positive_usize("shards")
+        .map_err(|e| anyhow::anyhow!(e))?
+        .unwrap_or(1))
 }
 
 fn simulate(args: &Args) -> Result<()> {
@@ -88,9 +99,44 @@ fn simulate(args: &Args) -> Result<()> {
     let out = args.opt_str("out");
     let trace_out = args.opt_str("trace");
     let quiet = args.bool_or("quiet", false);
+    let shards = shards_arg(args)?;
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    if shards > 1 && trace_out.is_some() {
+        // the chrome exporter walks the retained serial coordinator;
+        // a sharded run merges per-domain results and keeps none
+        bail!("--trace requires the serial event loop; drop --shards or run with --shards 1");
+    }
 
     let cfg = SimConfig::from_file(&cfg_path)?;
+    if shards > 1 {
+        let arrivals = Arrivals::Inject(cfg.workload.generate(0));
+        let t0 = std::time::Instant::now();
+        let outcome = run_sharded(|| cfg.serving.build(), arrivals, shards)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let m = RunMetrics::collect_outcome(&outcome, &cfg.slo);
+        if !quiet {
+            println!(
+                "simulated {:.2}s of serving in {:.3}s wall ({:.0} events/s, {} of {} requested shard domains)",
+                m.makespan,
+                wall,
+                m.events as f64 / wall.max(1e-9),
+                outcome.domains,
+                outcome.shards,
+            );
+            print_metrics(&m);
+            println!(
+                "SLO(all-six): {}",
+                if m.slo_satisfied(&cfg.slo) { "SATISFIED" } else { "violated" }
+            );
+        }
+        if let Some(path) = out {
+            std::fs::write(&path, m.to_json().to_pretty())?;
+            if !quiet {
+                println!("metrics -> {path}");
+            }
+        }
+        return Ok(());
+    }
     let mut coord = cfg.serving.build()?;
     coord.inject(cfg.workload.generate(0));
     let t0 = std::time::Instant::now();
@@ -325,6 +371,7 @@ fn bench_cmd(args: &Args) -> Result<()> {
         other => bail!("--baseline must be auto|on|off, got '{other}'"),
     };
     let jobs = jobs_arg(args)?;
+    let shards = shards_arg(args)?;
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
 
     let names = if args.positional.is_empty() {
@@ -336,7 +383,7 @@ fn bench_cmd(args: &Args) -> Result<()> {
         bail!("no bench_* scenarios found under scenarios/");
     }
 
-    bench::run_and_report(&names, fast, baseline, jobs, &out)?;
+    bench::run_and_report(&names, fast, baseline, jobs, shards, &out)?;
     Ok(())
 }
 

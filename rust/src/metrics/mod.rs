@@ -5,9 +5,11 @@
 pub mod trace_export;
 
 use crate::config::slo::SloLadder;
-use crate::coordinator::Coordinator;
+use crate::coordinator::shard::ShardOutcome;
+use crate::coordinator::{CoordStats, Coordinator};
 use crate::util::json::Json;
 use crate::util::stats::Summary;
+use crate::workload::request::CompletionRecord;
 
 /// Aggregated results of one simulation run.
 #[derive(Debug, Clone, Default)]
@@ -51,6 +53,42 @@ impl RunMetrics {
     /// retained-pool scan ([`RunMetrics::collect_from_pool`], pinned by
     /// `rust/tests/retirement_equivalence.rs`).
     pub fn collect(coord: &Coordinator, slo: &SloLadder) -> RunMetrics {
+        let (ttft, tpot, e2e, tokens, slo_ok) = Self::fold_records(&coord.records, slo);
+        Self::assemble(coord, coord.stats.injected as usize, ttft, tpot, e2e, tokens, slo_ok)
+    }
+
+    /// Collect from a sharded run's merged outcome
+    /// ([`crate::coordinator::shard::run_sharded`]). The outcome's
+    /// records are interleaved in global completion order at the merge,
+    /// so the fold — and every f64 accumulation inside it — runs in the
+    /// exact order [`RunMetrics::collect`] would see on the equivalent
+    /// serial coordinator.
+    pub fn collect_outcome(out: &ShardOutcome, slo: &SloLadder) -> RunMetrics {
+        let (ttft, tpot, e2e, tokens, slo_ok) = Self::fold_records(&out.records, slo);
+        Self::assemble_parts(
+            out.stats.injected as usize,
+            out.serviced.len(),
+            out.failed.len(),
+            out.clock.as_secs(),
+            out.energy_joules,
+            &out.stats,
+            ttft,
+            tpot,
+            e2e,
+            tokens,
+            slo_ok,
+        )
+    }
+
+    /// One pass over the non-failed completion records, in completion
+    /// order — the per-request sample fold shared by the serial and
+    /// sharded collection paths. The f64 accumulation order is part of
+    /// the contract: callers hand records in serviced order.
+    #[allow(clippy::type_complexity)]
+    fn fold_records(
+        records: &[CompletionRecord],
+        slo: &SloLadder,
+    ) -> (Vec<f64>, Vec<f64>, Vec<f64>, f64, usize) {
         let mut ttft = Vec::new();
         let mut tpot = Vec::new();
         let mut e2e = Vec::new();
@@ -59,7 +97,7 @@ impl RunMetrics {
         // non-failed records are pushed at the same instant a request
         // joins `serviced`, so this iterates in serviced order — f64
         // accumulation order matches the pool-scan path exactly
-        for r in coord.records.iter().filter(|r| !r.failed) {
+        for r in records.iter().filter(|r| !r.failed) {
             let t1 = r.ttft().unwrap_or(f64::INFINITY);
             let tp = r.tpot();
             let te = r.e2e_latency().unwrap_or(f64::INFINITY);
@@ -78,7 +116,7 @@ impl RunMetrics {
                 slo_ok += 1;
             }
         }
-        Self::assemble(coord, coord.stats.injected as usize, ttft, tpot, e2e, tokens, slo_ok)
+        (ttft, tpot, e2e, tokens, slo_ok)
     }
 
     /// Legacy collection path: scan the retained request pool via the
@@ -119,13 +157,39 @@ impl RunMetrics {
         tokens: f64,
         slo_ok: usize,
     ) -> RunMetrics {
-        let makespan = coord.clock.as_secs();
-        let energy: f64 = coord.clients.iter().map(|c| c.stats().energy_joules).sum();
-        let n = coord.serviced.len();
+        Self::assemble_parts(
+            n_requests,
+            coord.serviced.len(),
+            coord.failed.len(),
+            coord.clock.as_secs(),
+            coord.clients.iter().map(|c| c.stats().energy_joules).sum(),
+            &coord.stats,
+            ttft,
+            tpot,
+            e2e,
+            tokens,
+            slo_ok,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn assemble_parts(
+        n_requests: usize,
+        n: usize,
+        n_failed: usize,
+        makespan: f64,
+        energy: f64,
+        stats: &CoordStats,
+        ttft: Vec<f64>,
+        tpot: Vec<f64>,
+        e2e: Vec<f64>,
+        tokens: f64,
+        slo_ok: usize,
+    ) -> RunMetrics {
         RunMetrics {
             n_requests,
             n_serviced: n,
-            n_failed: coord.failed.len(),
+            n_failed,
             makespan,
             ttft: Summary::of(&ttft),
             tpot: Summary::of(&tpot),
@@ -139,11 +203,11 @@ impl RunMetrics {
             },
             energy_joules: energy,
             tok_per_joule: if energy > 0.0 { tokens / energy } else { 0.0 },
-            events: coord.stats.events,
-            transfers: coord.stats.transfers,
-            transfer_bytes: coord.stats.transfer_bytes,
-            transfer_seconds: coord.stats.transfer_seconds,
-            recomputes: coord.stats.recomputes,
+            events: stats.events,
+            transfers: stats.transfers,
+            transfer_bytes: stats.transfer_bytes,
+            transfer_seconds: stats.transfer_seconds,
+            recomputes: stats.recomputes,
             e2e_samples: e2e,
             ttft_samples: ttft,
             tpot_samples: tpot,

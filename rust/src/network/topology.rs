@@ -169,6 +169,34 @@ impl Network {
         self.dcn_link.bytes_total
     }
 
+    /// Rack coordinate of a client — the sharded coordinator's domain
+    /// partition key ([`crate::coordinator::shard`]).
+    pub fn rack_of(&self, client: usize) -> usize {
+        self.locations[client].rack
+    }
+
+    /// Conservative-window lookahead for sharded execution: the minimum
+    /// latency any cross-domain interaction pays. Domains are unions of
+    /// whole racks, so every cross-domain hop crosses racks and rides
+    /// the DCN spine — its one-way link latency lower-bounds the time
+    /// between a hand-off leaving one domain and arriving in another,
+    /// and is therefore a safe synchronization window width.
+    pub fn lookahead(&self) -> SimTime {
+        SimTime::from_secs(self.dcn_link.spec.lat)
+    }
+
+    /// Price a cross-rack transfer on the shared DCN spine without
+    /// naming endpoints — the sharded orchestrator's window-barrier
+    /// replay path, which re-prices deferred cross-domain hops in
+    /// global `(time, domain, seq)` order so the spine's FIFO
+    /// contention state mutates exactly as the serial run's would.
+    /// Callers guarantee the hop is genuinely cross-rack and non-empty.
+    pub fn dcn_transfer(&mut self, now: SimTime, bytes: f64, gran: Granularity) -> SimTime {
+        debug_assert!(bytes > 0.0, "cross-rack hop with no payload");
+        let eff = Self::effective_bytes(bytes, gran);
+        self.dcn_link.transfer(now, eff)
+    }
+
     /// Bytes carried by one rack's switch (0 for unknown racks).
     pub fn bytes_on_rack(&self, rack: usize) -> f64 {
         self.rack_links

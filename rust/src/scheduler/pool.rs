@@ -116,6 +116,27 @@ pub struct PoolOps {
     pub peak_resident: usize,
 }
 
+impl PoolOps {
+    /// Fold another pool's counters into this one — the sharded
+    /// coordinator ([`crate::coordinator::shard`]) merges its
+    /// per-domain pools with this. Totals add exactly; peaks add too,
+    /// so a merged peak *bounds* the equivalent serial run's peak
+    /// (domains hit their high-water marks at different instants)
+    /// rather than equaling it.
+    pub fn absorb(&mut self, other: &PoolOps) {
+        self.reads += other.reads;
+        self.writes += other.writes;
+        self.slots += other.slots;
+        self.len += other.len;
+        self.peak_live += other.peak_live;
+        self.retired += other.retired;
+        self.bytes_est += other.bytes_est;
+        self.peak_bytes_est += other.peak_bytes_est;
+        self.resident += other.resident;
+        self.peak_resident += other.peak_resident;
+    }
+}
+
 /// The requests a simulation run owns, indexed by their dense id.
 pub struct RequestPool {
     backend: Backend,

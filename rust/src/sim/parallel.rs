@@ -48,6 +48,25 @@ pub fn set_jobs(n: usize) {
     JOBS.store(n.max(1), Ordering::Relaxed);
 }
 
+/// Process-wide default shard count for sharded single-run execution
+/// (`--shards N`, [`crate::coordinator::shard::run_sharded`]). Defaults
+/// to 1: one domain — the literal serial event loop, the bit-exactness
+/// oracle. Orthogonal to `--jobs`: jobs fan out *independent* sweep
+/// points, shards split *one* run into conservative-window domains, and
+/// the two compose (each sweep worker may run its point sharded).
+static SHARDS: AtomicUsize = AtomicUsize::new(1);
+
+/// The configured default shard count (≥ 1).
+pub fn shards() -> usize {
+    SHARDS.load(Ordering::Relaxed).max(1)
+}
+
+/// Set the process-wide default shard count (clamped to ≥ 1). Called by
+/// the CLI (`--shards N`) before dispatching a subcommand.
+pub fn set_shards(n: usize) {
+    SHARDS.store(n.max(1), Ordering::Relaxed);
+}
+
 /// Run `n` independent tasks on at most `jobs` worker threads and
 /// return their results indexed by submission order (`task(i)` lands at
 /// `out[i]`).
@@ -125,6 +144,16 @@ mod tests {
         let caller = std::thread::current().id();
         let ids = run(1, 4, |_| std::thread::current().id());
         assert!(ids.iter().all(|&id| id == caller));
+    }
+
+    #[test]
+    fn default_shards_knob_round_trips_and_clamps() {
+        set_shards(4);
+        assert_eq!(shards(), 4);
+        set_shards(0); // clamped: a 0-domain run is meaningless
+        assert_eq!(shards(), 1);
+        set_shards(1);
+        assert_eq!(shards(), 1);
     }
 
     #[test]

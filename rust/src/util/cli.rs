@@ -101,6 +101,21 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Strict positive-integer flag: `Ok(None)` when absent, `Err` on a
+    /// malformed or zero value. The parallelism knobs (`--jobs`,
+    /// `--shards`) sit on this — a typo must fail loudly, not silently
+    /// fall back to the serial path and report serial numbers.
+    pub fn positive_usize(&self, key: &str) -> Result<Option<usize>, String> {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => Ok(None),
+            Some(v) => match v.parse::<usize>() {
+                Ok(n) if n >= 1 => Ok(Some(n)),
+                _ => Err(format!("--{key} needs a positive integer, got '{v}'")),
+            },
+        }
+    }
+
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         self.mark(key);
         self.flags
@@ -179,5 +194,18 @@ mod tests {
         let a = parse("x --typo 1");
         let _ = a.usize_or("n", 0);
         assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn positive_usize_is_strict() {
+        assert_eq!(parse("x --shards 4").positive_usize("shards"), Ok(Some(4)));
+        assert_eq!(parse("x").positive_usize("shards"), Ok(None));
+        // zero and garbage are hard errors, not a silent serial default
+        assert!(parse("x --shards 0").positive_usize("shards").is_err());
+        assert!(parse("x --shards four").positive_usize("shards").is_err());
+        // a consumed-but-invalid flag still counts as seen for finish()
+        let a = parse("x --jobs 2");
+        let _ = a.positive_usize("jobs");
+        assert!(a.finish().is_ok());
     }
 }

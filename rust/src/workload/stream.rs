@@ -83,19 +83,34 @@ pub struct StreamingMix {
 
 impl StreamingMix {
     pub fn new(mix: &WorkloadMix) -> StreamingMix {
+        StreamingMix::filtered(mix, |_| true)
+    }
+
+    /// A lazy source over the subset of `mix`'s classes selected by
+    /// `keep` (by class index). Every kept class draws the same PCG
+    /// streams and keeps the same global `id_base` it has in the full
+    /// mix, so the union of the per-domain filtered sources of a
+    /// sharded run ([`crate::coordinator::shard`]) emits exactly the
+    /// requests [`StreamingMix::new`] would — partitioned, not
+    /// resampled.
+    pub fn filtered(mix: &WorkloadMix, keep: impl Fn(usize) -> bool) -> StreamingMix {
         let mut streams = Vec::with_capacity(mix.classes.len());
         let mut id_base = 0u64;
+        let mut total = 0usize;
         for i in 0..mix.classes.len() {
             let spec = mix.class_spec(i);
             let n = spec.n_requests;
-            streams.push(ClassStream::new(spec, id_base));
+            if keep(i) {
+                total += n;
+                streams.push(ClassStream::new(spec, id_base));
+            }
             id_base += n as u64;
         }
         let pending = streams.iter_mut().map(|s| s.next()).collect();
         StreamingMix {
             streams,
             pending,
-            total: mix.n_total(),
+            total,
             emitted: 0,
         }
     }
@@ -202,6 +217,27 @@ mod tests {
         assert_same_requests(&eager, || stream.next());
         assert_eq!(stream.remaining(), 0);
         assert_eq!(stream.peek_arrival(), None);
+    }
+
+    #[test]
+    fn filtered_streams_partition_the_full_mix() {
+        let base = WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 0, 1.0).with_seed(23);
+        let rag = base.clone().with_pipeline(Pipeline::Rag(RagParams::default()));
+        let kv = base
+            .clone()
+            .with_pipeline(Pipeline::KvRetrieval(KvParams { cached_tokens: 1024 }));
+        let mix = WorkloadMix::new(vec![(0.4, base), (0.4, rag), (0.2, kv)]).scaled(200, 6.0);
+        let eager = mix.generate();
+        // split classes {0, 2} / {1}: ids, arrivals and token draws must
+        // be identical to the corresponding eager requests (same id_base,
+        // same PCG streams), and the two halves must cover the mix
+        let even = StreamingMix::filtered(&mix, |i| i != 1);
+        let odd = StreamingMix::filtered(&mix, |i| i == 1);
+        assert_eq!(even.total() + odd.total(), eager.len());
+        let mut merged: Vec<Request> = even.chain(odd).collect();
+        merged.sort_by_key(|r| (r.arrival, r.id));
+        let mut it = merged.into_iter();
+        assert_same_requests(&eager, || it.next());
     }
 
     #[test]

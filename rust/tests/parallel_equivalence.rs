@@ -32,7 +32,7 @@ fn deterministic_fields(b: &BenchRun) -> String {
          n_clients={} makespan_s={:?} throughput_tok_s={:?} pool_reads={} \
          pool_writes={} pool_slots={} pool_peak_resident={} \
          peak_resident_slots={} resident_bytes_est={} retired={} \
-         transfers={} transfer_bytes={:?}",
+         transfers={} transfer_bytes={:?} domains={}",
         b.events,
         b.peak_queue,
         b.peak_inflight,
@@ -50,6 +50,7 @@ fn deterministic_fields(b: &BenchRun) -> String {
         b.retired,
         b.transfers,
         b.transfer_bytes,
+        b.domains,
     )
 }
 
@@ -63,6 +64,7 @@ fn assert_rows_identical(serial: &[BenchResult], other: &[BenchResult], jobs: us
             (a.baseline.as_ref(), b.baseline.as_ref(), "full_scan"),
             (a.map_pool.as_ref(), b.map_pool.as_ref(), "map_pool"),
             (a.retained.as_ref(), b.retained.as_ref(), "retained"),
+            (a.sharded.as_ref(), b.sharded.as_ref(), "sharded"),
         ];
         for (ra, rb, which) in pairs {
             assert_eq!(
@@ -91,14 +93,14 @@ fn bench_rows_are_bit_identical_across_job_counts() {
     // 50k tier exercises all three speed baselines at fast scale; the
     // 1M tier adds the streamed/retired mode and its retained baseline
     let names = vec!["bench_llm_50k".to_string(), "bench_llm_1m".to_string()];
-    let serial = bench::run_scenarios(&names, true, Baseline::Auto, 1).unwrap();
+    let serial = bench::run_scenarios(&names, true, Baseline::Auto, 1, 1).unwrap();
     for jobs in [2, 4] {
-        let parallel = bench::run_scenarios(&names, true, Baseline::Auto, jobs).unwrap();
+        let parallel = bench::run_scenarios(&names, true, Baseline::Auto, jobs, 1).unwrap();
         assert_rows_identical(&serial, &parallel, jobs);
     }
     // repeated parallel runs are identical to each other, not just to
     // the oracle
-    let again = bench::run_scenarios(&names, true, Baseline::Auto, 4).unwrap();
+    let again = bench::run_scenarios(&names, true, Baseline::Auto, 4, 1).unwrap();
     assert_rows_identical(&serial, &again, 4);
 }
 
@@ -108,7 +110,7 @@ fn bench_json_rows_carry_jobs_and_aggregate_columns() {
         return;
     }
     let names = vec!["bench_llm_50k".to_string()];
-    let results = bench::run_scenarios(&names, true, Baseline::Auto, 2).unwrap();
+    let results = bench::run_scenarios(&names, true, Baseline::Auto, 2, 1).unwrap();
     let doc = Json::parse(&bench::to_json(&results, 2, 1.25).to_pretty()).unwrap();
     let rows = doc.as_arr().unwrap();
     assert_eq!(rows[0].at(&["jobs"]).and_then(|j| j.as_f64()), Some(2.0));

@@ -1,0 +1,300 @@
+//! Differential oracle for sharded execution (`--shards K`,
+//! docs/performance.md "Sharded execution"): `run_sharded` must be
+//! bit-identical to the serial event loop at every shard count, because
+//! shards = 1 *is* the serial loop and a multi-domain run only differs
+//! in mechanism — conservative time windows of width = the DCN one-way
+//! latency, with cross-domain work exchanged at window barriers in
+//! deterministic `(instant, source domain, emission seq)` order.
+//!
+//! Covered:
+//! * cross-rack disaggregated serving (prefill and decode racks in
+//!   separate domains) under the Regular and Disagg pipelines, the
+//!   latter with layerwise KV-migration pricing — migration count,
+//!   bytes and exposed seconds must match the serial run exactly;
+//! * a mixed regular / RAG / KV-retrieval workload whose aux tiers
+//!   shard into their own domains, with injected and streaming
+//!   arrivals;
+//! * the multi-model cascade: a configured model policy routes requests
+//!   dynamically, so the planner documents its serial fallback
+//!   (`domains == 1`) and the outcome is still bit-identical;
+//! * both `LoadMode`s, and composition with the `--jobs` sweep
+//!   executor (domain threads nested inside worker threads).
+
+use hermes::config::slo::SloLadder;
+use hermes::coordinator::shard::{run_sharded, Arrivals, ShardOutcome};
+use hermes::coordinator::LoadMode;
+use hermes::hardware::models::E5_BASE;
+use hermes::hardware::npu::{GRACE_CPU, H100};
+use hermes::memory::hierarchy::{TIER_DRAM, TIER_HBM};
+use hermes::memory::storage::{KvScenario, StorageConfig};
+use hermes::metrics::RunMetrics;
+use hermes::model::policy::ModelPolicy;
+use hermes::model::ModelId;
+use hermes::network::Granularity;
+use hermes::scheduler::BatchingKind;
+use hermes::sim::builder::{
+    KvRetrievalSpec, MigrationSpec, NetSpec, PoolSpec, RagSpec, ServingSpec,
+};
+use hermes::sim::parallel;
+use hermes::workload::request::{KvParams, RagParams};
+use hermes::workload::trace::{Pipeline, TraceKind, WorkloadMix, WorkloadSpec};
+
+const MODEL: &str = "llama3-70b";
+
+fn conv(n: usize, rate: f64) -> WorkloadSpec {
+    WorkloadSpec::new(MODEL, TraceKind::AzureConv, n, rate).with_seed(29)
+}
+
+/// Cross-rack disaggregated pool: both prefill clients in rack 0, both
+/// decode clients in rack 1 → two closure components → two domains
+/// (also at shards = 4: effective domains = min(shards, components)).
+fn disagg_spec() -> ServingSpec {
+    ServingSpec::new(
+        MODEL,
+        H100,
+        4,
+        PoolSpec::Disaggregated { prefill: 2, decode: 2, local: false },
+    )
+    .with_net(NetSpec::Hierarchy { per_platform: 1, per_rack: 2 })
+    .with_migration(MigrationSpec {
+        granularity: Some(Granularity::Layerwise { layers: 80 }),
+        pool: vec![TIER_HBM, TIER_DRAM],
+    })
+    .with_seed(31)
+}
+
+/// One client per rack: the two LLM racks union through the shared
+/// prefill/decode candidate sets, the RAG and KV tiers stay disjoint →
+/// three components (2 domains at shards = 2, 3 at shards = 4).
+fn mixed_spec() -> ServingSpec {
+    ServingSpec::new(
+        MODEL,
+        H100,
+        4,
+        PoolSpec::Combined { kind: BatchingKind::Continuous, n: 2 },
+    )
+    .with_net(NetSpec::Hierarchy { per_platform: 1, per_rack: 1 })
+    .with_rag(RagSpec {
+        count: 1,
+        embed_model: E5_BASE,
+        embed_npu: GRACE_CPU,
+        retrieval_npu: GRACE_CPU,
+        ivf: Default::default(),
+        max_batch: 0,
+    })
+    .with_kv_retrieval(KvRetrievalSpec {
+        count: 1,
+        storage: StorageConfig::PlatformShared,
+        scenario: KvScenario::Shared,
+        max_batch: 0,
+        ports: 4,
+    })
+    .with_seed(37)
+}
+
+fn mixed_mix(n: usize) -> WorkloadMix {
+    WorkloadMix::new(vec![
+        (0.4, conv(n, 6.0)),
+        (
+            0.3,
+            conv(n, 6.0).with_pipeline(Pipeline::Rag(RagParams {
+                docs: 4,
+                doc_tokens: 400,
+                ..Default::default()
+            })),
+        ),
+        (
+            0.3,
+            conv(n, 6.0)
+                .with_pipeline(Pipeline::KvRetrieval(KvParams { cached_tokens: 2000 })),
+        ),
+    ])
+}
+
+fn outcome(
+    spec: &ServingSpec,
+    mix: &WorkloadMix,
+    mode: LoadMode,
+    stream: bool,
+    shards: usize,
+) -> ShardOutcome {
+    let build = || {
+        spec.build().map(|mut c| {
+            c.load_mode = mode;
+            c
+        })
+    };
+    let arrivals = if stream {
+        Arrivals::Stream(mix)
+    } else {
+        Arrivals::Inject(mix.generate())
+    };
+    run_sharded(build, arrivals, shards).unwrap()
+}
+
+/// Everything the differential needs in one string: serviced order,
+/// final clock, counters and every derived latency / energy / transfer
+/// sample. Peak counters stay out — `peak_queue` is a per-domain max
+/// and the in-flight / pool peaks are sums of per-domain peaks, so they
+/// bound the serial values rather than equal them (documented in
+/// docs/performance.md).
+fn fingerprint(o: &ShardOutcome) -> String {
+    let m = RunMetrics::collect_outcome(o, &SloLadder::standard());
+    format!(
+        "serviced={:?} failed={:?} clock={:?} events={} injected={} \
+         transfers={} bytes={:?} secs={:?} recomputes={} stat_failed={} \
+         energy={:?} decisions={} metrics={:?}",
+        o.serviced,
+        o.failed,
+        o.clock,
+        o.stats.events,
+        o.stats.injected,
+        o.stats.transfers,
+        o.stats.transfer_bytes,
+        o.stats.transfer_seconds,
+        o.stats.recomputes,
+        o.stats.failed,
+        o.energy_joules,
+        o.decisions,
+        m
+    )
+}
+
+fn assert_bit_identical(serial: &ShardOutcome, sharded: &ShardOutcome, what: &str) {
+    assert!(
+        serial.all_serviced(),
+        "{what}: serial run left requests unfinished ({} of {})",
+        serial.serviced.len(),
+        serial.stats.injected
+    );
+    assert!(
+        sharded.all_serviced(),
+        "{what}: sharded run left requests unfinished ({} of {})",
+        sharded.serviced.len(),
+        sharded.stats.injected
+    );
+    // per-request completion records carry every timestamp and token
+    // count — arrival, TTFT, last token, decode counts — so equality
+    // here pins each individual sample, not just the aggregates
+    assert_eq!(serial.records, sharded.records, "{what}: completion records diverged");
+    assert_eq!(fingerprint(serial), fingerprint(sharded), "{what}");
+}
+
+#[test]
+fn cross_rack_disagg_is_bit_identical_across_shard_counts_and_load_modes() {
+    for mode in [LoadMode::Incremental, LoadMode::FullScan] {
+        for pipeline in [Pipeline::Regular, Pipeline::Disagg] {
+            let mix = WorkloadMix::single(conv(40, 6.0).with_pipeline(pipeline));
+            let serial = outcome(&disagg_spec(), &mix, mode, false, 1);
+            assert_eq!(serial.domains, 1, "shards=1 must take the serial path");
+            for shards in [2, 4] {
+                let sh = outcome(&disagg_spec(), &mix, mode, false, shards);
+                assert_eq!(sh.shards, shards);
+                assert_eq!(
+                    sh.domains, 2,
+                    "prefill rack + decode rack = two components, so two \
+                     domains even when four shards are requested"
+                );
+                assert_bit_identical(
+                    &serial,
+                    &sh,
+                    &format!("{pipeline:?}/{mode:?}/shards={shards}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cross_domain_kv_migrations_price_identically_at_every_shard_count() {
+    // every Disagg request hands its KV across the prefill→decode rack
+    // boundary — under sharding that is a cross-domain hop priced by
+    // the orchestrator at the window barrier, and the layerwise
+    // slicing + tiered staging must come out byte- and second-exact
+    let n = 40;
+    let mix = WorkloadMix::single(conv(n, 6.0).with_pipeline(Pipeline::Disagg));
+    let serial = outcome(&disagg_spec(), &mix, LoadMode::Incremental, false, 1);
+    assert_eq!(serial.stats.transfers, n as u64, "one explicit migration per request");
+    assert!(serial.stats.transfer_bytes > 0.0);
+    assert!(serial.stats.transfer_seconds > 0.0, "staged layerwise hand-off takes time");
+    for shards in [2, 4] {
+        let sh = outcome(&disagg_spec(), &mix, LoadMode::Incremental, false, shards);
+        assert_eq!(sh.domains, 2);
+        assert_eq!(sh.stats.transfers, serial.stats.transfers);
+        assert_eq!(sh.stats.transfer_bytes, serial.stats.transfer_bytes);
+        assert_eq!(sh.stats.transfer_seconds, serial.stats.transfer_seconds);
+        assert_bit_identical(&serial, &sh, &format!("migration/shards={shards}"));
+    }
+}
+
+#[test]
+fn mixed_rag_kv_workload_shards_bit_identically_injected_and_streaming() {
+    let mix = mixed_mix(60);
+    let serial = outcome(&mixed_spec(), &mix, LoadMode::Incremental, false, 1);
+    assert_eq!(serial.domains, 1);
+    // streaming arrivals draw the same PCG streams lazily — the
+    // serial-vs-serial equivalence is pinned elsewhere
+    // (retirement_equivalence); here it anchors the streamed sharded
+    // runs below to the same fingerprint
+    let serial_stream = outcome(&mixed_spec(), &mix, LoadMode::Incremental, true, 1);
+    assert_bit_identical(&serial, &serial_stream, "stream/serial");
+    for (shards, want_domains) in [(2, 2), (4, 3)] {
+        let inj = outcome(&mixed_spec(), &mix, LoadMode::Incremental, false, shards);
+        assert_eq!(
+            inj.domains, want_domains,
+            "LLM racks union through shared prefill/decode candidates; \
+             RAG and KV tiers are their own components"
+        );
+        assert_bit_identical(&serial, &inj, &format!("mixed/inject/shards={shards}"));
+        let st = outcome(&mixed_spec(), &mix, LoadMode::Incremental, true, shards);
+        assert_eq!(st.domains, want_domains);
+        assert_bit_identical(&serial, &st, &format!("mixed/stream/shards={shards}"));
+    }
+}
+
+#[test]
+fn multi_model_cascade_falls_back_to_serial_and_stays_bit_identical() {
+    // a model policy rewrites request models at ModelRoute stages, so
+    // the closure over (stage kind, model) cannot pin candidates per
+    // domain upfront — the planner refuses and runs the serial loop
+    // (documented fallback, docs/performance.md "Sharded execution")
+    let small = ModelId::named("llama3-8b");
+    let large = ModelId::named(MODEL);
+    let spec = ServingSpec::new(
+        MODEL,
+        H100,
+        4,
+        PoolSpec::Combined { kind: BatchingKind::Continuous, n: 2 },
+    )
+    .with_net(NetSpec::Hierarchy { per_platform: 1, per_rack: 1 })
+    .with_co_models(vec![small])
+    .with_model_policy(ModelPolicy::Cascade { small, large, escalate: 0.35 })
+    .with_seed(43);
+    let mix = WorkloadMix::single(conv(30, 4.0).with_pipeline(Pipeline::Cascade));
+    let serial = outcome(&spec, &mix, LoadMode::Incremental, false, 1);
+    for shards in [2, 4] {
+        let sh = outcome(&spec, &mix, LoadMode::Incremental, false, shards);
+        assert_eq!(sh.shards, shards, "the requested count is still reported");
+        assert_eq!(sh.domains, 1, "model-policy runs must fall back to serial");
+        assert_bit_identical(&serial, &sh, &format!("cascade/shards={shards}"));
+    }
+}
+
+#[test]
+fn sharded_runs_compose_with_the_parallel_sweep_executor() {
+    // --shards inside --jobs: domain threads nested in worker threads.
+    // Two concurrent sharded runs (at different shard counts) must both
+    // reproduce the serial fingerprint computed up front.
+    let spec = disagg_spec();
+    let mix = WorkloadMix::single(conv(30, 6.0).with_pipeline(Pipeline::Disagg));
+    let serial = fingerprint(&outcome(&spec, &mix, LoadMode::Incremental, false, 1));
+    let results = parallel::run(2, 2, |i| {
+        let shards = [2, 4][i];
+        let o = outcome(&spec, &mix, LoadMode::Incremental, false, shards);
+        (shards, o.domains, fingerprint(&o))
+    });
+    for (shards, domains, fp) in results {
+        assert_eq!(domains, 2, "shards={shards}");
+        assert_eq!(fp, serial, "sharded run diverged under --jobs 2 (shards={shards})");
+    }
+}

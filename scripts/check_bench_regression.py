@@ -34,6 +34,11 @@ scale, not regression):
   per scenario (rows without the fields, i.e. pre-retirement
   baselines, are skipped).
 
+Rows from `hermes bench --shards K` carry a `shards` column and a
+`sharded` sub-object; both are ignored when matching baseline rows (the
+compared `incremental` row is the serial trajectory either way), with
+the shard count echoed in the log line for context.
+
 Always exits 0: this is a tripwire for humans reading the log, not a
 gate. (A missing baseline — e.g. before the first release-mode
 `hermes bench` run is committed — is reported and tolerated.)
@@ -84,6 +89,11 @@ def load(path):
 
 
 def rows_by_name(doc):
+    # rows are keyed by scenario name ONLY: the `shards` column (and the
+    # optional `sharded` sub-object) added by `hermes bench --shards K`
+    # is deliberately NOT part of the match key, so a sharded smoke still
+    # diffs its serial `incremental` row against a shards=1 baseline.
+    # The shard count is carried along purely for display.
     if not isinstance(doc, list):
         return {}
     out = {}
@@ -97,7 +107,7 @@ def rows_by_name(doc):
                 for k in MEM_FIELDS
                 if isinstance(inc.get(k), (int, float))
             }
-            out[name] = (eps, inc.get("n_requests"), mem)
+            out[name] = (eps, inc.get("n_requests"), mem, row.get("shards"))
     return out
 
 
@@ -192,12 +202,12 @@ def main(argv):
         return 0
 
     warned = False
-    for name, (eps, n, mem) in sorted(fresh.items()):
+    for name, (eps, n, mem, shards) in sorted(fresh.items()):
         ref_entry = base.get(name)
         if ref_entry is None or ref_entry[0] <= 0:
             print(f"bench-diff: {name}: no baseline entry — skipped")
             continue
-        ref, ref_n, ref_mem = ref_entry
+        ref, ref_n, ref_mem, _ref_shards = ref_entry
         if n != ref_n:
             # a fast-scale smoke vs a full-scale committed run measures
             # scale, not regression — only same-sized runs are comparable
@@ -210,7 +220,10 @@ def main(argv):
             name, SCENARIO_THRESHOLDS.get(name, default_threshold)
         )
         ratio = eps / ref
-        line = f"bench-diff: {name}: {eps:,.0f} events/s vs baseline {ref:,.0f} ({ratio:.2f}x)"
+        # the shard tag is informational: the compared `incremental` row
+        # is the serial trajectory even in a --shards run
+        tag = f" [shards={shards:.0f}]" if isinstance(shards, (int, float)) and shards > 1 else ""
+        line = f"bench-diff: {name}{tag}: {eps:,.0f} events/s vs baseline {ref:,.0f} ({ratio:.2f}x)"
         if ratio < threshold:
             print(f"WARNING {line} — below the {threshold:.0%} warn threshold")
             warned = True
