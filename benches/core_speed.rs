@@ -41,9 +41,17 @@ fn main() {
     }
 
     banner("core simulator speed (BENCH_core.json)");
-    if let Err(e) =
-        bench::run_and_report(&names, fast, Baseline::Auto, jobs, shards, "BENCH_core.json")
-    {
+    // each scenario's extras.metrics decides its metrics mode (the
+    // `hermes bench --metrics auto` default)
+    if let Err(e) = bench::run_and_report(
+        &names,
+        fast,
+        Baseline::Auto,
+        jobs,
+        shards,
+        bench::MetricsOverride::Auto,
+        "BENCH_core.json",
+    ) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }

@@ -44,16 +44,17 @@
 
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::slo::SloLadder;
 use crate::coordinator::shard::{run_sharded, Arrivals};
 use crate::coordinator::LoadMode;
-use crate::metrics::RunMetrics;
+use crate::metrics::{MetricsSink, RunMetrics};
 use crate::scenario::Scenario;
 use crate::scheduler::{PoolBackend, RequestPool};
 use crate::sim::parallel;
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonRowWriter};
+use crate::workload::request::{CompletionRecord, ReqId};
 
 /// How the run feeds and drains its requests: eager/retained (the
 /// pre-streaming default) vs streaming arrivals and/or request
@@ -67,6 +68,25 @@ pub struct ExecMode {
     /// retire finished requests (`Coordinator::retire`) — pool slots
     /// recycle, resident memory tracks peak in-flight
     pub retire: bool,
+    /// streaming metrics: fold each completion into a [`MetricsSink`]
+    /// (mergeable quantile sketches + running sums) at retirement time
+    /// instead of retaining `CompletionRecord`s — metrics memory stays
+    /// O(1) in request count, percentiles carry the sketch's relative
+    /// error bound (docs/performance.md "Streaming metrics")
+    pub sketch: bool,
+}
+
+/// `--metrics` on the bench harness: force a metrics mode across every
+/// scenario, or defer to each scenario's `extras.metrics`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MetricsOverride {
+    /// the scenario's `extras.metrics` decides (`"exact"` when unset)
+    #[default]
+    Auto,
+    /// exact retained-records metrics everywhere (the oracle)
+    Exact,
+    /// streaming sketch metrics everywhere
+    Sketch,
 }
 
 /// Timing and scale counters from one benchmark run.
@@ -104,6 +124,13 @@ pub struct BenchRun {
     pub resident_bytes_est: usize,
     /// requests whose pool slot was freed for reuse during the run
     pub retired: u64,
+    /// estimated bytes of resident metrics state at run end: the
+    /// streaming sink's sketches (sketch mode, O(1) in request count)
+    /// or the retained records + ID vecs + raw sample vecs the exact
+    /// collector materializes (O(n))
+    pub metrics_bytes_est: usize,
+    /// whether this run streamed its metrics through the sketch sink
+    pub metrics_sketch: bool,
     /// priced network hops (stage hand-offs / KV migrations) — one per
     /// request on disaggregated pipelines
     pub transfers: u64,
@@ -195,6 +222,27 @@ pub fn bench_scenarios() -> Vec<String> {
         .collect()
 }
 
+/// Estimated bytes of resident metrics state: the streaming sink's
+/// sketches, or — exact mode — the retained completion records, the
+/// serviced/failed ID vecs and the raw per-request sample vecs the
+/// exact collector materializes. The bench column that proves the
+/// sketch path's O(1)-in-request-count claim.
+fn metrics_footprint(
+    sink: Option<&MetricsSink>,
+    n_records: usize,
+    n_ids: usize,
+    m: &RunMetrics,
+) -> usize {
+    match sink {
+        Some(s) => s.bytes_est(),
+        None => {
+            n_records * std::mem::size_of::<CompletionRecord>()
+                + n_ids * std::mem::size_of::<ReqId>()
+                + (m.ttft_samples.len() + m.tpot_samples.len() + m.e2e_samples.len()) * 8
+        }
+    }
+}
+
 /// Run `sc` once under `mode`/`backend`/`exec` and time the event
 /// loop. Pool construction happens outside the timed section and the
 /// pool counters are reset after injection. Eager runs generate the
@@ -231,6 +279,9 @@ pub fn run_once(
     coord.load_mode = mode;
     coord.pool = RequestPool::with_backend(backend);
     coord.retire = exec.retire;
+    if exec.sketch {
+        coord.sink = Some(MetricsSink::new(SloLadder::standard()));
+    }
     if exec.stream {
         coord.stream(&mix);
     } else {
@@ -243,6 +294,12 @@ pub fn run_once(
     let ops = coord.pool.ops();
 
     let m = RunMetrics::collect(&coord, &SloLadder::standard());
+    let metrics_bytes_est = metrics_footprint(
+        coord.sink.as_ref(),
+        coord.records.len(),
+        coord.serviced.len() + coord.failed.len(),
+        &m,
+    );
     Ok(BenchRun {
         wall_s: wall,
         events: coord.stats.events,
@@ -262,6 +319,8 @@ pub fn run_once(
         peak_resident_slots: ops.peak_live,
         resident_bytes_est: ops.peak_bytes_est,
         retired: ops.retired,
+        metrics_bytes_est,
+        metrics_sketch: exec.sketch,
         transfers: coord.stats.transfers,
         transfer_bytes: coord.stats.transfer_bytes,
         domains: 1,
@@ -307,6 +366,11 @@ pub fn run_once_sharded(
         c.load_mode = LoadMode::Incremental;
         c.pool = RequestPool::with_backend(PoolBackend::Arena);
         c.retire = exec.retire;
+        if exec.sketch {
+            // per-domain sinks; shard::merge folds them back together
+            // in ascending domain order
+            c.sink = Some(MetricsSink::new(SloLadder::standard()));
+        }
         Ok(c)
     };
     // eager generation stays outside the clock, like run_once; streamed
@@ -324,6 +388,12 @@ pub fn run_once_sharded(
     let wall = t0.elapsed().as_secs_f64();
 
     let m = RunMetrics::collect_outcome(&out, &SloLadder::standard());
+    let metrics_bytes_est = metrics_footprint(
+        out.sink.as_ref(),
+        out.records.len(),
+        out.serviced.len() + out.failed.len(),
+        &m,
+    );
     let ops = out.pool_ops;
     Ok(BenchRun {
         wall_s: wall,
@@ -344,6 +414,8 @@ pub fn run_once_sharded(
         peak_resident_slots: ops.peak_live,
         resident_bytes_est: ops.peak_bytes_est,
         retired: ops.retired,
+        metrics_bytes_est,
+        metrics_sketch: exec.sketch,
         transfers: out.stats.transfers,
         transfer_bytes: out.stats.transfer_bytes,
         domains: out.domains,
@@ -381,12 +453,32 @@ struct ScenarioPlan {
     units: Vec<UnitKind>,
 }
 
-fn plan_scenario(name: &str, fast: bool, baseline: Baseline, shards: usize) -> Result<ScenarioPlan> {
+fn plan_scenario(
+    name: &str,
+    fast: bool,
+    baseline: Baseline,
+    shards: usize,
+    metrics: MetricsOverride,
+) -> Result<ScenarioPlan> {
     let sc = Scenario::load(name)?;
     let extras = sc.extras();
+    // `--metrics sketch|exact` overrides; otherwise the scenario's
+    // `extras.metrics` decides (the 100M tier ships "sketch" — exact
+    // metrics would retain 100M CompletionRecords). A typo in the
+    // scenario file must not silently change the metrics contract.
+    let sketch = match metrics {
+        MetricsOverride::Exact => false,
+        MetricsOverride::Sketch => true,
+        MetricsOverride::Auto => match extras.str_or("metrics", "exact") {
+            "exact" => false,
+            "sketch" => true,
+            other => bail!("scenario '{name}': extras.metrics must be \"sketch\" or \"exact\", got '{other}'"),
+        },
+    };
     let exec = ExecMode {
         stream: extras.bool_or("stream", false),
         retire: extras.bool_or("retire", false),
+        sketch,
     };
     // `--shards K` (K > 1) shards every scenario; otherwise a scenario
     // can opt its own showcase in via `extras.shards` (bench_llm_1m
@@ -415,8 +507,15 @@ fn plan_scenario(name: &str, fast: bool, baseline: Baseline, shards: usize) -> R
         units.push(UnitKind::FullScan);
     }
     // the O(in-flight) reference: eager injection, nothing retired —
-    // its peak_resident_slots is the whole trace
-    if (exec.stream || exec.retire) && baseline != Baseline::Off {
+    // its peak_resident_slots is the whole trace. Scenarios for which
+    // materializing the trace is itself infeasible (the 100M tier: 100M
+    // pool slots + 100M retained records) opt out via
+    // `extras.retained: false` — but, like map_pool, only at full scale
+    // and never over an explicit `--baseline on`
+    let skip_retained = !extras.bool_or("retained", true)
+        && baseline != Baseline::On
+        && !sc.use_fast(fast);
+    if (exec.stream || exec.retire) && baseline != Baseline::Off && !skip_retained {
         units.push(UnitKind::Retained);
     }
     if shards > 1 {
@@ -430,6 +529,9 @@ fn run_unit(plan: &ScenarioPlan, kind: UnitKind) -> Result<BenchRun> {
         UnitKind::Incremental => (LoadMode::Incremental, PoolBackend::Arena, plan.exec),
         UnitKind::MapPool => (LoadMode::Incremental, PoolBackend::Map, plan.exec),
         UnitKind::FullScan => (LoadMode::FullScan, PoolBackend::Map, plan.exec),
+        // the full pre-streaming behavior: eager, nothing retired, exact
+        // retained-records metrics — the O(total) reference on both
+        // memory axes (pool slots and metrics state)
         UnitKind::Retained => (LoadMode::Incremental, PoolBackend::Arena, ExecMode::default()),
         UnitKind::Sharded => {
             return run_once_sharded(&plan.sc, plan.fast, plan.exec, plan.shards)
@@ -442,7 +544,8 @@ fn run_unit(plan: &ScenarioPlan, kind: UnitKind) -> Result<BenchRun> {
 /// `--jobs 1` oracle path of [`run_scenarios`]). A scenario with
 /// `extras.shards` still runs its sharded showcase unit.
 pub fn run_scenario(name: &str, fast: bool, baseline: Baseline) -> Result<BenchResult> {
-    let mut results = run_scenarios(&[name.to_string()], fast, baseline, 1, 1)?;
+    let mut results =
+        run_scenarios(&[name.to_string()], fast, baseline, 1, 1, MetricsOverride::Auto)?;
     Ok(results.pop().expect("one scenario in, one result out"))
 }
 
@@ -460,10 +563,11 @@ pub fn run_scenarios(
     baseline: Baseline,
     jobs: usize,
     shards: usize,
+    metrics: MetricsOverride,
 ) -> Result<Vec<BenchResult>> {
     let plans = names
         .iter()
-        .map(|name| plan_scenario(name, fast, baseline, shards))
+        .map(|name| plan_scenario(name, fast, baseline, shards, metrics))
         .collect::<Result<Vec<_>>>()?;
     let units: Vec<(usize, UnitKind)> = plans
         .iter()
@@ -530,6 +634,8 @@ fn run_to_json(b: &BenchRun) -> Json {
         .set("peak_resident_slots", b.peak_resident_slots)
         .set("resident_bytes_est", b.resident_bytes_est)
         .set("retired", b.retired)
+        .set("metrics", if b.metrics_sketch { "sketch" } else { "exact" })
+        .set("metrics_bytes_est", b.metrics_bytes_est)
         .set("transfers", b.transfers)
         .set("transfer_gb", b.transfer_bytes / 1e9)
         .set("domains", b.domains);
@@ -564,56 +670,53 @@ fn n_runs(results: &[BenchResult]) -> usize {
         .sum()
 }
 
-/// The `BENCH_core.json` document: one row per scenario (each carrying
-/// the `jobs` the harness ran with and the per-run wall clocks), plus a
-/// trailing `aggregate` entry — total events across every run divided
-/// by the harness's elapsed wall clock (`wall_s`). Per-run events/s is
-/// flat in job count (each simulation is single-threaded); the
-/// aggregate column is where the multicore win shows.
-/// `scripts/check_bench_regression.py` keys rows by `name`, so the
-/// nameless aggregate entry is invisible to the regression tripwire.
-pub fn to_json(results: &[BenchResult], jobs: usize, wall_s: f64) -> Json {
-    let mut rows: Vec<Json> = results
-        .iter()
-        .map(|r| {
-            let mut j = Json::obj();
-            j.set("name", r.name.clone())
-                .set("title", r.title.clone())
-                .set("stream", r.exec.stream)
-                .set("retire", r.exec.retire)
-                .set("jobs", jobs)
-                // requested shard count for the row's sharded run (1 =
-                // none ran). scripts/check_bench_regression.py matches
-                // rows by name only and deliberately ignores this column
-                .set("shards", r.shards)
-                .set("incremental", run_to_json(&r.incremental));
-            if let Some(b) = &r.sharded {
-                j.set("sharded", run_to_json(b));
-            }
-            if let Some(s) = r.shard_speedup() {
-                j.set("speedup_vs_serial_sharded", s);
-            }
-            if let Some(b) = &r.baseline {
-                j.set("full_scan_baseline", run_to_json(b));
-            }
-            if let Some(s) = r.speedup() {
-                j.set("speedup_vs_full_scan", s);
-            }
-            if let Some(b) = &r.map_pool {
-                j.set("hashmap_pool_baseline", run_to_json(b));
-            }
-            if let Some(s) = r.pool_speedup() {
-                j.set("speedup_vs_hashmap_pool", s);
-            }
-            if let Some(b) = &r.retained {
-                j.set("retirement_off_baseline", run_to_json(b));
-            }
-            if let Some(x) = r.residency_reduction() {
-                j.set("resident_slots_reduction", x);
-            }
-            j
-        })
-        .collect();
+/// One scenario's `BENCH_core.json` row.
+fn result_to_json(r: &BenchResult, jobs: usize) -> Json {
+    let mut j = Json::obj();
+    j.set("name", r.name.clone())
+        .set("title", r.title.clone())
+        .set("stream", r.exec.stream)
+        .set("retire", r.exec.retire)
+        // the metrics contract this row ran under: "exact" (retained
+        // records, the oracle) or "sketch" (streaming sink, percentiles
+        // within the sketch's relative-error bound)
+        .set("metrics", if r.exec.sketch { "sketch" } else { "exact" })
+        .set("jobs", jobs)
+        // requested shard count for the row's sharded run (1 =
+        // none ran). scripts/check_bench_regression.py matches
+        // rows by name only and deliberately ignores this column
+        .set("shards", r.shards)
+        .set("incremental", run_to_json(&r.incremental));
+    if let Some(b) = &r.sharded {
+        j.set("sharded", run_to_json(b));
+    }
+    if let Some(s) = r.shard_speedup() {
+        j.set("speedup_vs_serial_sharded", s);
+    }
+    if let Some(b) = &r.baseline {
+        j.set("full_scan_baseline", run_to_json(b));
+    }
+    if let Some(s) = r.speedup() {
+        j.set("speedup_vs_full_scan", s);
+    }
+    if let Some(b) = &r.map_pool {
+        j.set("hashmap_pool_baseline", run_to_json(b));
+    }
+    if let Some(s) = r.pool_speedup() {
+        j.set("speedup_vs_hashmap_pool", s);
+    }
+    if let Some(b) = &r.retained {
+        j.set("retirement_off_baseline", run_to_json(b));
+    }
+    if let Some(x) = r.residency_reduction() {
+        j.set("resident_slots_reduction", x);
+    }
+    j
+}
+
+/// The trailing nameless `aggregate` entry — total events across every
+/// run divided by the harness's elapsed wall clock.
+fn aggregate_to_json(results: &[BenchResult], jobs: usize, wall_s: f64) -> Json {
     let events = total_events(results);
     let mut agg = Json::obj();
     agg.set("jobs", jobs)
@@ -623,7 +726,22 @@ pub fn to_json(results: &[BenchResult], jobs: usize, wall_s: f64) -> Json {
         .set("aggregate_events_per_s", events as f64 / wall_s.max(1e-9));
     let mut summary = Json::obj();
     summary.set("aggregate", agg);
-    rows.push(summary);
+    summary
+}
+
+/// The `BENCH_core.json` document: one row per scenario (each carrying
+/// the `jobs` the harness ran with and the per-run wall clocks), plus a
+/// trailing `aggregate` entry — total events across every run divided
+/// by the harness's elapsed wall clock (`wall_s`). Per-run events/s is
+/// flat in job count (each simulation is single-threaded); the
+/// aggregate column is where the multicore win shows.
+/// `scripts/check_bench_regression.py` keys rows by `name`, so the
+/// nameless aggregate entry is invisible to the regression tripwire.
+/// `run_and_report` emits the same rows through a [`JsonRowWriter`]
+/// instead of materializing this document.
+pub fn to_json(results: &[BenchResult], jobs: usize, wall_s: f64) -> Json {
+    let mut rows: Vec<Json> = results.iter().map(|r| result_to_json(r, jobs)).collect();
+    rows.push(aggregate_to_json(results, jobs, wall_s));
     Json::Arr(rows)
 }
 
@@ -638,18 +756,24 @@ pub fn run_and_report(
     baseline: Baseline,
     jobs: usize,
     shards: usize,
+    metrics: MetricsOverride,
     out_path: &str,
 ) -> Result<Vec<BenchResult>> {
     for name in names {
         println!(
-            "benchmarking '{name}'{}{}{} ...",
+            "benchmarking '{name}'{}{}{}{} ...",
             if fast { " (fast scale)" } else { "" },
             if jobs > 1 { format!(" [jobs={jobs}]") } else { String::new() },
-            if shards > 1 { format!(" [shards={shards}]") } else { String::new() }
+            if shards > 1 { format!(" [shards={shards}]") } else { String::new() },
+            match metrics {
+                MetricsOverride::Auto => "",
+                MetricsOverride::Exact => " [metrics=exact]",
+                MetricsOverride::Sketch => " [metrics=sketch]",
+            }
         );
     }
     let t0 = Instant::now();
-    let results = run_scenarios(names, fast, baseline, jobs, shards)?;
+    let results = run_scenarios(names, fast, baseline, jobs, shards, metrics)?;
     let batch_wall = t0.elapsed().as_secs_f64();
     for r in &results {
         let inc = &r.incremental;
@@ -676,6 +800,11 @@ pub fn run_and_report(
             } else {
                 String::new()
             }
+        );
+        println!(
+            "  metrics: {} (~{:.1} KiB resident state)",
+            if inc.metrics_sketch { "sketch" } else { "exact" },
+            inc.metrics_bytes_est as f64 / 1024.0
         );
         if let Some(b) = &r.retained {
             println!(
@@ -753,8 +882,20 @@ pub fn run_and_report(
         jobs
     );
 
-    std::fs::write(out_path, to_json(&results, jobs, batch_wall).to_pretty())
+    // stream rows to the file one at a time instead of materializing
+    // the whole document (`to_json(..).to_pretty()` holds every row
+    // twice — as Json values and as the rendered string); byte-identical
+    // output, see `JsonRowWriter`
+    let file =
+        std::fs::File::create(out_path).with_context(|| format!("creating {out_path}"))?;
+    let mut w = JsonRowWriter::new(std::io::BufWriter::new(file));
+    for r in &results {
+        w.push(&result_to_json(r, jobs))
+            .with_context(|| format!("writing {out_path}"))?;
+    }
+    w.push(&aggregate_to_json(&results, jobs, batch_wall))
         .with_context(|| format!("writing {out_path}"))?;
+    w.finish().with_context(|| format!("writing {out_path}"))?;
     println!("bench results -> {out_path}");
     Ok(results)
 }
@@ -773,7 +914,33 @@ mod tests {
         assert!(names.iter().any(|n| n == "bench_mixed_100k"));
         assert!(names.iter().any(|n| n == "bench_kv_200k"));
         assert!(names.iter().any(|n| n == "bench_llm_1m"));
+        assert!(names.iter().any(|n| n == "bench_llm_100m"));
         assert!(names.iter().any(|n| n == "bench_disagg_100k"));
+    }
+
+    #[test]
+    fn hundred_million_tier_plan_drops_o_total_units() {
+        // full scale: no retained baseline (100M materialized requests),
+        // no map-pool baseline, sketch metrics from extras.metrics
+        let plan = plan_scenario("bench_llm_100m", false, Baseline::Auto, 1, MetricsOverride::Auto)
+            .unwrap();
+        assert!(plan.exec.sketch, "100m tier ships sketch metrics");
+        assert!(plan.exec.stream && plan.exec.retire);
+        assert_eq!(plan.shards, 4);
+        assert!(!plan.units.contains(&UnitKind::Retained), "retained baseline must be skipped");
+        assert!(!plan.units.contains(&UnitKind::MapPool));
+        assert!(!plan.units.contains(&UnitKind::FullScan));
+        assert!(plan.units.contains(&UnitKind::Sharded));
+        // fast scale keeps every baseline so CI still exercises them
+        let fast = plan_scenario("bench_llm_100m", true, Baseline::Auto, 1, MetricsOverride::Auto)
+            .unwrap();
+        assert!(fast.units.contains(&UnitKind::Retained));
+        assert!(fast.units.contains(&UnitKind::MapPool));
+        // and --metrics exact overrides the scenario's sketch default
+        let exact =
+            plan_scenario("bench_llm_100m", false, Baseline::Auto, 1, MetricsOverride::Exact)
+                .unwrap();
+        assert!(!exact.exec.sketch);
     }
 
     #[test]
@@ -932,5 +1099,63 @@ mod tests {
         // 50k tier: incremental + hashmap + full-scan (no retained —
         // the scenario neither streams nor retires)
         assert_eq!(agg.at(&["aggregate", "runs"]).and_then(|j| j.as_f64()), Some(3.0));
+    }
+
+    #[test]
+    fn sketch_metrics_mode_bounds_metrics_memory() {
+        if std::env::var("HERMES_FULL").is_ok() {
+            return;
+        }
+        // the 1M tier at fast scale, once per metrics mode; Baseline::Off
+        // keeps this a two-configuration smoke (plus the scenario's own
+        // sharded showcase, which must stay bounded too)
+        let names = vec!["bench_llm_1m".to_string()];
+        let exact = run_scenarios(&names, true, Baseline::Off, 1, 1, MetricsOverride::Exact)
+            .unwrap()
+            .pop()
+            .unwrap();
+        let sk = run_scenarios(&names, true, Baseline::Off, 1, 1, MetricsOverride::Sketch)
+            .unwrap()
+            .pop()
+            .unwrap();
+        assert!(!exact.incremental.metrics_sketch);
+        assert!(sk.incremental.metrics_sketch);
+        // the sink only changes how completions are folded — the
+        // simulation itself is bit-identical
+        assert_eq!(sk.incremental.events, exact.incremental.events);
+        assert_eq!(sk.incremental.n_serviced, exact.incremental.n_serviced);
+        assert_eq!(sk.incremental.makespan_s, exact.incremental.makespan_s);
+        assert_eq!(sk.incremental.throughput_tok_s, exact.incremental.throughput_tok_s);
+        // O(1) sketch state vs O(n) retained records + sample vecs
+        assert!(
+            sk.incremental.metrics_bytes_est * 4 < exact.incremental.metrics_bytes_est,
+            "sketch metrics state {} not clearly below exact {}",
+            sk.incremental.metrics_bytes_est,
+            exact.incremental.metrics_bytes_est
+        );
+        assert!(
+            sk.incremental.metrics_bytes_est < 256 * 1024,
+            "sketch metrics state {} exceeds the O(1) budget",
+            sk.incremental.metrics_bytes_est
+        );
+        // the sharded run merges per-domain sinks and stays bounded
+        let sh = sk.sharded.as_ref().expect("1m tier ships a sharded showcase");
+        assert!(sh.metrics_sketch);
+        assert!(sh.metrics_bytes_est < 256 * 1024);
+        // the columns land in the BENCH row for the regression script
+        let j = to_json(&[sk], 1, 0.5);
+        let parsed = Json::parse(&j.to_pretty()).unwrap();
+        let row = &parsed.as_arr().unwrap()[0];
+        assert_eq!(row.at(&["metrics"]).and_then(|x| x.as_str()), Some("sketch"));
+        assert_eq!(
+            row.at(&["incremental", "metrics"]).and_then(|x| x.as_str()),
+            Some("sketch")
+        );
+        assert!(
+            row.at(&["incremental", "metrics_bytes_est"])
+                .and_then(|x| x.as_f64())
+                .unwrap_or(0.0)
+                > 0.0
+        );
     }
 }

@@ -10,6 +10,7 @@ pub mod shard;
 
 use crate::client::{Client, StepOutcome};
 use crate::memory::hierarchy::Hierarchy;
+use crate::metrics::MetricsSink;
 use crate::model::policy::{ModelPolicy, RouteDecision};
 use crate::network::{Granularity, Network};
 use crate::scheduler::RequestPool;
@@ -30,6 +31,10 @@ pub struct CoordStats {
     pub transfer_seconds: f64,
     pub recomputes: u64,
     pub failed: u64,
+    /// requests that completed successfully — the counter twin of the
+    /// `serviced` ID vec, maintained in every mode so streaming-metrics
+    /// runs (which never grow the vec) can still prove conservation
+    pub serviced: u64,
     /// requests that entered the system (eagerly injected or emitted by
     /// the streaming arrival source) — the run-total denominator now
     /// that the pool only holds live requests under retirement
@@ -114,8 +119,16 @@ pub struct Coordinator {
     pub retire: bool,
     /// one compact record per finished/failed request, in completion
     /// order — what `RunMetrics::collect` consumes (identical with
-    /// retirement on or off)
+    /// retirement on or off). Stays empty when a streaming metrics
+    /// `sink` is installed: records fold into the sink at retirement
+    /// time instead, so metrics memory is O(1) in request count.
     pub records: Vec<CompletionRecord>,
+    /// streaming metrics accumulator (`--metrics sketch`): when Some,
+    /// `complete`/`fail` fold each completion record here instead of
+    /// growing `records`/`serviced`/`failed`, which collapse to the
+    /// `CoordStats` counters. None (default) keeps the exact
+    /// retained-records oracle path bit-identical to every prior PR.
+    pub sink: Option<MetricsSink>,
     /// completed requests, in completion order
     pub serviced: Vec<ReqId>,
     /// requests that can never be placed (exceed every client's memory)
@@ -171,6 +184,7 @@ impl Coordinator {
             source: ArrivalSource::Materialized,
             retire: false,
             records: Vec::new(),
+            sink: None,
             serviced: Vec::new(),
             failed: Vec::new(),
             granularity: Granularity::Layerwise { layers: 80 },
@@ -203,6 +217,7 @@ impl Coordinator {
             self.stats.injected += 1;
             self.pool.insert(r.id, r);
         }
+        self.scale_event_budget();
     }
 
     /// Attach a lazy arrival source instead of eager injection: requests
@@ -213,7 +228,20 @@ impl Coordinator {
     /// O(peak in-flight) memory. Do not mix with [`Coordinator::inject`]
     /// in the same run unless the id ranges are disjoint.
     pub fn stream(&mut self, mix: &WorkloadMix) {
-        self.source = ArrivalSource::Streaming(StreamingMix::new(mix));
+        let s = StreamingMix::new(mix);
+        let remaining = s.remaining() as u64;
+        self.source = ArrivalSource::Streaming(s);
+        self.max_events = self.max_events.max(remaining.saturating_mul(200));
+    }
+
+    /// Keep the runaway-simulation tripwire proportional to the known
+    /// request total: the fixed 500M default would fire spuriously at
+    /// the 100M-request tier (~6 events/request), while 200×requests
+    /// still catches a simulation that stops making progress.
+    fn scale_event_budget(&mut self) {
+        self.max_events = self
+            .max_events
+            .max(self.stats.injected.saturating_mul(200));
     }
 
     /// Algorithm 1: drain the arrival source and the event queue.
@@ -501,13 +529,20 @@ impl Coordinator {
     fn complete(&mut self, id: ReqId) {
         let r = self.pool.get_mut(&id).unwrap();
         r.finished = Some(self.clock);
-        self.records.push(CompletionRecord::of(r, false));
-        self.serviced.push(id);
+        let rec = CompletionRecord::of(r, false);
+        self.stats.serviced += 1;
         self.stats.inflight -= 1;
-        if let Some(ctx) = &mut self.shard {
-            // merge key for cross-domain record interleaving: completion
-            // instant (records are pushed in clock order within a domain)
-            ctx.record_keys.push(self.clock);
+        if let Some(sink) = &mut self.sink {
+            // streaming metrics: fold at retirement time, retain nothing
+            sink.fold(&rec);
+        } else {
+            self.records.push(rec);
+            self.serviced.push(id);
+            if let Some(ctx) = &mut self.shard {
+                // merge key for cross-domain record interleaving: completion
+                // instant (records are pushed in clock order within a domain)
+                ctx.record_keys.push(self.clock);
+            }
         }
         if self.retire {
             self.pool.remove(id);
@@ -676,13 +711,18 @@ impl Coordinator {
 
     fn fail(&mut self, id: ReqId) {
         self.stats.failed += 1;
-        self.failed.push(id);
         self.stats.inflight -= 1;
         let r = self.pool.get_mut(&id).unwrap();
         r.finished = None;
-        self.records.push(CompletionRecord::of(r, true));
-        if let Some(ctx) = &mut self.shard {
-            ctx.record_keys.push(self.clock);
+        let rec = CompletionRecord::of(r, true);
+        if let Some(sink) = &mut self.sink {
+            sink.fold(&rec);
+        } else {
+            self.failed.push(id);
+            self.records.push(rec);
+            if let Some(ctx) = &mut self.shard {
+                ctx.record_keys.push(self.clock);
+            }
         }
         if self.retire {
             self.pool.remove(id);
@@ -697,10 +737,11 @@ impl Coordinator {
 
     /// Every request that entered (or will enter) the system completed
     /// or failed. Counter-based — the pool only holds *live* requests
-    /// under retirement, so `pool.len()` is no longer the run total.
+    /// under retirement, and the `serviced`/`failed` ID vecs are empty
+    /// under streaming metrics, so only the counters are the run total
+    /// in every mode (in exact mode they equal the vec lengths).
     pub fn all_serviced(&self) -> bool {
-        self.source.drained()
-            && (self.serviced.len() + self.failed.len()) as u64 == self.stats.injected
+        self.source.drained() && self.stats.serviced + self.stats.failed == self.stats.injected
     }
 }
 

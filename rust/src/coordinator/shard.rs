@@ -71,6 +71,7 @@ use anyhow::Result;
 
 use super::{ArrivalSource, Candidate, Coordinator, CoordStats, Event, RoutePolicy};
 use crate::client::ClientLoad;
+use crate::metrics::MetricsSink;
 use crate::model::ModelId;
 use crate::network::{Granularity, Network, NetworkKind};
 use crate::scheduler::PoolOps;
@@ -235,6 +236,9 @@ struct DomainResult {
     records: Vec<CompletionRecord>,
     record_keys: Vec<SimTime>,
     transfer_log: Vec<(SimTime, f64, f64)>,
+    /// this domain's streaming metrics accumulator (`--metrics sketch`);
+    /// `records`/`record_keys` stay empty when present
+    sink: Option<MetricsSink>,
     stats: CoordStats,
     clock: SimTime,
     /// (client id, joules) for the clients this domain *owns* — foreign
@@ -266,6 +270,12 @@ pub struct ShardOutcome {
     pub records: Vec<CompletionRecord>,
     pub serviced: Vec<ReqId>,
     pub failed: Vec<ReqId>,
+    /// merged streaming metrics sink (`--metrics sketch` runs): folded
+    /// from the per-domain sinks in ascending domain order, so the one
+    /// order-sensitive f64 (the mean's sum) is deterministic at any
+    /// shard count; quantiles are bit-identical by construction (integer
+    /// bins). `records`/`serviced`/`failed` are empty when present.
+    pub sink: Option<MetricsSink>,
     pub clock: SimTime,
     pub stats: CoordStats,
     pub energy_joules: f64,
@@ -282,6 +292,7 @@ impl ShardOutcome {
             records: std::mem::take(&mut coord.records),
             serviced: std::mem::take(&mut coord.serviced),
             failed: std::mem::take(&mut coord.failed),
+            sink: coord.sink.take(),
             clock: coord.clock,
             stats: coord.stats.clone(),
             energy_joules: coord
@@ -294,9 +305,10 @@ impl ShardOutcome {
         }
     }
 
-    /// Every injected request completed or failed.
+    /// Every injected request completed or failed. Counter-based so it
+    /// holds in streaming-metrics mode, where the ID vecs stay empty.
     pub fn all_serviced(&self) -> bool {
-        (self.serviced.len() + self.failed.len()) as u64 == self.stats.injected
+        self.stats.serviced + self.stats.failed == self.stats.injected
     }
 }
 
@@ -946,6 +958,7 @@ impl DomainResult {
             records: std::mem::take(&mut coord.records),
             record_keys: ctx.record_keys,
             transfer_log: ctx.transfer_log,
+            sink: coord.sink.take(),
             stats: coord.stats.clone(),
             clock: coord.clock,
             energy,
@@ -987,6 +1000,7 @@ fn merge(
         stats.events += p.stats.events;
         stats.recomputes += p.stats.recomputes;
         stats.failed += p.stats.failed;
+        stats.serviced += p.stats.serviced;
         stats.injected += p.stats.injected;
         stats.inflight += p.stats.inflight;
         stats.peak_queue = stats.peak_queue.max(p.stats.peak_queue);
@@ -994,11 +1008,25 @@ fn merge(
         stats.transfers += p.stats.transfers;
     }
     stats.transfers += orch_transfers;
+    // counter-based: in streaming-metrics mode the ID vecs stay empty,
+    // while in exact mode the counters equal the vec lengths
     assert_eq!(
-        (serviced.len() + failed.len()) as u64,
+        stats.serviced + stats.failed,
         stats.injected,
         "sharded run lost requests in transit"
     );
+    // per-domain streaming sinks fold in ascending domain order — the
+    // deterministic merge order the bounded-error contract documents
+    // (quantiles are merge-order-independent anyway; this pins the mean)
+    let mut sink: Option<MetricsSink> = None;
+    for p in &parts {
+        if let Some(s) = &p.sink {
+            match &mut sink {
+                None => sink = Some(s.clone()),
+                Some(acc) => acc.merge(s),
+            }
+        }
+    }
     // f64 transfer accumulators replayed in global pricing order (the
     // orchestrator's barrier pricing sorts after same-instant local
     // pricing, matching the serial event sequence for distinct instants)
@@ -1034,6 +1062,7 @@ fn merge(
         records,
         serviced,
         failed,
+        sink,
         clock: parts.iter().map(|p| p.clock).max().unwrap_or(SimTime::ZERO),
         stats,
         energy_joules,

@@ -97,6 +97,16 @@ pub fn run(fast: bool) -> Result<Vec<Fig15Row>> {
                     .with_pipeline(Pipeline::KvRetrieval(KvParams { cached_tokens: cache_tokens }))
                     .with_seed(seed);
                 let metrics = driver::run(&spec, &workload, &slo)?;
+                // the figure is a latency CDF: it needs the raw
+                // per-request e2e samples, which only the exact
+                // retained-records mode materializes (a sketch can
+                // answer percentiles, not draw a full CDF)
+                if !metrics.exact {
+                    anyhow::bail!(
+                        "fig15 needs exact metrics (raw e2e samples for the CDF); \
+                         rerun without sketch metrics"
+                    );
+                }
                 rows.push(Fig15Row {
                     scenario,
                     cache_tokens,

@@ -1,13 +1,15 @@
 //! HERMES command-line interface.
 //!
 //!   hermes simulate --config cfg.json [--out metrics.json]
-//!                   [--trace trace.json] [--shards K] [--quiet]
+//!                   [--trace trace.json] [--shards K]
+//!                   [--metrics exact|sketch] [--quiet]
 //!   hermes sweep    --config cfg.json --rates 1,2,4,8 [--jobs N]
 //!                   [--out sweep.json]
 //!   hermes scenario <name|path.json> [--fast] [--jobs N] [--out sweep.json]
 //!   hermes scenario --list                # registry under scenarios/
 //!   hermes bench    [name...] [--fast] [--baseline auto|on|off] [--jobs N]
-//!                   [--shards K] [--out BENCH_core.json]
+//!                   [--shards K] [--metrics auto|exact|sketch]
+//!                   [--out BENCH_core.json]
 //!   hermes experiment <fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|disagg>
 //!                   [--fast] [--jobs N]
 //!   hermes artifacts                      # list AOT predictor variants
@@ -25,7 +27,7 @@ use hermes::bench;
 use hermes::config::SimConfig;
 use hermes::coordinator::shard::{run_sharded, Arrivals};
 use hermes::experiments;
-use hermes::metrics::{trace_export, RunMetrics};
+use hermes::metrics::{trace_export, MetricsSink, RunMetrics};
 use hermes::runtime::ArtifactBundle;
 use hermes::scenario::{runner, Scenario};
 use hermes::sim::driver;
@@ -61,17 +63,20 @@ fn print_usage() {
     println!("HERMES — heterogeneous multi-stage LLM inference execution simulator");
     println!();
     println!("usage:");
-    println!("  hermes simulate --config cfg.json [--out m.json] [--trace t.json] [--shards K]");
+    println!("  hermes simulate --config cfg.json [--out m.json] [--trace t.json] [--shards K] [--metrics exact|sketch]");
     println!("  hermes sweep --config cfg.json --rates 1,2,4 [--jobs N] [--out sweep.json]");
     println!("  hermes scenario <name|path.json> [--fast] [--jobs N] [--out sweep.json]   (--list to enumerate)");
     println!("  hermes scenario check             # resolve every scenario's model/policy/npu refs");
-    println!("  hermes bench [name...] [--fast] [--baseline auto|on|off] [--jobs N] [--shards K] [--out BENCH_core.json]");
+    println!("  hermes bench [name...] [--fast] [--baseline auto|on|off] [--jobs N] [--shards K] [--metrics auto|exact|sketch] [--out BENCH_core.json]");
     println!("  hermes experiment <fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|ablations|multimodel|disagg|all> [--fast] [--jobs N]");
     println!("  hermes artifacts");
     println!();
     println!("--jobs N fans independent runs across N worker threads; --shards K");
     println!("partitions one run into K conservative time-window domains. Both are");
     println!("bit-identical to the default serial run (--jobs 1 --shards 1).");
+    println!("--metrics sketch streams completions through mergeable quantile");
+    println!("sketches (O(1) metrics memory; percentiles within a 1% relative-error");
+    println!("bound of the default exact retained-records mode).");
 }
 
 /// Parse `--jobs N` (default 1 — the serial bit-exactness oracle).
@@ -94,12 +99,20 @@ fn shards_arg(args: &Args) -> Result<usize> {
         .unwrap_or(1))
 }
 
+/// Parse `--metrics` against `allowed` (simulate: exact|sketch; bench
+/// adds `auto` = defer to each scenario's `extras.metrics`). Strict: a
+/// typo must not silently run under the wrong metrics contract.
+fn metrics_arg(args: &Args, default: &str, allowed: &[&str]) -> Result<String> {
+    args.one_of("metrics", default, allowed).map_err(|e| anyhow::anyhow!(e))
+}
+
 fn simulate(args: &Args) -> Result<()> {
     let cfg_path = args.opt_str("config").context("--config required")?;
     let out = args.opt_str("out");
     let trace_out = args.opt_str("trace");
     let quiet = args.bool_or("quiet", false);
     let shards = shards_arg(args)?;
+    let sketch = metrics_arg(args, "exact", &["exact", "sketch"])? == "sketch";
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
     if shards > 1 && trace_out.is_some() {
         // the chrome exporter walks the retained serial coordinator;
@@ -111,7 +124,19 @@ fn simulate(args: &Args) -> Result<()> {
     if shards > 1 {
         let arrivals = Arrivals::Inject(cfg.workload.generate(0));
         let t0 = std::time::Instant::now();
-        let outcome = run_sharded(|| cfg.serving.build(), arrivals, shards)?;
+        // per-domain sinks, merged back in domain order by the sharded
+        // harness — percentile sketches are bit-identical to --shards 1
+        let outcome = run_sharded(
+            || {
+                let mut c = cfg.serving.build()?;
+                if sketch {
+                    c.sink = Some(MetricsSink::new(cfg.slo));
+                }
+                Ok(c)
+            },
+            arrivals,
+            shards,
+        )?;
         let wall = t0.elapsed().as_secs_f64();
         let m = RunMetrics::collect_outcome(&outcome, &cfg.slo);
         if !quiet {
@@ -138,6 +163,11 @@ fn simulate(args: &Args) -> Result<()> {
         return Ok(());
     }
     let mut coord = cfg.serving.build()?;
+    if sketch {
+        // fold completions into the streaming sink at retirement time
+        // instead of retaining CompletionRecords
+        coord.sink = Some(MetricsSink::new(cfg.slo));
+    }
     coord.inject(cfg.workload.generate(0));
     let t0 = std::time::Instant::now();
     coord.run();
@@ -372,6 +402,13 @@ fn bench_cmd(args: &Args) -> Result<()> {
     };
     let jobs = jobs_arg(args)?;
     let shards = shards_arg(args)?;
+    // `auto` defers to each scenario's `extras.metrics` (the 100M tier
+    // ships "sketch"); exact|sketch force the mode across every scenario
+    let metrics = match metrics_arg(args, "auto", &["auto", "exact", "sketch"])?.as_str() {
+        "exact" => bench::MetricsOverride::Exact,
+        "sketch" => bench::MetricsOverride::Sketch,
+        _ => bench::MetricsOverride::Auto,
+    };
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
 
     let names = if args.positional.is_empty() {
@@ -383,7 +420,7 @@ fn bench_cmd(args: &Args) -> Result<()> {
         bail!("no bench_* scenarios found under scenarios/");
     }
 
-    bench::run_and_report(&names, fast, baseline, jobs, shards, &out)?;
+    bench::run_and_report(&names, fast, baseline, jobs, shards, metrics, &out)?;
     Ok(())
 }
 

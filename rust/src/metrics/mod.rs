@@ -8,8 +8,110 @@ use crate::config::slo::SloLadder;
 use crate::coordinator::shard::ShardOutcome;
 use crate::coordinator::{CoordStats, Coordinator};
 use crate::util::json::Json;
-use crate::util::stats::Summary;
+use crate::util::stats::{QuantileSketch, Summary, SKETCH_ALPHA};
 use crate::workload::request::CompletionRecord;
+
+/// Streaming metrics accumulator for `--metrics sketch` runs: the
+/// coordinator folds each [`CompletionRecord`] into this at retirement
+/// time instead of growing `coord.records`, so whole-run metrics memory
+/// is O(sketch bins) — constant in request count — rather than O(total
+/// trace). Percentiles come from mergeable [`QuantileSketch`]es with a
+/// relative-error contract of [`SKETCH_ALPHA`]; counts, token sums and
+/// goodput are exact.
+///
+/// Sharded runs give every domain its own sink; the outcome merge folds
+/// them in ascending domain order (see
+/// [`crate::coordinator::shard::ShardOutcome`]), which pins the one
+/// order-sensitive f64 (the mean's running sum) to a deterministic
+/// order. Quantiles are bit-identical at any shard count because the
+/// sketch bins are integers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSink {
+    pub slo: SloLadder,
+    ttft: QuantileSketch,
+    tpot: QuantileSketch,
+    e2e: QuantileSketch,
+    /// exact: generated tokens are integers, so this f64 sum is
+    /// order-independent below 2^53 total tokens
+    tokens: f64,
+    slo_ok: u64,
+    /// non-failed records folded (the goodput denominator)
+    n_completed: u64,
+    /// non-failed records with no first token (excluded from TTFT/E2E
+    /// samples instead of poisoning them with ∞ — see `fold_records`)
+    n_no_first_token: u64,
+}
+
+impl MetricsSink {
+    pub fn new(slo: SloLadder) -> MetricsSink {
+        Self::with_alpha(slo, SKETCH_ALPHA)
+    }
+
+    pub fn with_alpha(slo: SloLadder, alpha: f64) -> MetricsSink {
+        MetricsSink {
+            slo,
+            ttft: QuantileSketch::new(alpha),
+            tpot: QuantileSketch::new(alpha),
+            e2e: QuantileSketch::new(alpha),
+            tokens: 0.0,
+            slo_ok: 0,
+            n_completed: 0,
+            n_no_first_token: 0,
+        }
+    }
+
+    /// Fold one completion record — the streaming mirror of the
+    /// per-record body of `RunMetrics::fold_records`. Failed requests
+    /// carry no latency samples (they are counted by
+    /// `CoordStats::failed`), exactly as the exact path filters them.
+    pub fn fold(&mut self, r: &CompletionRecord) {
+        if r.failed {
+            return;
+        }
+        self.n_completed += 1;
+        let tp = r.tpot();
+        match r.ttft() {
+            Some(t1) => {
+                self.ttft.insert(t1);
+                if self.slo.request_ok(t1, tp) {
+                    self.slo_ok += 1;
+                }
+            }
+            // no first token ⇒ never SLO-ok (request_ok(∞, _) is false)
+            None => self.n_no_first_token += 1,
+        }
+        if let Some(tp) = tp {
+            self.tpot.insert(tp);
+        }
+        if let Some(te) = r.e2e_latency() {
+            self.e2e.insert(te);
+        }
+        self.tokens += r.generated_tokens() as f64;
+    }
+
+    /// Fold another domain's sink into this one. Exact for every count
+    /// and quantile; the mean's f64 sum takes `other` after `self`, so
+    /// callers merge in a fixed (domain-ascending) order.
+    pub fn merge(&mut self, other: &MetricsSink) {
+        self.ttft.merge(&other.ttft);
+        self.tpot.merge(&other.tpot);
+        self.e2e.merge(&other.e2e);
+        self.tokens += other.tokens;
+        self.slo_ok += other.slo_ok;
+        self.n_completed += other.n_completed;
+        self.n_no_first_token += other.n_no_first_token;
+    }
+
+    pub fn n_completed(&self) -> u64 {
+        self.n_completed
+    }
+
+    /// Estimated resident bytes of the whole sink — the bench column
+    /// that proves metrics memory is O(1) in request count.
+    pub fn bytes_est(&self) -> usize {
+        self.ttft.bytes_est() + self.tpot.bytes_est() + self.e2e.bytes_est() + 64
+    }
+}
 
 /// Aggregated results of one simulation run.
 #[derive(Debug, Clone, Default)]
@@ -37,10 +139,28 @@ pub struct RunMetrics {
     /// total exposed inter-client transfer time
     pub transfer_seconds: f64,
     pub recomputes: u64,
-    /// raw per-request samples for CDFs (Fig 15)
+    /// non-failed requests that never produced a first token; counted
+    /// here instead of contributing ∞ TTFT/E2E samples
+    pub n_no_first_token: u64,
+    /// true when collected from retained records (exact percentiles and
+    /// raw samples); false for the streaming sketch path, whose sample
+    /// vecs are never allocated
+    pub exact: bool,
+    /// raw per-request samples for CDFs (Fig 15) — exact mode only
     pub e2e_samples: Vec<f64>,
     pub ttft_samples: Vec<f64>,
     pub tpot_samples: Vec<f64>,
+}
+
+/// Intermediate result of one exact-mode pass over completion records.
+#[derive(Debug, Default)]
+struct RecordFold {
+    ttft: Vec<f64>,
+    tpot: Vec<f64>,
+    e2e: Vec<f64>,
+    tokens: f64,
+    slo_ok: usize,
+    n_no_first_token: u64,
 }
 
 impl RunMetrics {
@@ -53,8 +173,20 @@ impl RunMetrics {
     /// retained-pool scan ([`RunMetrics::collect_from_pool`], pinned by
     /// `rust/tests/retirement_equivalence.rs`).
     pub fn collect(coord: &Coordinator, slo: &SloLadder) -> RunMetrics {
-        let (ttft, tpot, e2e, tokens, slo_ok) = Self::fold_records(&coord.records, slo);
-        Self::assemble(coord, coord.stats.injected as usize, ttft, tpot, e2e, tokens, slo_ok)
+        if let Some(sink) = &coord.sink {
+            debug_assert_eq!(sink.slo, *slo, "sink was installed with a different SLO ladder");
+            return Self::from_sink(
+                sink,
+                coord.stats.injected as usize,
+                coord.stats.serviced as usize,
+                coord.stats.failed as usize,
+                coord.clock.as_secs(),
+                coord.clients.iter().map(|c| c.stats().energy_joules).sum(),
+                &coord.stats,
+            );
+        }
+        let fold = Self::fold_records(&coord.records, slo);
+        Self::assemble(coord, coord.stats.injected as usize, fold)
     }
 
     /// Collect from a sharded run's merged outcome
@@ -64,7 +196,19 @@ impl RunMetrics {
     /// exact order [`RunMetrics::collect`] would see on the equivalent
     /// serial coordinator.
     pub fn collect_outcome(out: &ShardOutcome, slo: &SloLadder) -> RunMetrics {
-        let (ttft, tpot, e2e, tokens, slo_ok) = Self::fold_records(&out.records, slo);
+        if let Some(sink) = &out.sink {
+            debug_assert_eq!(sink.slo, *slo, "sink was installed with a different SLO ladder");
+            return Self::from_sink(
+                sink,
+                out.stats.injected as usize,
+                out.stats.serviced as usize,
+                out.stats.failed as usize,
+                out.clock.as_secs(),
+                out.energy_joules,
+                &out.stats,
+            );
+        }
+        let fold = Self::fold_records(&out.records, slo);
         Self::assemble_parts(
             out.stats.injected as usize,
             out.serviced.len(),
@@ -72,51 +216,97 @@ impl RunMetrics {
             out.clock.as_secs(),
             out.energy_joules,
             &out.stats,
-            ttft,
-            tpot,
-            e2e,
-            tokens,
-            slo_ok,
+            fold,
         )
+    }
+
+    /// Assemble run metrics from a streaming [`MetricsSink`] plus the
+    /// coordinator's counters. No sample vecs are allocated; summaries
+    /// come from the sketches under the [`SKETCH_ALPHA`] error
+    /// contract. `exact` is false so downstream consumers that need raw
+    /// CDF samples (fig15) can refuse loudly instead of reading empty
+    /// vecs.
+    fn from_sink(
+        sink: &MetricsSink,
+        n_requests: usize,
+        n_serviced: usize,
+        n_failed: usize,
+        makespan: f64,
+        energy: f64,
+        stats: &CoordStats,
+    ) -> RunMetrics {
+        let tokens = sink.tokens;
+        RunMetrics {
+            n_requests,
+            n_serviced,
+            n_failed,
+            makespan,
+            ttft: sink.ttft.summary(),
+            tpot: sink.tpot.summary(),
+            e2e: sink.e2e.summary(),
+            throughput_tok_s: if makespan > 0.0 { tokens / makespan } else { 0.0 },
+            goodput_frac: if n_serviced > 0 {
+                sink.slo_ok as f64 / n_serviced as f64
+            } else {
+                0.0
+            },
+            goodput_req_s: if makespan > 0.0 {
+                sink.slo_ok as f64 / makespan
+            } else {
+                0.0
+            },
+            energy_joules: energy,
+            tok_per_joule: if energy > 0.0 { tokens / energy } else { 0.0 },
+            events: stats.events,
+            transfers: stats.transfers,
+            transfer_bytes: stats.transfer_bytes,
+            transfer_seconds: stats.transfer_seconds,
+            recomputes: stats.recomputes,
+            n_no_first_token: sink.n_no_first_token,
+            exact: false,
+            e2e_samples: Vec::new(),
+            ttft_samples: Vec::new(),
+            tpot_samples: Vec::new(),
+        }
     }
 
     /// One pass over the non-failed completion records, in completion
     /// order — the per-request sample fold shared by the serial and
     /// sharded collection paths. The f64 accumulation order is part of
     /// the contract: callers hand records in serviced order.
-    #[allow(clippy::type_complexity)]
-    fn fold_records(
-        records: &[CompletionRecord],
-        slo: &SloLadder,
-    ) -> (Vec<f64>, Vec<f64>, Vec<f64>, f64, usize) {
-        let mut ttft = Vec::new();
-        let mut tpot = Vec::new();
-        let mut e2e = Vec::new();
-        let mut tokens = 0f64;
-        let mut slo_ok = 0usize;
+    fn fold_records(records: &[CompletionRecord], slo: &SloLadder) -> RecordFold {
+        let mut fold = RecordFold::default();
         // non-failed records are pushed at the same instant a request
         // joins `serviced`, so this iterates in serviced order — f64
         // accumulation order matches the pool-scan path exactly
         for r in records.iter().filter(|r| !r.failed) {
-            let t1 = r.ttft().unwrap_or(f64::INFINITY);
             let tp = r.tpot();
-            let te = r.e2e_latency().unwrap_or(f64::INFINITY);
-            ttft.push(t1);
+            match r.ttft() {
+                Some(t1) => {
+                    fold.ttft.push(t1);
+                    if slo.request_ok(t1, tp) {
+                        fold.slo_ok += 1;
+                    }
+                }
+                // a request that completed without ever emitting a first
+                // token gets counted, not an ∞ sample poisoning the mean
+                // and sketch bins; it can never be SLO-ok either way
+                None => fold.n_no_first_token += 1,
+            }
             // requests that decode ≤1 token have no TPOT; excluding them
             // keeps the percentiles honest instead of deflating the
             // distribution with 0.0 samples
             if let Some(tp) = tp {
-                tpot.push(tp);
+                fold.tpot.push(tp);
             }
-            e2e.push(te);
+            if let Some(te) = r.e2e_latency() {
+                fold.e2e.push(te);
+            }
             // includes superseded cascade-pass tokens: escalations did
             // that work (and paid its energy), so throughput counts it
-            tokens += r.generated_tokens() as f64;
-            if slo.request_ok(t1, tp) {
-                slo_ok += 1;
-            }
+            fold.tokens += r.generated_tokens() as f64;
         }
-        (ttft, tpot, e2e, tokens, slo_ok)
+        fold
     }
 
     /// Legacy collection path: scan the retained request pool via the
@@ -124,39 +314,26 @@ impl RunMetrics {
     /// kept verbatim as the ground truth the record-based
     /// [`RunMetrics::collect`] is differentially tested against.
     pub fn collect_from_pool(coord: &Coordinator, slo: &SloLadder) -> RunMetrics {
-        let mut ttft = Vec::new();
-        let mut tpot = Vec::new();
-        let mut e2e = Vec::new();
-        let mut tokens = 0f64;
-        let mut slo_ok = 0usize;
+        let mut fold = RecordFold::default();
         for id in &coord.serviced {
             let r = &coord.pool[id];
             let t1 = r.ttft().unwrap_or(f64::INFINITY);
             let tp = r.tpot();
             let te = r.e2e_latency().unwrap_or(f64::INFINITY);
-            ttft.push(t1);
+            fold.ttft.push(t1);
             if let Some(tp) = tp {
-                tpot.push(tp);
+                fold.tpot.push(tp);
             }
-            e2e.push(te);
-            tokens += r.generated_tokens() as f64;
+            fold.e2e.push(te);
+            fold.tokens += r.generated_tokens() as f64;
             if slo.request_ok(t1, tp) {
-                slo_ok += 1;
+                fold.slo_ok += 1;
             }
         }
-        Self::assemble(coord, coord.pool.len(), ttft, tpot, e2e, tokens, slo_ok)
+        Self::assemble(coord, coord.pool.len(), fold)
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn assemble(
-        coord: &Coordinator,
-        n_requests: usize,
-        ttft: Vec<f64>,
-        tpot: Vec<f64>,
-        e2e: Vec<f64>,
-        tokens: f64,
-        slo_ok: usize,
-    ) -> RunMetrics {
+    fn assemble(coord: &Coordinator, n_requests: usize, fold: RecordFold) -> RunMetrics {
         Self::assemble_parts(
             n_requests,
             coord.serviced.len(),
@@ -164,15 +341,10 @@ impl RunMetrics {
             coord.clock.as_secs(),
             coord.clients.iter().map(|c| c.stats().energy_joules).sum(),
             &coord.stats,
-            ttft,
-            tpot,
-            e2e,
-            tokens,
-            slo_ok,
+            fold,
         )
     }
 
-    #[allow(clippy::too_many_arguments)]
     fn assemble_parts(
         n_requests: usize,
         n: usize,
@@ -180,12 +352,9 @@ impl RunMetrics {
         makespan: f64,
         energy: f64,
         stats: &CoordStats,
-        ttft: Vec<f64>,
-        tpot: Vec<f64>,
-        e2e: Vec<f64>,
-        tokens: f64,
-        slo_ok: usize,
+        fold: RecordFold,
     ) -> RunMetrics {
+        let RecordFold { ttft, tpot, e2e, tokens, slo_ok, n_no_first_token } = fold;
         RunMetrics {
             n_requests,
             n_serviced: n,
@@ -208,6 +377,8 @@ impl RunMetrics {
             transfer_bytes: stats.transfer_bytes,
             transfer_seconds: stats.transfer_seconds,
             recomputes: stats.recomputes,
+            n_no_first_token,
+            exact: true,
             e2e_samples: e2e,
             ttft_samples: ttft,
             tpot_samples: tpot,
@@ -246,7 +417,9 @@ impl RunMetrics {
             .set("events", self.events)
             .set("transfers", self.transfers)
             .set("transfer_bytes", self.transfer_bytes)
-            .set("recomputes", self.recomputes);
+            .set("recomputes", self.recomputes)
+            .set("n_no_first_token", self.n_no_first_token)
+            .set("metrics", if self.exact { "exact" } else { "sketch" });
         j
     }
 }
@@ -264,7 +437,7 @@ mod tests {
     use crate::scheduler::{BatchingKind, LlmSched, Packing, SchedConfig};
     use crate::workload::trace::{TraceKind, WorkloadSpec};
 
-    fn run_small() -> Coordinator {
+    fn run_small_opts(sketch: bool) -> Coordinator {
         let cluster = LlmCluster::new(LLAMA3_70B, H100, 8);
         let clients: Vec<Box<dyn Client>> = vec![Box::new(LlmClient::new(
             0,
@@ -277,6 +450,9 @@ mod tests {
             Router::new(RoutePolicy::RoundRobin),
             Network::single_platform(1),
         );
+        if sketch {
+            coord.sink = Some(MetricsSink::new(SloLadder::standard()));
+        }
         coord.inject(
             WorkloadSpec::new("llama3-70b", TraceKind::AzureConv, 15, 2.0)
                 .with_seed(3)
@@ -284,6 +460,10 @@ mod tests {
         );
         coord.run();
         coord
+    }
+
+    fn run_small() -> Coordinator {
+        run_small_opts(false)
     }
 
     #[test]
@@ -371,6 +551,83 @@ mod tests {
         assert_eq!(a.throughput_tok_s, b.throughput_tok_s);
         assert_eq!(a.goodput_frac, b.goodput_frac);
         assert_eq!(a.tok_per_joule, b.tok_per_joule);
+    }
+
+    #[test]
+    fn sink_collection_matches_exact_within_alpha() {
+        // identical run, streamed through the sink vs retained records:
+        // counts/sums exact, percentiles within the sketch error bound,
+        // and no sample vecs allocated on the streaming side
+        let slo = SloLadder::standard();
+        let exact = RunMetrics::collect(&run_small(), &slo);
+        let coord = run_small_opts(true);
+        assert!(coord.records.is_empty(), "sink mode must not retain records");
+        assert!(coord.serviced.is_empty(), "sink mode collapses IDs to counters");
+        let sk = RunMetrics::collect(&coord, &slo);
+        assert!(exact.exact && !sk.exact);
+        assert_eq!(sk.n_serviced, exact.n_serviced);
+        assert_eq!(sk.n_failed, exact.n_failed);
+        assert_eq!(sk.events, exact.events);
+        assert_eq!(sk.makespan, exact.makespan);
+        // token counts are integer-valued f64 sums — exactly equal
+        assert_eq!(sk.throughput_tok_s, exact.throughput_tok_s);
+        assert_eq!(sk.goodput_frac, exact.goodput_frac);
+        assert_eq!(sk.energy_joules, exact.energy_joules);
+        assert!(sk.e2e_samples.is_empty() && sk.ttft_samples.is_empty());
+        for (s, e, name) in [
+            (&sk.ttft, &exact.ttft, "ttft"),
+            (&sk.tpot, &exact.tpot, "tpot"),
+            (&sk.e2e, &exact.e2e, "e2e"),
+        ] {
+            assert_eq!(s.n, e.n, "{name} sample count");
+            for (sv, ev, q) in [(s.p50, e.p50, "p50"), (s.p90, e.p90, "p90"), (s.p99, e.p99, "p99")] {
+                assert!(
+                    (sv - ev).abs() <= crate::util::stats::SKETCH_ALPHA * ev.abs() + 1e-12,
+                    "{name} {q}: sketch={sv} exact={ev}"
+                );
+            }
+            assert_eq!(s.min, e.min, "{name} min is tracked exactly");
+            assert_eq!(s.max, e.max, "{name} max is tracked exactly");
+        }
+    }
+
+    #[test]
+    fn no_first_token_counted_not_poisoned() {
+        use crate::sim::SimTime;
+        use crate::workload::request::{Request, Stage};
+        // r1 normal; r2 finished without ever emitting a first token
+        let mut r1 = Request::new(1, "llama3-70b", SimTime::ZERO,
+            vec![Stage::Prefill, Stage::Decode], 100, 10);
+        r1.decoded = 10;
+        r1.first_token_time = Some(SimTime::from_secs(0.1));
+        r1.last_token_time = Some(SimTime::from_secs(0.5));
+        r1.finished = Some(SimTime::from_secs(0.5));
+        let mut r2 = Request::new(2, "llama3-70b", SimTime::ZERO,
+            vec![Stage::Prefill, Stage::Decode], 100, 10);
+        r2.finished = Some(SimTime::from_secs(0.2));
+        let records = vec![
+            CompletionRecord::of(&r1, false),
+            CompletionRecord::of(&r2, false),
+        ];
+        let fold = RunMetrics::fold_records(&records, &SloLadder::standard());
+        // regression: the ∞ sample is gone, the request is counted
+        assert_eq!(fold.n_no_first_token, 1);
+        assert_eq!(fold.ttft.len(), 1);
+        assert!(fold.ttft[0].is_finite());
+        assert!(fold.e2e.iter().all(|x| x.is_finite()));
+        // the sink agrees
+        let mut sink = MetricsSink::new(SloLadder::standard());
+        for r in &records {
+            sink.fold(r);
+        }
+        assert_eq!(sink.n_no_first_token, 1);
+        assert_eq!(sink.ttft.count(), 1);
+        assert_eq!(sink.n_completed(), 2);
+        // and for normal runs (every record has a first token) the exact
+        // path is pinned unchanged: no record drops out
+        let m = RunMetrics::collect(&run_small(), &SloLadder::standard());
+        assert_eq!(m.n_no_first_token, 0);
+        assert_eq!(m.ttft_samples.len(), m.n_serviced);
     }
 
     #[test]

@@ -116,6 +116,19 @@ impl Args {
         }
     }
 
+    /// Strict enumerated flag: the value (or `default` when the flag is
+    /// absent) must be one of `allowed`. The mode knobs (`--metrics`)
+    /// sit on this — a typo must fail loudly, not silently run a whole
+    /// benchmark under the wrong metrics contract.
+    pub fn one_of(&self, key: &str, default: &str, allowed: &[&str]) -> Result<String, String> {
+        let v = self.str_or(key, default);
+        if allowed.contains(&v.as_str()) {
+            Ok(v)
+        } else {
+            Err(format!("--{key} must be one of {}, got '{v}'", allowed.join("|")))
+        }
+    }
+
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         self.mark(key);
         self.flags
@@ -194,6 +207,19 @@ mod tests {
         let a = parse("x --typo 1");
         let _ = a.usize_or("n", 0);
         assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn one_of_is_strict() {
+        let a = parse("x --metrics sketch");
+        assert_eq!(a.one_of("metrics", "exact", &["exact", "sketch"]), Ok("sketch".into()));
+        assert!(a.finish().is_ok());
+        // absent flag falls back to the default
+        assert_eq!(parse("x").one_of("metrics", "exact", &["exact", "sketch"]), Ok("exact".into()));
+        // a typo is a hard error, not a silent mode change
+        assert!(parse("x --metrics sketchy")
+            .one_of("metrics", "exact", &["exact", "sketch"])
+            .is_err());
     }
 
     #[test]

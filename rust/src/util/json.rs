@@ -7,6 +7,7 @@
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::fmt::Write as _;
 
 /// A JSON value. Object keys are kept in a `BTreeMap` so that serialized
 /// output is deterministic (stable across runs — useful for golden tests).
@@ -117,15 +118,29 @@ impl Json {
     /// Serialize compactly.
     pub fn to_string(&self) -> String {
         let mut out = String::new();
-        self.write(&mut out, None, 0);
+        self.write_into(&mut out);
         out
     }
 
     /// Serialize with 2-space indentation.
     pub fn to_pretty(&self) -> String {
         let mut out = String::new();
-        self.write(&mut out, Some(2), 0);
+        self.write_pretty_into(&mut out, 0);
         out
+    }
+
+    /// Append the compact serialization to an existing buffer — no
+    /// intermediate `String` per value, so callers assembling large
+    /// documents reuse one allocation.
+    pub fn write_into(&self, out: &mut String) {
+        self.write(out, None, 0);
+    }
+
+    /// Append the 2-space-indented serialization to `out` as if this
+    /// value sat at nesting level `depth` of an enclosing document —
+    /// the building block for streamed emission ([`JsonRowWriter`]).
+    pub fn write_pretty_into(&self, out: &mut String, depth: usize) {
+        self.write(out, Some(2), depth);
     }
 
     fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
@@ -213,13 +228,16 @@ fn newline(out: &mut String, indent: Option<usize>, depth: usize) {
 }
 
 fn write_num(out: &mut String, n: f64) {
+    // write! into the existing buffer — the format!() this replaced
+    // allocated a throwaway String per number, the dominant cost of
+    // emitting big numeric documents (BENCH rows, metric dumps)
     if !n.is_finite() {
         // JSON has no Inf/NaN; clamp to null (only ever hit by broken metrics).
         out.push_str("null");
     } else if n == n.trunc() && n.abs() < 1e15 {
-        out.push_str(&format!("{}", n as i64));
+        let _ = write!(out, "{}", n as i64);
     } else {
-        out.push_str(&format!("{}", n));
+        let _ = write!(out, "{n}");
     }
 }
 
@@ -232,11 +250,52 @@ fn write_str(out: &mut String, s: &str) {
             '\n' => out.push_str("\\n"),
             '\r' => out.push_str("\\r"),
             '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
             c => out.push(c),
         }
     }
     out.push('"');
+}
+
+/// Streams a pretty-printed JSON array of rows to an `io::Write`
+/// without ever materializing the whole document: each [`push`]
+/// serializes one row into a reused buffer and writes it through
+/// immediately. The emitted bytes are identical to
+/// `Json::Arr(rows).to_pretty()` — golden files and parsers can't tell
+/// the difference. `bench::run_and_report` streams `BENCH_*.json`
+/// through this so output cost at the 100M tier stays O(one row), and
+/// any similarly shaped row-per-record dump can do the same.
+///
+/// [`push`]: JsonRowWriter::push
+pub struct JsonRowWriter<W: std::io::Write> {
+    out: W,
+    n: usize,
+    buf: String,
+}
+
+impl<W: std::io::Write> JsonRowWriter<W> {
+    pub fn new(out: W) -> Self {
+        JsonRowWriter { out, n: 0, buf: String::new() }
+    }
+
+    /// Serialize `row` at array depth and write it through.
+    pub fn push(&mut self, row: &Json) -> std::io::Result<()> {
+        self.buf.clear();
+        self.buf.push_str(if self.n == 0 { "[\n  " } else { ",\n  " });
+        row.write_pretty_into(&mut self.buf, 1);
+        self.n += 1;
+        self.out.write_all(self.buf.as_bytes())
+    }
+
+    /// Close the array and flush; returns the inner writer.
+    pub fn finish(mut self) -> std::io::Result<W> {
+        self.out
+            .write_all(if self.n == 0 { b"[]".as_slice() } else { b"\n]".as_slice() })?;
+        self.out.flush()?;
+        Ok(self.out)
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -565,5 +624,41 @@ mod tests {
     fn non_finite_nums_become_null() {
         assert_eq!(Json::Num(f64::NAN).to_string(), "null");
         assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn write_into_appends_in_place() {
+        let j = Json::parse(r#"{"a":[1,2],"b":"x"}"#).unwrap();
+        let mut buf = String::from("prefix ");
+        j.write_into(&mut buf);
+        assert_eq!(buf, format!("prefix {}", j.to_string()));
+        // pretty at depth 1 indents continuation lines as if nested
+        let mut buf = String::new();
+        j.write_pretty_into(&mut buf, 1);
+        assert!(buf.ends_with("\n  }"), "depth-1 closer indents two spaces: {buf:?}");
+    }
+
+    #[test]
+    fn row_writer_matches_to_pretty() {
+        // rows with every value shape the bench document uses
+        let rows: Vec<Json> = vec![
+            Json::parse(r#"{"name":"a","n":1,"nested":{"x":[1,2.5,true]}}"#).unwrap(),
+            Json::parse(r#"{"name":"b","s":"q\"uote","v":null}"#).unwrap(),
+            Json::parse(r#"{"aggregate":{"events":12,"wall_s":0.25}}"#).unwrap(),
+        ];
+        let mut w = JsonRowWriter::new(Vec::new());
+        for r in &rows {
+            w.push(r).unwrap();
+        }
+        let bytes = w.finish().unwrap();
+        let streamed = String::from_utf8(bytes).unwrap();
+        assert_eq!(streamed, Json::Arr(rows.clone()).to_pretty());
+        // and the result still parses back to the same document
+        assert_eq!(Json::parse(&streamed).unwrap(), Json::Arr(rows));
+        // empty document
+        let w = JsonRowWriter::new(Vec::new());
+        let bytes = w.finish().unwrap();
+        assert_eq!(bytes, b"[]");
+        assert_eq!(Json::Arr(Vec::new()).to_pretty(), "[]");
     }
 }

@@ -101,6 +101,235 @@ pub fn cdf(xs: &[f64], points: usize) -> Vec<(f64, f64)> {
         .collect()
 }
 
+/// Default relative-error bound for [`QuantileSketch`]: quantile
+/// estimates are within ±1% of the exact sample value. This is the
+/// documented error contract of `--metrics sketch` runs (see
+/// docs/performance.md, "Memory model").
+pub const SKETCH_ALPHA: f64 = 0.01;
+
+/// Mergeable streaming quantile sketch (DDSketch-style, Masson et al.):
+/// logarithmic bins with relative width α, so any quantile estimate is
+/// within relative error α of the exact sample at that rank — in O(log
+/// range) memory regardless of how many samples stream through.
+///
+/// Determinism is part of the contract, mirroring the repo's
+/// bit-exactness discipline:
+///
+/// * bins hold **integer** counts in a `BTreeMap`, so insertion order
+///   never matters and `merge` is exactly associative and commutative
+///   for every count and quantile — a sharded run's per-domain sketches
+///   merge to bit-identical percentiles at any shard count;
+/// * only the `sum` accumulator (used for the mean) is an f64 whose
+///   value depends on fold order, which is why sharded-vs-serial tests
+///   pin quantiles exactly and means approximately;
+/// * the NaN/∞ policy matches [`percentile`]'s `total_cmp` order:
+///   non-positive values rank first (estimated 0.0 — latencies are
+///   non-negative), then finite bins ascending, then +∞, then NaN.
+///   An empty sketch reports 0.0, like `percentile` on empty input.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantileSketch {
+    alpha: f64,
+    /// ln γ where γ = (1+α)/(1−α); bin k covers (γ^(k−1), γ^k]
+    gamma_ln: f64,
+    /// finite positive samples: bin key → count, ordered ascending
+    bins: std::collections::BTreeMap<i32, u64>,
+    /// samples ≤ 0.0 (incl. −∞), all estimated as 0.0
+    n_low: u64,
+    n_inf: u64,
+    n_nan: u64,
+    n: u64,
+    /// running sum for the mean — the one order-sensitive accumulator
+    sum: f64,
+    /// min/max under `total_cmp` (NaN largest), clamping bin estimates
+    min: f64,
+    max: f64,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        Self::new(SKETCH_ALPHA)
+    }
+}
+
+impl QuantileSketch {
+    pub fn new(alpha: f64) -> QuantileSketch {
+        assert!(alpha > 0.0 && alpha < 1.0, "sketch alpha must be in (0,1)");
+        let gamma = (1.0 + alpha) / (1.0 - alpha);
+        QuantileSketch {
+            alpha,
+            gamma_ln: gamma.ln(),
+            bins: std::collections::BTreeMap::new(),
+            n_low: 0,
+            n_inf: 0,
+            n_nan: 0,
+            n: 0,
+            sum: 0.0,
+            min: 0.0,
+            max: 0.0,
+        }
+    }
+
+    /// The configured relative-error bound α.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Mean of everything inserted (0.0 when empty). NaN/∞ samples
+    /// poison the mean exactly as they would a retained-sample mean.
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Estimated resident bytes: bin storage dominates; counters and
+    /// BTreeMap node overhead are folded into the per-bin constant.
+    pub fn bytes_est(&self) -> usize {
+        96 + self.bins.len() * 48
+    }
+
+    pub fn insert(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            if x.total_cmp(&self.min).is_lt() {
+                self.min = x;
+            }
+            if x.total_cmp(&self.max).is_gt() {
+                self.max = x;
+            }
+        }
+        self.n += 1;
+        self.sum += x;
+        if x.is_nan() {
+            self.n_nan += 1;
+        } else if x == f64::INFINITY {
+            self.n_inf += 1;
+        } else if x <= 0.0 {
+            self.n_low += 1;
+        } else {
+            let k = (x.ln() / self.gamma_ln).ceil() as i32;
+            *self.bins.entry(k).or_insert(0) += 1;
+        }
+    }
+
+    /// Fold `other` into `self`. Bin counts add exactly, so merging is
+    /// associative and order-independent for every quantile; only the
+    /// f64 `sum` (mean) depends on merge order. Callers that need a
+    /// deterministic mean merge in a fixed order (the sharded outcome
+    /// merge walks domains ascending).
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        assert!(
+            (self.alpha - other.alpha).abs() < 1e-12,
+            "cannot merge sketches with different alpha"
+        );
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            self.min = other.min;
+            self.max = other.max;
+        } else {
+            if other.min.total_cmp(&self.min).is_lt() {
+                self.min = other.min;
+            }
+            if other.max.total_cmp(&self.max).is_gt() {
+                self.max = other.max;
+            }
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.n_low += other.n_low;
+        self.n_inf += other.n_inf;
+        self.n_nan += other.n_nan;
+        for (&k, &c) in &other.bins {
+            *self.bins.entry(k).or_insert(0) += c;
+        }
+    }
+
+    /// Midpoint estimate for bin k, within relative error α of every
+    /// sample in the bin; clamped to the observed [min, max] so edge
+    /// bins never overshoot the actual extremes.
+    fn bin_estimate(&self, k: i32) -> f64 {
+        let gamma = self.gamma_ln.exp();
+        let est = 2.0 * (k as f64 * self.gamma_ln).exp() / (gamma + 1.0);
+        let lo = if self.min.is_finite() { self.min.max(0.0) } else { 0.0 };
+        let hi = if self.max.is_finite() { self.max } else { f64::MAX };
+        est.clamp(lo, hi)
+    }
+
+    /// Value estimate at rank r (0-based) in `total_cmp` order:
+    /// lows → finite bins ascending → +∞ → NaN.
+    fn value_at_rank(&self, mut r: u64) -> f64 {
+        if r < self.n_low {
+            return 0.0;
+        }
+        r -= self.n_low;
+        for (&k, &c) in &self.bins {
+            if r < c {
+                return self.bin_estimate(k);
+            }
+            r -= c;
+        }
+        if r < self.n_inf {
+            return f64::INFINITY;
+        }
+        f64::NAN
+    }
+
+    /// Quantile estimate (q in [0,100]) with the same rank convention
+    /// as [`percentile`]: linear interpolation between the estimates at
+    /// the two bracketing ranks. For positive finite data the result is
+    /// within relative error α of the exact interpolated percentile.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        if self.n == 1 {
+            return self.value_at_rank(0);
+        }
+        let pos = (q / 100.0).clamp(0.0, 1.0) * (self.n - 1) as f64;
+        let lo = pos.floor() as u64;
+        let hi = pos.ceil() as u64;
+        let frac = pos - lo as f64;
+        let a = self.value_at_rank(lo);
+        if hi == lo {
+            return a;
+        }
+        let b = self.value_at_rank(hi);
+        a * (1.0 - frac) + b * frac
+    }
+
+    /// The same latency [`Summary`] shape the exact path produces, with
+    /// quantiles from the sketch. `min`/`max` are exact (tracked per
+    /// sample); `mean` is exact up to f64 fold order.
+    pub fn summary(&self) -> Summary {
+        if self.n == 0 {
+            return Summary::default();
+        }
+        Summary {
+            n: self.n as usize,
+            mean: self.mean(),
+            p50: self.quantile(50.0),
+            p90: self.quantile(90.0),
+            p99: self.quantile(99.0),
+            min: self.min,
+            max: self.max,
+        }
+    }
+}
+
 /// Ordinary least squares fit: returns coefficients w minimizing
 /// ||X w − y||², via normal equations + Gaussian elimination with partial
 /// pivoting. Feature counts here are tiny (≤8), so this is plenty.
@@ -254,6 +483,147 @@ mod tests {
     #[test]
     fn mape_simple() {
         assert!((mape(&[110.0], &[100.0]) - 0.1).abs() < 1e-12);
+    }
+
+    /// |sketch − exact| ≤ α·exact at p50/p90/p99 for a given sample set.
+    fn assert_sketch_within_alpha(xs: &[f64], label: &str) {
+        let mut sk = QuantileSketch::default();
+        for &x in xs {
+            sk.insert(x);
+        }
+        for q in [50.0, 90.0, 99.0] {
+            let exact = percentile(xs, q);
+            let approx = sk.quantile(q);
+            let tol = sk.alpha() * exact.abs() + 1e-12;
+            assert!(
+                (approx - exact).abs() <= tol,
+                "{label} p{q}: sketch={approx} exact={exact} tol={tol}"
+            );
+        }
+        assert_eq!(sk.count(), xs.len() as u64);
+    }
+
+    #[test]
+    fn sketch_error_bound_uniform() {
+        let xs: Vec<f64> = (0..10_000).map(|i| (i as f64 + 0.5) / 100.0).collect();
+        assert_sketch_within_alpha(&xs, "uniform");
+    }
+
+    #[test]
+    fn sketch_error_bound_lognormal() {
+        // heavy-tailed: exp of a uniform grid spans ~5 decades, the
+        // regime logarithmic bins exist for
+        let xs: Vec<f64> = (0..10_000)
+            .map(|i| (12.0 * (i as f64 + 0.5) / 10_000.0 - 6.0).exp())
+            .collect();
+        assert_sketch_within_alpha(&xs, "lognormal");
+    }
+
+    #[test]
+    fn sketch_error_bound_adversarial_spike() {
+        // 999 identical fast requests and one 10⁶× outlier: the spike
+        // must not drag p50/p90, and p99 must interpolate exactly as the
+        // sorted-sample path does
+        let mut xs = vec![1.0; 999];
+        xs.push(1.0e6);
+        assert_sketch_within_alpha(&xs, "spike");
+        // repeated extreme bimodal values
+        let xs: Vec<f64> = (0..1000)
+            .map(|i| if i % 10 == 0 { 3600.0 } else { 0.001 })
+            .collect();
+        assert_sketch_within_alpha(&xs, "bimodal");
+    }
+
+    #[test]
+    fn sketch_merge_is_order_stable_and_associative() {
+        let xs: Vec<f64> = (0..3_000)
+            .map(|i| ((i * 2654435761u64 % 97) as f64 + 1.0) * 0.01)
+            .collect();
+        let mut parts: Vec<QuantileSketch> = Vec::new();
+        for chunk in xs.chunks(500) {
+            let mut sk = QuantileSketch::default();
+            for &x in chunk {
+                sk.insert(x);
+            }
+            parts.push(sk);
+        }
+        // merge(a,b) vs merge(b,a): every quantile and count bit-identical
+        let mut ab = parts[0].clone();
+        ab.merge(&parts[1]);
+        let mut ba = parts[1].clone();
+        ba.merge(&parts[0]);
+        assert_eq!(ab.count(), ba.count());
+        for q in [0.0, 25.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(ab.quantile(q).to_bits(), ba.quantile(q).to_bits());
+        }
+        // associativity: fold left-to-right vs pairwise tree
+        let mut left = parts[0].clone();
+        for p in &parts[1..] {
+            left.merge(p);
+        }
+        let mut pair01 = parts[0].clone();
+        pair01.merge(&parts[1]);
+        let mut pair23 = parts[2].clone();
+        pair23.merge(&parts[3]);
+        let mut pair45 = parts[4].clone();
+        pair45.merge(&parts[5]);
+        let mut tree = pair01;
+        tree.merge(&pair23);
+        tree.merge(&pair45);
+        assert_eq!(left.count(), tree.count());
+        for q in [50.0, 90.0, 99.0] {
+            assert_eq!(left.quantile(q).to_bits(), tree.quantile(q).to_bits());
+        }
+        // merged == single sketch over the whole stream, bit for bit
+        let mut whole = QuantileSketch::default();
+        for &x in &xs {
+            whole.insert(x);
+        }
+        for q in [50.0, 90.0, 99.0] {
+            assert_eq!(whole.quantile(q).to_bits(), left.quantile(q).to_bits());
+        }
+        // the f64 mean is order-sensitive but must agree closely
+        assert!((left.mean() - whole.mean()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sketch_edge_cases() {
+        // empty: mirrors percentile()'s 0.0-on-empty convention
+        let sk = QuantileSketch::default();
+        assert_eq!(sk.quantile(50.0), 0.0);
+        assert_eq!(sk.summary(), Summary::default());
+        assert_eq!(sk.bytes_est(), 96);
+        // single sample: every quantile is (an α-accurate estimate of) it
+        let mut sk = QuantileSketch::default();
+        sk.insert(42.0);
+        for q in [0.0, 50.0, 100.0] {
+            assert!((sk.quantile(q) - 42.0).abs() <= SKETCH_ALPHA * 42.0);
+        }
+        let s = sk.summary();
+        assert_eq!(s.n, 1);
+        assert_eq!(s.min, 42.0);
+        assert_eq!(s.max, 42.0);
+        // all-NaN: NaN ranks last (total_cmp), so high quantiles are NaN
+        let mut sk = QuantileSketch::default();
+        sk.insert(f64::NAN);
+        sk.insert(f64::NAN);
+        assert_eq!(sk.count(), 2);
+        assert!(sk.quantile(90.0).is_nan());
+        assert!(sk.summary().max.is_nan());
+        // zeros and +inf order around finite bins like total_cmp sorts
+        let mut sk = QuantileSketch::default();
+        sk.insert(0.0);
+        sk.insert(1.0);
+        sk.insert(f64::INFINITY);
+        assert_eq!(sk.quantile(0.0), 0.0);
+        assert!((sk.quantile(50.0) - 1.0).abs() <= SKETCH_ALPHA);
+        assert_eq!(sk.quantile(100.0), f64::INFINITY);
+        // memory stays O(bins), not O(samples)
+        let mut sk = QuantileSketch::default();
+        for i in 0..100_000 {
+            sk.insert(1.0 + (i % 1000) as f64 * 0.01);
+        }
+        assert!(sk.bytes_est() < 32 * 1024, "bytes={}", sk.bytes_est());
     }
 
     #[test]

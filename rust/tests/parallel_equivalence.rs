@@ -16,7 +16,7 @@
 //!   service requests in exactly the serial order;
 //! * determinism: repeated parallel runs are identical to each other.
 
-use hermes::bench::{self, Baseline, BenchResult, BenchRun};
+use hermes::bench::{self, Baseline, BenchResult, BenchRun, MetricsOverride};
 use hermes::experiments::common::{self, StrategyResult};
 use hermes::scenario::Scenario;
 use hermes::sim::parallel;
@@ -32,6 +32,7 @@ fn deterministic_fields(b: &BenchRun) -> String {
          n_clients={} makespan_s={:?} throughput_tok_s={:?} pool_reads={} \
          pool_writes={} pool_slots={} pool_peak_resident={} \
          peak_resident_slots={} resident_bytes_est={} retired={} \
+         metrics_bytes_est={} metrics_sketch={} \
          transfers={} transfer_bytes={:?} domains={}",
         b.events,
         b.peak_queue,
@@ -48,6 +49,8 @@ fn deterministic_fields(b: &BenchRun) -> String {
         b.peak_resident_slots,
         b.resident_bytes_est,
         b.retired,
+        b.metrics_bytes_est,
+        b.metrics_sketch,
         b.transfers,
         b.transfer_bytes,
         b.domains,
@@ -93,14 +96,18 @@ fn bench_rows_are_bit_identical_across_job_counts() {
     // 50k tier exercises all three speed baselines at fast scale; the
     // 1M tier adds the streamed/retired mode and its retained baseline
     let names = vec!["bench_llm_50k".to_string(), "bench_llm_1m".to_string()];
-    let serial = bench::run_scenarios(&names, true, Baseline::Auto, 1, 1).unwrap();
+    let serial =
+        bench::run_scenarios(&names, true, Baseline::Auto, 1, 1, MetricsOverride::Auto).unwrap();
     for jobs in [2, 4] {
-        let parallel = bench::run_scenarios(&names, true, Baseline::Auto, jobs, 1).unwrap();
+        let parallel =
+            bench::run_scenarios(&names, true, Baseline::Auto, jobs, 1, MetricsOverride::Auto)
+                .unwrap();
         assert_rows_identical(&serial, &parallel, jobs);
     }
     // repeated parallel runs are identical to each other, not just to
     // the oracle
-    let again = bench::run_scenarios(&names, true, Baseline::Auto, 4, 1).unwrap();
+    let again =
+        bench::run_scenarios(&names, true, Baseline::Auto, 4, 1, MetricsOverride::Auto).unwrap();
     assert_rows_identical(&serial, &again, 4);
 }
 
@@ -110,7 +117,8 @@ fn bench_json_rows_carry_jobs_and_aggregate_columns() {
         return;
     }
     let names = vec!["bench_llm_50k".to_string()];
-    let results = bench::run_scenarios(&names, true, Baseline::Auto, 2, 1).unwrap();
+    let results =
+        bench::run_scenarios(&names, true, Baseline::Auto, 2, 1, MetricsOverride::Auto).unwrap();
     let doc = Json::parse(&bench::to_json(&results, 2, 1.25).to_pretty()).unwrap();
     let rows = doc.as_arr().unwrap();
     assert_eq!(rows[0].at(&["jobs"]).and_then(|j| j.as_f64()), Some(2.0));

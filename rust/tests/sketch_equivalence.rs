@@ -1,0 +1,207 @@
+//! Differential suite for the streaming metrics sink
+//! (`metrics::MetricsSink`, the `--metrics sketch` mode): streaming
+//! completions through mergeable quantile sketches is a memory
+//! decision with a *bounded-error* contract, never an unbounded one.
+//! Same style as `pool_equivalence` / `shard_equivalence`, extended
+//! where bit-exactness is impossible by construction:
+//!
+//! * counters, token sums and extremes are **bit-exact** against the
+//!   retained-records oracle: n/serviced/failed, makespan, events,
+//!   throughput, goodput, energy, per-summary min/max (the sink tracks
+//!   them exactly; token sums are integer-valued f64, so accumulation
+//!   order cannot shift them);
+//! * percentiles carry the documented relative-error bound: sketch
+//!   p50/p90/p99 within `SKETCH_ALPHA` (1%) of the exact oracle's, on
+//!   TTFT, TPOT and E2E alike (docs/performance.md "Streaming
+//!   metrics");
+//! * sharding is invisible: `--shards 2/4` merge per-domain sketches
+//!   in domain order, and because the sketch stores integer counts in
+//!   integer bins, the merged quantiles are **bit-identical** to the
+//!   serial sketch run's — the PR 8 bit-exactness machinery applies to
+//!   the sketch path unchanged;
+//! * exact mode keeps its raw sample vecs; sketch mode never
+//!   allocates them.
+
+use hermes::config::slo::SloLadder;
+use hermes::coordinator::shard::{run_sharded, Arrivals};
+use hermes::metrics::{MetricsSink, RunMetrics};
+use hermes::scenario::Scenario;
+use hermes::util::stats::SKETCH_ALPHA;
+
+/// Run `bench_llm_1m` at fast scale (the 1M tier's shape at 10k
+/// requests) under the given metrics mode and shard count, exactly as
+/// the bench harness wires it: streamed arrivals, retirement on, and —
+/// sketch mode — a per-coordinator `MetricsSink`.
+fn run_tier(sketch: bool, shards: usize) -> RunMetrics {
+    let sc = Scenario::load("bench_llm_1m").unwrap();
+    let scale = sc.scale(true);
+    let entry = sc.roster.first().unwrap();
+    let spec = sc.serving(entry, scale.clients).unwrap();
+    let rate = scale.rates[0];
+    let n = scale.clients * scale.requests_per_client;
+    let mix = sc
+        .workload(None, n)
+        .unwrap()
+        .scaled(n, rate * spec.pool.n_clients() as f64);
+    let slo = SloLadder::standard();
+    if shards == 1 {
+        let mut coord = spec.build().unwrap();
+        coord.retire = true;
+        if sketch {
+            coord.sink = Some(MetricsSink::new(slo));
+        }
+        coord.stream(&mix);
+        coord.run();
+        RunMetrics::collect(&coord, &slo)
+    } else {
+        let build = || {
+            let mut c = spec.build()?;
+            c.retire = true;
+            if sketch {
+                c.sink = Some(MetricsSink::new(slo));
+            }
+            Ok(c)
+        };
+        let out = run_sharded(build, Arrivals::Stream(&mix), shards).unwrap();
+        RunMetrics::collect_outcome(&out, &slo)
+    }
+}
+
+/// |sketch − exact| ≤ α·|exact| at every reported percentile, with the
+/// summary's count/min/max exactly equal (the sink tracks extremes
+/// outside the bins).
+fn assert_summary_within_alpha(
+    sk: &hermes::util::stats::Summary,
+    ex: &hermes::util::stats::Summary,
+    label: &str,
+) {
+    assert_eq!(sk.n, ex.n, "{label}: sample count diverged");
+    assert_eq!(sk.min.to_bits(), ex.min.to_bits(), "{label}: min diverged");
+    assert_eq!(sk.max.to_bits(), ex.max.to_bits(), "{label}: max diverged");
+    for (q, s, e) in [("p50", sk.p50, ex.p50), ("p90", sk.p90, ex.p90), ("p99", sk.p99, ex.p99)] {
+        assert!(
+            (s - e).abs() <= SKETCH_ALPHA * e.abs() + 1e-12,
+            "{label} {q}: sketch {s} vs exact {e} exceeds α={SKETCH_ALPHA}"
+        );
+    }
+    // the sink's mean comes from a running f64 sum whose accumulation
+    // order matches the serial fold, so it agrees far beyond α
+    assert!(
+        (sk.mean - ex.mean).abs() <= 1e-9 * ex.mean.abs() + 1e-12,
+        "{label}: mean {} vs {}",
+        sk.mean,
+        ex.mean
+    );
+}
+
+#[test]
+fn sketch_percentiles_match_exact_oracle_serial_and_sharded() {
+    if std::env::var("HERMES_FULL").is_ok() {
+        return; // smoke suite: don't inherit paper scale
+    }
+    let exact = run_tier(false, 1);
+    assert!(exact.exact, "retained-records mode is the oracle");
+    assert!(exact.n_serviced > 0);
+    assert!(!exact.e2e_samples.is_empty(), "exact mode keeps raw CDF samples");
+
+    let mut sketch_runs = Vec::new();
+    for shards in [1, 2, 4] {
+        let sk = run_tier(true, shards);
+        assert!(!sk.exact, "sink mode reports metrics=sketch (shards={shards})");
+        // raw sample retention is gated off — streaming runs never
+        // allocate the per-request vecs
+        assert!(sk.e2e_samples.is_empty() && sk.ttft_samples.is_empty());
+        assert!(sk.tpot_samples.is_empty());
+        // counters and running sums are bit-exact against the oracle
+        assert_eq!(sk.n_requests, exact.n_requests, "shards={shards}");
+        assert_eq!(sk.n_serviced, exact.n_serviced, "shards={shards}");
+        assert_eq!(sk.n_failed, exact.n_failed, "shards={shards}");
+        assert_eq!(sk.n_no_first_token, exact.n_no_first_token, "shards={shards}");
+        assert_eq!(sk.events, exact.events, "shards={shards}");
+        assert_eq!(sk.makespan.to_bits(), exact.makespan.to_bits(), "shards={shards}");
+        // token counts are integer-valued f64: order-independent sums,
+        // so throughput and goodput agree exactly in every mode
+        assert_eq!(
+            sk.throughput_tok_s.to_bits(),
+            exact.throughput_tok_s.to_bits(),
+            "shards={shards}"
+        );
+        assert_eq!(sk.goodput_frac.to_bits(), exact.goodput_frac.to_bits(), "shards={shards}");
+        assert_eq!(sk.energy_joules.to_bits(), exact.energy_joules.to_bits(), "shards={shards}");
+        // percentiles: the bounded-error contract
+        assert_summary_within_alpha(&sk.ttft, &exact.ttft, "ttft");
+        assert_summary_within_alpha(&sk.tpot, &exact.tpot, "tpot");
+        assert_summary_within_alpha(&sk.e2e, &exact.e2e, "e2e");
+        sketch_runs.push(sk);
+    }
+
+    // across shard counts the sketch path is bit-identical: integer
+    // bin counts merge exactly, in deterministic domain order
+    let serial = &sketch_runs[0];
+    for (i, sk) in sketch_runs.iter().enumerate().skip(1) {
+        let shards = [1, 2, 4][i];
+        for (s, e, label) in
+            [(&sk.ttft, &serial.ttft, "ttft"), (&sk.tpot, &serial.tpot, "tpot"), (&sk.e2e, &serial.e2e, "e2e")]
+        {
+            assert_eq!(s.n, e.n, "{label}: n diverged at shards={shards}");
+            for (q, a, b) in [("p50", s.p50, e.p50), ("p90", s.p90, e.p90), ("p99", s.p99, e.p99)]
+            {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{label} {q}: sharded sketch diverged from serial sketch at shards={shards}"
+                );
+            }
+            assert_eq!(s.min.to_bits(), e.min.to_bits());
+            assert_eq!(s.max.to_bits(), e.max.to_bits());
+        }
+    }
+}
+
+#[test]
+fn sketch_sink_memory_is_o1_in_request_count() {
+    if std::env::var("HERMES_FULL").is_ok() {
+        return;
+    }
+    // fold 1k vs 100k synthetic completions through sinks: the sketch
+    // state must not grow with request count (bins depend only on the
+    // value range), which is the whole point of the 100M tier
+    use hermes::model::ModelId;
+    use hermes::sim::time::SimTime;
+    use hermes::workload::request::CompletionRecord;
+    let slo = SloLadder::standard();
+    let model = ModelId::named("llama3-70b");
+    let footprint = |n: usize| {
+        let mut sink = MetricsSink::new(slo);
+        for i in 0..n {
+            // TTFTs spanning three decades (10ms .. ~10s), deterministic
+            let t1 = 0.01 + ((i as u64 * 2654435761) % 997) as f64 * 0.01;
+            let arrive = i as f64 * 0.001;
+            let r = CompletionRecord {
+                id: i as u64,
+                model,
+                arrival: SimTime::from_secs(arrive),
+                finished: Some(SimTime::from_secs(arrive + t1 + 1.0)),
+                first_token_time: Some(SimTime::from_secs(arrive + t1)),
+                last_token_time: Some(SimTime::from_secs(arrive + t1 + 0.9)),
+                first_response_time: None,
+                prompt_tokens: 128,
+                output_tokens: 64,
+                decoded: 64,
+                branches: 1,
+                prior_decoded: 0,
+                failed: false,
+            };
+            sink.fold(&r);
+        }
+        assert_eq!(sink.n_completed(), n as u64);
+        sink.bytes_est()
+    };
+    let small = footprint(1_000);
+    let large = footprint(100_000);
+    assert!(
+        large <= small * 2,
+        "sink grew with request count: {small} bytes at 1k vs {large} at 100k"
+    );
+    assert!(large < 256 * 1024, "sink footprint {large} exceeds the O(1) budget");
+}

@@ -25,14 +25,19 @@ scale, not regression):
   hardware is heterogeneous). Thresholds resolve CLI `--threshold
   NAME=RATIO` first, then the built-in SCENARIO_THRESHOLDS table, then
   `--default-threshold`.
-* **memory**: WARN when fresh `incremental.peak_resident_slots` or
-  `incremental.resident_bytes_est` *grows* beyond the scenario's
-  memory threshold x baseline (default 1.25x). Deterministic
-  simulations make these counters machine-independent, so growth here
-  is a real regression of the O(in-flight) guarantee — e.g. a leak of
-  retired slots — not noise. `--mem-threshold NAME=RATIO` overrides
-  per scenario (rows without the fields, i.e. pre-retirement
-  baselines, are skipped).
+* **memory**: WARN when fresh `incremental.peak_resident_slots`,
+  `incremental.resident_bytes_est` or `incremental.metrics_bytes_est`
+  *grows* beyond the scenario's memory threshold x baseline (default
+  1.25x). Deterministic simulations make these counters
+  machine-independent, so growth here is a real regression of the
+  O(in-flight) guarantee — e.g. a leak of retired slots, or sketch
+  metrics state scaling with request count at the 100M tier — not
+  noise. `--mem-threshold NAME=RATIO` overrides per scenario (rows
+  without the fields, i.e. baselines predating a column, are skipped).
+
+Rows also carry a `metrics` column ("exact" or "sketch",
+`--metrics` / `extras.metrics`); it is echoed in the log line but, like
+`shards`, not part of the match key.
 
 Rows from `hermes bench --shards K` carry a `shards` column and a
 `sharded` sub-object; both are ignored when matching baseline rows (the
@@ -65,16 +70,20 @@ SCENARIO_THRESHOLDS = {
     "bench_disagg_100k": 0.50,
 }
 
-# same idea for the memory-growth tripwire (none currently need one —
-# the deterministic counters are machine-independent at every scale)
-SCENARIO_MEM_THRESHOLDS = {}
+# same idea for the memory-growth tripwire: the 100M tier exists to
+# prove bounded resident memory (peak_resident_slots <= 5% of trace,
+# metrics_bytes_est O(1) in request count), so its growth tripwire is
+# tighter than the default
+SCENARIO_MEM_THRESHOLDS = {
+    "bench_llm_100m": 1.10,
+}
 
 # peak_resident_slots / resident_bytes_est above 125% of the committed
 # baseline triggers a warning; these are deterministic counters, so the
 # slack only covers intentional workload-shape tweaks
 DEFAULT_MEM_THRESHOLD = 1.25
 
-MEM_FIELDS = ("peak_resident_slots", "resident_bytes_est")
+MEM_FIELDS = ("peak_resident_slots", "resident_bytes_est", "metrics_bytes_est")
 
 
 def load(path):
@@ -107,7 +116,13 @@ def rows_by_name(doc):
                 for k in MEM_FIELDS
                 if isinstance(inc.get(k), (int, float))
             }
-            out[name] = (eps, inc.get("n_requests"), mem, row.get("shards"))
+            out[name] = (
+                eps,
+                inc.get("n_requests"),
+                mem,
+                row.get("shards"),
+                row.get("metrics"),
+            )
     return out
 
 
@@ -202,12 +217,12 @@ def main(argv):
         return 0
 
     warned = False
-    for name, (eps, n, mem, shards) in sorted(fresh.items()):
+    for name, (eps, n, mem, shards, metrics) in sorted(fresh.items()):
         ref_entry = base.get(name)
         if ref_entry is None or ref_entry[0] <= 0:
             print(f"bench-diff: {name}: no baseline entry — skipped")
             continue
-        ref, ref_n, ref_mem, _ref_shards = ref_entry
+        ref, ref_n, ref_mem, _ref_shards, _ref_metrics = ref_entry
         if n != ref_n:
             # a fast-scale smoke vs a full-scale committed run measures
             # scale, not regression — only same-sized runs are comparable
@@ -220,9 +235,12 @@ def main(argv):
             name, SCENARIO_THRESHOLDS.get(name, default_threshold)
         )
         ratio = eps / ref
-        # the shard tag is informational: the compared `incremental` row
-        # is the serial trajectory even in a --shards run
+        # the shard/metrics tags are informational: the compared
+        # `incremental` row is the serial trajectory even in a --shards
+        # run, and the metrics mode only changes the metrics columns
         tag = f" [shards={shards:.0f}]" if isinstance(shards, (int, float)) and shards > 1 else ""
+        if metrics == "sketch":
+            tag += " [metrics=sketch]"
         line = f"bench-diff: {name}{tag}: {eps:,.0f} events/s vs baseline {ref:,.0f} ({ratio:.2f}x)"
         if ratio < threshold:
             print(f"WARNING {line} — below the {threshold:.0%} warn threshold")
