@@ -131,6 +131,15 @@ pub struct BenchRun {
     pub metrics_bytes_est: usize,
     /// whether this run streamed its metrics through the sketch sink
     pub metrics_sketch: bool,
+    /// fraction of injected requests that completed successfully — the
+    /// failure-aware companion to throughput (1.0 on fault-free tiers,
+    /// below it when crashes/timeouts/shedding eat requests)
+    pub goodput: f64,
+    /// fault-policy retry re-queues during the run (0 without a fault
+    /// plan — see [`crate::fault`])
+    pub retries: u64,
+    /// requests failed by their deadline expiring
+    pub timeouts: u64,
     /// priced network hops (stage hand-offs / KV migrations) — one per
     /// request on disaggregated pipelines
     pub transfers: u64,
@@ -321,6 +330,9 @@ pub fn run_once(
         retired: ops.retired,
         metrics_bytes_est,
         metrics_sketch: exec.sketch,
+        goodput: m.n_serviced as f64 / n_requests.max(1) as f64,
+        retries: m.retries,
+        timeouts: m.timeouts,
         transfers: coord.stats.transfers,
         transfer_bytes: coord.stats.transfer_bytes,
         domains: 1,
@@ -416,6 +428,9 @@ pub fn run_once_sharded(
         retired: ops.retired,
         metrics_bytes_est,
         metrics_sketch: exec.sketch,
+        goodput: m.n_serviced as f64 / n_requests.max(1) as f64,
+        retries: m.retries,
+        timeouts: m.timeouts,
         transfers: out.stats.transfers,
         transfer_bytes: out.stats.transfer_bytes,
         domains: out.domains,
@@ -636,6 +651,9 @@ fn run_to_json(b: &BenchRun) -> Json {
         .set("retired", b.retired)
         .set("metrics", if b.metrics_sketch { "sketch" } else { "exact" })
         .set("metrics_bytes_est", b.metrics_bytes_est)
+        .set("goodput", b.goodput)
+        .set("retries", b.retries)
+        .set("timeouts", b.timeouts)
         .set("transfers", b.transfers)
         .set("transfer_gb", b.transfer_bytes / 1e9)
         .set("domains", b.domains);
@@ -786,6 +804,14 @@ pub fn run_and_report(
             "  peak event queue {}  peak in-flight {}  serviced {}/{}",
             inc.peak_queue, inc.peak_inflight, inc.n_serviced, inc.n_requests
         );
+        if inc.retries + inc.timeouts > 0 || inc.goodput < 1.0 {
+            println!(
+                "  faults: goodput {:.1}%  {} retries  {} timeouts",
+                inc.goodput * 100.0,
+                inc.retries,
+                inc.timeouts
+            );
+        }
         println!(
             "  pool: {} reads  {} writes  {} slots  peak resident {}",
             inc.pool_reads, inc.pool_writes, inc.pool_slots, inc.pool_peak_resident
@@ -845,7 +871,7 @@ pub fn run_and_report(
 
     let mut table = crate::util::bench::Table::new(&[
         "scenario", "requests", "clients", "wall(s)", "events/s", "sim-s/wall-s", "peak queue",
-        "peak slots", "retired", "shards", "vs hashmap", "vs full-scan",
+        "peak slots", "retired", "goodput", "shards", "vs hashmap", "vs full-scan",
     ]);
     for r in &results {
         table.row(&[
@@ -858,6 +884,7 @@ pub fn run_and_report(
             r.incremental.peak_queue.to_string(),
             r.incremental.peak_resident_slots.to_string(),
             r.incremental.retired.to_string(),
+            format!("{:.3}", r.incremental.goodput),
             // the sharded run's effective domains and wall-clock ratio
             // (the serial shipping row is always the columns to the left)
             r.sharded
@@ -916,6 +943,51 @@ mod tests {
         assert!(names.iter().any(|n| n == "bench_llm_1m"));
         assert!(names.iter().any(|n| n == "bench_llm_100m"));
         assert!(names.iter().any(|n| n == "bench_disagg_100k"));
+        assert!(names.iter().any(|n| n == "bench_faults_100k"));
+    }
+
+    #[test]
+    fn fault_bench_reports_goodput_and_shards_identically() {
+        if std::env::var("HERMES_FULL").is_ok() {
+            return;
+        }
+        // fast scale of the robustness tier: a 1P/1D pool whose decode
+        // client crashes for a third of the run, so the fault plan must
+        // visibly eat requests. Baseline::Off keeps this a two-run smoke
+        // (shipping + the scenario's own sharded unit).
+        let r = run_scenarios(
+            &["bench_faults_100k".to_string()],
+            true,
+            Baseline::Off,
+            1,
+            1,
+            MetricsOverride::Auto,
+        )
+        .unwrap()
+        .pop()
+        .unwrap();
+        let inc = &r.incremental;
+        assert!(inc.n_serviced < inc.n_requests, "the crash window must eat requests");
+        assert!(inc.goodput < 1.0, "goodput must reflect the losses");
+        assert!(inc.goodput > 0.3, "most requests still complete");
+        assert!(inc.retries > 0, "transient failures must be retried");
+        // the sharded run replays the same fault schedule bit-identically
+        // (the full differential lives in rust/tests/fault_equivalence.rs)
+        let sh = r.sharded.as_ref().expect("fault tier ships a sharded run");
+        assert_eq!(sh.events, inc.events);
+        assert_eq!(sh.n_serviced, inc.n_serviced);
+        assert_eq!(sh.makespan_s, inc.makespan_s);
+        assert_eq!(sh.goodput, inc.goodput);
+        assert_eq!(sh.retries, inc.retries);
+        assert_eq!(sh.timeouts, inc.timeouts);
+        // the failure-aware columns land in the BENCH_core.json row
+        let j = to_json(&[r], 1, 0.5);
+        let parsed = Json::parse(&j.to_pretty()).unwrap();
+        let row = &parsed.as_arr().unwrap()[0];
+        let col = |k: &str| row.at(&["incremental", k]).and_then(|x| x.as_f64());
+        assert!(col("goodput").unwrap() < 1.0);
+        assert!(col("retries").unwrap() > 0.0);
+        assert!(col("timeouts").is_some());
     }
 
     #[test]

@@ -139,6 +139,21 @@ impl Client for KvRetrievalClient {
         out
     }
 
+    fn evict(&mut self, id: ReqId, pool: &mut RequestPool) {
+        if pool.get(&id).map(|r| r.client) != Some(Some(self.id)) {
+            return;
+        }
+        // purge from queue or from the in-flight batch (whose EngineStep
+        // then finishes without this request)
+        if !self.sched.remove(id) {
+            if let Some((results, _)) = &mut self.current {
+                results.retain(|(r, _)| *r != id);
+            }
+        }
+        self.acct.release(&pool[&id]);
+        pool.unassign(id);
+    }
+
     fn load(&self) -> ClientLoad {
         ClientLoad {
             queued_requests: self.sched.queue_len(),

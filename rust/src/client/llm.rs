@@ -389,6 +389,25 @@ impl Client for LlmClient {
         out
     }
 
+    fn evict(&mut self, id: ReqId, pool: &mut RequestPool) {
+        if pool.get(&id).map(|r| r.client) != Some(Some(self.id)) {
+            return;
+        }
+        // if a step is in flight with this request planned, purge it so
+        // finish_step applies no progress for it (the queued EngineStep
+        // event stays harmless)
+        self.plan.prefill.retain(|(p, _)| *p != id);
+        self.plan.decode.retain(|d| *d != id);
+        if let Some(reserved) = self.sched.remove(id) {
+            self.kv.release(reserved);
+        }
+        let lane = self
+            .lane_of(pool[&id].model)
+            .expect("evict: model not hosted here");
+        self.instances[lane].acct.release(&pool[&id]);
+        pool.unassign(id);
+    }
+
     fn load(&self) -> ClientLoad {
         let mut l = ClientLoad {
             queued_requests: self.sched.queue_len() + self.sched.running_len(),
@@ -703,6 +722,33 @@ mod tests {
         assert_eq!(l.tokens_left, 0.0);
         assert_eq!(l.input_tokens, 0.0);
         assert_eq!(l.queued_requests, 0);
+    }
+
+    #[test]
+    fn evict_unwinds_acceptance_even_mid_step() {
+        let mut c = client(BatchingKind::Continuous);
+        let mut pool = RequestPool::new();
+        pool.insert(1, req(1, 1000, 50));
+        pool.insert(2, req(2, 800, 20));
+        c.accept(SimTime::ZERO, 1, &mut pool);
+        c.accept(SimTime::ZERO, 2, &mut pool);
+        // start a step so both requests are planned + KV-reserved
+        let fin = c.maybe_start_step(SimTime::ZERO, &mut pool).unwrap();
+        c.evict(1, &mut pool);
+        assert_eq!(pool[&1].client, None);
+        assert_eq!(c.load(), c.recompute_load(&pool), "counters unwound");
+        // the queued EngineStep still fires harmlessly for the survivor
+        let out = c.finish_step(fin, &mut pool);
+        assert!(!out.stage_done.contains(&1));
+        assert_eq!(pool[&1].prefilled, 0, "no progress applied to the evictee");
+        assert!(pool[&2].prefilled > 0);
+        c.evict(2, &mut pool);
+        let l = c.load();
+        assert_eq!((l.queued_requests, l.tokens_left), (0, 0.0));
+        assert_eq!(c.kv.used_tokens, 0.0, "all reservations released");
+        // ids not resident here are a no-op
+        c.evict(7, &mut pool);
+        assert_eq!(c.load(), c.recompute_load(&pool));
     }
 
     #[test]

@@ -112,6 +112,18 @@ pub trait Client {
     /// The in-flight step completed: apply its effects.
     fn finish_step(&mut self, now: SimTime, pool: &mut RequestPool) -> StepOutcome;
 
+    /// Forcibly evict a resident request (fault recovery: a crash
+    /// orphaned it, its deadline elapsed, or it failed terminally while
+    /// assigned). Implementations must fully unwind the acceptance:
+    /// purge the id from the scheduler queue *and* any in-flight step
+    /// plan, release KV reservations and per-model `LoadAccount`
+    /// counters, and end residency via `RequestPool::unassign` — the
+    /// debug-mode load invariant runs right after, so a partial unwind
+    /// is caught immediately. Must be a no-op side-effect-wise for ids
+    /// not resident here. A queued `EngineStep` event for a step whose
+    /// plan the eviction emptied must stay harmless.
+    fn evict(&mut self, id: ReqId, pool: &mut RequestPool);
+
     /// Router-visible load: an O(1) read of incrementally maintained
     /// counters. Implementations must never iterate the request pool
     /// here — this sits on the per-stage-transition routing hot path.

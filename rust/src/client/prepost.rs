@@ -111,6 +111,20 @@ impl Client for PrePostClient {
         }
     }
 
+    fn evict(&mut self, id: ReqId, pool: &mut RequestPool) {
+        if pool.get(&id).map(|r| r.client) != Some(Some(self.id)) {
+            return;
+        }
+        // purge from queue or from the in-flight wave (whose EngineStep
+        // then finishes without this request); no LoadAccount here
+        if !self.sched.remove(id) {
+            if let Some(wave) = &mut self.current {
+                wave.retain(|r| *r != id);
+            }
+        }
+        pool.unassign(id);
+    }
+
     fn load(&self) -> ClientLoad {
         ClientLoad {
             queued_requests: self.sched.queue_len(),

@@ -3,7 +3,8 @@
 //!
 //! The parsing helpers ([`parse_pool`], [`parse_serving`],
 //! [`parse_workload`], [`parse_router`], [`parse_storage`],
-//! [`parse_granularity`], [`parse_migration`], [`parse_slo`]) are
+//! [`parse_granularity`], [`parse_migration`], [`parse_faults`],
+//! [`parse_slo`]) are
 //! public because the scenario
 //! registry ([`crate::scenario`]) builds on the same schema: a scenario
 //! file is a config document plus a batching roster, a rate sweep and
@@ -224,7 +225,104 @@ pub fn parse_serving(doc: &Json, pool: PoolSpec) -> Result<ServingSpec> {
     }
 
     serving.seed = doc.f64_or("seed", 0.0) as u64;
+    if let Some(f) = doc.get("faults") {
+        serving.faults = Some(parse_faults(f, serving.seed)?);
+    }
     Ok(serving)
+}
+
+/// Parse a `faults` object (docs/robustness.md): a deterministic fault
+/// schedule plus the retry policy applied to it.
+///
+/// ```json
+/// "faults": {
+///   "seed": 7,
+///   "crashes":   [{"client": 0, "at": 30.0, "down_for": 10.0}],
+///   "slowdowns": [{"client": 1, "factor": 2.0, "at": 5.0, "for": 20.0}],
+///   "links":     [{"rack": 0, "at": 12.0, "for": 3.0, "degrade": 2.0}],
+///   "stage_failure_prob": 0.01,
+///   "retry": {"max_attempts": 3, "base": 0.05, "factor": 2.0, "jitter": 0.5},
+///   "shed": false
+/// }
+/// ```
+///
+/// `seed` defaults to the serving seed. A link entry without `degrade`
+/// is a hard outage. Structural problems (missing/mis-typed targets or
+/// times) are parse errors here; value-range problems (probabilities
+/// outside [0, 1], non-positive durations, out-of-range client/rack
+/// indices) are rejected by
+/// [`FaultPlan::compile`](crate::fault::FaultPlan::compile) at build
+/// time — `hermes scenario check` runs both, so a bad fault spec never
+/// survives to a simulation.
+pub fn parse_faults(j: &Json, default_seed: u64) -> Result<crate::fault::FaultSpec> {
+    use crate::fault::{CrashSpec, FaultSpec, LinkFaultSpec, SlowdownSpec};
+    let mut spec = FaultSpec::new(j.f64_or("seed", default_seed as f64) as u64);
+    if let Some(arr) = j.get("crashes") {
+        let arr = arr.as_arr().context("'faults.crashes' must be an array")?;
+        for (i, c) in arr.iter().enumerate() {
+            let num = |k: &str| {
+                c.get(k)
+                    .and_then(Json::as_f64)
+                    .with_context(|| format!("faults.crashes[{i}] needs numeric '{k}'"))
+            };
+            spec.crashes.push(CrashSpec {
+                client: c
+                    .get("client")
+                    .and_then(Json::as_usize)
+                    .with_context(|| format!("faults.crashes[{i}] needs a 'client' index"))?,
+                at: num("at")?,
+                down_for: num("down_for")?,
+            });
+        }
+    }
+    if let Some(arr) = j.get("slowdowns") {
+        let arr = arr.as_arr().context("'faults.slowdowns' must be an array")?;
+        for (i, s) in arr.iter().enumerate() {
+            let num = |k: &str| {
+                s.get(k)
+                    .and_then(Json::as_f64)
+                    .with_context(|| format!("faults.slowdowns[{i}] needs numeric '{k}'"))
+            };
+            spec.slowdowns.push(SlowdownSpec {
+                client: s
+                    .get("client")
+                    .and_then(Json::as_usize)
+                    .with_context(|| format!("faults.slowdowns[{i}] needs a 'client' index"))?,
+                factor: num("factor")?,
+                at: num("at")?,
+                dur: num("for")?,
+            });
+        }
+    }
+    if let Some(arr) = j.get("links") {
+        let arr = arr.as_arr().context("'faults.links' must be an array")?;
+        for (i, l) in arr.iter().enumerate() {
+            let num = |k: &str| {
+                l.get(k)
+                    .and_then(Json::as_f64)
+                    .with_context(|| format!("faults.links[{i}] needs numeric '{k}'"))
+            };
+            spec.links.push(LinkFaultSpec {
+                rack: l
+                    .get("rack")
+                    .and_then(Json::as_usize)
+                    .with_context(|| format!("faults.links[{i}] needs a 'rack' index"))?,
+                at: num("at")?,
+                dur: num("for")?,
+                degrade: l.get("degrade").and_then(Json::as_f64),
+            });
+        }
+    }
+    spec.stage_failure_prob = j.f64_or("stage_failure_prob", 0.0);
+    if let Some(r) = j.get("retry") {
+        spec.retry.max_attempts =
+            r.usize_or("max_attempts", spec.retry.max_attempts as usize) as u32;
+        spec.retry.base = r.f64_or("base", spec.retry.base);
+        spec.retry.factor = r.f64_or("factor", spec.retry.factor);
+        spec.retry.jitter = r.f64_or("jitter", spec.retry.jitter);
+    }
+    spec.shed = j.bool_or("shed", false);
+    Ok(spec)
 }
 
 /// Parse a `migration` object: how a disaggregated pipeline prices the
@@ -533,6 +631,15 @@ pub fn parse_workload(model: ModelId, j: &Json, seed: u64) -> Result<WorkloadSpe
         },
         other => bail!("unknown reasoning '{other}'"),
     };
+    let deadline = match j.get("deadline").and_then(Json::as_f64) {
+        Some(d) => {
+            if !d.is_finite() || d <= 0.0 {
+                bail!("'workload.deadline' must be finite and positive, got {d}");
+            }
+            Some(d)
+        }
+        None => None,
+    };
     Ok(WorkloadSpec {
         model,
         trace,
@@ -541,6 +648,7 @@ pub fn parse_workload(model: ModelId, j: &Json, seed: u64) -> Result<WorkloadSpe
         arrival,
         n_requests: n,
         seed,
+        deadline,
     })
 }
 
@@ -677,6 +785,56 @@ mod tests {
         // transfer_weight outside the blend range is rejected
         let bad = r#"{"pool": {"batching": "continuous", "n": 1},
                       "transfer_weight": 1.5, "workload": {"n": 5}}"#;
+        assert!(SimConfig::from_json(&Json::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn fault_keys_parse_and_validate() {
+        let cfg = SimConfig::from_json(
+            &Json::parse(
+                r#"{"pool": {"batching": "continuous", "n": 2},
+                    "workload": {"n": 10, "deadline": 2.5},
+                    "seed": 11,
+                    "faults": {"crashes": [{"client": 0, "at": 1.0, "down_for": 4.0}],
+                               "slowdowns": [{"client": 1, "factor": 2.0,
+                                              "at": 0.5, "for": 3.0}],
+                               "links": [{"rack": 0, "at": 2.0, "for": 1.0,
+                                          "degrade": 3.0}],
+                               "stage_failure_prob": 0.02,
+                               "retry": {"max_attempts": 5, "base": 0.1},
+                               "shed": true}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.workload.deadline, Some(2.5));
+        let f = cfg.serving.faults.as_ref().unwrap();
+        assert_eq!(f.seed, 11, "fault seed defaults to the serving seed");
+        assert_eq!(f.crashes.len(), 1);
+        assert_eq!(f.slowdowns[0].factor, 2.0);
+        assert_eq!(f.links[0].degrade, Some(3.0));
+        assert_eq!(f.stage_failure_prob, 0.02);
+        assert_eq!(f.retry.max_attempts, 5);
+        assert_eq!(f.retry.base, 0.1);
+        assert_eq!(f.retry.factor, 2.0, "unset retry keys keep defaults");
+        assert!(f.shed);
+
+        // a crash entry without a target is a parse error
+        let err = parse_faults(&Json::parse(r#"{"crashes": [{"at": 1.0}]}"#).unwrap(), 0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("faults.crashes[0]"), "{err}");
+
+        // value-range problems surface at build time via FaultPlan::compile
+        let bad = r#"{"pool": {"batching": "continuous", "n": 2},
+                      "workload": {"n": 10},
+                      "faults": {"stage_failure_prob": 1.5}}"#;
+        let cfg = SimConfig::from_json(&Json::parse(bad).unwrap()).unwrap();
+        assert!(cfg.serving.build().is_err(), "prob > 1 must not survive build");
+
+        // a non-positive workload deadline is rejected outright
+        let bad = r#"{"pool": {"batching": "continuous", "n": 1},
+                      "workload": {"n": 5, "deadline": 0.0}}"#;
         assert!(SimConfig::from_json(&Json::parse(bad).unwrap()).is_err());
     }
 

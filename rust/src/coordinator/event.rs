@@ -15,6 +15,12 @@ pub enum Event {
     RequestPush { req: ReqId, dst: Option<usize> },
     /// a client's in-flight engine step completed
     EngineStep { client: usize },
+    /// a request's absolute deadline elapsed — if it is still live at
+    /// this instant it times out and fails (docs/robustness.md)
+    Deadline { req: ReqId },
+    /// a fault-plan crash window opens; payload is the crash index in
+    /// the compiled [`crate::fault::FaultPlan`]
+    Fault { fault: usize },
 }
 
 /// Deterministic priority queue: ties broken by insertion sequence.
@@ -45,6 +51,12 @@ fn encode(e: Event) -> EventSlot {
             a: client as u64,
             b: 0,
         },
+        Event::Deadline { req } => EventSlot { tag: 2, a: req, b: 0 },
+        Event::Fault { fault } => EventSlot {
+            tag: 3,
+            a: fault as u64,
+            b: 0,
+        },
     }
 }
 
@@ -56,6 +68,10 @@ fn decode(s: EventSlot) -> Event {
         },
         1 => Event::EngineStep {
             client: s.a as usize,
+        },
+        2 => Event::Deadline { req: s.a },
+        3 => Event::Fault {
+            fault: s.a as usize,
         },
         _ => unreachable!(),
     }
@@ -182,6 +198,15 @@ mod tests {
             }
         }
         assert!(fused.is_empty(), "every event drained by the last bound");
+    }
+
+    #[test]
+    fn deadline_and_fault_events_roundtrip() {
+        let mut q = EventQueue::new();
+        q.push(SimTime::from_secs(1.0), Event::Deadline { req: 42 });
+        q.push(SimTime::from_secs(2.0), Event::Fault { fault: 3 });
+        assert_eq!(q.pop().unwrap().1, Event::Deadline { req: 42 });
+        assert_eq!(q.pop().unwrap().1, Event::Fault { fault: 3 });
     }
 
     #[test]

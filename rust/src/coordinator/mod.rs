@@ -9,6 +9,7 @@ pub mod router;
 pub mod shard;
 
 use crate::client::{Client, StepOutcome};
+use crate::fault::FaultPlan;
 use crate::memory::hierarchy::Hierarchy;
 use crate::metrics::MetricsSink;
 use crate::model::policy::{ModelPolicy, RouteDecision};
@@ -39,6 +40,16 @@ pub struct CoordStats {
     /// the streaming arrival source) — the run-total denominator now
     /// that the pool only holds live requests under retirement
     pub injected: u64,
+    /// retried hand-offs / placements (docs/robustness.md): transient
+    /// stage failures, link outages, crash orphans re-entering routing
+    pub retries: u64,
+    /// requests failed by an elapsed deadline (⊆ `failed`)
+    pub timeouts: u64,
+    /// requests shed for lack of a healthy candidate (⊆ `failed`)
+    pub shed: u64,
+    /// in-flight requests orphaned by a client crash or a hand-off to a
+    /// crashed destination (each then retried or failed)
+    pub orphaned: u64,
     /// largest event-queue length observed after any event
     pub peak_queue: usize,
     /// requests currently arrived but not yet finished/failed
@@ -154,6 +165,14 @@ pub struct Coordinator {
     pub model_policy: Option<ModelPolicy>,
     /// seed for the policy's deterministic per-request decision streams
     pub model_seed: u64,
+    /// compiled fault schedule (docs/robustness.md). None — the default
+    /// and the `--faults off` override — keeps every fault/retry branch
+    /// byte-for-byte on the pre-fault code path
+    pub faults: Option<FaultPlan>,
+    /// crash windows armed as `Event::Fault` entries (once per run, at
+    /// the first `step_bounded` call so arrivals keep smaller sequence
+    /// numbers than same-time crash events)
+    fault_events_armed: bool,
     pub stats: CoordStats,
     /// hard stop against runaway simulations
     pub max_events: u64,
@@ -194,6 +213,8 @@ impl Coordinator {
             load_mode: LoadMode::Incremental,
             model_policy: None,
             model_seed: 0,
+            faults: None,
+            fault_events_armed: false,
             stats: CoordStats::default(),
             max_events: 500_000_000,
             route_buf: Vec::new(),
@@ -278,6 +299,9 @@ impl Coordinator {
     /// before the arrival, which is exactly the old peek-then-pop
     /// `ta <= te` tie rule.
     pub fn step_bounded(&mut self, limit: Option<SimTime>) -> bool {
+        if !self.fault_events_armed {
+            self.arm_fault_events();
+        }
         let arrival = self.source.peek();
         let bound = match (arrival, limit) {
             (Some(ta), Some(l)) => Some(ta.min(l)),
@@ -305,6 +329,22 @@ impl Coordinator {
                 _ => return false,
             },
         };
+        // deadline copies are armed at every stage accept; all copies of
+        // one request share its absolute deadline, and only the first
+        // live one may fire. A stale copy — the request completed,
+        // failed, or left this shard domain — is consumed for free
+        // BEFORE the clock/event-count commit, so stale copies never
+        // drag the clock or perturb any counter (identically in the
+        // serial and sharded loops, which is what keeps them bit-exact)
+        if let Event::Deadline { req } = e {
+            let live = self
+                .pool
+                .get(&req)
+                .is_some_and(|r| r.finished.is_none() && !r.failed);
+            if !live {
+                return true;
+            }
+        }
         debug_assert!(t >= self.clock, "time went backwards");
         self.clock = t;
         self.stats.events += 1;
@@ -315,6 +355,8 @@ impl Coordinator {
         match e {
             Event::RequestPush { req, dst } => self.on_push(req, dst),
             Event::EngineStep { client } => self.on_step(client),
+            Event::Deadline { req } => self.on_deadline(req),
+            Event::Fault { fault } => self.on_fault(fault),
         }
         self.stats.peak_queue = self.stats.peak_queue.max(self.queue.len());
         // drift invariant: the incremental per-client loads must equal a
@@ -408,15 +450,50 @@ impl Coordinator {
     fn on_push(&mut self, req: ReqId, dst: Option<usize>) {
         match dst {
             Some(c) => {
+                // stale-delivery guard: the request may have timed out
+                // (and retired) while this hand-off was in the air.
+                // Unreachable without deadlines/faults — transfers
+                // cannot outlive a live request otherwise
+                let Some(r) = self.pool.get(&req) else { return };
+                if r.failed {
+                    return;
+                }
+                if let Some(plan) = &self.faults {
+                    // destination crashed mid-transfer: the request is
+                    // orphaned — re-route it with backoff
+                    if !plan.health_at(self.clock, c) {
+                        self.stats.orphaned += 1;
+                        self.retry_or_fail(req);
+                        return;
+                    }
+                }
                 self.pool.get_mut(&req).unwrap().stage_accept = self.clock;
                 self.clients[c].accept(self.clock, req, &mut self.pool);
                 self.activate(c);
                 self.shard_note_load(c);
+                self.arm_deadline(req);
             }
             None => {
-                // fresh arrival: route (ingress pays no inter-client link)
-                self.stats.inflight += 1;
-                self.stats.peak_inflight = self.stats.peak_inflight.max(self.stats.inflight);
+                // stale retry guard (a stale None-push implies a prior
+                // retry, which implies faults — the branch is never
+                // taken in fault-free runs)
+                if self.faults.is_some()
+                    && !self
+                        .pool
+                        .get(&req)
+                        .is_some_and(|r| r.finished.is_none() && !r.failed)
+                {
+                    return;
+                }
+                // fresh arrival or retry re-entry: route (ingress pays
+                // no inter-client link). A retried request (attempt > 0
+                // — `retry_or_fail` bumps it before pushing) stayed
+                // in-flight across its backoff, so only fresh arrivals
+                // enter the in-flight count here
+                if !(self.faults.is_some() && self.pool[&req].attempt > 0) {
+                    self.stats.inflight += 1;
+                    self.stats.peak_inflight = self.stats.peak_inflight.max(self.stats.inflight);
+                }
                 // dynamic model selection happens before any client sees
                 // the request (a leading ModelRoute stage, if present)
                 if self.resolve_model_route(req) {
@@ -427,8 +504,9 @@ impl Coordinator {
                     self.clients[c].accept(self.clock, req, &mut self.pool);
                     self.activate(c);
                     self.shard_note_load(c);
+                    self.arm_deadline(req);
                 } else {
-                    self.fail(req);
+                    self.no_candidate(req);
                 }
             }
         }
@@ -484,6 +562,13 @@ impl Coordinator {
         let Some((bytes, gran, staging)) = self.resolve_kv_migration(id, src, bytes) else {
             return;
         };
+        // fault gate: transient hand-off failures and rack-egress link
+        // faults are resolved here — before pricing and before the
+        // sharded defer — so retries ride the hop as extra staging and
+        // the serial/sharded paths price the identical (bytes, staging)
+        let Some((bytes, staging)) = self.fault_gate(id, src, bytes, staging) else {
+            return;
+        };
         // sharded execution: a hop whose candidates live in another
         // domain — or one that would serialize on the shared DCN spine —
         // is deferred into the window-barrier egress buffer instead of
@@ -493,7 +578,187 @@ impl Coordinator {
         }
         match self.route(id, Some(src), bytes, gran) {
             Some(dst) => self.dispatch(id, src, dst, bytes, gran, staging),
+            None => self.no_candidate(id),
+        }
+    }
+
+    /// Resolve transient hand-off failures and link faults for the hop
+    /// `id` is about to take out of `src` (docs/robustness.md). Returns
+    /// the adjusted `(bytes, staging_seconds)` to dispatch, or `None`
+    /// when the hop was consumed here (no healthy candidate, or retries
+    /// exhausted → the request was shed/retried/failed).
+    ///
+    /// Retries never re-enter the event loop on this path: each failed
+    /// try adds its backoff to the hop's staging delay, so the decision
+    /// is made once, at the same pre-pricing point the sharded replay
+    /// uses — which is what keeps fault schedules bit-identical across
+    /// `--shards`. Every draw is a pure function of
+    /// `(fault_seed, request, stage, attempt)` and of simulated time.
+    fn fault_gate(
+        &mut self,
+        id: ReqId,
+        src: usize,
+        bytes: f64,
+        staging: f64,
+    ) -> Option<(f64, f64)> {
+        if self.faults.is_none() {
+            return Some((bytes, staging));
+        }
+        if !self.any_healthy_candidate(id) {
+            // every candidate for the next stage is dark: shed or
+            // backoff-retry instead of burning hand-off attempts
+            self.no_candidate(id);
+            return None;
+        }
+        let base_attempt = self.pool[&id].attempt;
+        let (attempt, extra, exhausted, degrade) = {
+            let plan = self.faults.as_ref().unwrap();
+            let rack = self.network.rack_of(src);
+            let stage_idx = self.pool[&id].stage_idx;
+            let mut attempt = base_attempt;
+            let mut extra = 0.0;
+            let mut exhausted = false;
+            loop {
+                let t_send = self.clock + SimTime::from_secs(extra);
+                if !plan.link_outage_at(t_send, rack) && !plan.stage_fails(id, stage_idx, attempt)
+                {
+                    break;
+                }
+                if attempt + 1 >= plan.retry.max_attempts {
+                    exhausted = true;
+                    break;
+                }
+                attempt += 1;
+                extra += plan.backoff_delay(id, attempt);
+            }
+            let degrade = plan.link_degrade_at(self.clock + SimTime::from_secs(extra), rack);
+            (attempt, extra, exhausted, degrade)
+        };
+        self.stats.retries += (attempt - base_attempt) as u64;
+        self.pool.get_mut(&id).unwrap().attempt = attempt;
+        if exhausted {
+            self.fail(id);
+            return None;
+        }
+        // a degraded (browned-out) egress link inflates the effective
+        // bytes; factor ≥ 1 keeps them positive for the DCN pricer
+        Some((bytes * degrade, staging + extra))
+    }
+
+    /// Any up client that can serve `id`'s current stage? (The
+    /// local-disaggregation group filter is deliberately not applied —
+    /// a group-constrained miss still reaches [`Coordinator::route`]
+    /// and fails through [`Coordinator::no_candidate`] there.)
+    fn any_healthy_candidate(&self, id: ReqId) -> bool {
+        let Some(plan) = &self.faults else { return true };
+        let r = &self.pool[&id];
+        let stage = r.stage();
+        self.clients
+            .iter()
+            .any(|c| c.can_serve(&stage, r.model) && plan.health_at(self.clock, c.id()))
+    }
+
+    /// No candidate could take the request's next stage. Without faults
+    /// this is today's terminal failure; under faults the request is
+    /// shed (when the plan says so) or backoff-retried — outages are
+    /// usually transient.
+    fn no_candidate(&mut self, id: ReqId) {
+        match &self.faults {
             None => self.fail(id),
+            Some(plan) if plan.shed => {
+                self.stats.shed += 1;
+                self.pool.get_mut(&id).unwrap().shed = true;
+                self.fail(id);
+            }
+            Some(_) => self.retry_or_fail(id),
+        }
+    }
+
+    /// Re-enter routing after a backoff, or fail terminally once the
+    /// attempt budget is spent. The request stays in the in-flight
+    /// count across its backoff (the re-push recognizes `attempt > 0`
+    /// and does not re-increment).
+    fn retry_or_fail(&mut self, id: ReqId) {
+        let (max, delay) = match &self.faults {
+            Some(p) => (
+                p.retry.max_attempts,
+                p.backoff_delay(id, self.pool[&id].attempt + 1),
+            ),
+            None => {
+                self.fail(id);
+                return;
+            }
+        };
+        let r = self.pool.get_mut(&id).unwrap();
+        if r.attempt + 1 >= max {
+            self.fail(id);
+            return;
+        }
+        r.attempt += 1;
+        self.stats.retries += 1;
+        self.queue.push(
+            self.clock + SimTime::from_secs(delay),
+            Event::RequestPush { req: id, dst: None },
+        );
+    }
+
+    /// Arm the request's absolute deadline (if its workload class set
+    /// one). Called at every stage accept; all copies share the same
+    /// fire time and only the first live one acts — the rest are
+    /// consumed for free by `step_bounded`'s staleness pre-check.
+    fn arm_deadline(&mut self, id: ReqId) {
+        let Some(d) = self.pool[&id].deadline else { return };
+        self.queue.push(d.max(self.clock), Event::Deadline { req: id });
+    }
+
+    /// A live request's deadline elapsed: it times out and fails
+    /// (hard — timeouts are not retried; the SLO is already blown).
+    fn on_deadline(&mut self, id: ReqId) {
+        self.stats.timeouts += 1;
+        self.pool.get_mut(&id).unwrap().timed_out = true;
+        self.fail(id);
+    }
+
+    /// A crash window opened: drain the client. Every resident request
+    /// is evicted — releasing scheduler slots, KV reservations and
+    /// load-account counters through the same invariant-checked path as
+    /// a normal stage completion — and re-enters routing with backoff
+    /// (or fails/sheds). Recovery needs no event: health is a pure
+    /// window query, and a drained client holds no queued work.
+    fn on_fault(&mut self, fault: usize) {
+        let client = self
+            .faults
+            .as_ref()
+            .expect("Event::Fault without a fault plan")
+            .crash_client(fault);
+        let victims: Vec<ReqId> = self.pool.iter_client(client).map(|r| r.id).collect();
+        for id in victims {
+            self.clients[client].evict(id, &mut self.pool);
+            self.stats.orphaned += 1;
+            self.retry_or_fail(id);
+        }
+        self.shard_note_load(client);
+    }
+
+    /// Push `Event::Fault` entries for the plan's crash windows. Runs
+    /// once, lazily from the first `step_bounded` call: after eager
+    /// injection (so same-time arrivals keep smaller sequence numbers,
+    /// in both the eager and streaming arbitration) and after a sharded
+    /// domain's context is installed (each domain arms only the crashes
+    /// of clients it owns; the union across domains is exactly the
+    /// serial schedule).
+    fn arm_fault_events(&mut self) {
+        self.fault_events_armed = true;
+        let Some(plan) = &self.faults else { return };
+        let crashes: Vec<(SimTime, usize)> = plan
+            .crash_events()
+            .filter(|&(_, i)| match &self.shard {
+                Some(ctx) => ctx.owns_client[plan.crash_client(i)],
+                None => true,
+            })
+            .collect();
+        for (t, i) in crashes {
+            self.queue.push(t, Event::Fault { fault: i });
         }
     }
 
@@ -589,6 +854,21 @@ impl Coordinator {
                             self.complete(id);
                             return true;
                         }
+                        // graceful degradation: when every client
+                        // hosting the escalation target is down, finish
+                        // with the current pass's answer instead of
+                        // stranding the request in a dark lane
+                        let lane_dark = match &self.faults {
+                            Some(plan) => !self.clients.iter().any(|c| {
+                                c.served_models().contains(&m)
+                                    && plan.health_at(self.clock, c.id())
+                            }),
+                            None => false,
+                        };
+                        if lane_dark {
+                            self.complete(id);
+                            return true;
+                        }
                         // escalation: bank the superseded pass's work
                         // and restart progress + per-pass latency marks
                         r.prior_decoded += r.decoded * r.branches;
@@ -679,6 +959,12 @@ impl Coordinator {
             if !c.can_serve(&stage, r.model) {
                 continue;
             }
+            // graceful degradation: a down client is no candidate
+            if let Some(plan) = &self.faults {
+                if !plan.health_at(self.clock, c.id()) {
+                    continue;
+                }
+            }
             // local disaggregation: prefill→decode stays within the group
             if self.local_disagg
                 && stage == Stage::Decode
@@ -710,10 +996,22 @@ impl Coordinator {
     }
 
     fn fail(&mut self, id: ReqId) {
+        // unwind an assigned in-flight request before retiring it: the
+        // owning client must release its scheduler slot, KV reservation
+        // and load-account counters, or `assert_load_invariant` trips on
+        // the very next event (regression: a bare fail() used to leak
+        // all three). Pre-admission failures carry no owner — for them
+        // this block is dead code and the path is byte-identical.
+        if let Some(c) = self.pool[&id].client {
+            self.clients[c].evict(id, &mut self.pool);
+            self.activate(c);
+            self.shard_note_load(c);
+        }
         self.stats.failed += 1;
         self.stats.inflight -= 1;
         let r = self.pool.get_mut(&id).unwrap();
         r.finished = None;
+        r.failed = true;
         let rec = CompletionRecord::of(r, true);
         if let Some(sink) = &mut self.sink {
             sink.fold(&rec);
@@ -730,7 +1028,29 @@ impl Coordinator {
     }
 
     fn activate(&mut self, c: usize) {
+        if let Some(plan) = &self.faults {
+            // a down client starts no new work: its residents drain at
+            // the crash event, and a recovered client resumes at the
+            // next delivery or completion that touches it
+            if !plan.health_at(self.clock, c) {
+                return;
+            }
+        }
         if let Some(fin) = self.clients[c].maybe_start_step(self.clock, &mut self.pool) {
+            // a slowdown window (degraded/brown-out client) stretches
+            // the step's duration; the `f > 1.0` guard keeps runs with
+            // no slowdown windows on the exact pre-fault arithmetic
+            let fin = match &self.faults {
+                Some(plan) => {
+                    let f = plan.slowdown_at(self.clock, c);
+                    if f > 1.0 {
+                        self.clock + SimTime::from_secs((fin - self.clock).as_secs() * f)
+                    } else {
+                        fin
+                    }
+                }
+                None => fin,
+            };
             self.queue.push(fin, Event::EngineStep { client: c });
         }
     }
@@ -1302,5 +1622,79 @@ mod tests {
         // and nothing on rack switches
         assert_eq!(coord.network.bytes_on_dcn(), 0.0);
         assert!(coord.network.bytes_intra_platform > 0.0);
+    }
+
+    #[test]
+    fn failing_an_assigned_request_releases_residency() {
+        // regression (robustness PR bugfix): failing an *assigned*
+        // in-flight request — here via an elapsed deadline mid-decode —
+        // must unwind its scheduler slot, KV reservation and load
+        // accounting. `assert_load_invariant` runs after every event in
+        // debug builds, so a leak aborts the run immediately.
+        let clients = vec![llm_client(0, BatchingKind::Continuous)];
+        let mut coord = Coordinator::new(
+            clients,
+            Router::new(RoutePolicy::RoundRobin),
+            Network::single_platform(1),
+        );
+        let mut reqs = workload(4, 50.0);
+        for r in &mut reqs {
+            // elapses mid-decode: the request is resident and mid-step
+            // when the Deadline event fires
+            r.deadline = Some(r.arrival + SimTime::from_secs(0.05));
+        }
+        coord.inject(reqs);
+        coord.run();
+        assert!(coord.all_serviced());
+        assert!(coord.stats.timeouts > 0, "deadlines must fire mid-run");
+        assert_eq!(coord.stats.failed, coord.stats.timeouts);
+        coord.assert_load_invariant();
+        for id in &coord.failed {
+            let r = &coord.pool[id];
+            assert!(r.client.is_none(), "failed request still resident");
+            assert!(r.timed_out && r.failed);
+        }
+        assert_eq!(
+            coord.stats.serviced + coord.stats.failed,
+            coord.stats.injected
+        );
+    }
+
+    #[test]
+    fn crash_orphans_reroute_and_conserve_requests() {
+        use crate::fault::{CrashSpec, FaultPlan, FaultSpec};
+        let clients = vec![
+            llm_client(0, BatchingKind::Continuous),
+            llm_client(1, BatchingKind::Continuous),
+        ];
+        let mut coord = Coordinator::new(
+            clients,
+            Router::new(RoutePolicy::LoadBased(LoadMetric::TokensLeft)),
+            Network::single_platform(2),
+        );
+        let mut spec = FaultSpec::new(7);
+        spec.crashes.push(CrashSpec {
+            client: 0,
+            at: 0.2,
+            down_for: 3.0,
+        });
+        coord.faults = Some(FaultPlan::compile(&spec, 2, 1).unwrap());
+        coord.inject(workload(20, 20.0));
+        coord.run();
+        assert!(coord.all_serviced());
+        assert!(
+            coord.stats.orphaned > 0,
+            "a crash at t=0.2s must orphan in-flight work"
+        );
+        assert!(coord.stats.retries > 0, "orphans re-enter with backoff");
+        assert_eq!(
+            coord.stats.serviced + coord.stats.failed,
+            coord.stats.injected,
+            "crash must conserve requests"
+        );
+        // the surviving lane absorbed the re-routed work
+        assert!(coord.clients[1].stats().requests_served > 0);
+        // nothing is left resident anywhere
+        coord.assert_load_invariant();
     }
 }

@@ -93,6 +93,10 @@ pub(crate) struct ShardCtx {
     pub(crate) domain: u32,
     /// `(stage kind, model)` → owning domain, for every reachable pair
     pub(crate) closure: HashMap<StageKey, u32>,
+    /// client id → does this domain own it? Crash events arm only in
+    /// the owning domain (`Coordinator::arm_fault_events`), so the
+    /// union across domains reproduces the serial crash schedule
+    pub(crate) owns_client: Vec<bool>,
     /// cross-domain operations emitted during the current window, in
     /// emission order (the `seq` of the global `(time, domain, seq)`
     /// pricing order)
@@ -281,6 +285,9 @@ pub struct ShardOutcome {
     pub energy_joules: f64,
     pub decisions: u64,
     pub pool_ops: PoolOps,
+    /// the run's compiled fault plan, if any — carried so metrics can
+    /// derive per-client availability from the crash windows
+    pub faults: Option<crate::fault::FaultPlan>,
 }
 
 impl ShardOutcome {
@@ -302,6 +309,7 @@ impl ShardOutcome {
                 .sum(),
             decisions: coord.router.decisions,
             pool_ops: coord.pool.ops(),
+            faults: coord.faults.clone(),
         }
     }
 
@@ -445,6 +453,14 @@ impl Coordinator {
                     if !c.can_serve(&stage, model) {
                         continue;
                     }
+                    // health is evaluated at the hop instant `t` — the
+                    // moment the serial router would have run — not at
+                    // this domain's (earlier) barrier clock
+                    if let Some(plan) = &self.faults {
+                        if !plan.health_at(t, c.id()) {
+                            continue;
+                        }
+                    }
                     let key_model = if c.served_models().is_empty() {
                         None
                     } else {
@@ -460,13 +476,18 @@ impl Coordinator {
                 }
                 if cands.is_empty() {
                     // unreachable when the closure routed here (the
-                    // target domain owns this stage's candidates); kept
-                    // defensive, with the merge key fixed to the hop
-                    // instant
-                    self.fail(id);
-                    if let Some(ctx) = self.shard.as_deref_mut() {
-                        if let Some(k) = ctx.record_keys.last_mut() {
-                            *k = t;
+                    // target domain owns this stage's candidates — and
+                    // under faults the source's `fault_gate` already
+                    // verified a healthy candidate at instant `t`);
+                    // kept defensive, with the merge key fixed to the
+                    // hop instant when a terminal record was emitted
+                    let records_before = self.records.len();
+                    self.no_candidate(id);
+                    if self.records.len() > records_before {
+                        if let Some(ctx) = self.shard.as_deref_mut() {
+                            if let Some(k) = ctx.record_keys.last_mut() {
+                                *k = t;
+                            }
                         }
                     }
                     return;
@@ -759,6 +780,7 @@ where
     // probe's network — the one shared DCN spine, mutated in global
     // order exactly as the serial run would
     let mut net = std::mem::replace(&mut probe.network, Network::single_platform(0));
+    let fault_plan = probe.faults.clone();
     let mut feed = match arrivals {
         Arrivals::Stream(mix) => DomainFeed::Stream(mix),
         Arrivals::Inject(reqs) => DomainFeed::Inject(plan.partition(reqs)),
@@ -876,7 +898,9 @@ where
                 Rsp::Window { .. } => unreachable!("Finish answered with a window"),
             }
         }
-        Ok(merge(parts, orch_log, orch_transfers, shards, n))
+        let mut out = merge(parts, orch_log, orch_transfers, shards, n);
+        out.faults = fault_plan;
+        Ok(out)
     })
 }
 
@@ -896,9 +920,13 @@ fn domain_worker(
     tx: mpsc::Sender<Rsp>,
 ) {
     let mut coord = build().expect("domain build must succeed (the probe build already did)");
+    let owns_client = (0..coord.clients.len())
+        .map(|c| plan.domain_of_client(&coord.network, c) == domain)
+        .collect();
     coord.shard = Some(Box::new(ShardCtx {
         domain,
         closure: plan.closure.clone(),
+        owns_client,
         egress: Vec::new(),
         record_keys: Vec::new(),
         transfer_log: Vec::new(),
@@ -1006,6 +1034,10 @@ fn merge(
         stats.peak_queue = stats.peak_queue.max(p.stats.peak_queue);
         stats.peak_inflight += p.stats.peak_inflight;
         stats.transfers += p.stats.transfers;
+        stats.retries += p.stats.retries;
+        stats.timeouts += p.stats.timeouts;
+        stats.shed += p.stats.shed;
+        stats.orphaned += p.stats.orphaned;
     }
     stats.transfers += orch_transfers;
     // counter-based: in streaming-metrics mode the ID vecs stay empty,
@@ -1068,6 +1100,7 @@ fn merge(
         energy_joules,
         decisions: parts.iter().map(|p| p.decisions).sum(),
         pool_ops,
+        faults: None, // installed by `run_sharded` from the probe build
     }
 }
 

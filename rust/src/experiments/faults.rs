@@ -1,0 +1,165 @@
+//! Availability-vs-SLO sweep under fault injection (`hermes experiment
+//! faults`).
+//!
+//! Configuration lives in `scenarios/bench_faults_100k.json` (the same
+//! file the core-speed robustness tier uses): a disaggregated pool
+//! whose fault plan is re-compiled across a grid of crash durations
+//! (`extras.down_for_s`, 0 = no crash) × request deadlines
+//! (`extras.deadline_s`). Every run keeps the scenario's slowdown,
+//! link-degradation and transient stage-failure schedule, so the
+//! `down_for = 0` column isolates what retries alone absorb.
+//!
+//! Expected shape: availability falls linearly with the crash duration
+//! (it is a client-seconds ratio, [`FaultPlan::availability`]), while
+//! goodput falls faster than availability whenever the crash darkens a
+//! whole pipeline role (orphaned requests burn their retry budget
+//! against a dark lane) and recovers with looser deadlines — the
+//! graceful-degradation claim of docs/robustness.md, quantified.
+//!
+//! [`FaultPlan::availability`]: crate::fault::FaultPlan::availability
+
+use anyhow::{Context, Result};
+
+use crate::metrics::RunMetrics;
+use crate::scenario::Scenario;
+use crate::sim::driver;
+use crate::util::bench::Table;
+use crate::workload::trace::{Pipeline, TraceKind, WorkloadSpec};
+
+/// One grid point: a crash duration × deadline pair and its run.
+#[derive(Debug, Clone)]
+pub struct FaultRow {
+    /// how long the scenario's crashed client stays down (0 = no crash)
+    pub down_for_s: f64,
+    /// per-request end-to-end deadline applied to the workload
+    pub deadline_s: f64,
+    /// fleet availability over the makespan (client-seconds up / total)
+    pub availability: f64,
+    /// successfully serviced fraction of injected requests
+    pub goodput: f64,
+    pub metrics: RunMetrics,
+}
+
+pub fn run(fast: bool) -> Result<Vec<FaultRow>> {
+    let sc = Scenario::load("bench_faults_100k")?;
+    let clients = sc.scale(fast).clients;
+    let entry = sc.roster.first().context("fault scenario needs a roster entry")?;
+    let n_req = sc.extra_usize(&sc.scaled_key(fast, "n_requests"))?;
+    let total_rate = sc.extra_f64(&sc.scaled_key(fast, "total_rate"))?;
+    let downs = sc.extra_f64_list("down_for_s")?;
+    let deadlines = sc.extra_f64_list("deadline_s")?;
+    let seed = sc.doc.f64_or("seed", 33.0) as u64;
+    let mix = sc.workload(None, n_req)?;
+    let slo = sc.slo(None, &mix)?;
+    let model = mix.primary().model;
+
+    let mut rows = Vec::new();
+    for &down in &downs {
+        for &deadline in &deadlines {
+            let mut spec = sc.serving(entry, clients)?;
+            let faults = spec
+                .faults
+                .as_mut()
+                .context("scenario 'bench_faults_100k' must carry a 'faults' block")?;
+            if down > 0.0 {
+                for c in &mut faults.crashes {
+                    c.down_for = down;
+                }
+            } else {
+                // down_for must be positive to compile; 0 means no crash
+                faults.crashes.clear();
+            }
+            let workload = WorkloadSpec::new(model, TraceKind::AzureConv, n_req, total_rate)
+                .with_pipeline(Pipeline::Disagg)
+                .with_seed(seed)
+                .with_deadline(deadline);
+            let metrics = driver::run(&spec, &workload, &slo)?;
+            let goodput = metrics.n_serviced as f64 / metrics.n_requests.max(1) as f64;
+            rows.push(FaultRow {
+                down_for_s: down,
+                deadline_s: deadline,
+                availability: metrics.availability,
+                goodput,
+                metrics,
+            });
+        }
+    }
+
+    let mut t = Table::new(&[
+        "down_for(s)", "deadline(s)", "availability", "goodput", "retries", "timeouts",
+        "orphaned", "ttft_p99(s)", "e2e_p99(s)",
+    ]);
+    for r in &rows {
+        t.row(&[
+            format!("{:.0}", r.down_for_s),
+            format!("{:.0}", r.deadline_s),
+            format!("{:.4}", r.availability),
+            format!("{:.4}", r.goodput),
+            r.metrics.retries.to_string(),
+            r.metrics.timeouts.to_string(),
+            r.metrics.orphaned.to_string(),
+            format!("{:.3}", r.metrics.ttft.p99),
+            format!("{:.3}", r.metrics.e2e.p99),
+        ]);
+    }
+    t.print();
+    println!(
+        "availability is the fleet's client-seconds-up ratio; goodput falls \
+         below it when a crash darkens a whole pipeline role and recovers \
+         with looser deadlines (docs/robustness.md)"
+    );
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_sweep_covers_grid_and_availability_tracks_crashes() {
+        if std::env::var("HERMES_FULL").is_ok() {
+            return;
+        }
+        let rows = run(true).unwrap();
+        let sc = Scenario::load("bench_faults_100k").unwrap();
+        let grid = sc.extra_f64_list("down_for_s").unwrap().len()
+            * sc.extra_f64_list("deadline_s").unwrap().len();
+        assert_eq!(rows.len(), grid, "full down_for × deadline grid");
+        for r in &rows {
+            // every run conserves requests: goodput is a fraction and the
+            // losses are accounted, not leaked
+            assert!((0.0..=1.0).contains(&r.goodput), "goodput {}", r.goodput);
+            assert_eq!(
+                r.metrics.n_serviced + r.metrics.n_failed,
+                r.metrics.n_requests,
+                "serviced + failed must equal injected at down_for={} deadline={}",
+                r.down_for_s,
+                r.deadline_s
+            );
+            assert!((0.0..=1.0).contains(&r.availability));
+        }
+        // no crash → fully available fleet
+        let no_crash: Vec<&FaultRow> = rows.iter().filter(|r| r.down_for_s == 0.0).collect();
+        assert!(!no_crash.is_empty());
+        for r in &no_crash {
+            assert_eq!(r.availability, 1.0, "no crash windows, full availability");
+            assert_eq!(r.metrics.orphaned, 0, "nothing to orphan without a crash");
+        }
+        // the longest crash at a fixed deadline: availability strictly
+        // below 1 and goodput at or below the crash-free run's
+        let deadline = rows[0].deadline_s;
+        let at = |d: f64| {
+            rows.iter()
+                .find(|r| r.down_for_s == d && r.deadline_s == deadline)
+                .unwrap()
+        };
+        let longest = sc
+            .extra_f64_list("down_for_s")
+            .unwrap()
+            .into_iter()
+            .fold(0.0f64, f64::max);
+        assert!(at(longest).availability < 1.0);
+        assert!(at(longest).goodput <= at(0.0).goodput);
+        assert!(at(longest).metrics.orphaned > 0, "the crash must orphan in-flight work");
+    }
+}

@@ -6,6 +6,7 @@
 pub mod ablations;
 pub mod common;
 pub mod disagg;
+pub mod faults;
 pub mod fig10;
 pub mod fig11;
 pub mod fig12;
@@ -77,6 +78,10 @@ pub fn run_by_name(name: &str, fast: bool) -> Result<()> {
             banner("Disaggregation — prefill:decode split × interconnect vs colocated");
             disagg::run(fast)?;
         }
+        "faults" => {
+            banner("Fault injection — availability vs SLO under crashes, retries, deadlines");
+            faults::run(fast)?;
+        }
         "all" => {
             for n in [
                 "fig5", "fig6", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig15",
@@ -85,7 +90,7 @@ pub fn run_by_name(name: &str, fast: bool) -> Result<()> {
                 run_by_name(n, fast)?;
             }
         }
-        other => bail!("unknown experiment '{other}' (fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|ablations|multimodel|disagg|all)"),
+        other => bail!("unknown experiment '{other}' (fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|ablations|multimodel|disagg|faults|all)"),
     }
     Ok(())
 }

@@ -1,0 +1,488 @@
+//! Deterministic fault injection and failure recovery
+//! (docs/robustness.md).
+//!
+//! A scenario's `faults` block compiles into a [`FaultPlan`]: client
+//! crash/recover windows, client slowdown windows, link outage or
+//! degradation windows on rack egress paths, and a per-hand-off
+//! transient failure probability — plus the [`RetryPolicy`] and
+//! load-shedding switch the recovery machinery uses. Every query is a
+//! **pure function of simulated time and request identity**:
+//!
+//! * window queries ([`FaultPlan::health_at`],
+//!   [`FaultPlan::slowdown_at`], [`FaultPlan::link_outage_at`],
+//!   [`FaultPlan::link_degrade_at`]) read precompiled `[start, end)`
+//!   intervals, and
+//! * stochastic draws ([`FaultPlan::stage_fails`],
+//!   [`FaultPlan::backoff_delay`]) each derive a fresh one-shot
+//!   [`Pcg`] stream keyed by `(fault_seed, request, site, kind)`.
+//!
+//! Nothing depends on event interleaving or shared RNG state, so the
+//! same plan produces bit-identical fault schedules in the serial event
+//! loop, under `--jobs N` (independent runs) and across `--shards K`
+//! conservative-window domains — `rust/tests/fault_equivalence.rs`
+//! pins this.
+
+use anyhow::{bail, Result};
+
+use crate::sim::SimTime;
+use crate::util::rng::Pcg;
+use crate::workload::request::ReqId;
+
+/// Bounded exponential backoff for retried hand-offs and re-routed
+/// orphans: attempt `k` (1-based) waits
+/// `base * factor^(k-1) * (1 + jitter * (u - 0.5))` seconds, with `u`
+/// drawn from the per-(request, attempt) stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// total tries a request gets (1 = no retries)
+    pub max_attempts: u32,
+    /// first backoff in seconds
+    pub base: f64,
+    /// exponential growth per attempt
+    pub factor: f64,
+    /// relative jitter amplitude in [0, 1] (0 = deterministic delays;
+    /// still seed-deterministic when positive)
+    pub jitter: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { max_attempts: 3, base: 0.05, factor: 2.0, jitter: 0.5 }
+    }
+}
+
+/// A client crash window: the client is dark over `[at, at + down_for)`
+/// seconds; at the crash instant its resident requests are evicted and
+/// re-routed (or shed), and at recovery it simply becomes routable
+/// again.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CrashSpec {
+    pub client: usize,
+    pub at: f64,
+    pub down_for: f64,
+}
+
+/// A client slowdown window: engine steps *started* inside
+/// `[at, at + dur)` take `factor` times as long (straggler modeling —
+/// thermal throttling, a noisy neighbor, a failed NIC lane).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SlowdownSpec {
+    pub client: usize,
+    pub factor: f64,
+    pub at: f64,
+    pub dur: f64,
+}
+
+/// A network fault window on a rack's egress paths over
+/// `[at, at + dur)`: `degrade: Some(f)` multiplies the bytes of every
+/// hand-off leaving the rack by `f` (a brown-out); `degrade: None` is a
+/// full outage — hand-offs stall and retry with backoff until the
+/// window passes or attempts run out.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkFaultSpec {
+    pub rack: usize,
+    pub at: f64,
+    pub dur: f64,
+    pub degrade: Option<f64>,
+}
+
+/// The scenario-facing fault description (the `faults` config key),
+/// validated structurally at parse time and against the serving pool
+/// at build time ([`FaultPlan::compile`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// seed for the per-decision PCG streams (defaults to the serving
+    /// seed; `--fault-seed` overrides)
+    pub seed: u64,
+    pub crashes: Vec<CrashSpec>,
+    pub slowdowns: Vec<SlowdownSpec>,
+    pub links: Vec<LinkFaultSpec>,
+    /// probability that any single stage hand-off transiently fails
+    /// and must be retried (drawn per (request, stage, attempt))
+    pub stage_failure_prob: f64,
+    pub retry: RetryPolicy,
+    /// shed a request immediately when no healthy candidate exists for
+    /// its next stage, instead of backoff-retrying the placement
+    pub shed: bool,
+}
+
+impl FaultSpec {
+    pub fn new(seed: u64) -> FaultSpec {
+        FaultSpec {
+            seed,
+            crashes: Vec::new(),
+            slowdowns: Vec::new(),
+            links: Vec::new(),
+            stage_failure_prob: 0.0,
+            retry: RetryPolicy::default(),
+            shed: false,
+        }
+    }
+}
+
+/// One compiled fault window: `(target, [start, end))` plus the
+/// window's payload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Window {
+    target: usize,
+    start: SimTime,
+    end: SimTime,
+    /// slowdown factor / degrade factor; outage windows carry
+    /// `f64::INFINITY` as their marker
+    factor: f64,
+}
+
+impl Window {
+    fn covers(&self, t: SimTime, target: usize) -> bool {
+        self.target == target && self.start <= t && t < self.end
+    }
+}
+
+// per-decision stream kinds — mixed into the PCG key so the hand-off
+// failure draw and the backoff jitter draw of the same (request,
+// attempt) never alias
+const KIND_STAGE_FAIL: u64 = 0x53;
+const KIND_BACKOFF: u64 = 0x42;
+
+/// Boost-style hash combine; the constant is the same golden-ratio
+/// increment `Pcg::fork` mixes with. [`Pcg::new`] runs SplitMix64 over
+/// the result, so this only needs to separate keys, not distribute
+/// them.
+fn mix(h: u64, v: u64) -> u64 {
+    h ^ v
+        .wrapping_add(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(h << 6)
+        .wrapping_add(h >> 2)
+}
+
+/// A validated, precompiled fault schedule. Cheap to clone (a few
+/// windows), carried by every coordinator of a run — each sharded
+/// domain holds an identical copy, which is what makes the pure
+/// time/identity queries agree everywhere.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    seed: u64,
+    crashes: Vec<Window>,
+    slowdowns: Vec<Window>,
+    links: Vec<Window>,
+    stage_failure_prob: f64,
+    pub retry: RetryPolicy,
+    pub shed: bool,
+    /// client count the plan was validated against (availability
+    /// denominators)
+    n_clients: usize,
+}
+
+impl FaultPlan {
+    /// Validate `spec` against a serving pool of `n_clients` clients on
+    /// `n_racks` racks and precompile its windows. Every structural
+    /// error — an out-of-range client/rack, a probability outside
+    /// [0, 1], a non-finite or non-positive time — is a build error, so
+    /// `hermes scenario check` rejects dangling fault targets exactly
+    /// like dangling model or NPU names.
+    pub fn compile(spec: &FaultSpec, n_clients: usize, n_racks: usize) -> Result<FaultPlan> {
+        let window = |what: &str, at: f64, dur: f64| -> Result<(SimTime, SimTime)> {
+            if !at.is_finite() || at < 0.0 {
+                bail!("faults: {what} start {at} must be finite and >= 0");
+            }
+            if !dur.is_finite() || dur <= 0.0 {
+                bail!("faults: {what} duration {dur} must be finite and > 0");
+            }
+            Ok((SimTime::from_secs(at), SimTime::from_secs(at + dur)))
+        };
+        let mut crashes = Vec::with_capacity(spec.crashes.len());
+        for c in &spec.crashes {
+            if c.client >= n_clients {
+                bail!("faults: crash targets client {} but the pool has {n_clients}", c.client);
+            }
+            let (start, end) = window("crash", c.at, c.down_for)?;
+            crashes.push(Window { target: c.client, start, end, factor: f64::INFINITY });
+        }
+        let mut slowdowns = Vec::with_capacity(spec.slowdowns.len());
+        for s in &spec.slowdowns {
+            if s.client >= n_clients {
+                bail!(
+                    "faults: slowdown targets client {} but the pool has {n_clients}",
+                    s.client
+                );
+            }
+            if !s.factor.is_finite() || s.factor < 1.0 {
+                bail!("faults: slowdown factor {} must be finite and >= 1", s.factor);
+            }
+            let (start, end) = window("slowdown", s.at, s.dur)?;
+            slowdowns.push(Window { target: s.client, start, end, factor: s.factor });
+        }
+        let mut links = Vec::with_capacity(spec.links.len());
+        for l in &spec.links {
+            if l.rack >= n_racks {
+                bail!("faults: link fault targets rack {} but the topology has {n_racks}", l.rack);
+            }
+            let factor = match l.degrade {
+                Some(f) => {
+                    if !f.is_finite() || f < 1.0 {
+                        bail!("faults: link degrade factor {f} must be finite and >= 1");
+                    }
+                    f
+                }
+                None => f64::INFINITY,
+            };
+            let (start, end) = window("link fault", l.at, l.dur)?;
+            links.push(Window { target: l.rack, start, end, factor });
+        }
+        if !(0.0..=1.0).contains(&spec.stage_failure_prob) {
+            bail!(
+                "faults: stage failure probability {} must be in [0, 1]",
+                spec.stage_failure_prob
+            );
+        }
+        let r = spec.retry;
+        if r.max_attempts == 0 {
+            bail!("faults: retry max_attempts must be >= 1");
+        }
+        if !r.base.is_finite() || r.base <= 0.0 {
+            bail!("faults: retry base {} must be finite and > 0", r.base);
+        }
+        if !r.factor.is_finite() || r.factor < 1.0 {
+            bail!("faults: retry factor {} must be finite and >= 1", r.factor);
+        }
+        if !(0.0..=1.0).contains(&r.jitter) {
+            bail!("faults: retry jitter {} must be in [0, 1]", r.jitter);
+        }
+        Ok(FaultPlan {
+            seed: spec.seed,
+            crashes,
+            slowdowns,
+            links,
+            stage_failure_prob: spec.stage_failure_prob,
+            retry: r,
+            shed: spec.shed,
+            n_clients,
+        })
+    }
+
+    /// Is `client` up at `t`? (No crash window covers the instant.)
+    pub fn health_at(&self, t: SimTime, client: usize) -> bool {
+        !self.crashes.iter().any(|w| w.covers(t, client))
+    }
+
+    /// Step-duration multiplier for a step `client` starts at `t`
+    /// (1.0 = nominal; overlapping windows take the worst factor).
+    pub fn slowdown_at(&self, t: SimTime, client: usize) -> f64 {
+        self.slowdowns
+            .iter()
+            .filter(|w| w.covers(t, client))
+            .fold(1.0, |acc, w| acc.max(w.factor))
+    }
+
+    /// Is `rack`'s egress path fully out at `t`?
+    pub fn link_outage_at(&self, t: SimTime, rack: usize) -> bool {
+        self.links.iter().any(|w| w.covers(t, rack) && w.factor.is_infinite())
+    }
+
+    /// Byte multiplier for hand-offs leaving `rack` at `t` (1.0 =
+    /// nominal; outage windows are handled by
+    /// [`FaultPlan::link_outage_at`] and excluded here).
+    pub fn link_degrade_at(&self, t: SimTime, rack: usize) -> f64 {
+        self.links
+            .iter()
+            .filter(|w| w.covers(t, rack) && w.factor.is_finite())
+            .fold(1.0, |acc, w| acc.max(w.factor))
+    }
+
+    /// Does the hand-off of request `id` out of stage `stage_idx` on
+    /// try `attempt` transiently fail? A fresh one-shot PCG stream per
+    /// decision: independent of event interleaving, so sharded domains
+    /// agree with the serial oracle.
+    pub fn stage_fails(&self, id: ReqId, stage_idx: usize, attempt: u32) -> bool {
+        if self.stage_failure_prob <= 0.0 {
+            return false;
+        }
+        let key = mix(
+            mix(mix(self.seed, KIND_STAGE_FAIL), id),
+            ((stage_idx as u64) << 32) | attempt as u64,
+        );
+        Pcg::new(key).chance(self.stage_failure_prob)
+    }
+
+    /// Backoff before try `attempt` (1-based: the first retry is
+    /// attempt 1) of request `id`, in seconds. Always finite and
+    /// strictly positive (jitter is capped at ±50% of the nominal
+    /// delay).
+    pub fn backoff_delay(&self, id: ReqId, attempt: u32) -> f64 {
+        let r = self.retry;
+        let nominal = r.base * r.factor.powi(attempt.saturating_sub(1) as i32);
+        let key = mix(mix(mix(self.seed, KIND_BACKOFF), id), attempt as u64);
+        let u = Pcg::new(key).f64();
+        nominal * (1.0 + r.jitter * (u - 0.5))
+    }
+
+    /// Crash instants as `(time, crash index)`, for the coordinator to
+    /// arm `Event::Fault` entries (sharded runs arm only the crashes of
+    /// domain-owned clients; the union across domains equals the serial
+    /// schedule).
+    pub fn crash_events(&self) -> impl Iterator<Item = (SimTime, usize)> + '_ {
+        self.crashes.iter().enumerate().map(|(i, w)| (w.start, i))
+    }
+
+    /// The client crash window `idx` targets.
+    pub fn crash_client(&self, idx: usize) -> usize {
+        self.crashes[idx].target
+    }
+
+    /// Mean per-client availability over `[0, horizon)`: one minus the
+    /// crashed client-seconds (overlapping windows merged per client)
+    /// over the total client-seconds. 1.0 for an empty horizon or a
+    /// crash-free plan.
+    pub fn availability(&self, horizon: SimTime) -> f64 {
+        let h = horizon.as_secs();
+        if h <= 0.0 || self.n_clients == 0 || self.crashes.is_empty() {
+            return 1.0;
+        }
+        let mut down = 0.0;
+        for client in 0..self.n_clients {
+            let mut spans: Vec<(f64, f64)> = self
+                .crashes
+                .iter()
+                .filter(|w| w.target == client)
+                .map(|w| (w.start.as_secs().min(h), w.end.as_secs().min(h)))
+                .filter(|(s, e)| e > s)
+                .collect();
+            spans.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut cursor = 0.0;
+            for (s, e) in spans {
+                let s = s.max(cursor);
+                if e > s {
+                    down += e - s;
+                    cursor = e;
+                }
+            }
+        }
+        1.0 - down / (h * self.n_clients as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> FaultSpec {
+        let mut s = FaultSpec::new(7);
+        s.crashes.push(CrashSpec { client: 1, at: 10.0, down_for: 5.0 });
+        s.slowdowns.push(SlowdownSpec { client: 0, factor: 2.0, at: 3.0, dur: 4.0 });
+        s.links.push(LinkFaultSpec { rack: 0, at: 20.0, dur: 2.0, degrade: None });
+        s.links.push(LinkFaultSpec { rack: 1, at: 20.0, dur: 2.0, degrade: Some(4.0) });
+        s.stage_failure_prob = 0.25;
+        s
+    }
+
+    #[test]
+    fn windows_are_half_open() {
+        let p = FaultPlan::compile(&spec(), 4, 2).unwrap();
+        assert!(p.health_at(SimTime::from_secs(9.999), 1));
+        assert!(!p.health_at(SimTime::from_secs(10.0), 1));
+        assert!(!p.health_at(SimTime::from_secs(14.999), 1));
+        assert!(p.health_at(SimTime::from_secs(15.0), 1));
+        // other clients are untouched
+        assert!(p.health_at(SimTime::from_secs(12.0), 0));
+        assert_eq!(p.slowdown_at(SimTime::from_secs(5.0), 0), 2.0);
+        assert_eq!(p.slowdown_at(SimTime::from_secs(5.0), 1), 1.0);
+        assert_eq!(p.slowdown_at(SimTime::from_secs(8.0), 0), 1.0);
+        assert!(p.link_outage_at(SimTime::from_secs(21.0), 0));
+        assert!(!p.link_outage_at(SimTime::from_secs(21.0), 1));
+        assert_eq!(p.link_degrade_at(SimTime::from_secs(21.0), 1), 4.0);
+        assert_eq!(p.link_degrade_at(SimTime::from_secs(23.0), 1), 1.0);
+    }
+
+    #[test]
+    fn draws_are_pure_functions_of_identity() {
+        let p = FaultPlan::compile(&spec(), 4, 2).unwrap();
+        let q = FaultPlan::compile(&spec(), 4, 2).unwrap();
+        for id in 0..200u64 {
+            for attempt in 0..3u32 {
+                assert_eq!(p.stage_fails(id, 2, attempt), q.stage_fails(id, 2, attempt));
+                let d = p.backoff_delay(id, attempt + 1);
+                assert_eq!(d, q.backoff_delay(id, attempt + 1));
+                assert!(d.is_finite() && d > 0.0, "backoff must stay positive, got {d}");
+            }
+        }
+        // the failure rate tracks the configured probability
+        let hits = (0..2000u64).filter(|&id| p.stage_fails(id, 1, 0)).count();
+        let rate = hits as f64 / 2000.0;
+        assert!((rate - 0.25).abs() < 0.05, "empirical rate {rate} far from 0.25");
+        // distinct sites draw from distinct streams
+        assert_ne!(
+            (0..64u64).map(|id| p.stage_fails(id, 1, 0)).collect::<Vec<_>>(),
+            (0..64u64).map(|id| p.stage_fails(id, 2, 0)).collect::<Vec<_>>(),
+        );
+        // a different seed reshuffles the schedule
+        let mut other = spec();
+        other.seed = 8;
+        let o = FaultPlan::compile(&other, 4, 2).unwrap();
+        assert_ne!(
+            (0..256u64).map(|id| p.stage_fails(id, 1, 0)).collect::<Vec<_>>(),
+            (0..256u64).map(|id| o.stage_fails(id, 1, 0)).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn backoff_grows_exponentially() {
+        let mut s = spec();
+        s.retry = RetryPolicy { max_attempts: 5, base: 0.1, factor: 2.0, jitter: 0.0 };
+        let p = FaultPlan::compile(&s, 4, 2).unwrap();
+        assert_eq!(p.backoff_delay(9, 1), 0.1);
+        assert_eq!(p.backoff_delay(9, 2), 0.2);
+        assert_eq!(p.backoff_delay(9, 3), 0.4);
+    }
+
+    #[test]
+    fn compile_rejects_bad_specs() {
+        let ok = |s: &FaultSpec| FaultPlan::compile(s, 4, 2);
+        assert!(ok(&spec()).is_ok());
+        let mut s = spec();
+        s.crashes[0].client = 4;
+        assert!(ok(&s).unwrap_err().to_string().contains("client 4"));
+        let mut s = spec();
+        s.links[0].rack = 2;
+        assert!(ok(&s).unwrap_err().to_string().contains("rack 2"));
+        let mut s = spec();
+        s.crashes[0].down_for = 0.0;
+        assert!(ok(&s).is_err());
+        let mut s = spec();
+        s.slowdowns[0].factor = 0.5;
+        assert!(ok(&s).is_err());
+        let mut s = spec();
+        s.links[1].degrade = Some(f64::NAN);
+        assert!(ok(&s).is_err());
+        let mut s = spec();
+        s.stage_failure_prob = 1.5;
+        assert!(ok(&s).is_err());
+        let mut s = spec();
+        s.retry.max_attempts = 0;
+        assert!(ok(&s).is_err());
+        let mut s = spec();
+        s.retry.base = -1.0;
+        assert!(ok(&s).is_err());
+        let mut s = spec();
+        s.retry.jitter = 2.0;
+        assert!(ok(&s).is_err());
+        let mut s = spec();
+        s.crashes[0].at = f64::INFINITY;
+        assert!(ok(&s).is_err());
+    }
+
+    #[test]
+    fn availability_merges_overlapping_windows() {
+        let mut s = FaultSpec::new(1);
+        s.crashes.push(CrashSpec { client: 0, at: 0.0, down_for: 10.0 });
+        s.crashes.push(CrashSpec { client: 0, at: 5.0, down_for: 10.0 });
+        let p = FaultPlan::compile(&s, 2, 1).unwrap();
+        // client 0 is down over [0, 15) of a 20s horizon on a 2-client
+        // pool: 15 / 40 client-seconds lost
+        let a = p.availability(SimTime::from_secs(20.0));
+        assert!((a - (1.0 - 15.0 / 40.0)).abs() < 1e-12, "availability {a}");
+        // horizon clamps the second window
+        let b = p.availability(SimTime::from_secs(10.0));
+        assert!((b - 0.5).abs() < 1e-12, "availability {b}");
+        assert_eq!(p.availability(SimTime::ZERO), 1.0);
+    }
+}

@@ -30,6 +30,9 @@
 //!   pipelines, retrieval and communication modeling (§III-E/F).
 //! * [`scenario`] / [`config`] — declarative front-end: data-driven
 //!   scenario registry and the JSON config schema (§III-A).
+//! * [`fault`] — deterministic fault injection and recovery: client
+//!   crash/slowdown windows, link outages, stage-failure coin flips,
+//!   deadlines, retries with backoff (docs/robustness.md).
 //! * [`experiments`] — paper figure/table regenerators (§IV–V).
 //! * [`bench`] — the `hermes bench` core-speed harness
 //!   (`BENCH_core.json`, docs/performance.md).
@@ -50,6 +53,7 @@ pub mod scheduler;
 pub mod client;
 pub mod coordinator;
 pub mod config;
+pub mod fault;
 pub mod scenario;
 pub mod metrics;
 pub mod experiments;

@@ -3,6 +3,7 @@
 //!   hermes simulate --config cfg.json [--out metrics.json]
 //!                   [--trace trace.json] [--shards K]
 //!                   [--metrics exact|sketch] [--quiet]
+//!                   [--faults on|off] [--fault-seed N]
 //!   hermes sweep    --config cfg.json --rates 1,2,4,8 [--jobs N]
 //!                   [--out sweep.json]
 //!   hermes scenario <name|path.json> [--fast] [--jobs N] [--out sweep.json]
@@ -10,7 +11,7 @@
 //!   hermes bench    [name...] [--fast] [--baseline auto|on|off] [--jobs N]
 //!                   [--shards K] [--metrics auto|exact|sketch]
 //!                   [--out BENCH_core.json]
-//!   hermes experiment <fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|disagg>
+//!   hermes experiment <fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|disagg|faults>
 //!                   [--fast] [--jobs N]
 //!   hermes artifacts                      # list AOT predictor variants
 //!
@@ -63,12 +64,12 @@ fn print_usage() {
     println!("HERMES — heterogeneous multi-stage LLM inference execution simulator");
     println!();
     println!("usage:");
-    println!("  hermes simulate --config cfg.json [--out m.json] [--trace t.json] [--shards K] [--metrics exact|sketch]");
+    println!("  hermes simulate --config cfg.json [--out m.json] [--trace t.json] [--shards K] [--metrics exact|sketch] [--faults on|off] [--fault-seed N]");
     println!("  hermes sweep --config cfg.json --rates 1,2,4 [--jobs N] [--out sweep.json]");
     println!("  hermes scenario <name|path.json> [--fast] [--jobs N] [--out sweep.json]   (--list to enumerate)");
     println!("  hermes scenario check             # resolve every scenario's model/policy/npu refs");
     println!("  hermes bench [name...] [--fast] [--baseline auto|on|off] [--jobs N] [--shards K] [--metrics auto|exact|sketch] [--out BENCH_core.json]");
-    println!("  hermes experiment <fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|ablations|multimodel|disagg|all> [--fast] [--jobs N]");
+    println!("  hermes experiment <fig5|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig15|table3|ablations|multimodel|disagg|faults|all> [--fast] [--jobs N]");
     println!("  hermes artifacts");
     println!();
     println!("--jobs N fans independent runs across N worker threads; --shards K");
@@ -113,6 +114,16 @@ fn simulate(args: &Args) -> Result<()> {
     let quiet = args.bool_or("quiet", false);
     let shards = shards_arg(args)?;
     let sketch = metrics_arg(args, "exact", &["exact", "sketch"])? == "sketch";
+    // --faults off disables the config's fault plan without editing the
+    // file; --fault-seed re-rolls the fault schedule (crash timing stays
+    // scenario-pinned, but stage-failure coin flips and backoff jitter
+    // re-draw) while the workload seed stays put
+    let faults_off = args.one_of("faults", "on", &["on", "off"]).map_err(|e| anyhow::anyhow!(e))?
+        == "off";
+    let fault_seed = match args.opt_str("fault-seed") {
+        Some(s) => Some(s.parse::<u64>().with_context(|| format!("bad --fault-seed '{s}'"))?),
+        None => None,
+    };
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
     if shards > 1 && trace_out.is_some() {
         // the chrome exporter walks the retained serial coordinator;
@@ -120,7 +131,18 @@ fn simulate(args: &Args) -> Result<()> {
         bail!("--trace requires the serial event loop; drop --shards or run with --shards 1");
     }
 
-    let cfg = SimConfig::from_file(&cfg_path)?;
+    let mut cfg = SimConfig::from_file(&cfg_path)?;
+    if faults_off {
+        cfg.serving.faults = None;
+    }
+    if let Some(seed) = fault_seed {
+        match cfg.serving.faults.as_mut() {
+            Some(f) => f.seed = seed,
+            // strict: overriding a seed that nothing draws from is a
+            // typo'd invocation, not a no-op
+            None => bail!("--fault-seed given but no fault plan is active (config has no 'faults' block, or --faults off)"),
+        }
+    }
     if shards > 1 {
         let arrivals = Arrivals::Inject(cfg.workload.generate(0));
         let t0 = std::time::Instant::now();
@@ -236,6 +258,16 @@ fn print_metrics(m: &RunMetrics) {
         m.energy_joules / 1e3,
         m.tok_per_joule
     );
+    if m.retries + m.timeouts + m.shed + m.orphaned > 0 || m.availability < 1.0 {
+        println!(
+            "  faults: retries {}  timeouts {}  shed {}  orphaned {}   availability {:.2}%",
+            m.retries,
+            m.timeouts,
+            m.shed,
+            m.orphaned,
+            m.availability * 100.0
+        );
+    }
 }
 
 fn sweep(args: &Args) -> Result<()> {

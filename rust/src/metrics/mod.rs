@@ -139,6 +139,18 @@ pub struct RunMetrics {
     /// total exposed inter-client transfer time
     pub transfer_seconds: f64,
     pub recomputes: u64,
+    /// re-queued attempts under the fault retry policy (0 without faults)
+    pub retries: u64,
+    /// requests failed by their deadline expiring
+    pub timeouts: u64,
+    /// requests dropped by load shedding instead of retried
+    pub shed: u64,
+    /// in-flight requests evicted by a client crash and re-routed
+    pub orphaned: u64,
+    /// fraction of client-seconds the fleet was up over the makespan —
+    /// 1.0 when no fault plan is installed (see
+    /// [`crate::fault::FaultPlan::availability`])
+    pub availability: f64,
     /// non-failed requests that never produced a first token; counted
     /// here instead of contributing ∞ TTFT/E2E samples
     pub n_no_first_token: u64,
@@ -183,6 +195,7 @@ impl RunMetrics {
                 coord.clock.as_secs(),
                 coord.clients.iter().map(|c| c.stats().energy_joules).sum(),
                 &coord.stats,
+                coord.faults.as_ref().map_or(1.0, |p| p.availability(coord.clock)),
             );
         }
         let fold = Self::fold_records(&coord.records, slo);
@@ -196,6 +209,7 @@ impl RunMetrics {
     /// exact order [`RunMetrics::collect`] would see on the equivalent
     /// serial coordinator.
     pub fn collect_outcome(out: &ShardOutcome, slo: &SloLadder) -> RunMetrics {
+        let avail = out.faults.as_ref().map_or(1.0, |p| p.availability(out.clock));
         if let Some(sink) = &out.sink {
             debug_assert_eq!(sink.slo, *slo, "sink was installed with a different SLO ladder");
             return Self::from_sink(
@@ -206,6 +220,7 @@ impl RunMetrics {
                 out.clock.as_secs(),
                 out.energy_joules,
                 &out.stats,
+                avail,
             );
         }
         let fold = Self::fold_records(&out.records, slo);
@@ -216,6 +231,7 @@ impl RunMetrics {
             out.clock.as_secs(),
             out.energy_joules,
             &out.stats,
+            avail,
             fold,
         )
     }
@@ -226,6 +242,7 @@ impl RunMetrics {
     /// contract. `exact` is false so downstream consumers that need raw
     /// CDF samples (fig15) can refuse loudly instead of reading empty
     /// vecs.
+    #[allow(clippy::too_many_arguments)]
     fn from_sink(
         sink: &MetricsSink,
         n_requests: usize,
@@ -234,6 +251,7 @@ impl RunMetrics {
         makespan: f64,
         energy: f64,
         stats: &CoordStats,
+        availability: f64,
     ) -> RunMetrics {
         let tokens = sink.tokens;
         RunMetrics {
@@ -262,6 +280,11 @@ impl RunMetrics {
             transfer_bytes: stats.transfer_bytes,
             transfer_seconds: stats.transfer_seconds,
             recomputes: stats.recomputes,
+            retries: stats.retries,
+            timeouts: stats.timeouts,
+            shed: stats.shed,
+            orphaned: stats.orphaned,
+            availability,
             n_no_first_token: sink.n_no_first_token,
             exact: false,
             e2e_samples: Vec::new(),
@@ -341,10 +364,12 @@ impl RunMetrics {
             coord.clock.as_secs(),
             coord.clients.iter().map(|c| c.stats().energy_joules).sum(),
             &coord.stats,
+            coord.faults.as_ref().map_or(1.0, |p| p.availability(coord.clock)),
             fold,
         )
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn assemble_parts(
         n_requests: usize,
         n: usize,
@@ -352,6 +377,7 @@ impl RunMetrics {
         makespan: f64,
         energy: f64,
         stats: &CoordStats,
+        availability: f64,
         fold: RecordFold,
     ) -> RunMetrics {
         let RecordFold { ttft, tpot, e2e, tokens, slo_ok, n_no_first_token } = fold;
@@ -377,6 +403,11 @@ impl RunMetrics {
             transfer_bytes: stats.transfer_bytes,
             transfer_seconds: stats.transfer_seconds,
             recomputes: stats.recomputes,
+            retries: stats.retries,
+            timeouts: stats.timeouts,
+            shed: stats.shed,
+            orphaned: stats.orphaned,
+            availability,
             n_no_first_token,
             exact: true,
             e2e_samples: e2e,
@@ -418,6 +449,11 @@ impl RunMetrics {
             .set("transfers", self.transfers)
             .set("transfer_bytes", self.transfer_bytes)
             .set("recomputes", self.recomputes)
+            .set("retries", self.retries)
+            .set("timeouts", self.timeouts)
+            .set("shed", self.shed)
+            .set("orphaned", self.orphaned)
+            .set("availability", self.availability)
             .set("n_no_first_token", self.n_no_first_token)
             .set("metrics", if self.exact { "exact" } else { "sketch" });
         j
@@ -481,6 +517,9 @@ mod tests {
         assert!(m.tok_per_joule > 0.0);
         assert!((0.0..=1.0).contains(&m.goodput_frac));
         assert_eq!(m.e2e_samples.len(), 15);
+        // no fault plan installed: counters zero, fleet fully available
+        assert_eq!(m.retries + m.timeouts + m.shed + m.orphaned, 0);
+        assert_eq!(m.availability, 1.0);
     }
 
     #[test]

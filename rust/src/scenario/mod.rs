@@ -380,8 +380,9 @@ impl Scenario {
 
     /// Like [`Scenario::serving`], with a panel's serving-side overrides
     /// applied: a panel may set or replace `rag_clients`, `kv_clients`,
-    /// `prepost_clients`, `network`, `granularity`, `migration` or
-    /// `transfer_weight`, and `null` removes the key — so auxiliary
+    /// `prepost_clients`, `network`, `granularity`, `migration`,
+    /// `transfer_weight` or `faults`, and `null` removes the key — so
+    /// auxiliary
     /// tiers are provisioned only for the panels whose pipeline uses
     /// them (energy accounting stays faithful to the paper's
     /// per-request-type methodology), and a disaggregation family can
@@ -392,7 +393,7 @@ impl Scenario {
         clients: usize,
         panel: Option<&Panel>,
     ) -> Result<ServingSpec> {
-        const OVERRIDABLE: [&str; 7] = [
+        const OVERRIDABLE: [&str; 8] = [
             "rag_clients",
             "kv_clients",
             "prepost_clients",
@@ -400,6 +401,7 @@ impl Scenario {
             "granularity",
             "migration",
             "transfer_weight",
+            "faults",
         ];
         let overrides: Vec<(&str, &Json)> = panel
             .map(|p| {
@@ -813,6 +815,49 @@ mod tests {
         )
         .unwrap();
         sc.check().unwrap();
+    }
+
+    #[test]
+    fn check_validates_fault_specs() {
+        let body = |faults: &str| {
+            format!(
+                r#"{{ "model": "llama3-70b", "npu": "h100", "tp": 8,
+                      "batching": ["continuous"], "perf_model": "roofline",
+                      "workload": {{ "trace": "azure-conv" }},
+                      "faults": {faults},
+                      "sweep": {{ "clients": 2, "requests_per_client": 4,
+                                  "rates": [1.0] }} }}"#
+            )
+        };
+        // a well-formed plan parses and survives check
+        let sc = Scenario::from_json(
+            "faulty",
+            doc(&body(
+                r#"{"crashes": [{"client": 1, "at": 0.5, "down_for": 2.0}],
+                    "stage_failure_prob": 0.1}"#,
+            )),
+        )
+        .unwrap();
+        sc.check().unwrap();
+        // a crash targeting a client the pool doesn't have is caught at
+        // check time (FaultPlan::compile runs inside spec.build())
+        let sc = Scenario::from_json(
+            "dangling",
+            doc(&body(r#"{"crashes": [{"client": 64, "at": 0.5, "down_for": 2.0}]}"#)),
+        )
+        .unwrap();
+        let err = sc.check().unwrap_err();
+        assert!(format!("{err:#}").contains("client"), "{err:#}");
+        // an out-of-range probability never parses into a runnable spec
+        let sc = Scenario::from_json("badprob", doc(&body(r#"{"stage_failure_prob": 2.0}"#)))
+            .unwrap();
+        assert!(sc.check().is_err());
+        // structurally broken fault entries are parse errors
+        assert!(Scenario::from_json(
+            "noclient",
+            doc(&body(r#"{"crashes": [{"at": 0.5, "down_for": 2.0}]}"#)),
+        )
+        .is_err());
     }
 
     #[test]

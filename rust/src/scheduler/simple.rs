@@ -44,6 +44,18 @@ impl Batched {
         };
         self.queue.drain(..n).collect()
     }
+
+    /// Drop a queued request (fault eviction). Returns whether it was
+    /// queued; queue order of the others is preserved.
+    pub fn remove(&mut self, id: ReqId) -> bool {
+        match self.queue.iter().position(|&q| q == id) {
+            Some(i) => {
+                self.queue.remove(i);
+                true
+            }
+            None => false,
+        }
+    }
 }
 
 /// Core-parallel sequential service: `cores` requests at a time, each
@@ -76,6 +88,18 @@ impl Sequential {
         let n = self.queue.len().min(self.cores);
         self.queue.drain(..n).collect()
     }
+
+    /// Drop a queued request (fault eviction). Returns whether it was
+    /// queued; queue order of the others is preserved.
+    pub fn remove(&mut self, id: ReqId) -> bool {
+        match self.queue.iter().position(|&q| q == id) {
+            Some(i) => {
+                self.queue.remove(i);
+                true
+            }
+            None => false,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -100,6 +124,24 @@ mod tests {
         }
         assert_eq!(b.take_batch(), vec![0, 1, 2, 3]);
         assert_eq!(b.queue_len(), 6);
+    }
+
+    #[test]
+    fn remove_drops_only_the_target() {
+        let mut b = Batched::new(0);
+        for i in 0..5 {
+            b.enqueue(i);
+        }
+        assert!(b.remove(2));
+        assert!(!b.remove(2), "already gone");
+        assert_eq!(b.take_batch(), vec![0, 1, 3, 4]);
+        let mut s = Sequential::new(8);
+        for i in 0..4 {
+            s.enqueue(i);
+        }
+        assert!(s.remove(0));
+        assert!(!s.remove(9));
+        assert_eq!(s.take_wave(), vec![1, 2, 3]);
     }
 
     #[test]

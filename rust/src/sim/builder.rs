@@ -167,6 +167,11 @@ pub struct ServingSpec {
     /// router bias toward cheap links: candidate key = load + weight ×
     /// estimated transfer seconds ([`Router::with_transfer_weight`])
     pub transfer_weight: f64,
+    /// fault-injection schedule (docs/robustness.md): compiled into a
+    /// [`FaultPlan`](crate::fault::FaultPlan) at build time. None — the
+    /// default and the `--faults off` override — builds a coordinator
+    /// byte-identical to a pre-fault one.
+    pub faults: Option<crate::fault::FaultSpec>,
     pub seed: u64,
 }
 
@@ -191,8 +196,15 @@ impl ServingSpec {
             granularity: Granularity::Layerwise { layers: 80 },
             migration: None,
             transfer_weight: 0.0,
+            faults: None,
             seed: 0,
         }
+    }
+
+    /// Attach a fault-injection schedule.
+    pub fn with_faults(mut self, f: crate::fault::FaultSpec) -> ServingSpec {
+        self.faults = Some(f);
+        self
     }
 
     pub fn with_perf(mut self, p: PerfBackend) -> ServingSpec {
@@ -534,6 +546,18 @@ impl ServingSpec {
         coord.model_seed = self.seed;
         if matches!(self.pool, PoolSpec::Disaggregated { local: true, .. }) {
             coord.local_disagg = true;
+        }
+        if let Some(f) = &self.faults {
+            let n_clients = coord.clients.len();
+            let n_racks = coord
+                .network
+                .locations
+                .iter()
+                .map(|l| l.rack)
+                .max()
+                .map_or(0, |m| m + 1);
+            coord.faults =
+                Some(crate::fault::FaultPlan::compile(f, n_clients, n_racks)?);
         }
         Ok(coord)
     }

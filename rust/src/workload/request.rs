@@ -207,6 +207,21 @@ pub struct Request {
     /// client currently holding the request
     pub client: Option<usize>,
 
+    // ---- robustness (docs/robustness.md) ----------------------------------
+    /// 0-based try counter: bumped by each retry (transient hand-off
+    /// failure, crash orphaning, no-healthy-candidate backoff)
+    pub attempt: u32,
+    /// absolute completion deadline (workload-class `deadline` key);
+    /// elapsing it fails the request as a timeout
+    pub deadline: Option<SimTime>,
+    /// terminal failure marker — set by `Coordinator::fail` so stale
+    /// queued events against this id become no-ops
+    pub failed: bool,
+    /// the failure was a deadline timeout
+    pub timed_out: bool,
+    /// the failure was a load-shed (no healthy candidate, `shed: true`)
+    pub shed: bool,
+
     // ---- metrics ----------------------------------------------------------
     /// when the current stage was accepted by its client (set by the
     /// coordinator on push; used for stage span records)
@@ -249,6 +264,11 @@ impl Request {
             decoded: 0,
             prior_decoded: 0,
             client: None,
+            attempt: 0,
+            deadline: None,
+            failed: false,
+            timed_out: false,
+            shed: false,
             stage_accept: SimTime::ZERO,
             records: Vec::new(),
             first_token_time: None,
@@ -414,6 +434,12 @@ pub struct CompletionRecord {
     /// the request could not be placed (counted in `failed`, excluded
     /// from latency/throughput aggregation)
     pub failed: bool,
+    /// tries the request consumed (0 = first try succeeded)
+    pub attempt: u32,
+    /// the failure was a deadline timeout
+    pub timed_out: bool,
+    /// the failure was a load-shed under faults
+    pub shed: bool,
 }
 
 impl CompletionRecord {
@@ -433,6 +459,9 @@ impl CompletionRecord {
             branches: r.branches,
             prior_decoded: r.prior_decoded,
             failed,
+            attempt: r.attempt,
+            timed_out: r.timed_out,
+            shed: r.shed,
         }
     }
 

@@ -144,6 +144,11 @@ pub struct WorkloadSpec {
     pub arrival: Arrival,
     pub n_requests: usize,
     pub seed: u64,
+    /// per-request deadline in seconds after arrival (the class SLO,
+    /// docs/robustness.md): requests still in flight when it elapses
+    /// time out and fail. None (default) disables deadlines for the
+    /// class and keeps generation byte-identical to pre-deadline runs.
+    pub deadline: Option<f64>,
 }
 
 impl WorkloadSpec {
@@ -156,7 +161,13 @@ impl WorkloadSpec {
             arrival: Arrival::Poisson { rate },
             n_requests: n,
             seed: 0,
+            deadline: None,
         }
+    }
+
+    pub fn with_deadline(mut self, seconds: f64) -> WorkloadSpec {
+        self.deadline = Some(seconds);
+        self
     }
 
     pub fn with_pipeline(mut self, p: Pipeline) -> WorkloadSpec {
@@ -211,6 +222,10 @@ impl WorkloadSpec {
             output.clamp(1, 65536),
         );
         r.branches = branches;
+        // attached after construction, from arrival time + the class
+        // SLO — no extra PCG draws, so deadline-free classes generate
+        // bit-identical streams
+        r.deadline = self.deadline.map(|d| SimTime::from_secs(t + d));
         r
     }
 

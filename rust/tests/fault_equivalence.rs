@@ -1,0 +1,295 @@
+//! Differential oracle for fault injection (docs/robustness.md):
+//! every fault-plan query is a pure function of simulated time and
+//! request identity, so a faulted run must be **bit-identical** across
+//! the serial event loop, `--shards K` conservative-window domains and
+//! `--jobs N` worker threads — and with faults absent, the recovery
+//! machinery must be invisible (the fault-free differential suites stay
+//! byte-exact).
+//!
+//! Covered:
+//! * fault-free runs: zero fault counters, availability 1.0, and the
+//!   `--faults off` contract (a cleared plan equals never having one);
+//! * request deadlines without any fault plan: timeouts fire and
+//!   account identically at every shard count;
+//! * the full fault plan — a decode-client crash with orphan
+//!   re-routing, a prefill slowdown window, link degradation and a
+//!   short outage on the prefill rack's egress, transient hand-off
+//!   failures with bounded backoff retries — bit-identical across
+//!   shard counts, both `LoadMode`s, reruns and streamed arrivals;
+//! * request conservation under crashes (serviced + failed ==
+//!   injected; the per-event debug load invariant catches residency /
+//!   KV leaks from the crash drain), with and without shedding;
+//! * faulted sharded runs nested inside the `--jobs` sweep executor.
+
+use hermes::config::slo::SloLadder;
+use hermes::coordinator::shard::{run_sharded, Arrivals, ShardOutcome};
+use hermes::coordinator::LoadMode;
+use hermes::fault::{CrashSpec, FaultSpec, LinkFaultSpec, RetryPolicy, SlowdownSpec};
+use hermes::hardware::npu::H100;
+use hermes::memory::hierarchy::{TIER_DRAM, TIER_HBM};
+use hermes::metrics::RunMetrics;
+use hermes::network::Granularity;
+use hermes::sim::builder::{MigrationSpec, NetSpec, PoolSpec, ServingSpec};
+use hermes::sim::parallel;
+use hermes::workload::trace::{Pipeline, TraceKind, WorkloadMix, WorkloadSpec};
+
+const MODEL: &str = "llama3-70b";
+
+fn conv(n: usize, rate: f64) -> WorkloadSpec {
+    WorkloadSpec::new(MODEL, TraceKind::AzureConv, n, rate)
+        .with_pipeline(Pipeline::Disagg)
+        .with_seed(29)
+}
+
+/// Cross-rack disaggregated pool (clients 0–1 prefill in rack 0,
+/// clients 2–3 decode in rack 1 → two closure components → two
+/// domains), the same shape shard_equivalence.rs pins fault-free.
+fn disagg_spec() -> ServingSpec {
+    ServingSpec::new(
+        MODEL,
+        H100,
+        4,
+        PoolSpec::Disaggregated { prefill: 2, decode: 2, local: false },
+    )
+    .with_net(NetSpec::Hierarchy { per_platform: 1, per_rack: 2 })
+    .with_migration(MigrationSpec {
+        granularity: Some(Granularity::Layerwise { layers: 80 }),
+        pool: vec![TIER_HBM, TIER_DRAM],
+    })
+    .with_seed(31)
+}
+
+/// Every fault kind at once, aimed so each one actually fires inside a
+/// ~10-second run: crash one of the two decode clients mid-run (its
+/// orphans re-route to the survivor), slow a prefill client, degrade
+/// then briefly black out the prefill rack's egress (the prefill →
+/// decode hand-off path), and give every hand-off a transient failure
+/// probability absorbed by bounded backoff retries.
+fn fault_spec() -> FaultSpec {
+    let mut f = FaultSpec::new(101);
+    f.crashes.push(CrashSpec { client: 3, at: 3.0, down_for: 4.0 });
+    f.slowdowns.push(SlowdownSpec { client: 0, factor: 1.5, at: 1.0, dur: 6.0 });
+    f.links.push(LinkFaultSpec { rack: 0, at: 2.0, dur: 2.0, degrade: Some(2.0) });
+    f.links.push(LinkFaultSpec { rack: 0, at: 5.0, dur: 0.5, degrade: None });
+    f.stage_failure_prob = 0.05;
+    f.retry = RetryPolicy { max_attempts: 4, base: 0.05, factor: 2.0, jitter: 0.5 };
+    f
+}
+
+fn outcome(
+    spec: &ServingSpec,
+    mix: &WorkloadMix,
+    mode: LoadMode,
+    stream: bool,
+    shards: usize,
+) -> ShardOutcome {
+    let build = || {
+        spec.build().map(|mut c| {
+            c.load_mode = mode;
+            c
+        })
+    };
+    let arrivals = if stream {
+        Arrivals::Stream(mix)
+    } else {
+        Arrivals::Inject(mix.generate())
+    };
+    run_sharded(build, arrivals, shards).unwrap()
+}
+
+/// Everything the differential needs in one string, now including the
+/// failure-recovery counters. Peak counters stay out — beyond the
+/// per-domain-max caveat shard_equivalence.rs documents, deadline event
+/// copies are armed per stage accept in whichever domain accepts, so
+/// domain-local queue peaks legitimately differ from the serial queue's
+/// while every committed event, counter and timestamp still matches.
+fn fingerprint(o: &ShardOutcome) -> String {
+    let m = RunMetrics::collect_outcome(o, &SloLadder::standard());
+    format!(
+        "serviced={:?} failed={:?} clock={:?} events={} injected={} \
+         transfers={} bytes={:?} secs={:?} recomputes={} stat_failed={} \
+         retries={} timeouts={} shed={} orphaned={} energy={:?} \
+         decisions={} metrics={:?}",
+        o.serviced,
+        o.failed,
+        o.clock,
+        o.stats.events,
+        o.stats.injected,
+        o.stats.transfers,
+        o.stats.transfer_bytes,
+        o.stats.transfer_seconds,
+        o.stats.recomputes,
+        o.stats.failed,
+        o.stats.retries,
+        o.stats.timeouts,
+        o.stats.shed,
+        o.stats.orphaned,
+        o.energy_joules,
+        o.decisions,
+        m
+    )
+}
+
+/// Both runs drained and conserved every request (`all_serviced` is
+/// counter-based: serviced + failed == injected, so it holds for
+/// faulted runs where some of those requests failed), and every record,
+/// counter and derived metric matches bit-for-bit.
+fn assert_bit_identical(serial: &ShardOutcome, sharded: &ShardOutcome, what: &str) {
+    assert!(
+        serial.all_serviced(),
+        "{what}: serial run lost requests ({} serviced + {} failed of {})",
+        serial.stats.serviced,
+        serial.stats.failed,
+        serial.stats.injected
+    );
+    assert!(
+        sharded.all_serviced(),
+        "{what}: sharded run lost requests ({} serviced + {} failed of {})",
+        sharded.stats.serviced,
+        sharded.stats.failed,
+        sharded.stats.injected
+    );
+    assert_eq!(serial.records, sharded.records, "{what}: completion records diverged");
+    assert_eq!(fingerprint(serial), fingerprint(sharded), "{what}");
+}
+
+#[test]
+fn fault_free_runs_count_no_fault_metrics_and_match_a_cleared_plan() {
+    for mode in [LoadMode::Incremental, LoadMode::FullScan] {
+        let mix = WorkloadMix::single(conv(40, 6.0));
+        let serial = outcome(&disagg_spec(), &mix, mode, false, 1);
+        // the recovery machinery must be invisible without a plan
+        assert_eq!(serial.stats.retries, 0);
+        assert_eq!(serial.stats.timeouts, 0);
+        assert_eq!(serial.stats.shed, 0);
+        assert_eq!(serial.stats.orphaned, 0);
+        let m = RunMetrics::collect_outcome(&serial, &SloLadder::standard());
+        assert_eq!(m.availability, 1.0, "no fault plan means a fully-up fleet");
+        for shards in [2, 4] {
+            let sh = outcome(&disagg_spec(), &mix, mode, false, shards);
+            assert_eq!(sh.domains, 2);
+            assert_bit_identical(&serial, &sh, &format!("fault-free/{mode:?}/shards={shards}"));
+        }
+        // `--faults off` clears the plan before building — that must be
+        // indistinguishable from a spec that never carried one
+        let mut cleared = disagg_spec().with_faults(fault_spec());
+        cleared.faults = None;
+        let off = outcome(&cleared, &mix, mode, false, 1);
+        assert_bit_identical(&serial, &off, &format!("fault-free/{mode:?}/--faults off"));
+    }
+}
+
+#[test]
+fn deadlines_fire_identically_at_every_shard_count_without_a_fault_plan() {
+    // a deadline far below the achievable end-to-end latency: most
+    // requests must time out, and the accounting must agree everywhere
+    let mix = WorkloadMix::single(conv(30, 6.0).with_deadline(0.25));
+    let serial = outcome(&disagg_spec(), &mix, LoadMode::Incremental, false, 1);
+    assert!(serial.stats.timeouts > 0, "a 0.25s deadline must fire");
+    assert_eq!(serial.stats.timeouts, serial.stats.failed, "timeouts are the only failures");
+    assert_eq!(serial.stats.retries, 0, "deadlines are terminal, never retried");
+    assert_eq!(serial.stats.orphaned, 0);
+    for shards in [2, 4] {
+        let sh = outcome(&disagg_spec(), &mix, LoadMode::Incremental, false, shards);
+        assert_eq!(sh.domains, 2);
+        assert_bit_identical(&serial, &sh, &format!("deadline/shards={shards}"));
+    }
+}
+
+#[test]
+fn faulted_run_is_bit_identical_across_shard_counts_load_modes_and_reruns() {
+    let spec = disagg_spec().with_faults(fault_spec());
+    let mix = WorkloadMix::single(conv(60, 8.0).with_deadline(8.0));
+    for mode in [LoadMode::Incremental, LoadMode::FullScan] {
+        let serial = outcome(&spec, &mix, mode, false, 1);
+        // the plan visibly fired: the crash window always dents
+        // availability, and at least one recovery path engaged
+        let m = RunMetrics::collect_outcome(&serial, &SloLadder::standard());
+        assert!(m.availability < 1.0, "crash window must dent availability");
+        assert!(
+            serial.stats.retries + serial.stats.timeouts + serial.stats.orphaned > 0,
+            "the fault plan must visibly engage the recovery machinery"
+        );
+        assert!(serial.stats.shed <= serial.stats.failed);
+        assert!(serial.stats.timeouts <= serial.stats.failed);
+        // rerunning the identical spec reproduces the identical run
+        let again = outcome(&spec, &mix, mode, false, 1);
+        assert_bit_identical(&serial, &again, &format!("faulted/{mode:?}/rerun"));
+        for shards in [2, 4] {
+            let sh = outcome(&spec, &mix, mode, false, shards);
+            assert_eq!(sh.domains, 2, "fault plans must not break the domain split");
+            assert_bit_identical(&serial, &sh, &format!("faulted/{mode:?}/shards={shards}"));
+        }
+    }
+    // streamed arrivals draw the same lazy PCG streams — same run
+    let serial = outcome(&spec, &mix, LoadMode::Incremental, false, 1);
+    let streamed = outcome(&spec, &mix, LoadMode::Incremental, true, 2);
+    assert_bit_identical(&serial, &streamed, "faulted/stream/shards=2");
+}
+
+#[test]
+fn lane_dark_crashes_conserve_requests_with_and_without_shedding() {
+    // overlap crashes of BOTH decode clients so the decode role goes
+    // fully dark over [2.5, 5.0): requests arriving at the hand-off
+    // find no healthy candidate — with shedding they fail immediately,
+    // without it they burn backoff retries against the dark lane. The
+    // per-event debug load invariant (residency + KV accounting) runs
+    // throughout, so a leaky crash drain fails this test by panicking.
+    let mut dark = fault_spec();
+    dark.crashes.clear();
+    dark.crashes.push(CrashSpec { client: 2, at: 2.0, down_for: 3.0 });
+    dark.crashes.push(CrashSpec { client: 3, at: 2.5, down_for: 2.5 });
+    let mix = WorkloadMix::single(conv(60, 8.0).with_deadline(8.0));
+
+    let mut shedding = dark.clone();
+    shedding.shed = true;
+    let shed_run = outcome(
+        &disagg_spec().with_faults(shedding.clone()),
+        &mix,
+        LoadMode::Incremental,
+        false,
+        1,
+    );
+    assert!(shed_run.all_serviced(), "shedding must conserve requests");
+    assert!(shed_run.stats.shed > 0, "a dark decode lane must shed");
+    assert!(shed_run.stats.failed >= shed_run.stats.shed);
+
+    let retry_run = outcome(
+        &disagg_spec().with_faults(dark.clone()),
+        &mix,
+        LoadMode::Incremental,
+        false,
+        1,
+    );
+    assert!(retry_run.all_serviced(), "backoff retries must conserve requests");
+    assert_eq!(retry_run.stats.shed, 0, "shedding is off");
+    assert!(retry_run.stats.failed > 0, "bounded retries run out against a 2.5s-dark lane");
+    assert!(retry_run.stats.retries > 0);
+
+    // the dark-lane schedule shards bit-identically too
+    for (label, plan) in [("shed", shedding), ("retry", dark)] {
+        let spec = disagg_spec().with_faults(plan);
+        let serial = outcome(&spec, &mix, LoadMode::Incremental, false, 1);
+        let sh = outcome(&spec, &mix, LoadMode::Incremental, false, 2);
+        assert_bit_identical(&serial, &sh, &format!("lane-dark/{label}/shards=2"));
+    }
+}
+
+#[test]
+fn faulted_sharded_runs_compose_with_the_parallel_sweep_executor() {
+    // --shards inside --jobs with a live fault plan: per-decision PCG
+    // streams are derived fresh from (seed, request, site, kind), so
+    // concurrent workers share no RNG state to race on
+    let spec = disagg_spec().with_faults(fault_spec());
+    let mix = WorkloadMix::single(conv(40, 8.0).with_deadline(8.0));
+    let serial = fingerprint(&outcome(&spec, &mix, LoadMode::Incremental, false, 1));
+    let results = parallel::run(2, 2, |i| {
+        let shards = [2, 4][i];
+        let o = outcome(&spec, &mix, LoadMode::Incremental, false, shards);
+        (shards, o.domains, fingerprint(&o))
+    });
+    for (shards, domains, fp) in results {
+        assert_eq!(domains, 2, "shards={shards}");
+        assert_eq!(fp, serial, "faulted run diverged under --jobs 2 (shards={shards})");
+    }
+}

@@ -35,6 +35,14 @@ scale, not regression):
   noise. `--mem-threshold NAME=RATIO` overrides per scenario (rows
   without the fields, i.e. baselines predating a column, are skipped).
 
+* **failure recovery** (docs/robustness.md): WARN when fresh
+  `incremental.goodput` falls below 95% of baseline, or when fresh
+  `retries` / `timeouts` grow beyond 1.5x a nonzero baseline. These
+  come from deterministic fault schedules, so movement is a behavior
+  change — but an intentional fault-plan tweak legitimately moves
+  them, hence warn-only with generous slack. Rows without the columns
+  (baselines predating them) are skipped, like the memory fields.
+
 Rows also carry a `metrics` column ("exact" or "sketch",
 `--metrics` / `extras.metrics`); it is echoed in the log line but, like
 `shards`, not part of the match key.
@@ -68,6 +76,9 @@ SCENARIO_THRESHOLDS = {
     # migration-heavy: every request crosses the interconnect, so the
     # event mix is transfer-dominated and more timer-sensitive
     "bench_disagg_100k": 0.50,
+    # the robustness tier rides the same transfer-dominated disagg
+    # shape, with fault-triggered retries/re-routes on top
+    "bench_faults_100k": 0.50,
 }
 
 # same idea for the memory-growth tripwire: the 100M tier exists to
@@ -84,6 +95,15 @@ SCENARIO_MEM_THRESHOLDS = {
 DEFAULT_MEM_THRESHOLD = 1.25
 
 MEM_FIELDS = ("peak_resident_slots", "resident_bytes_est", "metrics_bytes_est")
+
+# failure-aware columns (docs/robustness.md): goodput warns on a DROP
+# below 95% of baseline, the counters warn on GROWTH beyond 1.5x a
+# nonzero baseline. Deterministic fault schedules make these
+# machine-independent, but an intentional fault-plan tweak moves them
+# legitimately — hence warn-only with generous slack.
+FAULT_COUNT_FIELDS = ("retries", "timeouts")
+GOODPUT_THRESHOLD = 0.95
+FAULT_GROWTH_THRESHOLD = 1.5
 
 
 def load(path):
@@ -116,12 +136,18 @@ def rows_by_name(doc):
                 for k in MEM_FIELDS
                 if isinstance(inc.get(k), (int, float))
             }
+            fault = {
+                k: inc[k]
+                for k in ("goodput",) + FAULT_COUNT_FIELDS
+                if isinstance(inc.get(k), (int, float))
+            }
             out[name] = (
                 eps,
                 inc.get("n_requests"),
                 mem,
                 row.get("shards"),
                 row.get("metrics"),
+                fault,
             )
     return out
 
@@ -217,12 +243,12 @@ def main(argv):
         return 0
 
     warned = False
-    for name, (eps, n, mem, shards, metrics) in sorted(fresh.items()):
+    for name, (eps, n, mem, shards, metrics, fault) in sorted(fresh.items()):
         ref_entry = base.get(name)
         if ref_entry is None or ref_entry[0] <= 0:
             print(f"bench-diff: {name}: no baseline entry — skipped")
             continue
-        ref, ref_n, ref_mem, _ref_shards, _ref_metrics = ref_entry
+        ref, ref_n, ref_mem, _ref_shards, _ref_metrics, ref_fault = ref_entry
         if n != ref_n:
             # a fast-scale smoke vs a full-scale committed run measures
             # scale, not regression — only same-sized runs are comparable
@@ -268,6 +294,38 @@ def main(argv):
                 warned = True
             else:
                 print(mline)
+        # failure-aware columns: like the memory fields, only rows that
+        # carry them on both sides are comparable (older baselines skip)
+        if "goodput" in fault and ref_fault.get("goodput", 0) > 0:
+            gratio = fault["goodput"] / ref_fault["goodput"]
+            gline = (
+                f"bench-diff: {name}: goodput {fault['goodput']:.4f} vs "
+                f"baseline {ref_fault['goodput']:.4f} ({gratio:.2f}x)"
+            )
+            if gratio < GOODPUT_THRESHOLD:
+                print(
+                    f"WARNING {gline} — below the {GOODPUT_THRESHOLD:.0%} warn "
+                    "threshold (failure-recovery regression? docs/robustness.md)"
+                )
+                warned = True
+            else:
+                print(gline)
+        for field in FAULT_COUNT_FIELDS:
+            if field not in fault or ref_fault.get(field, 0) <= 0:
+                continue
+            fratio = fault[field] / ref_fault[field]
+            fline = (
+                f"bench-diff: {name}: {field} {fault[field]:,.0f} vs baseline "
+                f"{ref_fault[field]:,.0f} ({fratio:.2f}x)"
+            )
+            if fratio > FAULT_GROWTH_THRESHOLD:
+                print(
+                    f"WARNING {fline} — above the {FAULT_GROWTH_THRESHOLD:.1f}x "
+                    "growth threshold (docs/robustness.md)"
+                )
+                warned = True
+            else:
+                print(fline)
     if warned:
         print("bench-diff: WARN-ONLY — not failing the build (see docs/performance.md)")
     return 0
